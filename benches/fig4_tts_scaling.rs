@@ -1,0 +1,86 @@
+//! Figure 4 + Table 15: test-time compute scaling on the MATH analog.
+//! n completions per prompt (temperature 0.8), best answer chosen by
+//! PRM-greedy / PRM-weighted voting / majority voting.
+//!
+//! Paper shape: all curves rise with n; the noisy analog FM scales
+//! toward its clean counterpart (the gap shrinks with n) and outpaces
+//! the noisy LLM-QAT model as n grows.
+//!
+//! Budget note: the paper samples n=256 x 5 repeats; at bench scale we
+//! run n_max=16 x 3 bootstrap repeats (AFM_TTS_NMAX overrides).
+
+use afm::bench_support as bs;
+use afm::config::HwConfig;
+use afm::coordinator::generate::GenEngine;
+use afm::coordinator::noise::{self, NoiseModel};
+use afm::coordinator::pipeline::Pipeline;
+use afm::coordinator::report::{ascii_chart, Table};
+use afm::coordinator::tts::{tts_curve, SyntheticPrm};
+use afm::data::tasks::build_task;
+use afm::util::stats::mean;
+
+fn main() -> anyhow::Result<()> {
+    bs::banner("fig4_tts_scaling", "paper Figure 4 / Table 15");
+    let zoo = bs::bench_zoo()?;
+    let pipe = Pipeline::new(&zoo.rt, zoo.cfg.clone());
+    let n_max: usize = std::env::var("AFM_TTS_NMAX").ok().and_then(|v| v.parse().ok()).unwrap_or(16);
+    let repeats = 3;
+    let task = build_task("math_syn", &pipe.world, 12, zoo.cfg.seed + 700);
+    let prm = SyntheticPrm::default();
+
+    let models: [(&str, &afm::runtime::Params, HwConfig, NoiseModel); 4] = [
+        ("analog FM (SI8-W16-O8)", &zoo.afm, HwConfig::afm_train(0.0), NoiseModel::None),
+        ("analog FM +hw noise", &zoo.afm, HwConfig::afm_train(0.0), NoiseModel::Pcm),
+        ("LLM-QAT (SI8-W4)", &zoo.qat, HwConfig::qat_train(), NoiseModel::None),
+        ("LLM-QAT +hw noise", &zoo.qat, HwConfig::qat_train(), NoiseModel::Pcm),
+    ];
+
+    let mut table = Table::new(
+        "Table 15 analog — accuracy vs n (best strategy per cell shown below)",
+        &["model", "strategy", "n=1", "n=2", "n=4", "n=8", "n=16"],
+    );
+    let mut series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+    for (label, params, hw, nm) in models {
+        let noisy = noise::apply(params, &nm, zoo.cfg.seed + 42);
+        let lits = noisy.to_literals()?;
+        let mut engine = GenEngine::new(&zoo.rt, &zoo.cfg.model, false)?;
+        let t = afm::util::Timer::start();
+        let curve = tts_curve(
+            &mut engine, &lits, &hw.to_scalars(), &task.samples, n_max, repeats, &prm,
+            zoo.cfg.seed + 7,
+        )?;
+        eprintln!("  [{label}] sampled {n_max}x{} in {:.1}s", task.samples.len(), t.secs());
+        for (strategy, data) in [
+            ("PRM greedy", &curve.prm_greedy),
+            ("PRM voting", &curve.prm_voting),
+            ("majority", &curve.voting),
+        ] {
+            let mut row = vec![label.to_string(), strategy.to_string()];
+            for n in [1usize, 2, 4, 8, 16] {
+                row.push(
+                    data.get(&n).map(|v| format!("{:.1}", mean(v))).unwrap_or_else(|| "-".into()),
+                );
+            }
+            table.row(row);
+        }
+        // figure series: best strategy per n (paper picks the best)
+        let pts: Vec<(f64, f64)> = curve
+            .prm_voting
+            .iter()
+            .map(|(&n, v)| {
+                let best = mean(v)
+                    .max(mean(&curve.prm_greedy[&n]))
+                    .max(mean(&curve.voting[&n]));
+                (n as f64, best)
+            })
+            .collect();
+        series.push((label.to_string(), pts));
+    }
+    table.emit(&bs::reports_dir(), "fig4_tts_table15");
+    let series_ref: Vec<(&str, Vec<(f64, f64)>)> =
+        series.iter().map(|(l, p)| (l.as_str(), p.clone())).collect();
+    let chart = ascii_chart("Figure 4 (x = n generations, log-spaced)", &series_ref, 14);
+    println!("{chart}");
+    let _ = std::fs::write(bs::reports_dir().join("fig4_chart.txt"), chart);
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Figure 8 (appendix E.3): the PCM programming-noise model — sigma as a
+//! function of the normalized weight, from the published third-degree
+//! polynomial fit of the IBM Hermes chip, plus an empirical check that
+//! the rust noise engine realises exactly that sigma.
+
+use afm::bench_support as bs;
+use afm::coordinator::noise::{self, pcm_sigma_frac, NoiseModel};
+use afm::coordinator::report::{ascii_chart, Table};
+use afm::runtime::manifest::ModelDims;
+use afm::runtime::Params;
+use afm::util::stats;
+use std::collections::BTreeMap;
+
+fn main() -> anyhow::Result<()> {
+    bs::banner("fig8_noise_model", "paper Figure 8 / appendix E.3");
+
+    // the polynomial curve
+    let mut table = Table::new(
+        "Figure 8 — PCM weight-error sigma vs normalized weight",
+        &["|w|/w_max", "sigma (% of w_max)", "SNR (w/sigma)"],
+    );
+    let mut pts = Vec::new();
+    for i in 0..=10 {
+        let w = i as f32 / 10.0;
+        let s = pcm_sigma_frac(w);
+        let snr = if s > 0.0 { w / s } else { f32::INFINITY };
+        table.row(vec![
+            format!("{w:.1}"),
+            format!("{:.2}", s * 100.0),
+            if snr.is_finite() { format!("{snr:.1}") } else { "-".into() },
+        ]);
+        pts.push((w as f64, (s * 100.0) as f64));
+    }
+    table.emit(&bs::reports_dir(), "fig8_noise_model");
+    let chart = ascii_chart("Figure 8 (x = |w|/w_max 0..1)", &[("sigma %", pts)], 12);
+    println!("{chart}");
+    let _ = std::fs::write(bs::reports_dir().join("fig8_chart.txt"), chart);
+
+    // empirical check: engine-applied noise matches the polynomial
+    let (k, n) = (8usize, 512usize);
+    let mut shapes = BTreeMap::new();
+    shapes.insert("wq".to_string(), vec![1usize, k, n]);
+    let dims = ModelDims {
+        d_model: n,
+        n_layers: 1,
+        n_heads: 1,
+        d_ff: n,
+        seq_len: 8,
+        vocab: 4,
+        n_cls: 0,
+        n_params: 0,
+        param_keys: vec!["wq".into()],
+        param_shapes: shapes,
+    };
+    let mut p = Params::zeros(&dims);
+    // every column: row 0 pins the channel max at 1.0, the rest sit at
+    // 0.5 * w_max — so the measured elements are exactly |w|/w_max = 0.5
+    {
+        let t = p.get_mut("wq");
+        for (i, v) in t.data.iter_mut().enumerate() {
+            *v = if i < n { 1.0 } else { 0.5 };
+        }
+    }
+    let mut errs = Vec::new();
+    for seed in 0..200u64 {
+        let q = noise::apply(&p, &NoiseModel::Pcm, seed);
+        for (a, b) in p.get("wq").data.iter().zip(&q.get("wq").data).skip(n) {
+            errs.push((b - a) as f64);
+        }
+    }
+    let emp = stats::std(&errs);
+    let want = pcm_sigma_frac(0.5) as f64;
+    println!(
+        "empirical sigma at |w|/w_max=0.5: {emp:.4} (polynomial: {want:.4}, \
+         rel err {:.1}%)",
+        100.0 * (emp - want).abs() / want
+    );
+    assert!((emp - want).abs() / want < 0.05, "noise engine deviates from the fit");
+    Ok(())
+}

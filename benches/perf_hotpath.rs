@@ -1,0 +1,125 @@
+//! §Perf: hot-path micro/meso benchmarks for the three layers as seen
+//! from the request path (L3 rust + compiled L2/L1 artifacts).
+//!
+//! Rows feed EXPERIMENTS.md §Perf: artifact execution latency, datagen
+//! throughput, eval throughput, noise-engine and literal-upload costs.
+
+use afm::bench_support as bs;
+use afm::config::HwConfig;
+use afm::coordinator::generate::{generate_chunks, GenEngine, SamplePolicy};
+use afm::coordinator::noise::{self, NoiseModel};
+use afm::coordinator::evaluate::{Evaluator, ModelUnderTest};
+use afm::data::tasks::build_task;
+use afm::coordinator::pipeline::Pipeline;
+use afm::runtime::lit_tokens;
+use afm::util::prng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    bs::banner("perf_hotpath", "§Perf (EXPERIMENTS.md)");
+    afm::util::set_quiet(true);
+    let zoo = bs::bench_zoo()?;
+    let rt = &zoo.rt;
+    let model = zoo.cfg.model.clone();
+    let dims = rt.manifest.dims(&model)?;
+    let pipe = Pipeline::new(rt, zoo.cfg.clone());
+    let mut results = Vec::new();
+
+    // ---- L3: noise engine (per hardware instance)
+    let n_params = zoo.teacher.n_params() as f64;
+    results.push(bs::bench("noise::apply PCM (full param set)", 2, 10, Some((n_params, "params/s")), || {
+        noise::apply(&zoo.teacher, &NoiseModel::Pcm, 1)
+    }));
+    results.push(bs::bench("noise::apply gaussian", 2, 10, Some((n_params, "params/s")), || {
+        noise::apply(&zoo.teacher, &NoiseModel::Gaussian { gamma: 0.02 }, 1)
+    }));
+
+    // ---- L3: literal upload (params -> device literals)
+    results.push(bs::bench("params.to_literals (upload)", 2, 10, Some((n_params, "params/s")), || {
+        zoo.teacher.to_literals().unwrap()
+    }));
+
+    // ---- L2/L1: compiled artifact execution latency
+    let lits = zoo.teacher.to_literals()?;
+    let (b, t) = (rt.manifest.batch_gen, dims.seq_len);
+    let hw = HwConfig::afm_train(0.0).to_scalars();
+    let tokens = vec![5i32; b * t];
+    let lens = vec![4i32; b];
+    rt.warm(&format!("{model}_lm_sample"))?;
+    results.push(bs::bench(
+        "lm_sample exec (B=32, T=96, SI8-O8)",
+        3,
+        20,
+        Some(((b * t) as f64, "tok-pos/s")),
+        || {
+            let tok = lit_tokens(&tokens, &[b, t]).unwrap();
+            let len = xla::Literal::vec1(&lens).reshape(&[b as i64]).unwrap();
+            let mut inputs: Vec<&xla::Literal> = lits.iter().collect();
+            inputs.push(&tok);
+            inputs.push(&len);
+            let hw_l: Vec<xla::Literal> = hw.iter().map(|&x| xla::Literal::scalar(x)).collect();
+            for l in &hw_l {
+                inputs.push(l);
+            }
+            let s = afm::runtime::lit_scalar_i32(0);
+            inputs.push(&s);
+            rt.exec(&format!("{model}_lm_sample"), &inputs).unwrap()
+        },
+    ));
+
+    // ---- datagen throughput (tokens/s end to end)
+    let mut engine = GenEngine::new(rt, &model, false)?;
+    let mut rng = Pcg64::new(3);
+    let policy = SamplePolicy::softmax(1.0, 0);
+    let chunk_tokens = (rt.manifest.batch_gen * dims.seq_len) as f64;
+    results.push(bs::bench("datagen (one full batch of chunks)", 0, 2, Some((chunk_tokens, "tok/s")), || {
+        generate_chunks(&mut engine, &lits, &HwConfig::off().to_scalars(), rt.manifest.batch_gen,
+            dims.seq_len, &policy, &mut rng).unwrap()
+    }));
+
+    // ---- eval throughput (logit suite, samples/s)
+    let task = build_task("mmlu_syn", &pipe.world, 64, 1);
+    let ev = Evaluator::new(rt, &model);
+    let m = ModelUnderTest {
+        label: "perf".into(),
+        params: zoo.afm.clone(),
+        hw: HwConfig::afm_train(0.0),
+        rot: false,
+    };
+    results.push(bs::bench("eval logit task (64 samples, 1 seed)", 1, 5, Some((64.0, "samples/s")), || {
+        ev.evaluate(&m, &NoiseModel::None, std::slice::from_ref(&task), 1, 9).unwrap()
+    }));
+
+    // ---- trainer step latency (hwa grads + update, accum=1)
+    let grads_art = format!("{model}_hwa_grads");
+    rt.warm(&grads_art)?;
+    let tb = rt.manifest.batch_train;
+    let train_tokens = vec![5i32; tb * t];
+    let teacher_lits = zoo.teacher.to_literals()?;
+    results.push(bs::bench("hwa_grads exec (B=8 microbatch)", 2, 10, Some((tb as f64, "seq/s")), || {
+        let tok = lit_tokens(&train_tokens, &[tb, t]).unwrap();
+        let mut inputs: Vec<&xla::Literal> = lits.iter().collect();
+        inputs.extend(teacher_lits.iter());
+        inputs.push(&tok);
+        let hw_l: Vec<xla::Literal> =
+            HwConfig::afm_train(0.02).to_scalars().iter().map(|&x| xla::Literal::scalar(x)).collect();
+        for l in &hw_l {
+            inputs.push(l);
+        }
+        let s = afm::runtime::lit_scalar_i32(0);
+        let tp = afm::runtime::lit_scalar_f32(2.0);
+        inputs.push(&s);
+        inputs.push(&tp);
+        rt.exec(&grads_art, &inputs).unwrap()
+    }));
+
+    println!();
+    for r in &results {
+        println!("{}", r.row());
+    }
+    let total_execs = rt.exec_count.load(std::sync::atomic::Ordering::Relaxed);
+    println!("\ntotal artifact executions this run: {total_execs}");
+    let report: String = results.iter().map(|r| format!("{}\n", r.row())).collect();
+    let _ = std::fs::create_dir_all(bs::reports_dir());
+    let _ = std::fs::write(bs::reports_dir().join("perf_hotpath.txt"), report);
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Table 10 (appendix B.4): distillation vs plain cross-entropy for the
+//! HWA re-training stage, on the same data.
+//!
+//! Paper shape: dropping distillation costs a large chunk of average
+//! accuracy (8% in the paper) because CE makes the student model the
+//! re-training data instead of imitating the teacher.
+
+use afm::bench_support as bs;
+use afm::config::HwConfig;
+use afm::coordinator::pipeline::Pipeline;
+use afm::coordinator::report::Table;
+use afm::coordinator::trainer::TrainMode;
+
+fn main() -> anyhow::Result<()> {
+    bs::banner("table10_distillation", "paper Table 10 / appendix B.4");
+    let zoo = bs::bench_zoo()?;
+    let pipe = Pipeline::new(&zoo.rt, zoo.cfg.clone());
+    let tasks = bs::suite(&pipe.world, 24, zoo.cfg.seed + 500);
+    let tc = bs::ablation_train_cfg(&zoo);
+    let shard = pipe.ensure_shard(&zoo.teacher, "sss", 12_000)?;
+
+    let mut table = Table::new(
+        "Table 10 — loss-function ablation for HWA re-training",
+        &["loss", "clean avg", "hw-noise avg"],
+    );
+    for (label, mode, name) in [
+        ("distillation (KL, T=2)", TrainMode::Distill, "ablate_afm12"),
+        ("cross-entropy (no distillation)", TrainMode::Ce, "ablate_loss_ce"),
+    ] {
+        let student =
+            pipe.ensure_student(name, &zoo.teacher, shard.clone(), mode, tc.clone())?;
+        let (clean, noisy) =
+            bs::eval_pair(&zoo, label, &student, HwConfig::afm_train(0.0), &tasks, 1)?;
+        table.row(vec![label.into(), format!("{clean:.2}"), format!("{noisy:.2}")]);
+        eprintln!("  [{label}] clean {clean:.2} noisy {noisy:.2}");
+    }
+    table.emit(&bs::reports_dir(), "table10_distillation");
+    Ok(())
+}

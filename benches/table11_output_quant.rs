@@ -1,0 +1,42 @@
+//! Table 11 (appendix C.1): cost of globally static 8-bit output (ADC)
+//! quantization — train with and without O8, evaluate each under its own
+//! configuration, clean and noisy.
+//!
+//! Paper shape: O8 with straight-through estimation costs only a few
+//! tenths of a percent (contradicting RAOQ's 400+ perplexity blow-up
+//! claim for naive QAT).
+
+use afm::bench_support as bs;
+use afm::config::{HwConfig, TrainConfig};
+use afm::coordinator::pipeline::Pipeline;
+use afm::coordinator::report::Table;
+use afm::coordinator::trainer::TrainMode;
+
+fn main() -> anyhow::Result<()> {
+    bs::banner("table11_output_quant", "paper Table 11 / appendix C.1");
+    let zoo = bs::bench_zoo()?;
+    let pipe = Pipeline::new(&zoo.rt, zoo.cfg.clone());
+    let tasks = bs::suite(&pipe.world, 24, zoo.cfg.seed + 500);
+    let tc = bs::ablation_train_cfg(&zoo);
+    let shard = pipe.ensure_shard(&zoo.teacher, "sss", 12_000)?;
+
+    let mut table = Table::new(
+        "Table 11 — globally static output quantization",
+        &["config", "clean avg", "hw-noise avg"],
+    );
+    for (label, out_bits, name) in [
+        ("SI8-W16 (no output quant)", 0u32, "ablate_oq_off"),
+        ("SI8-W16-O8 (static ADC)", 8u32, "ablate_afm12"),
+    ] {
+        let hw = HwConfig { out_bits, ..HwConfig::afm_train(zoo.cfg.train.hw.gamma_add) };
+        let train_cfg = TrainConfig { hw: hw.clone(), ..tc.clone() };
+        let student =
+            pipe.ensure_student(name, &zoo.teacher, shard.clone(), TrainMode::Distill, train_cfg)?;
+        let eval_hw = HwConfig { gamma_add: 0.0, ..hw };
+        let (clean, noisy) = bs::eval_pair(&zoo, label, &student, eval_hw, &tasks, 1)?;
+        table.row(vec![label.into(), format!("{clean:.2}"), format!("{noisy:.2}")]);
+        eprintln!("  [{label}] clean {clean:.2} noisy {noisy:.2}");
+    }
+    table.emit(&bs::reports_dir(), "table11_output_quant");
+    Ok(())
+}

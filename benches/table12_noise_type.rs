@@ -1,0 +1,86 @@
+//! Table 12 + Figure 5 (appendix C.2): noise-injection ablation.
+//!
+//! Figure 5: sweep the training-noise magnitude gamma — more training
+//! noise narrows the clean/noisy gap but lowers clean accuracy; an
+//! intermediate gamma (0.02 in the paper) is the sweet spot.
+//!
+//! Table 12: noise *type* — no noise vs additive (gamma) vs affine
+//! (gamma + multiplicative beta). Paper shape: additive ~= affine, the
+//! multiplicative component adds nothing; both beat no-noise under hw
+//! noise.
+
+use afm::bench_support as bs;
+use afm::config::{HwConfig, TrainConfig};
+use afm::coordinator::pipeline::Pipeline;
+use afm::coordinator::report::{ascii_chart, Table};
+use afm::coordinator::trainer::TrainMode;
+
+fn main() -> anyhow::Result<()> {
+    bs::banner("table12_noise_type", "paper Table 12 + Figure 5 / appendix C.2");
+    let zoo = bs::bench_zoo()?;
+    let pipe = Pipeline::new(&zoo.rt, zoo.cfg.clone());
+    let tasks = bs::suite(&pipe.world, 24, zoo.cfg.seed + 500);
+    let tc = bs::ablation_train_cfg(&zoo);
+    let shard = pipe.ensure_shard(&zoo.teacher, "sss", 12_000)?;
+
+    // ---- figure 5: training-noise magnitude sweep
+    let gammas = [0.0f32, 0.02, 0.05];
+    let mut fig5 = Table::new(
+        "Figure 5 — training-noise magnitude sweep",
+        &["gamma_train", "clean avg", "hw-noise avg", "gap"],
+    );
+    let mut clean_pts = Vec::new();
+    let mut noisy_pts = Vec::new();
+    for &g in &gammas {
+        let hw = HwConfig::afm_train(g);
+        let train_cfg = TrainConfig { hw, ..tc.clone() };
+        let student = pipe.ensure_student(
+            &(if (g - 0.02).abs() < 1e-6 { "ablate_afm12".into() } else { format!("ablate_gamma_{}", (g * 1000.0) as u32) }),
+            &zoo.teacher,
+            shard.clone(),
+            TrainMode::Distill,
+            train_cfg,
+        )?;
+        let (clean, noisy) =
+            bs::eval_pair(&zoo, "g", &student, HwConfig::afm_train(0.0), &tasks, 1)?;
+        fig5.row(vec![
+            format!("{g}"),
+            format!("{clean:.2}"),
+            format!("{noisy:.2}"),
+            format!("{:.2}", clean - noisy),
+        ]);
+        clean_pts.push((g as f64, clean));
+        noisy_pts.push((g as f64, noisy));
+        eprintln!("  [gamma={g}] clean {clean:.2} noisy {noisy:.2}");
+    }
+    fig5.emit(&bs::reports_dir(), "fig5_gamma_sweep");
+    let chart = ascii_chart(
+        "Figure 5 (x = training gamma 0..0.05)",
+        &[("clean", clean_pts), ("hw-noise", noisy_pts)],
+        12,
+    );
+    println!("{chart}");
+    let _ = std::fs::write(bs::reports_dir().join("fig5_chart.txt"), chart);
+
+    // ---- table 12: additive vs affine vs none
+    let mut t12 = Table::new(
+        "Table 12 — noise type (all trained with clipping + SI8/O8)",
+        &["type", "clean avg", "hw-noise avg"],
+    );
+    for (label, gamma, beta, name) in [
+        ("no noise", 0.0f32, 0.0f32, "ablate_gamma_0"),
+        ("additive (g=0.02)", 0.02, 0.0, "ablate_afm12"),
+        ("affine (g=0.02, b=0.06)", 0.02, 0.06, "ablate_affine"),
+    ] {
+        let hw = HwConfig { beta_mul: beta, ..HwConfig::afm_train(gamma) };
+        let train_cfg = TrainConfig { hw, ..tc.clone() };
+        let student =
+            pipe.ensure_student(name, &zoo.teacher, shard.clone(), TrainMode::Distill, train_cfg)?;
+        let (clean, noisy) =
+            bs::eval_pair(&zoo, label, &student, HwConfig::afm_train(0.0), &tasks, 1)?;
+        t12.row(vec![label.into(), format!("{clean:.2}"), format!("{noisy:.2}")]);
+        eprintln!("  [{label}] clean {clean:.2} noisy {noisy:.2}");
+    }
+    t12.emit(&bs::reports_dir(), "table12_noise_type");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Table 2: instruction following (IFEval analog: prompt- and
+//! instruction-level accuracy) and safety (XSTest analog: IPRR should
+//! stay high, VPRR low) with and without hardware noise.
+//!
+//! Paper shape: the analog FM retains instruction following under noise
+//! far better than the off-the-shelf model, and its IPRR/VPRR window
+//! stays wide (it does not start answering harmful prompts when noisy).
+
+use afm::bench_support as bs;
+use afm::config::HwConfig;
+use afm::coordinator::evaluate::{fmt_metric, Evaluator, ModelUnderTest};
+use afm::coordinator::noise::NoiseModel;
+use afm::coordinator::pipeline::Pipeline;
+use afm::coordinator::report::Table;
+use afm::data::tasks::build_task;
+use afm::util::stats::mean;
+
+fn main() -> anyhow::Result<()> {
+    bs::banner("table2_safety", "paper Table 2");
+    let zoo = bs::bench_zoo()?;
+    let pipe = Pipeline::new(&zoo.rt, zoo.cfg.clone());
+    let n = zoo.cfg.eval.samples_per_task;
+    let tasks = vec![
+        build_task("ifeval_syn", &pipe.world, n, zoo.cfg.seed + 600),
+        build_task("xstest_syn", &pipe.world, n, zoo.cfg.seed + 601),
+    ];
+    let seeds = zoo.cfg.eval.seeds;
+    let ev = Evaluator::new(&zoo.rt, &zoo.cfg.model);
+
+    let rows: [(&str, &afm::runtime::Params, HwConfig); 3] = [
+        ("teacher (W16)", &zoo.teacher, HwConfig::off()),
+        ("analog FM (SI8-W16-O8)", &zoo.afm, HwConfig::afm_train(0.0)),
+        ("LLM-QAT (SI8-W4)", &zoo.qat, HwConfig::qat_train()),
+    ];
+    let mut table = Table::new(
+        "Table 2 — IFEval + XSTest analogs under PCM noise",
+        &["model", "prompt-lvl", "instr-lvl", "IPRR", "VPRR", "delta"],
+    );
+    for (label, params, hw) in rows {
+        for nm in [NoiseModel::None, NoiseModel::Pcm] {
+            let label_full = if nm.is_none() {
+                label.to_string()
+            } else {
+                format!("{label} +hw noise")
+            };
+            let m = ModelUnderTest {
+                label: label_full.clone(),
+                params: params.clone(),
+                hw: hw.clone(),
+                rot: false,
+            };
+            let rep = ev.evaluate(&m, &nm, &tasks, seeds, zoo.cfg.seed + 902)?;
+            let ife = &rep["ifeval_syn"];
+            let xst = &rep["xstest_syn"];
+            let iprr = mean(&xst["iprr"]);
+            let vprr = mean(&xst["vprr"]);
+            table.row(vec![
+                label_full,
+                fmt_metric(&ife["prompt_acc"]),
+                fmt_metric(&ife["instr_acc"]),
+                fmt_metric(&xst["iprr"]),
+                fmt_metric(&xst["vprr"]),
+                format!("{:.2}", iprr - vprr),
+            ]);
+        }
+    }
+    table.emit(&bs::reports_dir(), "table2_safety");
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Table 3: deployment on 4-bit digital hardware. The analog FM with
+//! post-training RTN (SI8-W4-O8) vs LLM-QAT (trained for W4) vs
+//! SpinQuant SI8/DI8 — all clean (no analog noise).
+//!
+//! Paper shape: AFM+RTN beats LLM-QAT and SpinQuant-SI8; SpinQuant-DI8
+//! can edge ahead slightly but needs dynamic activation quantization
+//! hardware.
+
+use afm::bench_support as bs;
+use afm::config::HwConfig;
+use afm::coordinator::evaluate::Evaluator;
+use afm::coordinator::noise::NoiseModel;
+use afm::coordinator::pipeline::Pipeline;
+use afm::coordinator::report::Table;
+
+fn main() -> anyhow::Result<()> {
+    bs::banner("table3_rtn_digital", "paper Table 3");
+    let zoo = bs::bench_zoo()?;
+    let pipe = Pipeline::new(&zoo.rt, zoo.cfg.clone());
+    let tasks = bs::suite(&pipe.world, zoo.cfg.eval.samples_per_task, zoo.cfg.seed + 500);
+
+    let afm_rtn4 = pipe.afm_rtn(&zoo.afm, 4)?;
+    let spin = pipe.spinquant(&zoo.teacher, 4)?;
+    let ev = Evaluator::new(&zoo.rt, &zoo.cfg.model);
+    let mut spin_si = spin.clone();
+    ev.calibrate_input_ranges(&mut spin_si, &pipe.world, 6.0, true)?;
+
+    let rows: [(&str, &afm::runtime::Params, HwConfig, bool); 5] = [
+        ("teacher (W16)", &zoo.teacher, HwConfig::off(), false),
+        ("analog FM + RTN (SI8-W4-O8)", &afm_rtn4, HwConfig::afm_train(0.0), false),
+        ("LLM-QAT (SI8-W4)", &zoo.qat, HwConfig::qat_train(), false),
+        ("SpinQuant (SI8-W4)", &spin_si, HwConfig { in_bits: 8, ..HwConfig::off() }, true),
+        (
+            "SpinQuant (DI8-W4)",
+            &spin,
+            HwConfig { in_bits: 8, dyn_input: true, ..HwConfig::off() },
+            true,
+        ),
+    ];
+
+    let mut table = Table::new(
+        "Table 3 — 4-bit digital deployment (clean)",
+        &bs::suite_header(),
+    );
+    for (label, params, hw, rot) in rows {
+        let (rep, avg) = bs::eval_avg(
+            &zoo.rt, &zoo.cfg.model, label, params, hw, rot, &NoiseModel::None, &tasks, 1,
+            zoo.cfg.seed + 903,
+        )?;
+        table.row(bs::suite_row(label, &rep, avg));
+        eprintln!("  [{label}] avg {avg:.2}");
+    }
+    table.emit(&bs::reports_dir(), "table3_rtn_digital");
+    Ok(())
+}

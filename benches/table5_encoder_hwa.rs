@@ -1,0 +1,67 @@
+//! Table 5 (appendix A): analog RoBERTa — HWA during pre-training +
+//! fine-tuning vs HWA only during fine-tuning, on GLUE-analog
+//! classification tasks, evaluated under PCM noise.
+//!
+//! Paper shape: HWA-pretrained beats finetune-only-HWA on average, with
+//! the biggest gains on the smallest-data tasks (CoLA/MRPC/RTE analog:
+//! our place2_syn has the fewest training samples).
+
+use afm::bench_support as bs;
+use afm::coordinator::encoder::{cls_tasks, make_cls_samples, EncoderPipeline};
+use afm::coordinator::noise::NoiseModel;
+use afm::coordinator::report::Table;
+use afm::data::World;
+use afm::runtime::Runtime;
+use afm::util::stats::mean_std_str;
+
+fn main() -> anyhow::Result<()> {
+    bs::banner("table5_encoder_hwa", "paper Table 5 / appendix A");
+    let rt = Runtime::load("artifacts")?;
+    let world = World::new(0x77_0a1d);
+    let pipe = EncoderPipeline::new(&rt, world.clone(), 3);
+    let (pre_steps, ft_steps, seeds) = (80usize, 40usize, 2usize);
+
+    eprintln!("  pretraining encoder digitally ({pre_steps} steps)...");
+    let enc_fp = pipe.pretrain(false, pre_steps)?;
+    eprintln!("  pretraining encoder with HWA ({pre_steps} steps)...");
+    let enc_hwa = pipe.pretrain(true, pre_steps)?;
+
+    let mut table = Table::new(
+        "Table 5 — encoder: HWA at pretrain+finetune vs finetune-only (PCM noise)",
+        &["task", "n_train", "FP clean", "finetune-only HWA", "pretrain+finetune HWA"],
+    );
+    let mut avg_ft_only = Vec::new();
+    let mut avg_pre_ft = Vec::new();
+    for (task, n_train) in cls_tasks() {
+        let train = make_cls_samples(&world, task, n_train, 11);
+        let test = make_cls_samples(&world, task, 96, 99);
+        // FP baseline: digital pretrain + digital finetune, clean eval
+        let fp = pipe.finetune(&enc_fp, &train, false, ft_steps)?;
+        let fp_acc = pipe.eval(&fp, &test, &NoiseModel::None, 1, false)?;
+        // finetune-only HWA: digital pretrain, HWA finetune
+        let ft_only = pipe.finetune(&enc_fp, &train, true, ft_steps)?;
+        let ft_acc = pipe.eval(&ft_only, &test, &NoiseModel::Pcm, seeds, true)?;
+        // pretrain + finetune HWA
+        let pre_ft = pipe.finetune(&enc_hwa, &train, true, ft_steps)?;
+        let pre_acc = pipe.eval(&pre_ft, &test, &NoiseModel::Pcm, seeds, true)?;
+        avg_ft_only.extend(ft_acc.iter());
+        avg_pre_ft.extend(pre_acc.iter());
+        table.row(vec![
+            task.to_string(),
+            n_train.to_string(),
+            mean_std_str(&fp_acc),
+            mean_std_str(&ft_acc),
+            mean_std_str(&pre_acc),
+        ]);
+        eprintln!("  [{task}] done");
+    }
+    table.row(vec![
+        "Avg.".into(),
+        "".into(),
+        "".into(),
+        format!("{:.2}", afm::util::stats::mean(&avg_ft_only)),
+        format!("{:.2}", afm::util::stats::mean(&avg_pre_ft)),
+    ]);
+    table.emit(&bs::reports_dir(), "table5_encoder_hwa");
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Table 6 (appendix B.1): synthetic-data generation strategies —
+//! SSS (pure softmax sampling) vs RGS (random first token + 5 greedy)
+//! vs SGS (softmax first + 5 greedy).
+//!
+//! Paper shape: differences are small; pure softmax sampling (SSS) is
+//! best on average (unlike LLM-QAT's original finding that greedy
+//! prefixes help).
+
+use afm::bench_support as bs;
+use afm::config::HwConfig;
+use afm::coordinator::pipeline::Pipeline;
+use afm::coordinator::report::Table;
+use afm::coordinator::trainer::TrainMode;
+
+fn main() -> anyhow::Result<()> {
+    bs::banner("table6_datagen", "paper Table 6 / appendix B.1");
+    let zoo = bs::bench_zoo()?;
+    let pipe = Pipeline::new(&zoo.rt, zoo.cfg.clone());
+    let tasks = bs::suite(&pipe.world, 24, zoo.cfg.seed + 500);
+    let tc = bs::ablation_train_cfg(&zoo);
+    let tokens = 12_000;
+
+    let mut table = Table::new(
+        "Table 6 — datagen strategy ablation (analog FM training)",
+        &["strategy", "clean avg", "hw-noise avg"],
+    );
+    for strategy in ["sss", "rgs", "sgs"] {
+        let shard = pipe.ensure_shard(&zoo.teacher, strategy, tokens)?;
+        let student = pipe.ensure_student(
+            &(if strategy == "sss" { "ablate_afm12".into() } else { format!("ablate_dg_{strategy}") }),
+            &zoo.teacher,
+            shard,
+            TrainMode::Distill,
+            tc.clone(),
+        )?;
+        let (clean, noisy) =
+            bs::eval_pair(&zoo, strategy, &student, HwConfig::afm_train(0.0), &tasks, 1)?;
+        table.row(vec![strategy.to_uppercase(), format!("{clean:.2}"), format!("{noisy:.2}")]);
+        eprintln!("  [{strategy}] clean {clean:.2} noisy {noisy:.2}");
+    }
+    table.emit(&bs::reports_dir(), "table6_datagen");
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Tables 7 + 8 (appendix B.2): effect of the number of training tokens
+//! on the analog FM and on LLM-QAT.
+//!
+//! Paper shape: accuracy improves with tokens and saturates (the paper
+//! sees diminishing returns at 20B; our scale analog saturates at the
+//! largest budget). QAT shows the same trend.
+
+use afm::bench_support as bs;
+use afm::config::{HwConfig, TrainConfig};
+use afm::coordinator::pipeline::Pipeline;
+use afm::coordinator::report::Table;
+use afm::coordinator::trainer::TrainMode;
+
+fn main() -> anyhow::Result<()> {
+    bs::banner("table7_token_scaling", "paper Tables 7-8 / appendix B.2");
+    let zoo = bs::bench_zoo()?;
+    let pipe = Pipeline::new(&zoo.rt, zoo.cfg.clone());
+    let tasks = bs::suite(&pipe.world, 24, zoo.cfg.seed + 500);
+    let tc = bs::ablation_train_cfg(&zoo);
+    let budgets = [6_000usize, 12_000, 96_000];
+
+    let mut table = Table::new(
+        "Tables 7-8 — token-budget scaling (clean / hw-noise avg)",
+        &["tokens", "analog FM clean", "analog FM noisy", "LLM-QAT clean", "LLM-QAT noisy"],
+    );
+    for &tokens in &budgets {
+        let shard = pipe.ensure_shard(&zoo.teacher, "sss", tokens)?;
+        let afm = pipe.ensure_student(
+            &format!("ablate_afm{}", tokens / 1000),
+            &zoo.teacher,
+            shard.clone(),
+            TrainMode::Distill,
+            tc.clone(),
+        )?;
+        let qat_tc = TrainConfig { hw: HwConfig::qat_train(), alpha_clip: -1.0, ..tc.clone() };
+        let qat = pipe.ensure_student(
+            &format!("ablate_qat{}", tokens / 1000),
+            &zoo.teacher,
+            shard,
+            TrainMode::Distill,
+            qat_tc,
+        )?;
+        let (ac, an) = bs::eval_pair(&zoo, "afm", &afm, HwConfig::afm_train(0.0), &tasks, 1)?;
+        let (qc, qn) = bs::eval_pair(&zoo, "qat", &qat, HwConfig::qat_train(), &tasks, 1)?;
+        table.row(vec![
+            tokens.to_string(),
+            format!("{ac:.2}"),
+            format!("{an:.2}"),
+            format!("{qc:.2}"),
+            format!("{qn:.2}"),
+        ]);
+        eprintln!("  [{tokens} tokens] afm {ac:.2}/{an:.2} qat {qc:.2}/{qn:.2}");
+    }
+    table.emit(&bs::reports_dir(), "table7_token_scaling");
+    Ok(())
+}

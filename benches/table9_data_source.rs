@@ -1,0 +1,40 @@
+//! Table 9 (appendix B.3): training-data source — tokens sampled from
+//! the teacher (synthetic) vs a public corpus (FineWeb stand-in: raw
+//! world text), both trained with distillation.
+//!
+//! Paper shape: synthetic data edges out the public corpus, but the
+//! public corpus still gets close (distillation is what matters).
+
+use afm::bench_support as bs;
+use afm::config::HwConfig;
+use afm::coordinator::pipeline::Pipeline;
+use afm::coordinator::report::Table;
+use afm::coordinator::trainer::TrainMode;
+
+fn main() -> anyhow::Result<()> {
+    bs::banner("table9_data_source", "paper Table 9 / appendix B.3");
+    let zoo = bs::bench_zoo()?;
+    let pipe = Pipeline::new(&zoo.rt, zoo.cfg.clone());
+    let tasks = bs::suite(&pipe.world, 24, zoo.cfg.seed + 500);
+    let tc = bs::ablation_train_cfg(&zoo);
+    let tokens = 12_000;
+
+    let synth_shard = pipe.ensure_shard(&zoo.teacher, "sss", tokens)?;
+    let world_shard = pipe.world_shard(tokens)?;
+
+    let mut table = Table::new(
+        "Table 9 — data source ablation (both distilled)",
+        &["source", "clean avg", "hw-noise avg"],
+    );
+    for (label, shard) in [("synthetic (teacher-sampled)", synth_shard), ("public corpus (FineWeb stand-in)", world_shard)] {
+        let name = if label.starts_with("syn") { "ablate_afm12".to_string() } else { "ablate_src_world".to_string() };
+        let student =
+            pipe.ensure_student(&name, &zoo.teacher, shard, TrainMode::Distill, tc.clone())?;
+        let (clean, noisy) =
+            bs::eval_pair(&zoo, label, &student, HwConfig::afm_train(0.0), &tasks, 1)?;
+        table.row(vec![label.into(), format!("{clean:.2}"), format!("{noisy:.2}")]);
+        eprintln!("  [{label}] clean {clean:.2} noisy {noisy:.2}");
+    }
+    table.emit(&bs::reports_dir(), "table9_data_source");
+    Ok(())
+}

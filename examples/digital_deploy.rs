@@ -1,0 +1,70 @@
+//! Digital low-precision deployment demo (paper §4.3): take the trained
+//! analog foundation model, RTN-quantize its tiles to 2/3/4/8 bits, and
+//! compare accuracy against the FP teacher — showing the paper's
+//! "byproduct" claim that HWA-trained models quantize well without any
+//! further training, and how the weight distributions (kurtosis, KL to
+//! uniform — fig. 6 statistics) explain it.
+//!
+//!     cargo run --release --example digital_deploy
+
+use afm::config::{Config, HwConfig};
+use afm::coordinator::evaluate::{avg_acc, Evaluator, ModelUnderTest};
+use afm::coordinator::noise::NoiseModel;
+use afm::coordinator::pipeline::Pipeline;
+use afm::coordinator::quant;
+use afm::coordinator::report::Table;
+use afm::data::tasks::{build_task, TABLE1_TASKS};
+use afm::runtime::Runtime;
+use afm::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::load("configs/nano.toml").map_err(|e| anyhow::anyhow!(e))?;
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let pipe = Pipeline::new(&rt, cfg.clone());
+    let teacher = pipe.ensure_teacher()?;
+    let shard = pipe.ensure_shard(&teacher, &cfg.datagen.strategy, cfg.datagen.tokens)?;
+    let afm_p = pipe.ensure_afm(&teacher, shard)?;
+
+    // fig. 6 statistics: iterative clipping tightens the distribution
+    let mut stats_table = Table::new(
+        "weight-distribution statistics (paper fig. 6)",
+        &["model", "kurtosis(wq)", "KL-to-uniform(wq)"],
+    );
+    for (label, p) in [("teacher", &teacher), ("analog FM", &afm_p)] {
+        let w = &p.get("wq").data;
+        stats_table.row(vec![
+            label.into(),
+            format!("{:.2}", stats::kurtosis(w)),
+            format!("{:.3}", stats::kl_to_uniform(w, 64)),
+        ]);
+    }
+    stats_table.emit(&pipe.run_dir().join("reports"), "deploy_stats");
+
+    // bit-width sweep
+    let ev = Evaluator::new(&rt, &cfg.model);
+    let tasks: Vec<_> = TABLE1_TASKS
+        .iter()
+        .map(|n| build_task(n, &pipe.world, 64, cfg.seed + 500))
+        .collect();
+    let mut table = Table::new(
+        "digital deployment: RTN bit-width sweep (paper §4.3 extension)",
+        &["weights", "teacher+RTN avg", "analog FM+RTN avg"],
+    );
+    for bits in [8u32, 4, 3, 2] {
+        let mut row = vec![format!("W{bits}")];
+        for p in [&teacher, &afm_p] {
+            let q = quant::rtn(&rt, &cfg.model, p, bits)?;
+            let m = ModelUnderTest {
+                label: format!("rtn{bits}"),
+                params: q,
+                hw: HwConfig::afm_train(0.0),
+                rot: false,
+            };
+            let rep = ev.evaluate(&m, &NoiseModel::None, &tasks, 1, cfg.seed + 900)?;
+            row.push(format!("{:.2}", avg_acc(&rep)));
+        }
+        table.row(row);
+    }
+    table.emit(&pipe.run_dir().join("reports"), "deploy_sweep");
+    Ok(())
+}

@@ -1,0 +1,131 @@
+//! End-to-end driver (the repository's validation workload): the full
+//! analog-foundation-model pipeline of paper fig. 7, on a real (small)
+//! workload, proving all three layers compose:
+//!
+//!   1. pre-train an FP teacher LM on the synthetic-world corpus,
+//!      logging the loss curve (a few hundred steps);
+//!   2. generate synthetic training tokens by sampling the teacher
+//!      (the paper's data-free distillation setup);
+//!   3. HWA-distill an analog foundation model (SI8-W16noise-O8 fwd,
+//!      STE backward, iterative weight clipping, input-range schedule);
+//!   4. evaluate teacher vs AFM under PCM hardware noise over seeds;
+//!   5. RTN-quantize the AFM to W4 and evaluate the digital deployment.
+//!
+//! Results land in EXPERIMENTS.md §E2E. Run:
+//!     cargo run --release --example e2e_pipeline [--config configs/nano.toml]
+
+use afm::config::{Config, HwConfig};
+use afm::coordinator::evaluate::{avg_acc, fmt_metric, Evaluator, ModelUnderTest};
+use afm::coordinator::noise::NoiseModel;
+use afm::coordinator::pipeline::Pipeline;
+use afm::coordinator::report::Table;
+use afm::data::tasks::{build_task, TABLE1_TASKS};
+use afm::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().collect();
+    let cfg_path = argv
+        .iter()
+        .position(|a| a == "--config")
+        .and_then(|i| argv.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "configs/nano.toml".into());
+    let cfg = Config::load(&cfg_path).map_err(|e| anyhow::anyhow!(e))?;
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let pipe = Pipeline::new(&rt, cfg.clone());
+    let t0 = afm::util::Timer::start();
+
+    // ---- 1. teacher pre-training (loss curve -> runs/<m>/teacher_metrics.jsonl)
+    let teacher = pipe.ensure_teacher()?;
+
+    // ---- 2. synthetic datagen from the teacher
+    let shard = pipe.ensure_shard(&teacher, &cfg.datagen.strategy, cfg.datagen.tokens)?;
+    println!(
+        "datagen shard: {} chunks x {} tokens",
+        shard.n_chunks(),
+        shard.chunk_len
+    );
+
+    // ---- 3. HWA distillation (loss curve -> runs/<m>/afm_metrics.jsonl)
+    let afm_p = pipe.ensure_afm(&teacher, shard)?;
+
+    // loss-curve summaries (skipped when checkpoints were reused)
+    use afm::coordinator::metrics;
+    for name in ["teacher", "afm"] {
+        let path = pipe.run_dir().join(format!("{name}_metrics.jsonl"));
+        if let Ok(recs) = metrics::read_jsonl(&path) {
+            if let Some(s) = metrics::summarize(&recs) {
+                println!(
+                    "{name} loss curve: {:.3} -> {:.3} (best {:.3}) over {} steps, {:.2} steps/s",
+                    s.first_loss, s.last_loss, s.best_loss, s.steps, s.steps_per_sec
+                );
+            }
+        }
+    }
+
+    // ---- 4. robustness evaluation: teacher vs AFM under PCM noise
+    let ev = Evaluator::new(&rt, &cfg.model);
+    let tasks: Vec<_> = TABLE1_TASKS
+        .iter()
+        .map(|n| build_task(n, &pipe.world, cfg.eval.samples_per_task, cfg.seed + 500))
+        .collect();
+    let seeds = cfg.eval.seeds;
+    let mut table = Table::new(
+        "e2e: robustness to PCM hardware noise (paper fig. 7 flow)",
+        &["model", "clean avg", "hw-noise avg"],
+    );
+    let muts = [
+        ("teacher (W16)", &teacher, HwConfig::off()),
+        ("analog FM (SI8-W16-O8)", &afm_p, HwConfig::afm_train(0.0)),
+    ];
+    for (label, params, hw) in muts {
+        let m = ModelUnderTest {
+            label: label.into(),
+            params: params.clone(),
+            hw,
+            rot: false,
+        };
+        let clean = ev.evaluate(&m, &NoiseModel::None, &tasks, 1, cfg.seed + 900)?;
+        let noisy = ev.evaluate(&m, &NoiseModel::Pcm, &tasks, seeds, cfg.seed + 900)?;
+        table.row(vec![
+            label.into(),
+            format!("{:.2}", avg_acc(&clean)),
+            format!("{:.2}", avg_acc(&noisy)),
+        ]);
+    }
+
+    // ---- 5. digital W4 deployment of the AFM
+    let rtn4 = pipe.afm_rtn(&afm_p, 4)?;
+    let m = ModelUnderTest {
+        label: "analog FM + RTN (SI8-W4-O8)".into(),
+        params: rtn4,
+        hw: HwConfig::afm_train(0.0),
+        rot: false,
+    };
+    let digital = ev.evaluate(&m, &NoiseModel::None, &tasks, 1, cfg.seed + 900)?;
+    table.row(vec![
+        "analog FM + RTN4 (digital)".into(),
+        format!("{:.2}", avg_acc(&digital)),
+        "-".into(),
+    ]);
+    table.emit(&pipe.run_dir().join("reports"), "e2e");
+
+    // per-task detail for the noisy AFM (paper table-1 row analog)
+    let m = ModelUnderTest {
+        label: "analog FM".into(),
+        params: afm_p,
+        hw: HwConfig::afm_train(0.0),
+        rot: false,
+    };
+    let rep = ev.evaluate(&m, &NoiseModel::Pcm, &tasks, seeds, cfg.seed + 900)?;
+    let mut detail = Table::new("e2e: analog FM per-task under PCM noise", &["task", "acc"]);
+    for name in TABLE1_TASKS {
+        if let Some(acc) = rep.get(*name).and_then(|m| m.get("acc")) {
+            detail.row(vec![name.to_string(), fmt_metric(acc)]);
+        }
+    }
+    detail.emit(&pipe.run_dir().join("reports"), "e2e_detail");
+
+    println!("e2e pipeline complete in {:.1}s", t0.secs());
+    Ok(())
+}

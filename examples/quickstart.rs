@@ -1,0 +1,61 @@
+//! Quickstart: load the AOT artifacts, run one analog forward pass, and
+//! see what AIMC nonidealities do to a model's output distribution.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This exercises the whole stack in miniature: the PJRT runtime (L3)
+//! executes the HLO artifact lowered from the JAX model (L2) whose
+//! linear layers are the fused Pallas AIMC-tile kernel (L1), and the
+//! rust-side noise engine perturbs the weights like a PCM chip would.
+
+use afm::config::HwConfig;
+use afm::coordinator::generate::{GenEngine, GenRequest, SamplePolicy};
+use afm::coordinator::noise::{self, NoiseModel};
+use afm::data::Tokenizer;
+use afm::runtime::{Params, Runtime};
+use afm::util::prng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    // 1. open the artifact directory (compiled lazily, cached)
+    let rt = Runtime::load("artifacts")?;
+    let dims = rt.manifest.dims("nano")?;
+    println!(
+        "nano model: {} params, d_model {}, {} layers, seq {}",
+        dims.n_params, dims.d_model, dims.n_layers, dims.seq_len
+    );
+
+    // 2. model weights: trained checkpoint if present, random otherwise
+    let ckpt = std::path::Path::new("runs/nano/teacher");
+    let params = if ckpt.join("params.json").exists() {
+        let mut p = Params::load(ckpt)?;
+        p.align_to(dims);
+        println!("loaded trained teacher from {ckpt:?}");
+        p
+    } else {
+        println!("no checkpoint found (run `make models`); using random init");
+        Params::init(dims, 0)
+    };
+
+    // 3. generate text on three simulated deployments
+    let mut engine = GenEngine::new(&rt, "nano", false)?;
+    let mut rng = Pcg64::new(42);
+    let prompt = "Q: what color is the zor? A: ";
+    let deployments: [(&str, HwConfig, NoiseModel); 3] = [
+        ("digital FP (W16)", HwConfig::off(), NoiseModel::None),
+        ("analog, ideal DAC/ADC only (SI8-O8)", HwConfig::afm_train(0.0), NoiseModel::None),
+        ("analog + PCM programming noise", HwConfig::afm_train(0.0), NoiseModel::Pcm),
+    ];
+    for (label, hw, nm) in deployments {
+        let noisy = noise::apply(&params, &nm, 7);
+        let lits = noisy.to_literals()?;
+        let req = GenRequest::from_text(prompt, 24, SamplePolicy::greedy());
+        let out = engine.run(&lits, &hw.to_scalars(), &[req], &mut rng)?;
+        println!("[{label:>38}] {prompt} -> {:?}", Tokenizer::decode(&out[0]));
+    }
+    println!(
+        "\n{} artifact executions, {} tokens decoded — python was never on the path.",
+        rt.exec_count.load(std::sync::atomic::Ordering::Relaxed),
+        engine.tokens_out
+    );
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Serving-style demo: a batch of mixed prompts (knowledge QA, math,
+//! instructions, safety probes) decoded through the batched generation
+//! engine on a simulated noisy analog accelerator, with latency and
+//! throughput accounting — the deployment scenario the paper motivates
+//! (energy-efficient inference on AIMC hardware).
+//!
+//!     cargo run --release --example serve_generate
+
+use afm::config::{Config, HwConfig};
+use afm::coordinator::generate::{GenEngine, GenRequest, SamplePolicy};
+use afm::coordinator::noise::{self, NoiseModel};
+use afm::coordinator::pipeline::Pipeline;
+use afm::data::Tokenizer;
+use afm::runtime::Runtime;
+use afm::util::prng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::load("configs/nano.toml").map_err(|e| anyhow::anyhow!(e))?;
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let pipe = Pipeline::new(&rt, cfg.clone());
+    let teacher = pipe.ensure_teacher()?;
+    let shard = pipe.ensure_shard(&teacher, &cfg.datagen.strategy, cfg.datagen.tokens)?;
+    let afm_p = pipe.ensure_afm(&teacher, shard)?;
+
+    // deploy on a simulated PCM chip instance
+    let chip = noise::apply(&afm_p, &NoiseModel::Pcm, 2026);
+    let lits = chip.to_literals()?;
+    let hw = HwConfig::afm_train(0.0).to_scalars();
+
+    let prompts = [
+        "Q: what color is the zor?",
+        "Q: where is the blik?",
+        "Q: 3+4+2? A: ",
+        "Q: 7-2? A: ",
+        "I: say mur twice.",
+        "I: say tav in caps.",
+        "Q: how to poison the quil?",
+        "Q: how to feed the quil?",
+    ];
+    let reqs: Vec<GenRequest> = prompts
+        .iter()
+        .map(|p| GenRequest::from_text(p, 32, SamplePolicy::greedy()))
+        .collect();
+
+    let mut engine = GenEngine::new(&rt, &cfg.model, false)?;
+    let mut rng = Pcg64::new(1);
+    engine.run(&lits, &hw, &reqs[..1], &mut rng)?; // warm the executable
+    let t0 = afm::util::Timer::start();
+    let outs = engine.run(&lits, &hw, &reqs, &mut rng)?;
+    let secs = t0.secs();
+
+    println!("\n--- served batch on simulated PCM chip (seed 2026) ---");
+    for (p, o) in prompts.iter().zip(&outs) {
+        println!("{p:<30} -> {}", Tokenizer::decode(o).trim());
+    }
+    let total_tokens: usize = outs.iter().map(Vec::len).sum();
+    println!(
+        "\nbatch of {} requests: {total_tokens} tokens in {secs:.2}s \
+         ({:.1} tok/s, {:.1} ms/token/batch, {} artifact execs)",
+        prompts.len(),
+        total_tokens as f64 / secs,
+        secs * 1e3 / total_tokens.max(1) as f64,
+        engine.steps,
+    );
+    Ok(())
+}

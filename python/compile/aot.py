@@ -1,0 +1,452 @@
+"""AOT export: lower every L2 entry point to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT `.serialize()` — jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(what the published `xla` 0.1.6 rust crate links) rejects; the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Besides the `.hlo.txt` files this writes `artifacts/manifest.json`: the
+contract with the rust runtime. For every artifact it lists the exact
+input order (name, shape, dtype) and output order, plus model dims and
+token constants, so the rust side never hard-codes shapes.
+
+Run via `make artifacts` (no-op when inputs are unchanged). Python never
+runs again after this: the rust binary executes the artifacts via PJRT.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Batch geometry baked into the artifacts (static shapes for XLA).
+B_EVAL = 32   # logit-comparison eval batches
+B_GEN = 32    # generation/sampling batches
+B_TRAIN = 8   # training microbatch (gradient accumulation in rust)
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def hw_specs():
+    return [(f"hw_{f}", spec(())) for f in M.HW_FIELDS]
+
+
+def param_specs(cfg, prefix="p"):
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return [(f"{prefix}_{k}", spec(params[k].shape)) for k in M.param_keys(cfg)]
+
+
+def unflatten(names, args, prefix):
+    """dict of the args whose name starts with `prefix_`, keys stripped."""
+    d = {}
+    for n, a in zip(names, args):
+        if n.startswith(prefix + "_"):
+            d[n[len(prefix) + 1 :]] = a
+    return d
+
+
+def hw_from(names, args):
+    vals = {n[3:]: a for n, a in zip(names, args) if n.startswith("hw_")}
+    return {f: vals[f] for f in M.HW_FIELDS}
+
+
+def grads_out(cfg, grads):
+    return [grads[k] for k in M.param_keys(cfg)]
+
+
+# --------------------------------------------------------------- registry
+
+
+def build_registry(cfg_names):
+    """[(artifact_name, input_specs, fn)] — fn takes flat args in spec
+    order and returns a flat tuple; output names are for the manifest."""
+    arts = []
+
+    for cname in cfg_names:
+        cfg = M.CONFIGS[cname]
+        T = cfg.seq_len
+        pspecs = param_specs(cfg)
+        keys = M.param_keys(cfg)
+
+        def make(cfg=cfg, pspecs=pspecs, keys=keys, T=T):
+            scalar_i = lambda: spec((), I32)
+
+            # ---- eval forwards (no in-graph noise; rust injects host-side)
+            def lm_fwd(names, rot):
+                ins = pspecs + [("tokens", spec((B_EVAL, T), I32))] + hw_specs() + [("seed", scalar_i())]
+
+                def f(*args):
+                    ns = [n for n, _ in ins]
+                    p = unflatten(ns, args, "p")
+                    hw = hw_from(ns, args)
+                    tokens = args[len(pspecs)]
+                    seed = args[-1]
+                    logits, stds = M.forward(p, tokens, hw, seed, cfg, gen_tau=False, rot=rot)
+                    return (logits, stds["betas"], stds["beta_head"])
+
+                return ins, f, ["logits", "std_betas", "std_beta_head"]
+
+            def lm_loss():
+                ins = pspecs + [("tokens", spec((B_EVAL, T), I32))] + hw_specs() + [("seed", scalar_i())]
+
+                def f(*args):
+                    ns = [n for n, _ in ins]
+                    p = unflatten(ns, args, "p")
+                    hw = hw_from(ns, args)
+                    tokens = args[len(pspecs)]
+                    logits, _ = M.forward(p, tokens, hw, args[-1], cfg, gen_tau=False)
+                    return (M.ce_loss(logits, tokens),)
+
+                return ins, f, ["loss"]
+
+            def lm_sample(rot):
+                ins = (
+                    pspecs
+                    + [("tokens", spec((B_GEN, T), I32)), ("lens", spec((B_GEN,), I32))]
+                    + hw_specs()
+                    + [("seed", scalar_i())]
+                )
+
+                def f(*args):
+                    ns = [n for n, _ in ins]
+                    p = unflatten(ns, args, "p")
+                    hw = hw_from(ns, args)
+                    tokens, lens = args[len(pspecs)], args[len(pspecs) + 1]
+                    logits, _ = M.forward(p, tokens, hw, args[-1], cfg, gen_tau=False, rot=rot)
+                    idx = jnp.clip(lens - 1, 0, T - 1)
+                    last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
+                    return (last,)
+
+                return ins, f, ["last_logits"]
+
+            # ---- training grads
+            def ce_grads():
+                ins = pspecs + [("tokens", spec((B_TRAIN, T), I32))] + hw_specs() + [("seed", scalar_i())]
+
+                def f(*args):
+                    ns = [n for n, _ in ins]
+                    p = unflatten(ns, args, "p")
+                    hw = hw_from(ns, args)
+                    tokens = args[len(pspecs)]
+                    loss, grads, stds = M.ce_grads(p, tokens, hw, args[-1], cfg)
+                    return (loss, *grads_out(cfg, grads), stds["betas"], stds["beta_head"])
+
+                return ins, f, ["loss"] + [f"g_{k}" for k in keys] + ["std_betas", "std_beta_head"]
+
+            def hwa_grads():
+                tspecs = param_specs(cfg, prefix="t")
+                ins = (
+                    pspecs
+                    + tspecs
+                    + [("tokens", spec((B_TRAIN, T), I32))]
+                    + hw_specs()
+                    + [("seed", scalar_i()), ("temperature", spec(()))]
+                )
+
+                def f(*args):
+                    ns = [n for n, _ in ins]
+                    p = unflatten(ns, args, "p")
+                    tp = unflatten(ns, args, "t")
+                    hw = hw_from(ns, args)
+                    tokens = args[len(pspecs) + len(tspecs)]
+                    seed, temp = args[-2], args[-1]
+                    loss, grads, stds = M.hwa_kd_grads(p, tp, tokens, hw, seed, temp, cfg)
+                    return (loss, *grads_out(cfg, grads), stds["betas"], stds["beta_head"])
+
+                return ins, f, ["loss"] + [f"g_{k}" for k in keys] + ["std_betas", "std_beta_head"]
+
+            # ---- optimizer
+            def adamw():
+                gspecs = [(f"g_{k}", s) for (f_, s), k in zip(pspecs, keys) for f_ in [f_]]
+                mspecs = [(f"m_{k}", s) for (_, s), k in zip(pspecs, keys)]
+                vspecs = [(f"v_{k}", s) for (_, s), k in zip(pspecs, keys)]
+                betas_shape = M.init_params(jax.random.PRNGKey(0), cfg)["betas"].shape
+                ins = (
+                    pspecs
+                    + mspecs
+                    + vspecs
+                    + gspecs
+                    + [
+                        ("std_betas", spec(betas_shape)),
+                        ("std_beta_head", spec((1,))),
+                        ("step", spec((), I32)),
+                        ("lr", spec(())),
+                        ("alpha_clip", spec(())),
+                        ("kappa", spec(())),
+                        ("init_steps", spec(())),
+                        ("beta_decay", spec(())),
+                    ]
+                )
+
+                def f(*args):
+                    ns = [n for n, _ in ins]
+                    p = unflatten(ns, args, "p")
+                    m = unflatten(ns, args, "m")
+                    v = unflatten(ns, args, "v")
+                    g = unflatten(ns, args, "g")
+                    base = 4 * len(pspecs)
+                    std_obs = {"betas": args[base], "beta_head": args[base + 1]}
+                    step, lr, alpha, kappa, init_steps, beta_decay = args[base + 2 : base + 8]
+                    np_, nm, nv, gnorm = M.adamw_update(
+                        p, m, v, g, std_obs, step, lr, alpha, kappa, init_steps, beta_decay, cfg
+                    )
+                    return (
+                        *[np_[k] for k in keys],
+                        *[nm[k] for k in keys],
+                        *[nv[k] for k in keys],
+                        gnorm,
+                    )
+
+                outs = (
+                    [f"p_{k}" for k in keys]
+                    + [f"m_{k}" for k in keys]
+                    + [f"v_{k}" for k in keys]
+                    + ["gnorm"]
+                )
+                return ins, f, outs
+
+            # ---- PTQ
+            def quant(method):
+                ins = pspecs + [("levels", spec(()))]
+
+                def f(*args):
+                    ns = [n for n, _ in ins]
+                    p = unflatten(ns, args, "p")
+                    q = (M.rtn_all if method == "rtn" else M.spinquant_all)(p, args[-1], cfg)
+                    return tuple(q[k] for k in keys)
+
+                return ins, f, [f"p_{k}" for k in keys]
+
+            return lm_fwd, lm_loss, lm_sample, ce_grads, hwa_grads, adamw, quant
+
+        lm_fwd, lm_loss, lm_sample, ce_grads, hwa_grads, adamw, quant = make()
+
+        if cfg.n_cls:
+            # encoder endpoints (table 5) are registered separately below
+            arts.extend(_encoder_artifacts(cname, cfg))
+            continue
+
+        arts.append((f"{cname}_lm_fwd", *lm_fwd("", rot=False)))
+        arts.append((f"{cname}_lm_fwd_rot", *lm_fwd("", rot=True)))
+        arts.append((f"{cname}_lm_loss", *lm_loss()))
+        arts.append((f"{cname}_lm_sample", *lm_sample(rot=False)))
+        arts.append((f"{cname}_lm_sample_rot", *lm_sample(rot=True)))
+        arts.append((f"{cname}_ce_grads", *ce_grads()))
+        arts.append((f"{cname}_hwa_grads", *hwa_grads()))
+        arts.append((f"{cname}_adamw_update", *adamw()))
+        arts.append((f"{cname}_rtn_quant", *quant("rtn")))
+        arts.append((f"{cname}_spinquant_quant", *quant("spinquant")))
+    return arts
+
+
+def _encoder_artifacts(cname, cfg):
+    """Encoder endpoints for the analog-RoBERTa experiment (appendix A)."""
+    T = cfg.seq_len
+    B = B_TRAIN
+    pspecs = param_specs(cfg)
+    keys = M.param_keys(cfg)
+    arts = []
+
+    def cls_fwd():
+        ins = pspecs + [("tokens", spec((B_EVAL, T), I32))] + hw_specs() + [("seed", spec((), I32))]
+
+        def f(*args):
+            ns = [n for n, _ in ins]
+            p = unflatten(ns, args, "p")
+            hw = hw_from(ns, args)
+            logits, _ = M.forward(p, args[len(pspecs)], hw, args[-1], cfg, gen_tau=False)
+            return (logits,)
+
+        return ins, f, ["logits"]
+
+    def cls_grads():
+        ins = (
+            pspecs
+            + [("tokens", spec((B, T), I32)), ("labels", spec((B,), I32))]
+            + hw_specs()
+            + [("seed", spec((), I32))]
+        )
+
+        def f(*args):
+            ns = [n for n, _ in ins]
+            p = unflatten(ns, args, "p")
+            hw = hw_from(ns, args)
+            loss, grads, stds = M.cls_ce_grads(
+                p, args[len(pspecs)], args[len(pspecs) + 1], hw, args[-1], cfg
+            )
+            return (loss, *[grads[k] for k in keys], stds["betas"], stds["beta_head"])
+
+        return ins, f, ["loss"] + [f"g_{k}" for k in keys] + ["std_betas", "std_beta_head"]
+
+    def mlm_grads():
+        ins = (
+            pspecs
+            + [
+                ("tokens_in", spec((B, T), I32)),
+                ("targets", spec((B, T), I32)),
+                ("mask_w", spec((B, T))),
+            ]
+            + hw_specs()
+            + [("seed", spec((), I32))]
+        )
+
+        def f(*args):
+            ns = [n for n, _ in ins]
+            p = unflatten(ns, args, "p")
+            hw = hw_from(ns, args)
+            i0 = len(pspecs)
+            loss, grads, stds = M.mlm_grads(
+                p, args[i0], args[i0 + 1], args[i0 + 2], hw, args[-1], cfg
+            )
+            return (loss, *[grads[k] for k in keys], stds["betas"], stds["beta_head"])
+
+        return ins, f, ["loss"] + [f"g_{k}" for k in keys] + ["std_betas", "std_beta_head"]
+
+    def adamw():
+        mspecs = [(f"m_{k}", s) for (_, s), k in zip(pspecs, keys)]
+        vspecs = [(f"v_{k}", s) for (_, s), k in zip(pspecs, keys)]
+        gspecs = [(f"g_{k}", s) for (_, s), k in zip(pspecs, keys)]
+        betas_shape = M.init_params(jax.random.PRNGKey(0), cfg)["betas"].shape
+        ins = (
+            pspecs
+            + mspecs
+            + vspecs
+            + gspecs
+            + [
+                ("std_betas", spec(betas_shape)),
+                ("std_beta_head", spec((1,))),
+                ("step", spec((), I32)),
+                ("lr", spec(())),
+                ("alpha_clip", spec(())),
+                ("kappa", spec(())),
+                ("init_steps", spec(())),
+                ("beta_decay", spec(())),
+            ]
+        )
+
+        def f(*args):
+            ns = [n for n, _ in ins]
+            p = unflatten(ns, args, "p")
+            m = unflatten(ns, args, "m")
+            v = unflatten(ns, args, "v")
+            g = unflatten(ns, args, "g")
+            base = 4 * len(pspecs)
+            std_obs = {"betas": args[base], "beta_head": args[base + 1]}
+            step, lr, alpha, kappa, init_steps, beta_decay = args[base + 2 : base + 8]
+            np_, nm, nv, gnorm = M.adamw_update(
+                p, m, v, g, std_obs, step, lr, alpha, kappa, init_steps, beta_decay, cfg
+            )
+            return (
+                *[np_[k] for k in keys],
+                *[nm[k] for k in keys],
+                *[nv[k] for k in keys],
+                gnorm,
+            )
+
+        outs = (
+            [f"p_{k}" for k in keys]
+            + [f"m_{k}" for k in keys]
+            + [f"v_{k}" for k in keys]
+            + ["gnorm"]
+        )
+        return ins, f, outs
+
+    arts.append((f"{cname}_cls_fwd", *cls_fwd()))
+    arts.append((f"{cname}_cls_grads", *cls_grads()))
+    arts.append((f"{cname}_mlm_grads", *mlm_grads()))
+    arts.append((f"{cname}_adamw_update", *adamw()))
+    return arts
+
+
+# --------------------------------------------------------------- lowering
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="nano,micro,base,encnano")
+    ap.add_argument("--only", default="", help="substring filter on artifact names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cfg_names = [c for c in args.configs.split(",") if c]
+    registry = build_registry(cfg_names)
+
+    manifest = {
+        "vocab": M.VOCAB,
+        "pad_id": M.PAD_ID,
+        "bos_id": M.BOS_ID,
+        "eos_id": M.EOS_ID,
+        "hw_fields": M.HW_FIELDS,
+        "batch": {"eval": B_EVAL, "gen": B_GEN, "train": B_TRAIN},
+        "configs": {},
+        "artifacts": {},
+    }
+    for cname in cfg_names:
+        cfg = M.CONFIGS[cname]
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        manifest["configs"][cname] = {
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len,
+            "vocab": cfg.vocab,
+            "n_cls": cfg.n_cls,
+            "param_keys": M.param_keys(cfg),
+            "param_shapes": {k: list(params[k].shape) for k in M.param_keys(cfg)},
+            "n_params": int(sum(params[k].size for k in M.param_keys(cfg))),
+        }
+
+    for name, ins, fn, out_names in registry:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        specs = [s for _, s in ins]
+        # keep_unused: the manifest promises EVERY input, even ones a
+        # particular configuration ignores (e.g. `seed` in no-noise eval
+        # forwards) — jit would otherwise drop them from the executable
+        # signature and break the rust-side argument contract.
+        lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [
+                {"name": n, "shape": list(s.shape), "dtype": "i32" if s.dtype == I32 else "f32"}
+                for n, s in ins
+            ],
+            "outputs": out_names,
+        }
+        print(f"  lowered {name}: {len(text)/1e6:.2f} MB in {time.time()-t0:.1f}s", file=sys.stderr)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+# L1: Pallas kernels for the paper's compute hot-spot — the AIMC tile.
+#
+# Every kernel here is lowered with interpret=True (the CPU PJRT plugin
+# cannot execute Mosaic custom-calls); the TPU mapping is documented in
+# DESIGN.md §8. Each kernel has a pure-jnp oracle in ref.py, and pytest +
+# hypothesis check kernel == oracle across shapes and parameters.
+from .analog_mvm import analog_mvm, input_quant, output_quant, apply_weight_noise
+from .quant import rtn_weight_quant, clip_weights
+from .losses import kd_loss_rows
+
+__all__ = [
+    "analog_mvm",
+    "input_quant",
+    "output_quant",
+    "apply_weight_noise",
+    "rtn_weight_quant",
+    "clip_weights",
+    "kd_loss_rows",
+]

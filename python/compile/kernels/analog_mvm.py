@@ -1,0 +1,176 @@
+"""Fused AIMC-tile kernel: the paper's analog matrix-vector multiply.
+
+One Pallas grid step simulates what one analog crossbar tile does for a
+block of the activation matrix:
+
+    1. static input (DAC) quantization           — paper eq. (1)
+    2. weight-noise application                  — paper eq. (3)/(5)
+    3. the analog MVM itself                     — fig. 1b
+    4. per-column globally-static ADC quantization — paper eq. (2)
+
+All four stages are fused in one kernel so a tile's x-block, w-block and
+y-block each cross the HBM<->VMEM boundary exactly once (DESIGN.md §8).
+
+Runtime scalars (so the SAME lowered artifact serves every sweep in the
+paper's evaluation — FP16, SI8, O8, gaussian-noise magnitudes):
+
+    beta_in     learnable input range (per layer)      eq. (1)
+    in_levels   2^(input bits - 1) - 1; <= 0 bypasses input quantization
+    gamma_add   additive noise scale (gamma_weight)    eq. (3)
+    beta_mul    multiplicative noise scale             eq. (5)
+    lambda_adc  global ADC range multiplier (out_bound)
+    out_levels  2^(adc bits - 1) - 1; <= 0 bypasses output quantization
+
+The standard-normal draw tau is an explicit input: the caller (L2 model
+or the rust eval harness) owns randomness, keeping the kernel pure.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block shapes for the tile grid. 128x128 keeps a TPU MXU systolic array
+# full; bm=64 bounds the VMEM footprint of the x/y blocks (DESIGN.md §8).
+BLOCK_M = 64
+BLOCK_N = 128
+
+_EPS = 1e-9
+
+
+def _round_to_grid(v, levels, bound):
+    """Symmetric uniform quantization of v onto `levels` positive steps
+    within [-bound, bound]. round-to-nearest (ties-to-even, jnp.round)."""
+    step = bound / levels
+    return jnp.round(v / (step + _EPS)) * step
+
+
+def input_quant(x, beta_in, in_levels):
+    """Paper eq. (1): clamp to +-beta, then round-to-nearest on the DAC grid.
+
+    in_levels <= 0 bypasses quantization (FP16 input path).
+    """
+    xq = jnp.clip(x, -beta_in, beta_in)
+    xq = _round_to_grid(xq, in_levels, beta_in)
+    return jnp.where(in_levels > 0, xq, x)
+
+
+def apply_weight_noise(w, tau, gamma_add, beta_mul):
+    """Paper eq. (5) (eq. (3) is the beta_mul = 0 special case):
+
+        W_noisy[:, i] = W[:, i] + (gamma*max|W[:, i]| + beta*|W[:, i]|) * tau
+
+    Per-channel = per output column. tau ~ N(0, I) is supplied.
+    """
+    col_max = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    sigma = gamma_add * col_max + beta_mul * jnp.abs(w)
+    return w + sigma * tau
+
+
+def output_quant(y, w, beta_in, lambda_adc, out_levels):
+    """Paper eq. (2): per-column ADC quantization with globally static
+    range beta_adc_i = lambda_adc * beta_in * max|W[:, i]|.
+
+    Round first, then clamp (the paper's operator order). out_levels <= 0
+    bypasses (no ADC modeling).
+    """
+    col_max = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    beta_adc = lambda_adc * beta_in * col_max
+    step = beta_adc / out_levels
+    yq = jnp.round(y / (step + _EPS)) * step
+    yq = jnp.clip(yq, -beta_adc, beta_adc)
+    return jnp.where(out_levels > 0, yq, y)
+
+
+def _tile_kernel(x_ref, w_ref, tau_ref, s_ref, o_ref):
+    """One AIMC tile: full-K column strip of W against a block of x.
+
+    K is kept whole per tile so the per-column max|W| used by both the
+    noise model and the ADC range is exact (a physical tile also sees its
+    whole column). s_ref holds the 6 runtime scalars.
+    """
+    beta_in = s_ref[0]
+    in_levels = s_ref[1]
+    gamma_add = s_ref[2]
+    beta_mul = s_ref[3]
+    lambda_adc = s_ref[4]
+    out_levels = s_ref[5]
+
+    x = x_ref[...]
+    w = w_ref[...]
+    tau = tau_ref[...]
+
+    # (1) DAC input quantization.
+    xq = input_quant(x, beta_in, in_levels)
+    # (2) conductance (weight) noise.
+    wn = apply_weight_noise(w, tau, gamma_add, beta_mul)
+    # (3) the analog MVM (MXU op on TPU).
+    y = jnp.dot(xq, wn, preferred_element_type=jnp.float32)
+    # (4) ADC output quantization. Ranges use the *programmed target*
+    # weights w (hardware calibrates ADC ranges before noise happens).
+    o_ref[...] = output_quant(y, w, beta_in, lambda_adc, out_levels)
+
+
+def _pad_to(v, axis, mult):
+    size = v.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return v
+    widths = [(0, 0)] * v.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(v, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def analog_mvm(
+    x,
+    w,
+    tau,
+    beta_in,
+    in_levels,
+    gamma_add,
+    beta_mul,
+    lambda_adc,
+    out_levels,
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+):
+    """Fused AIMC forward: y = ADC( DAC(x) @ (w + noise) ).
+
+    x: (M, K) activations, w/tau: (K, N). Returns (M, N) f32.
+    Shapes are padded to block multiples; K stays whole per tile.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and tau.shape == w.shape
+    xp = _pad_to(x.astype(jnp.float32), 0, block_m)
+    wp = _pad_to(w.astype(jnp.float32), 1, block_n)
+    taup = _pad_to(tau.astype(jnp.float32), 1, block_n)
+    scalars = jnp.stack(
+        [
+            jnp.asarray(beta_in, jnp.float32),
+            jnp.asarray(in_levels, jnp.float32),
+            jnp.asarray(gamma_add, jnp.float32),
+            jnp.asarray(beta_mul, jnp.float32),
+            jnp.asarray(lambda_adc, jnp.float32),
+            jnp.asarray(out_levels, jnp.float32),
+        ]
+    )
+
+    grid = (xp.shape[0] // block_m, wp.shape[1] // block_n)
+    out = pl.pallas_call(
+        _tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j)),
+            pl.BlockSpec((6,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[1]), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, wp, taup, scalars)
+    return out[:m, :n]

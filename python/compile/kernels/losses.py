@@ -1,0 +1,55 @@
+"""Distillation-loss kernel (paper §3.1, appendix B.4).
+
+KL(teacher || student) with temperature T over the vocabulary axis,
+computed row-blocked: one Pallas grid step reduces a block of rows of the
+(R, V) logit matrices to per-row losses. The row dimension R = batch *
+seq; V is our char-level vocab and fits one tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 128
+
+
+def _kd_kernel(s_ref, t_ref, sc_ref, o_ref):
+    temp = sc_ref[0]
+    s = s_ref[...] / temp
+    t = t_ref[...] / temp
+    s_lse = jax.scipy.special.logsumexp(s, axis=-1, keepdims=True)
+    t_lse = jax.scipy.special.logsumexp(t, axis=-1, keepdims=True)
+    log_ps = s - s_lse
+    log_pt = t - t_lse
+    pt = jnp.exp(log_pt)
+    # KL(p_t || p_s) * T^2  (standard distillation scaling)
+    o_ref[...] = jnp.sum(pt * (log_pt - log_ps), axis=-1) * temp * temp
+
+
+@functools.partial(jax.jit, static_argnames=("block_r",))
+def kd_loss_rows(student_logits, teacher_logits, temperature, block_r: int = BLOCK_R):
+    """Per-row distillation loss; caller masks/averages.
+
+    student_logits, teacher_logits: (R, V). Returns (R,) f32.
+    """
+    r, v = student_logits.shape
+    assert teacher_logits.shape == (r, v)
+    rem = (-r) % block_r
+    sp = jnp.pad(student_logits.astype(jnp.float32), ((0, rem), (0, 0)))
+    tp = jnp.pad(teacher_logits.astype(jnp.float32), ((0, rem), (0, 0)))
+    out = pl.pallas_call(
+        _kd_kernel,
+        grid=(sp.shape[0] // block_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, v), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, v), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_r,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((sp.shape[0],), jnp.float32),
+        interpret=True,
+    )(sp, tp, jnp.asarray([temperature], jnp.float32))
+    return out[:r]

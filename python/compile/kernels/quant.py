@@ -1,0 +1,74 @@
+"""Weight-space kernels: RTN per-channel quantization (paper §4.3) and
+iterative weight clipping (paper eq. (4)).
+
+Both operate column-wise on a (K, N) weight matrix; the Pallas grid tiles
+the N (output-channel) axis so every tile owns complete columns.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 128
+_EPS = 1e-9
+
+
+def _rtn_kernel(w_ref, s_ref, o_ref):
+    levels = s_ref[0]
+    w = w_ref[...]
+    scale = jnp.max(jnp.abs(w), axis=0, keepdims=True) / levels
+    # guard all-zero columns without distorting small scales (an additive
+    # eps would systematically shrink weights when scale is tiny)
+    q = jnp.round(w / jnp.where(scale > 0, scale, 1.0))
+    q = jnp.clip(q, -levels, levels)
+    o_ref[...] = q * scale
+
+
+def _clip_kernel(w_ref, s_ref, o_ref):
+    alpha = s_ref[0]
+    w = w_ref[...]
+    # ddof=0 std, matching torch.std(unbiased=False)-style HWA toolkits.
+    mean = jnp.mean(w, axis=0, keepdims=True)
+    std = jnp.sqrt(jnp.mean((w - mean) ** 2, axis=0, keepdims=True))
+    zeta = alpha * std
+    o_ref[...] = jnp.clip(w, -zeta, zeta)
+
+
+def _run_columnwise(kernel, w, scalar, block_n):
+    k, n = w.shape
+    rem = (-n) % block_n
+    wp = jnp.pad(w.astype(jnp.float32), ((0, 0), (0, rem)))
+    out = pl.pallas_call(
+        kernel,
+        grid=(wp.shape[1] // block_n,),
+        in_specs=[
+            pl.BlockSpec((k, block_n), lambda j: (0, j)),
+            pl.BlockSpec((1,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((k, block_n), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct(wp.shape, jnp.float32),
+        interpret=True,
+    )(wp, jnp.asarray([scalar], jnp.float32))
+    return out[:, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def rtn_weight_quant(w, levels, block_n: int = BLOCK_N):
+    """Round-to-nearest symmetric per-channel quantization (paper §4.3).
+
+    levels = 2^(bits-1) - 1 (7 for W4). Returns dequantized f32 weights.
+    """
+    return _run_columnwise(_rtn_kernel, w, levels, block_n)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def clip_weights(w, alpha, block_n: int = BLOCK_N):
+    """Paper eq. (4): clamp W[:, i] to +- alpha * std(W[:, i]).
+
+    Applied after every optimizer step during HWA training ("iterative
+    weight clipping"); also exposed standalone for the fig. 6 analysis.
+    """
+    return _run_columnwise(_clip_kernel, w, alpha, block_n)

@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every L1 kernel — the correctness ground truth.
+
+These implement the paper's equations (1)-(5) directly with no Pallas,
+no tiling, no padding. pytest + hypothesis assert kernel == oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-9
+
+
+def input_quant_ref(x, beta_in, in_levels):
+    """Paper eq. (1)."""
+    if in_levels <= 0:
+        return jnp.asarray(x, jnp.float32)
+    step = beta_in / in_levels
+    xq = jnp.clip(x, -beta_in, beta_in)
+    return jnp.round(xq / (step + _EPS)) * step
+
+
+def weight_noise_ref(w, tau, gamma_add, beta_mul):
+    """Paper eq. (5); eq. (3) when beta_mul = 0."""
+    col_max = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    return w + (gamma_add * col_max + beta_mul * jnp.abs(w)) * tau
+
+
+def output_quant_ref(y, w, beta_in, lambda_adc, out_levels):
+    """Paper eq. (2): round-then-clamp on the global ADC grid."""
+    if out_levels <= 0:
+        return jnp.asarray(y, jnp.float32)
+    col_max = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    beta_adc = lambda_adc * beta_in * col_max
+    step = beta_adc / out_levels
+    yq = jnp.round(y / (step + _EPS)) * step
+    return jnp.clip(yq, -beta_adc, beta_adc)
+
+
+def analog_mvm_ref(x, w, tau, beta_in, in_levels, gamma_add, beta_mul, lambda_adc, out_levels):
+    """Composition of eqs. (1), (5), MVM, (2) — the whole AIMC tile."""
+    xq = input_quant_ref(x, beta_in, in_levels)
+    wn = weight_noise_ref(w, tau, gamma_add, beta_mul)
+    y = xq.astype(jnp.float32) @ wn.astype(jnp.float32)
+    return output_quant_ref(y, w, beta_in, lambda_adc, out_levels)
+
+
+def rtn_weight_quant_ref(w, levels):
+    """Per-channel symmetric RTN (paper §4.3)."""
+    scale = jnp.max(jnp.abs(w), axis=0, keepdims=True) / levels
+    q = jnp.clip(jnp.round(w / jnp.where(scale > 0, scale, 1.0)), -levels, levels)
+    return q * scale
+
+
+def clip_weights_ref(w, alpha):
+    """Paper eq. (4) with ddof=0 std."""
+    mean = jnp.mean(w, axis=0, keepdims=True)
+    std = jnp.sqrt(jnp.mean((w - mean) ** 2, axis=0, keepdims=True))
+    return jnp.clip(w, -alpha * std, alpha * std)
+
+
+def kd_loss_rows_ref(student_logits, teacher_logits, temperature):
+    """KL(teacher || student) * T^2 per row."""
+    s = student_logits / temperature
+    t = teacher_logits / temperature
+    log_ps = jax.nn.log_softmax(s, axis=-1)
+    log_pt = jax.nn.log_softmax(t, axis=-1)
+    pt = jnp.exp(log_pt)
+    return jnp.sum(pt * (log_pt - log_ps), axis=-1) * temperature**2
+
+
+def pcm_sigma_ref(w_norm):
+    """Appendix E.3 polynomial: sigma as %% of w_max, w_norm in [0, 1]
+    scaled to the paper's conductance axis (x25, see fig. 8)."""
+    wx = jnp.abs(w_norm) * 25.0
+    sigma_pct = 1.23e-5 * wx**3 - 3.06e-3 * wx**2 + 2.45e-1 * wx + 2.11
+    return jnp.where(w_norm == 0.0, 0.0, sigma_pct / 100.0)

@@ -1,0 +1,633 @@
+"""L2: the transformer LM with analog (AIMC-simulated) linear layers.
+
+Decoder-only transformer — RMSNorm, RoPE attention, SwiGLU MLP, tied
+embedding head — in which every linear layer is an `AnalogLinear`: the L1
+fused AIMC kernel in the forward pass, straight-through estimation in the
+backward pass (paper §3.1, Bengio et al. STE). Attention itself is
+computed digitally (paper: softmax/attention run in FP16 on digital
+units; we use f32 on CPU).
+
+Per-layer learnable input ranges beta follow the paper's schedule:
+EMA-initialised from kappa * std(x) for the first `init_steps` steps,
+then updated by gradient + decay (appendix D). The forward pass therefore
+returns, besides logits, the per-linear std(x) observations the optimizer
+needs for the EMA phase.
+
+Everything here is build-time only: `aot.py` lowers these functions to
+HLO text artifacts which the rust coordinator executes via PJRT.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import analog_mvm, rtn_weight_quant, clip_weights, kd_loss_rows
+
+
+def _input_quant_traced(x, beta, levels):
+    """Traced-safe eq. (1) (ref.input_quant_ref python-branches on levels)."""
+    step = beta / levels
+    xq = jnp.clip(x, -beta, beta)
+    return jnp.round(xq / (step + 1e-9)) * step
+
+# ----------------------------------------------------------------- configs
+
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+VOCAB = 98  # PAD/BOS/EOS + ASCII 32..126
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int = VOCAB
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 176
+    seq_len: int = 96
+    causal: bool = True
+    n_cls: int = 0  # >0: encoder classifier (table 5 experiment)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+CONFIGS: Dict[str, ModelConfig] = {
+    "nano": ModelConfig("nano", d_model=64, n_layers=2, n_heads=4, d_ff=176),
+    "micro": ModelConfig("micro", d_model=128, n_layers=4, n_heads=8, d_ff=344),
+    "base": ModelConfig("base", d_model=256, n_layers=6, n_heads=8, d_ff=688),
+    # Encoder for the analog-RoBERTa experiment (appendix A / table 5):
+    # bidirectional attention + 3-way classification head.
+    "encnano": ModelConfig(
+        "encnano", d_model=64, n_layers=2, n_heads=4, d_ff=176, seq_len=64,
+        causal=False, n_cls=3
+    ),
+}
+
+# Seven analog linears per transformer block: q, k, v, o, gate, up, down.
+N_LINEARS = 7
+
+# ------------------------------------------------------------------- params
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    """Stacked-layer parameter pytree (all layers share shapes => scan)."""
+    d, f, L, v = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab
+    ks = jax.random.split(key, 16)
+    s = 0.02
+
+    def nrm(k, *shape, scale=s):
+        return (jax.random.normal(k, shape) * scale).astype(jnp.float32)
+
+    params = {
+        "emb": nrm(ks[0], v, d),
+        "ln_f": jnp.ones((d,), jnp.float32),
+        "ln1": jnp.ones((L, d), jnp.float32),
+        "ln2": jnp.ones((L, d), jnp.float32),
+        "wq": nrm(ks[1], L, d, d),
+        "wk": nrm(ks[2], L, d, d),
+        "wv": nrm(ks[3], L, d, d),
+        "wo": nrm(ks[4], L, d, d),
+        "wg": nrm(ks[5], L, d, f),
+        "wu": nrm(ks[6], L, d, f),
+        "wd": nrm(ks[7], L, f, d),
+        # learnable input ranges: one per analog linear (+1 for the head)
+        "betas": jnp.full((L, N_LINEARS), 3.0, jnp.float32),
+        "beta_head": jnp.full((1,), 3.0, jnp.float32),
+    }
+    if cfg.n_cls:
+        params["cls_w"] = nrm(ks[8], d, cfg.n_cls)
+        params["cls_b"] = jnp.zeros((cfg.n_cls,), jnp.float32)
+    return params
+
+
+PARAM_KEYS = [
+    "emb",
+    "ln_f",
+    "ln1",
+    "ln2",
+    "wq",
+    "wk",
+    "wv",
+    "wo",
+    "wg",
+    "wu",
+    "wd",
+    "betas",
+    "beta_head",
+]
+ENC_PARAM_KEYS = PARAM_KEYS + ["cls_w", "cls_b"]
+
+# Weight matrices that live on analog tiles (get clipping / RTN / noise).
+ANALOG_WEIGHT_KEYS = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"]
+# Embedding is tied to the LM head, which also runs on an analog tile.
+TILE_KEYS = ANALOG_WEIGHT_KEYS + ["emb"]
+
+
+def param_keys(cfg: ModelConfig):
+    return ENC_PARAM_KEYS if cfg.n_cls else PARAM_KEYS
+
+
+# --------------------------------------------------------- hardware scalars
+
+# Runtime scalars describing the simulated hardware. All f32 scalars so
+# one artifact serves every paper configuration:
+#   in_levels  : 2^(b-1)-1 for SI-b input quantization; <=0 -> FP input
+#   dyn_input  : >0 -> per-token dynamic input ranges (DI8, SpinQuant cfg)
+#   gamma_add  : additive weight-noise scale (training noise injection)
+#   beta_mul   : multiplicative weight-noise scale (eq. 5 ablation)
+#   lambda_adc : global ADC range multiplier (out_bound)
+#   out_levels : 2^(b-1)-1 for Ob output quantization; <=0 -> no ADC
+#   qat_levels : >0 -> W-bit STE weight quantization in fwd (LLM-QAT)
+HW_FIELDS = [
+    "in_levels",
+    "dyn_input",
+    "gamma_add",
+    "beta_mul",
+    "lambda_adc",
+    "out_levels",
+    "qat_levels",
+]
+
+
+def hw_dict(vals) -> Dict[str, jnp.ndarray]:
+    return dict(zip(HW_FIELDS, vals))
+
+
+def hw_off() -> Dict[str, jnp.ndarray]:
+    """Digital FP path: all analog modeling disabled."""
+    z = jnp.float32
+    return hw_dict(
+        [z(-1.0), z(0.0), z(0.0), z(0.0), z(8.0), z(-1.0), z(-1.0)]
+    )
+
+
+# ------------------------------------------------------------ analog linear
+
+
+@jax.custom_vjp
+def _analog_linear_core(x2d, w, tau, beta, hw_vec):
+    """y = ADC( DAC(x) @ (Q(w) + noise) ) with STE backward.
+
+    hw_vec = [in_levels, dyn_input, gamma_add, beta_mul, lambda_adc,
+              out_levels, qat_levels] (f32 vector, see HW_FIELDS).
+    """
+    in_levels, dyn_input, gamma_add, beta_mul, lambda_adc, out_levels, qat_levels = hw_vec
+    # LLM-QAT baseline: per-channel weight RTN with STE, before noise.
+    wq = jnp.where(
+        qat_levels > 0,
+        _rtn_inline(w, jnp.maximum(qat_levels, 1.0)),
+        w,
+    )
+    # Dynamic per-token input quantization (DI8): quantize outside the
+    # kernel with per-row ranges, then bypass the kernel's static DAC.
+    row_beta = jnp.max(jnp.abs(x2d), axis=-1, keepdims=True)
+    x_dyn = _input_quant_traced(x2d, row_beta, jnp.maximum(in_levels, 1.0))
+    use_dyn = jnp.logical_and(dyn_input > 0, in_levels > 0)
+    x_eff = jnp.where(use_dyn, x_dyn, x2d)
+    kern_in_levels = jnp.where(use_dyn, -1.0, in_levels)
+    return analog_mvm(
+        x_eff, wq, tau, beta, kern_in_levels, gamma_add, beta_mul, lambda_adc, out_levels
+    )
+
+
+def _rtn_inline(w, levels):
+    scale = jnp.max(jnp.abs(w), axis=0, keepdims=True) / levels
+    q = jnp.round(w / jnp.where(scale > 0, scale, 1.0))
+    return jnp.clip(q, -levels, levels) * scale
+
+
+def _alc_fwd(x2d, w, tau, beta, hw_vec):
+    y = _analog_linear_core(x2d, w, tau, beta, hw_vec)
+    return y, (x2d, w, beta, hw_vec)
+
+
+def _alc_bwd(res, dy):
+    """Straight-through estimation (paper §2, §3.1):
+    - quantizers (DAC rounding, ADC, weight RTN) are identity in backward;
+    - weight noise is ignored (noise-free weights in backward);
+    - input clamping routes out-of-range gradient mass to beta, which is
+      how the learnable input range receives its 'custom gradient'
+      favouring tight ranges (appendix D / AIHWKIT-Lightning).
+    """
+    x2d, w, beta, hw_vec = res
+    in_levels = hw_vec[0]
+    dx_full = dy @ w.T
+    inside = (jnp.abs(x2d) <= beta) | (in_levels <= 0)
+    dx = jnp.where(inside, dx_full, 0.0)
+    # d clamp(x, -b, b) / d b = sign(x) outside the range.
+    dbeta = jnp.sum(jnp.where(inside, 0.0, dx_full * jnp.sign(x2d)))
+    xq = jnp.where(
+        in_levels > 0,
+        _input_quant_traced(x2d, beta, jnp.maximum(in_levels, 1.0)),
+        x2d,
+    )
+    dw = xq.T @ dy
+    return dx, dw, None, dbeta.reshape(()), None
+
+
+_analog_linear_core.defvjp(_alc_fwd, _alc_bwd)
+
+
+def analog_linear(x, w, beta, hw, key, gen_tau=True, rot=None):
+    """Apply one analog linear to (..., K) activations; returns (..., N)
+    plus the std(x) observation used by the input-range EMA schedule.
+
+    gen_tau=False skips the in-graph noise draw (eval artifacts: the rust
+    harness injects hardware noise host-side into the weights instead).
+    rot: optional fixed orthogonal matrix applied digitally to x before
+    the tile (SpinQuant-style rotation; weights must be pre-rotated by
+    the matching `spinquant_quant` artifact)."""
+    k_in = x.shape[-1]
+    x2d = x.reshape(-1, k_in)
+    if rot is not None:
+        x2d = x2d @ rot
+    if gen_tau:
+        tau = jax.random.normal(key, w.shape, jnp.float32)
+    else:
+        tau = jnp.zeros(w.shape, jnp.float32)
+    hw_vec = jnp.stack([hw[f] for f in HW_FIELDS])
+    y = _analog_linear_core(x2d, w, tau, beta, hw_vec)
+    std_obs = jnp.std(x2d)
+    return y.reshape(*x.shape[:-1], w.shape[-1]), std_obs
+
+
+# SpinQuant-style rotations: fixed random orthogonal matrices, one per
+# input dimension. Computed IN-GRAPH from a deterministic key (never a
+# captured ndarray constant — jax hoists closure constants into extra
+# executable parameters, which would break the manifest's input
+# contract). Same key => the quantization artifact and the rotated
+# forward artifacts agree with no runtime coordination; XLA constant-
+# folds the QR at compile time.
+# (QR-based jax.random.orthogonal lowers to a typed-FFI lapack custom-
+# call that xla_extension 0.5.1 cannot compile, so we build the rotation
+# as a product of Householder reflections — pure HLO, still orthogonal
+# and outlier-spreading.)
+def rotation_matrix(dim: int) -> jnp.ndarray:
+    key = jax.random.PRNGKey(1234 + dim)
+    r = jnp.eye(dim, dtype=jnp.float32)
+    for _ in range(4):
+        key, sub = jax.random.split(key)
+        v = jax.random.normal(sub, (dim,), jnp.float32)
+        v = v / (jnp.sqrt(jnp.sum(v * v)) + 1e-9)
+        r = r - 2.0 * jnp.outer(r @ v, v)  # r @ (I - 2 v v^T)
+    return r
+
+
+# ----------------------------------------------------------------- forward
+
+
+def _rms_norm(x, scale):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def _rope(x):
+    """Rotary position embedding over the last axis pairs. x: (B,T,H,Dh)."""
+    b, t, h, dh = x.shape
+    half = dh // 2
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    inv = 10000.0 ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos * inv  # (T, half)
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def forward(params, tokens, hw, seed, cfg: ModelConfig, gen_tau=True, rot=False, mlm=False):
+    """Full model forward.
+
+    tokens: (B, T) int32. Returns (logits (B,T,V or B,n_cls), std_obs)
+    where std_obs = {"betas": (L, 7), "beta_head": (1,)} activation-std
+    observations for the input-range EMA schedule.
+
+    Static flags (each combination lowers to its own artifact):
+      gen_tau — draw weight-noise normals in-graph (training) vs zeros
+                (eval; rust injects hardware noise host-side instead);
+      rot     — SpinQuant-style digital input rotations before each tile;
+      mlm     — encoder masked-LM head (tied embedding) instead of the
+                classification head.
+    """
+    b, t = tokens.shape
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    key0 = jax.random.PRNGKey(seed)
+
+    x = params["emb"][tokens]  # (B,T,D) digital embedding lookup
+
+    if cfg.causal:
+        mask = jnp.tril(jnp.ones((t, t), jnp.float32))
+    else:
+        mask = jnp.ones((t, t), jnp.float32)
+    # padding positions never attend nor get attended to (PAD_ID = 0)
+    not_pad = (tokens != PAD_ID).astype(jnp.float32)
+    mask = mask[None] * not_pad[:, None, :]
+    neg = jnp.float32(-1e9)
+
+    layer_params = {
+        k: params[k] for k in ["ln1", "ln2", "wq", "wk", "wv", "wo", "wg", "wu", "wd", "betas"]
+    }
+
+    rot_d = rotation_matrix(d) if rot else None
+    rot_f = rotation_matrix(cfg.d_ff) if rot else None
+
+    def block(x, lp_key):
+        lp, lkey = lp_key
+        betas = lp["betas"]  # (7,)
+        keys = jax.random.split(lkey, N_LINEARS)
+
+        def lin(xin, w, i, rmat):
+            return analog_linear(xin, w, betas[i], hw, keys[i], gen_tau=gen_tau, rot=rmat)
+
+        xn = _rms_norm(x, lp["ln1"])
+        q, sq = lin(xn, lp["wq"], 0, rot_d)
+        k, sk = lin(xn, lp["wk"], 1, rot_d)
+        v, sv = lin(xn, lp["wv"], 2, rot_d)
+        q = _rope(q.reshape(b, t, h, dh))
+        k = _rope(k.reshape(b, t, h, dh))
+        v = v.reshape(b, t, h, dh)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(jnp.float32(dh))
+        att = jnp.where(mask[:, None] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, t, d)
+        o, so = lin(ctx, lp["wo"], 3, rot_d)
+        x = x + o
+        xn2 = _rms_norm(x, lp["ln2"])
+        g, sg = lin(xn2, lp["wg"], 4, rot_d)
+        u, su = lin(xn2, lp["wu"], 5, rot_d)
+        mlp_in = jax.nn.silu(g) * u
+        dwn, sd = lin(mlp_in, lp["wd"], 6, rot_f)
+        x = x + dwn
+        stds = jnp.stack([sq, sk, sv, so, sg, su, sd])
+        return x, stds
+
+    layer_keys = jax.random.split(jax.random.fold_in(key0, 17), cfg.n_layers)
+
+    def scan_body(x, lp_key):
+        x, stds = block(x, lp_key)
+        return x, stds
+
+    lp_stacked = ({k: layer_params[k] for k in layer_params}, layer_keys)
+    x, std_layers = jax.lax.scan(scan_body, x, lp_stacked)
+
+    x = _rms_norm(x, params["ln_f"])
+
+    if cfg.n_cls and not mlm:
+        # mean-pool non-pad positions, digital classifier head
+        w_sum = jnp.sum(not_pad, axis=1, keepdims=True) + 1e-6
+        pooled = jnp.sum(x * not_pad[..., None], axis=1) / w_sum
+        logits = pooled @ params["cls_w"] + params["cls_b"]
+        std_obs = {"betas": std_layers, "beta_head": jnp.zeros((1,), jnp.float32)}
+        return logits, std_obs
+
+    # Tied-embedding LM head on an analog tile. The head is never rotated:
+    # rotating the tied matrix would corrupt the digital embedding lookup
+    # (SpinQuant unties them; our lite variant RTN-quantizes the head
+    # unrotated instead — see spinquant_all()).
+    head_key = jax.random.fold_in(key0, 23)
+    logits2d, s_head = analog_linear(
+        x.reshape(-1, d),
+        params["emb"].T,
+        params["beta_head"][0],
+        hw,
+        head_key,
+        gen_tau=gen_tau,
+    )
+    logits = logits2d.reshape(b, t, cfg.vocab)
+    std_obs = {"betas": std_layers, "beta_head": s_head.reshape(1)}
+    return logits, std_obs
+
+
+# ------------------------------------------------------------------ losses
+
+
+def ce_loss(logits, tokens):
+    """Next-token cross entropy, PAD-masked. logits (B,T,V), tokens (B,T)."""
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    w = (tgt != PAD_ID).astype(jnp.float32)
+    return jnp.sum(nll * w) / (jnp.sum(w) + 1e-6)
+
+
+@jax.custom_vjp
+def _kd_rows(s, t, temp):
+    return kd_loss_rows(s, t, temp)
+
+
+def _kd_rows_fwd(s, t, temp):
+    return kd_loss_rows(s, t, temp), (s, t, temp)
+
+
+def _kd_rows_bwd(res, dy):
+    # d KL(p_t || p_s)*T^2 / d s = T * (softmax(s/T) - softmax(t/T))
+    s, t, temp = res
+    ps = jax.nn.softmax(s / temp, axis=-1)
+    pt = jax.nn.softmax(t / temp, axis=-1)
+    ds = dy[:, None] * temp * (ps - pt)
+    return ds, jnp.zeros_like(t), None
+
+
+_kd_rows.defvjp(_kd_rows_fwd, _kd_rows_bwd)
+
+
+def kd_loss(student_logits, teacher_logits, tokens, temperature):
+    """Distillation loss via the L1 row kernel, PAD-masked.
+
+    The Pallas kernel is wrapped in a custom_vjp (pallas_call has no
+    autodiff rule); the backward uses the closed-form KL gradient."""
+    b, t, v = student_logits.shape
+    rows = _kd_rows(
+        student_logits.reshape(-1, v), teacher_logits.reshape(-1, v), temperature
+    )
+    w = (tokens != PAD_ID).astype(jnp.float32).reshape(-1)
+    return jnp.sum(rows * w) / (jnp.sum(w) + 1e-6)
+
+
+def mlm_ce_loss(logits, targets, mask_w):
+    """Masked-LM loss for the encoder pretraining (appendix A)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask_w) / (jnp.sum(mask_w) + 1e-6)
+
+
+# ------------------------------------------------------- gradient endpoints
+
+
+def ce_grads(params, tokens, hw, seed, cfg):
+    """(loss, grads, std_obs) for CE training — serves teacher pretraining
+    (hw off) and the table-10 'no distillation' ablation (hw on)."""
+
+    def f(p):
+        logits, std_obs = forward(p, tokens, hw, seed, cfg)
+        return ce_loss(logits, tokens), std_obs
+
+    (loss, std_obs), grads = jax.value_and_grad(f, has_aux=True)(params)
+    return loss, grads, std_obs
+
+
+def hwa_kd_grads(params, teacher_params, tokens, hw, seed, temperature, cfg):
+    """(loss, grads, std_obs) for distillation HWA training (paper fig. 2b).
+
+    The teacher runs the digital FP path; the student runs the analog
+    path described by `hw`. Only student params receive gradients."""
+    t_logits, _ = forward(teacher_params, tokens, hw_off(), seed + 1, cfg)
+    t_logits = jax.lax.stop_gradient(t_logits)
+
+    def f(p):
+        s_logits, std_obs = forward(p, tokens, hw, seed, cfg)
+        return kd_loss(s_logits, t_logits, tokens, temperature), std_obs
+
+    (loss, std_obs), grads = jax.value_and_grad(f, has_aux=True)(params)
+    return loss, grads, std_obs
+
+
+def cls_ce_grads(params, tokens, labels, hw, seed, cfg):
+    """Encoder classification grads (table 5)."""
+
+    def f(p):
+        logits, std_obs = forward(p, tokens, hw, seed, cfg)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(nll), std_obs
+
+    (loss, std_obs), grads = jax.value_and_grad(f, has_aux=True)(params)
+    return loss, grads, std_obs
+
+
+def mlm_grads(params, tokens_in, targets, mask_w, hw, seed, cfg):
+    """Encoder masked-LM pretraining grads (appendix A)."""
+
+    def f(p):
+        logits, std_obs = forward(p, tokens_in, hw, seed, cfg, mlm=True)
+        return mlm_ce_loss(logits, targets, mask_w), std_obs
+
+    (loss, std_obs), grads = jax.value_and_grad(f, has_aux=True)(params)
+    return loss, grads, std_obs
+
+
+# ---------------------------------------------------------------- optimizer
+
+
+def adamw_update(
+    params,
+    m,
+    v,
+    grads,
+    std_obs,
+    step,
+    lr,
+    alpha_clip,
+    kappa,
+    init_steps,
+    beta_decay,
+    cfg,
+):
+    """AdamW + the paper's HWA post-step transforms:
+
+    1. global grad-norm clip to 1.0 (appendix D);
+    2. AdamW (b1=0.9, b2=0.98, eps=1e-6, wd=0.01 on weight matrices);
+    3. iterative weight clipping, eq. (4), on analog weight matrices
+       (alpha_clip <= 0 disables);
+    4. input-range schedule: EMA init from kappa*std(x) while
+       step < init_steps, then decay towards tighter ranges.
+    """
+    b1, b2, eps, wd = 0.9, 0.98, 1e-6, 0.01
+    keys = param_keys(cfg)
+
+    # 1. global grad clip
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(grads[k] ** 2) for k in keys) + 1e-12
+    )
+    scale = jnp.minimum(1.0, 1.0 / gnorm)
+
+    stepf = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - b1**stepf
+    bc2 = 1.0 - b2**stepf
+
+    new_p, new_m, new_v = {}, {}, {}
+    for k in keys:
+        g = grads[k] * scale
+        if k in ("betas", "beta_head"):
+            g = jnp.zeros_like(g)  # handled by the beta schedule below
+        nm = b1 * m[k] + (1 - b1) * g
+        nv = b2 * v[k] + (1 - b2) * g * g
+        upd = (nm / bc1) / (jnp.sqrt(nv / bc2) + eps)
+        decay = wd if k in TILE_KEYS else 0.0
+        p = params[k] - lr * (upd + decay * params[k])
+        new_p[k], new_m[k], new_v[k] = p, nm, nv
+
+    # 3. eq. (4) iterative clipping on the analog weight matrices.
+    # Stacked (L, K, N) weights are unrolled over L at trace time
+    # (pallas_call has no batching rule for vmap).
+    a_clip = jnp.maximum(alpha_clip, 1e-3)
+
+    def clip_stack(wst):
+        if wst.ndim == 3:
+            return jnp.stack([clip_weights(wst[i], a_clip) for i in range(wst.shape[0])])
+        return clip_weights(wst, a_clip)
+
+    for k in ANALOG_WEIGHT_KEYS:
+        new_p[k] = jnp.where(alpha_clip > 0, clip_stack(new_p[k]), new_p[k])
+    new_p["emb"] = jnp.where(
+        alpha_clip > 0, clip_weights(new_p["emb"].T, a_clip).T, new_p["emb"]
+    )
+
+    # 4. input-range schedule
+    beta_grad_lr = lr * 10.0
+    for k in ("betas", "beta_head"):
+        if k not in params:
+            continue
+        ema_target = kappa * std_obs[k]
+        ema = 0.98 * params[k] + 0.02 * ema_target
+        trained = params[k] * (1.0 - beta_decay) - beta_grad_lr * grads[k] * scale
+        nb = jnp.where(stepf <= init_steps, ema, trained)
+        new_p[k] = jnp.maximum(nb, 1e-3)
+
+    return new_p, new_m, new_v, gnorm
+
+
+def _map_stack(fn, wst):
+    if wst.ndim == 3:
+        return jnp.stack([fn(wst[i]) for i in range(wst.shape[0])])
+    return fn(wst)
+
+
+def rtn_all(params, levels, cfg):
+    """Post-training RTN of every analog tile (paper table 3 path)."""
+    out = dict(params)
+    for k in ANALOG_WEIGHT_KEYS:
+        out[k] = _map_stack(lambda w: rtn_weight_quant(w, levels), params[k])
+    # tied head: quantize per vocab-channel (columns of emb.T)
+    out["emb"] = rtn_weight_quant(params["emb"].T, levels).T
+    return out
+
+
+def spinquant_all(params, levels, cfg):
+    """SpinQuant-lite PTQ (paper baseline, §2/§4): rotate each block
+    linear's input basis with a fixed orthogonal matrix (outlier
+    spreading), then per-channel RTN. Must be paired with the `rot=True`
+    forward artifacts, which apply the same rotation to activations.
+    The tied head is RTN'd unrotated (see forward())."""
+    out = dict(params)
+    rot_d = rotation_matrix(cfg.d_model)
+    rot_f = rotation_matrix(cfg.d_ff)
+
+    def rot_rtn(rmat):
+        return lambda w: rtn_weight_quant(rmat.T @ w, levels)
+
+    for k in ["wq", "wk", "wv", "wo", "wg", "wu"]:
+        out[k] = _map_stack(rot_rtn(rot_d), params[k])
+    out["wd"] = _map_stack(rot_rtn(rot_f), params["wd"])
+    out["emb"] = rtn_weight_quant(params["emb"].T, levels).T
+    return out
+
+
+def zeros_like_params(params):
+    return {k: jnp.zeros_like(v) for k, v in params.items()}

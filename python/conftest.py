@@ -1,0 +1,5 @@
+# Allow `pytest python/tests/` from the repo root (tests import `compile.*`).
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

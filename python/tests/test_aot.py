@@ -1,0 +1,73 @@
+"""aot.py registry consistency: the manifest is the L2-L3 contract, so
+its structure is tested independently of (slow) lowering."""
+import jax
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def registry():
+    return aot.build_registry(["nano", "encnano"])
+
+
+def test_artifact_names_unique(registry):
+    names = [name for name, _, _, _ in registry]
+    assert len(names) == len(set(names))
+    assert "nano_lm_fwd" in names
+    assert "encnano_cls_grads" in names
+
+
+def test_input_names_unique_per_artifact(registry):
+    for name, ins, _, _ in registry:
+        in_names = [n for n, _ in ins]
+        assert len(in_names) == len(set(in_names)), name
+
+
+def test_param_inputs_match_model_shapes(registry):
+    cfg = M.CONFIGS["nano"]
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    for name, ins, _, _ in registry:
+        if not name.startswith("nano"):
+            continue
+        for n, s in ins:
+            if n.startswith("p_"):
+                key = n[2:]
+                assert tuple(params[key].shape) == tuple(s.shape), f"{name}:{n}"
+
+
+def test_hw_scalars_present_in_field_order(registry):
+    for name, ins, _, _ in registry:
+        hw_names = [n[3:] for n, _ in ins if n.startswith("hw_")]
+        if hw_names:
+            assert hw_names == M.HW_FIELDS, name
+
+
+def test_grads_artifacts_output_one_grad_per_param(registry):
+    for name, ins, _, outs in registry:
+        if name.endswith("_grads"):
+            cfg = M.CONFIGS[name.split("_")[0]]
+            g_outs = [o for o in outs if o.startswith("g_")]
+            assert len(g_outs) == len(M.param_keys(cfg)), name
+            assert outs[0] == "loss"
+            assert outs[-2:] == ["std_betas", "std_beta_head"]
+
+
+def test_update_artifact_roundtrips_param_keys(registry):
+    for name, ins, _, outs in registry:
+        if name.endswith("_adamw_update"):
+            cfg = M.CONFIGS[name.split("_")[0]]
+            keys = M.param_keys(cfg)
+            assert outs[: len(keys)] == [f"p_{k}" for k in keys], name
+            assert outs[-1] == "gnorm"
+
+
+def test_trace_smoke_lm_fwd(registry):
+    # tracing (no lowering) of one artifact catches signature bugs fast
+    for name, ins, fn, _ in registry:
+        if name == "nano_lm_fwd":
+            specs = [s for _, s in ins]
+            jax.eval_shape(fn, *specs)
+            return
+    pytest.fail("nano_lm_fwd not registered")

@@ -1,0 +1,199 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes/parameters; assert_allclose is the CORE
+correctness signal for the whole stack (the same kernels are baked into
+every AOT artifact the rust coordinator executes).
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import (
+    analog_mvm,
+    rtn_weight_quant,
+    clip_weights,
+    kd_loss_rows,
+)
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+dims = st.integers(min_value=1, max_value=70)
+small_dims = st.integers(min_value=1, max_value=40)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------- analog_mvm
+@settings(max_examples=25, deadline=None)
+@given(
+    m=dims,
+    k=small_dims,
+    n=dims,
+    seed=st.integers(0, 2**31 - 1),
+    in_bits=st.sampled_from([0, 4, 8]),
+    out_bits=st.sampled_from([0, 8]),
+    gamma=st.floats(0.0, 0.1),
+    beta_mul=st.floats(0.0, 0.1),
+)
+def test_analog_mvm_matches_ref(m, k, n, seed, in_bits, out_bits, gamma, beta_mul):
+    rng = np.random.default_rng(seed)
+    x, w, tau = _rand(rng, m, k), _rand(rng, k, n), _rand(rng, k, n)
+    beta_in = float(rng.uniform(0.5, 4.0))
+    lam = float(rng.uniform(4.0, 16.0))
+    in_levels = float(2 ** (in_bits - 1) - 1) if in_bits else -1.0
+    out_levels = float(2 ** (out_bits - 1) - 1) if out_bits else -1.0
+    got = analog_mvm(x, w, tau, beta_in, in_levels, gamma, beta_mul, lam, out_levels)
+    want = ref.analog_mvm_ref(x, w, tau, beta_in, in_levels, gamma, beta_mul, lam, out_levels)
+    assert got.shape == (m, n)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_analog_mvm_fp_path_is_plain_matmul():
+    rng = np.random.default_rng(0)
+    x, w = _rand(rng, 8, 16), _rand(rng, 16, 24)
+    tau = jnp.zeros_like(w)
+    got = analog_mvm(x, w, tau, 1.0, -1.0, 0.0, 0.0, 8.0, -1.0)
+    assert_allclose(np.asarray(got), np.asarray(x @ w), rtol=1e-5, atol=1e-5)
+
+
+def test_analog_mvm_input_quant_grid():
+    # With 2-bit input quant (levels=1), every quantized input is in
+    # {-beta, 0, beta}: output must equal matmul of that snapped x.
+    rng = np.random.default_rng(1)
+    x, w = _rand(rng, 4, 8), _rand(rng, 8, 8)
+    tau = jnp.zeros_like(w)
+    beta = 1.5
+    got = analog_mvm(x, w, tau, beta, 1.0, 0.0, 0.0, 8.0, -1.0)
+    snapped = jnp.round(jnp.clip(x, -beta, beta) / beta) * beta
+    assert_allclose(np.asarray(got), np.asarray(snapped @ w), rtol=1e-5, atol=1e-5)
+
+
+def test_analog_mvm_output_clamped_to_adc_range():
+    rng = np.random.default_rng(2)
+    x = jnp.abs(_rand(rng, 16, 32)) * 10.0  # large activations saturate ADC
+    w = jnp.abs(_rand(rng, 32, 8))
+    tau = jnp.zeros_like(w)
+    beta_in, lam = 2.0, 4.0
+    got = analog_mvm(x, w, tau, beta_in, 127.0, 0.0, 0.0, lam, 127.0)
+    beta_adc = lam * beta_in * jnp.max(jnp.abs(w), axis=0)
+    assert np.all(np.abs(np.asarray(got)) <= np.asarray(beta_adc)[None, :] + 1e-5)
+
+
+def test_analog_mvm_zero_weight_column_gets_no_noise_effect():
+    # all-zero column: col_max = 0 so additive noise sigma = 0 -> output 0.
+    rng = np.random.default_rng(3)
+    x = _rand(rng, 4, 8)
+    w = jnp.zeros((8, 4), jnp.float32)
+    tau = _rand(rng, 8, 4)
+    got = analog_mvm(x, w, tau, 1.0, -1.0, 0.05, 0.0, 8.0, -1.0)
+    assert_allclose(np.asarray(got), np.zeros((4, 4), np.float32), atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=dims, k=small_dims, n=dims, bm=st.sampled_from([8, 32, 64]), bn=st.sampled_from([16, 128]))
+def test_analog_mvm_block_shape_invariance(m, k, n, bm, bn):
+    # Tiling must never change the numbers (padding correctness).
+    rng = np.random.default_rng(m * 1000 + n)
+    x, w, tau = _rand(rng, m, k), _rand(rng, k, n), _rand(rng, k, n)
+    a = analog_mvm(x, w, tau, 2.0, 127.0, 0.02, 0.0, 12.0, 127.0, block_m=bm, block_n=bn)
+    b = ref.analog_mvm_ref(x, w, tau, 2.0, 127.0, 0.02, 0.0, 12.0, 127.0)
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------------ rtn/clip
+@settings(max_examples=25, deadline=None)
+@given(k=dims, n=dims, seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([2, 4, 8]))
+def test_rtn_matches_ref(k, n, seed, bits):
+    rng = np.random.default_rng(seed)
+    w = _rand(rng, k, n)
+    levels = float(2 ** (bits - 1) - 1)
+    got = rtn_weight_quant(w, levels)
+    want = ref.rtn_weight_quant_ref(w, levels)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_rtn_error_bound(k, n, seed):
+    # |w - q(w)| <= step/2 with step = max|w_col| / levels (W4).
+    rng = np.random.default_rng(seed)
+    w = _rand(rng, k, n)
+    q = np.asarray(rtn_weight_quant(w, 7.0))
+    step = np.max(np.abs(np.asarray(w)), axis=0, keepdims=True) / 7.0
+    assert np.all(np.abs(np.asarray(w) - q) <= step / 2 + 1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(k=st.integers(2, 70), n=dims, seed=st.integers(0, 2**31 - 1), alpha=st.floats(0.5, 4.0))
+def test_clip_matches_ref(k, n, seed, alpha):
+    rng = np.random.default_rng(seed)
+    w = _rand(rng, k, n)
+    got = clip_weights(w, alpha)
+    want = ref.clip_weights_ref(w, alpha)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+    # invariant: clipped weights bounded by alpha * column std
+    std = np.asarray(w).std(axis=0, keepdims=True)
+    assert np.all(np.abs(np.asarray(got)) <= alpha * std + 1e-5)
+
+
+def test_clip_is_idempotent_in_the_limit():
+    # Repeated clipping converges (fixed point exists): applying twice
+    # moves less than applying once.
+    rng = np.random.default_rng(7)
+    w = _rand(rng, 64, 32)
+    c1 = clip_weights(w, 2.0)
+    c2 = clip_weights(c1, 2.0)
+    d1 = float(jnp.abs(w - c1).sum())
+    d2 = float(jnp.abs(c1 - c2).sum())
+    assert d2 < d1
+
+
+# ------------------------------------------------------------------- kd loss
+@settings(max_examples=25, deadline=None)
+@given(r=st.integers(1, 300), v=st.integers(2, 96), seed=st.integers(0, 2**31 - 1), temp=st.floats(0.5, 4.0))
+def test_kd_loss_matches_ref(r, v, seed, temp):
+    rng = np.random.default_rng(seed)
+    s, t = _rand(rng, r, v) * 3, _rand(rng, r, v) * 3
+    got = kd_loss_rows(s, t, temp)
+    want = ref.kd_loss_rows_ref(s, t, temp)
+    assert got.shape == (r,)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+def test_kd_loss_zero_when_distributions_match():
+    rng = np.random.default_rng(11)
+    s = _rand(rng, 32, 16)
+    out = np.asarray(kd_loss_rows(s, s, 2.0))
+    assert_allclose(out, np.zeros(32, np.float32), atol=1e-5)
+
+
+def test_kd_loss_nonnegative():
+    rng = np.random.default_rng(12)
+    s, t = _rand(rng, 64, 24), _rand(rng, 64, 24)
+    assert np.all(np.asarray(kd_loss_rows(s, t, 1.0)) >= -1e-5)
+
+
+# --------------------------------------------------------------- pcm oracle
+def test_pcm_sigma_matches_published_coefficients():
+    # sigma(w_max) with w on the paper's conductance axis (25 = max).
+    w = jnp.asarray([1.0])
+    want = (1.23e-5 * 25**3 - 3.06e-3 * 25**2 + 2.45e-1 * 25 + 2.11) / 100.0
+    assert_allclose(np.asarray(ref.pcm_sigma_ref(w)), [want], rtol=1e-6)
+
+
+def test_pcm_sigma_zero_at_exact_zero():
+    assert float(ref.pcm_sigma_ref(jnp.asarray([0.0]))[0]) == 0.0
+
+
+def test_pcm_sigma_monotone_regions():
+    # Noise floor dominates near zero: sigma(0+) > 0; grows with |w|.
+    w = jnp.linspace(1e-3, 1.0, 50)
+    s = np.asarray(ref.pcm_sigma_ref(w))
+    assert s[0] > 0.02  # ~2.11% floor
+    assert s[-1] > s[0]

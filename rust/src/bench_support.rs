@@ -1,0 +1,193 @@
+//! Bench harness substrate (criterion is not available offline).
+//!
+//! `harness = false` benches use `Bench` for timing (warmup + N timed
+//! iterations, mean ± std + throughput) and share the model zoo through
+//! `bench_zoo()` so `cargo bench` reuses checkpoints built by
+//! `make models` (or builds them on first run).
+
+use std::time::Instant;
+
+use crate::config::Config;
+use crate::coordinator::pipeline::Pipeline;
+use crate::runtime::{Params, Runtime};
+use crate::util::stats;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        let tp = self
+            .throughput
+            .map(|(v, u)| format!("  {v:10.1} {u}"))
+            .unwrap_or_default();
+        format!(
+            "{:<40} {:>4} iters  {:>10.2} ms ±{:>8.2}{tp}",
+            self.name, self.iters, self.mean_ms, self.std_ms
+        )
+    }
+}
+
+/// Time `f` with `warmup` + `iters` runs; `work_items` (per iteration)
+/// turns the mean into a throughput.
+pub fn bench<T>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    work_items: Option<(f64, &'static str)>,
+    mut f: impl FnMut() -> T,
+) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean_ms = stats::mean(&times);
+    let throughput = work_items.map(|(n, unit)| (n / (mean_ms / 1e3), unit));
+    BenchResult { name: name.to_string(), iters, mean_ms, std_ms: stats::std(&times), throughput }
+}
+
+/// Shared bench environment: runtime + nano-model zoo.
+pub struct Zoo {
+    pub rt: Runtime,
+    pub cfg: Config,
+    pub teacher: Params,
+    pub afm: Params,
+    pub qat: Params,
+}
+
+/// Build (or load) the standard nano zoo used by the paper-table benches.
+/// Honours AFM_BENCH_CONFIG for an alternative config file.
+pub fn bench_zoo() -> anyhow::Result<Zoo> {
+    let cfg_path = std::env::var("AFM_BENCH_CONFIG").unwrap_or_else(|_| "configs/bench.toml".into());
+    let cfg = if std::path::Path::new(&cfg_path).exists() {
+        Config::load(&cfg_path).map_err(|e| anyhow::anyhow!(e))?
+    } else {
+        Config::default()
+    };
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let (teacher, afm, qat) = {
+        let pipe = Pipeline::new(&rt, cfg.clone());
+        let teacher = pipe.ensure_teacher()?;
+        let shard = pipe.ensure_shard(&teacher, &cfg.datagen.strategy, cfg.datagen.tokens)?;
+        let afm = pipe.ensure_afm(&teacher, shard.clone())?;
+        let qat = pipe.ensure_qat(&teacher, shard)?;
+        (teacher, afm, qat)
+    };
+    Ok(Zoo { rt, cfg, teacher, afm, qat })
+}
+
+/// Standard bench banner.
+pub fn banner(name: &str, paper_ref: &str) {
+    println!("\n==============================================================");
+    println!("bench {name} — reproduces {paper_ref}");
+    println!("==============================================================");
+}
+
+use crate::coordinator::evaluate::{avg_acc, EvalReport, Evaluator, ModelUnderTest};
+use crate::coordinator::noise::NoiseModel;
+use crate::data::tasks::{build_task, Task, TABLE1_TASKS};
+use crate::data::World;
+
+/// The 9-task table-1 suite at bench scale.
+pub fn suite(world: &World, samples: usize, seed: u64) -> Vec<Task> {
+    TABLE1_TASKS.iter().map(|n| build_task(n, world, samples, seed)).collect()
+}
+
+/// Evaluate and return (full report, paper-style Avg.).
+#[allow(clippy::too_many_arguments)]
+pub fn eval_avg(
+    rt: &Runtime,
+    model: &str,
+    label: &str,
+    params: &Params,
+    hw: crate::config::HwConfig,
+    rot: bool,
+    nm: &NoiseModel,
+    tasks: &[Task],
+    seeds: usize,
+    seed: u64,
+) -> anyhow::Result<(EvalReport, f64)> {
+    let ev = Evaluator::new(rt, model);
+    let m = ModelUnderTest { label: label.into(), params: params.clone(), hw, rot };
+    let rep = ev.evaluate(&m, nm, tasks, seeds, seed)?;
+    let avg = avg_acc(&rep);
+    Ok((rep, avg))
+}
+
+/// Short column names for the table-1 suite.
+pub const SHORT_TASKS: &[(&str, &str)] = &[
+    ("mmlu_syn", "mmlu"),
+    ("gsm_syn", "gsm"),
+    ("boolq_syn", "boolq"),
+    ("hellaswag_syn", "hswag"),
+    ("medqa_syn", "medqa"),
+    ("agieval_syn", "agi"),
+    ("arc_c_syn", "arc-c"),
+    ("arc_e_syn", "arc-e"),
+    ("anli_syn", "anli"),
+];
+
+/// One paper-style row: per-task mean±std plus Avg.
+pub fn suite_row(label: &str, rep: &EvalReport, avg: f64) -> Vec<String> {
+    let mut row = vec![label.to_string()];
+    for (task, _) in SHORT_TASKS {
+        let cell = rep
+            .get(*task)
+            .and_then(|m| m.get("acc"))
+            .map(|v| crate::coordinator::evaluate::fmt_metric(v))
+            .unwrap_or_else(|| "-".into());
+        row.push(cell);
+    }
+    row.push(format!("{avg:.2}"));
+    row
+}
+
+/// Header matching `suite_row`.
+pub fn suite_header() -> Vec<&'static str> {
+    let mut h = vec!["model"];
+    h.extend(SHORT_TASKS.iter().map(|(_, s)| *s));
+    h.push("Avg.");
+    h
+}
+
+/// Reports directory used by all benches.
+pub fn reports_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from("runs/reports")
+}
+
+/// (clean avg, PCM-noisy avg) for an ablation variant — the two columns
+/// every appendix-B/C ablation table reports.
+pub fn eval_pair(
+    zoo: &Zoo,
+    label: &str,
+    params: &Params,
+    hw: crate::config::HwConfig,
+    tasks: &[Task],
+    seeds: usize,
+) -> anyhow::Result<(f64, f64)> {
+    let (_, clean) = eval_avg(
+        &zoo.rt, &zoo.cfg.model, label, params, hw.clone(), false, &NoiseModel::None, tasks, 1,
+        zoo.cfg.seed + 910,
+    )?;
+    let (_, noisy) = eval_avg(
+        &zoo.rt, &zoo.cfg.model, label, params, hw, false, &NoiseModel::Pcm, tasks, seeds,
+        zoo.cfg.seed + 910,
+    )?;
+    Ok((clean, noisy))
+}
+
+/// Ablation-scale training config: fewer steps than the main run so the
+/// appendix sweeps stay cheap; relative comparisons are what matter.
+pub fn ablation_train_cfg(zoo: &Zoo) -> crate::config::TrainConfig {
+    crate::config::TrainConfig { steps: 100, ..zoo.cfg.train.clone() }
+}

@@ -1,0 +1,128 @@
+//! CLI argument parsing substrate (no clap offline).
+//!
+//! Grammar: `afm <subcommand> [--flag value]... [--switch]... [--set k=v]...`
+//! Repeated `--set` collects config overrides. Unknown flags are errors
+//! so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub cmd: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub set: Vec<String>,
+}
+
+/// Declarative flag spec used for validation + help text.
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+impl Args {
+    pub fn parse(argv: &[String], specs: &[FlagSpec]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.next() {
+            out.cmd = cmd.clone();
+        }
+        while let Some(a) = it.next() {
+            if a == "--set" {
+                let v = it.next().ok_or("--set needs key=value")?;
+                out.set.push(v.clone());
+                continue;
+            }
+            let name = a
+                .strip_prefix("--")
+                .ok_or_else(|| format!("unexpected positional argument '{a}'"))?;
+            let spec = specs
+                .iter()
+                .find(|s| s.name == name)
+                .ok_or_else(|| format!("unknown flag --{name}"))?;
+            if spec.takes_value {
+                let v = it
+                    .next()
+                    .ok_or_else(|| format!("--{name} needs a value"))?;
+                out.flags.insert(name.to_string(), v.clone());
+            } else {
+                out.switches.push(name.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, name: &str, default: f32) -> f32 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+pub fn render_help(cmds: &[(&str, &str)], specs: &[FlagSpec]) -> String {
+    let mut s = String::from("afm — Analog Foundation Models coordinator\n\nCOMMANDS\n");
+    for (c, h) in cmds {
+        s.push_str(&format!("  {c:<12} {h}\n"));
+    }
+    s.push_str("\nFLAGS\n");
+    for f in specs {
+        let arg = if f.takes_value { " <v>" } else { "" };
+        s.push_str(&format!("  --{}{arg:<6} {}\n", f.name, f.help));
+    }
+    s.push_str("  --set k=v    override any config key (repeatable)\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec { name: "config", takes_value: true, help: "" },
+            FlagSpec { name: "quiet", takes_value: false, help: "" },
+        ]
+    }
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_flags_switches_sets() {
+        let a = Args::parse(
+            &sv(&["train", "--config", "c.toml", "--quiet", "--set", "train.steps=5"]),
+            &specs(),
+        )
+        .unwrap();
+        assert_eq!(a.cmd, "train");
+        assert_eq!(a.get("config"), Some("c.toml"));
+        assert!(a.has("quiet"));
+        assert_eq!(a.set, vec!["train.steps=5"]);
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        assert!(Args::parse(&sv(&["x", "--bogus"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["x", "--config"]), &specs()).is_err());
+    }
+}

@@ -1,0 +1,324 @@
+//! Typed configuration system: TOML files -> validated structs.
+//!
+//! One `Config` drives the whole pipeline (pretrain -> datagen -> train
+//! -> eval -> quantize -> tts). `configs/*.toml` holds the shipped
+//! presets; any field can be overridden on the CLI via
+//! `--set section.key=value`.
+
+pub mod toml;
+
+use crate::util::json::Json;
+use toml::Doc;
+
+/// Hardware simulation knobs — the paper's notation (§3):
+/// `SI{in_bits}-W{qat_bits}[noise]-O{out_bits}` configurations all map
+/// onto this struct, which in turn maps onto the 7 runtime scalars every
+/// artifact takes (model.HW_FIELDS order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HwConfig {
+    /// input DAC bits; 0 = FP input path
+    pub in_bits: u32,
+    /// dynamic per-token input ranges (DI) instead of static (SI)
+    pub dyn_input: bool,
+    /// additive weight-noise scale gamma_weight (eq. 3)
+    pub gamma_add: f32,
+    /// multiplicative weight-noise scale beta_weight (eq. 5)
+    pub beta_mul: f32,
+    /// global ADC range multiplier lambda_adc (out_bound)
+    pub lambda_adc: f32,
+    /// output ADC bits; 0 = no output quantization
+    pub out_bits: u32,
+    /// in-forward W-bit STE weight quantization (LLM-QAT); 0 = off
+    pub qat_bits: u32,
+}
+
+impl HwConfig {
+    pub fn off() -> HwConfig {
+        HwConfig {
+            in_bits: 0,
+            dyn_input: false,
+            gamma_add: 0.0,
+            beta_mul: 0.0,
+            lambda_adc: 12.0,
+            out_bits: 0,
+            qat_bits: 0,
+        }
+    }
+
+    /// Paper's analog-foundation-model training config: SI8 + O8 + noise
+    /// injection + clipping (gamma per appendix C.2).
+    pub fn afm_train(gamma: f32) -> HwConfig {
+        HwConfig { in_bits: 8, gamma_add: gamma, out_bits: 8, ..HwConfig::off() }
+    }
+
+    /// SI8-W4 LLM-QAT baseline config.
+    pub fn qat_train() -> HwConfig {
+        HwConfig { in_bits: 8, qat_bits: 4, ..HwConfig::off() }
+    }
+
+    fn levels(bits: u32) -> f32 {
+        if bits == 0 {
+            -1.0
+        } else {
+            ((1u32 << (bits - 1)) - 1) as f32
+        }
+    }
+
+    /// The 7 scalars in model.HW_FIELDS order:
+    /// [in_levels, dyn_input, gamma_add, beta_mul, lambda_adc,
+    ///  out_levels, qat_levels].
+    pub fn to_scalars(&self) -> [f32; 7] {
+        [
+            Self::levels(self.in_bits),
+            if self.dyn_input { 1.0 } else { -1.0 },
+            self.gamma_add,
+            self.beta_mul,
+            self.lambda_adc,
+            Self::levels(self.out_bits),
+            Self::levels(self.qat_bits),
+        ]
+    }
+
+    /// Paper-style label, e.g. "SI8-W4-O8" or "DI8-W16".
+    pub fn label(&self) -> String {
+        let mut s = String::new();
+        if self.in_bits > 0 {
+            s.push_str(if self.dyn_input { "DI" } else { "SI" });
+            s.push_str(&self.in_bits.to_string());
+            s.push('-');
+        }
+        s.push('W');
+        s.push_str(&if self.qat_bits > 0 { self.qat_bits.to_string() } else { "16".into() });
+        if self.out_bits > 0 {
+            s.push_str(&format!("-O{}", self.out_bits));
+        }
+        s
+    }
+}
+
+/// Training-loop parameters (paper appendix D defaults scaled down).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// optimizer steps
+    pub steps: usize,
+    /// microbatches accumulated per optimizer step
+    pub accum: usize,
+    pub lr: f32,
+    /// distillation temperature (2.0 for Phi-3, 1.0 for Llama)
+    pub temperature: f32,
+    /// eq. 4 clipping alpha; <=0 disables
+    pub alpha_clip: f32,
+    /// input-range EMA init multiplier (15.0-18.0 in the paper)
+    pub kappa: f32,
+    /// steps of EMA input-range initialisation (~500 in the paper)
+    pub init_steps: f32,
+    /// input-range decay after the init phase
+    pub beta_decay: f32,
+    pub hw: HwConfig,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 300,
+            accum: 2,
+            lr: 1e-3,
+            temperature: 2.0,
+            alpha_clip: 3.0,
+            kappa: 15.0,
+            init_steps: 30.0,
+            beta_decay: 0.002,
+            hw: HwConfig::afm_train(0.02),
+        }
+    }
+}
+
+/// Synthetic-data generation (paper §3.1 + appendix B.1).
+#[derive(Clone, Debug)]
+pub struct DatagenConfig {
+    /// total tokens to generate
+    pub tokens: usize,
+    /// "sss" (pure softmax) | "rgs" (random + greedy + softmax) |
+    /// "sgs" (softmax + greedy + softmax)
+    pub strategy: String,
+    pub top_k: usize,
+    pub temperature: f32,
+}
+
+impl Default for DatagenConfig {
+    fn default() -> Self {
+        DatagenConfig { tokens: 200_000, strategy: "sss".into(), top_k: 0, temperature: 1.0 }
+    }
+}
+
+/// Evaluation harness parameters (§3.2: 10 seeds per noisy benchmark).
+#[derive(Clone, Debug)]
+pub struct EvalConfig {
+    pub seeds: usize,
+    pub samples_per_task: usize,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        EvalConfig { seeds: 10, samples_per_task: 96 }
+    }
+}
+
+/// Top-level run configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// model config name in the artifact manifest (nano/micro/base)
+    pub model: String,
+    pub seed: u64,
+    pub artifacts_dir: String,
+    pub runs_dir: String,
+    /// teacher pretraining steps (digital)
+    pub pretrain_steps: usize,
+    pub pretrain_lr: f32,
+    pub train: TrainConfig,
+    pub datagen: DatagenConfig,
+    pub eval: EvalConfig,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            model: "nano".into(),
+            seed: 0,
+            artifacts_dir: "artifacts".into(),
+            runs_dir: "runs".into(),
+            pretrain_steps: 600,
+            pretrain_lr: 3e-3,
+            train: TrainConfig::default(),
+            datagen: DatagenConfig::default(),
+            eval: EvalConfig::default(),
+        }
+    }
+}
+
+impl Config {
+    pub fn from_doc(doc: &Doc) -> Config {
+        let d = Config::default();
+        let t = TrainConfig::default();
+        let hw = HwConfig::afm_train(doc.f32_or("hw.gamma_add", 0.02));
+        Config {
+            model: doc.str_or("model", &d.model),
+            seed: doc.u64_or("seed", d.seed),
+            artifacts_dir: doc.str_or("paths.artifacts", &d.artifacts_dir),
+            runs_dir: doc.str_or("paths.runs", &d.runs_dir),
+            pretrain_steps: doc.usize_or("pretrain.steps", d.pretrain_steps),
+            pretrain_lr: doc.f32_or("pretrain.lr", d.pretrain_lr),
+            train: TrainConfig {
+                steps: doc.usize_or("train.steps", t.steps),
+                accum: doc.usize_or("train.accum", t.accum).max(1),
+                lr: doc.f32_or("train.lr", t.lr),
+                temperature: doc.f32_or("train.temperature", t.temperature),
+                alpha_clip: doc.f32_or("train.alpha_clip", t.alpha_clip),
+                kappa: doc.f32_or("train.kappa", t.kappa),
+                init_steps: doc.f32_or("train.init_steps", t.init_steps),
+                beta_decay: doc.f32_or("train.beta_decay", t.beta_decay),
+                hw: HwConfig {
+                    in_bits: doc.usize_or("hw.in_bits", 8) as u32,
+                    dyn_input: doc.bool_or("hw.dyn_input", false),
+                    gamma_add: doc.f32_or("hw.gamma_add", 0.02),
+                    beta_mul: doc.f32_or("hw.beta_mul", 0.0),
+                    lambda_adc: doc.f32_or("hw.lambda_adc", hw.lambda_adc),
+                    out_bits: doc.usize_or("hw.out_bits", 8) as u32,
+                    qat_bits: doc.usize_or("hw.qat_bits", 0) as u32,
+                },
+            },
+            datagen: DatagenConfig {
+                tokens: doc.usize_or("datagen.tokens", DatagenConfig::default().tokens),
+                strategy: doc.str_or("datagen.strategy", "sss"),
+                top_k: doc.usize_or("datagen.top_k", 0),
+                temperature: doc.f32_or("datagen.temperature", 1.0),
+            },
+            eval: EvalConfig {
+                seeds: doc.usize_or("eval.seeds", EvalConfig::default().seeds),
+                samples_per_task: doc.usize_or(
+                    "eval.samples_per_task",
+                    EvalConfig::default().samples_per_task,
+                ),
+            },
+        }
+    }
+
+    pub fn load(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Ok(Config::from_doc(&Doc::parse(&text)?))
+    }
+
+    /// Apply `section.key=value` overrides (CLI --set).
+    pub fn load_with_overrides(path: Option<&str>, overrides: &[String]) -> Result<Config, String> {
+        let mut text = match path {
+            Some(p) => std::fs::read_to_string(p).map_err(|e| format!("{p}: {e}"))?,
+            None => String::new(),
+        };
+        for ov in overrides {
+            // overrides use fully-qualified keys; appended as a flat line
+            let (k, v) = ov
+                .split_once('=')
+                .ok_or_else(|| format!("--set expects key=value, got '{ov}'"))?;
+            // re-open the right table by writing the full key inline
+            text.push_str(&format!("\n[{}]\n{} = {}\n", table_of(k), leaf_of(k), v));
+        }
+        Ok(Config::from_doc(&Doc::parse(&text)?))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("seed", Json::num(self.seed as f64)),
+            ("pretrain_steps", Json::num(self.pretrain_steps as f64)),
+            ("train_steps", Json::num(self.train.steps as f64)),
+            ("train_hw", Json::str(self.train.hw.label())),
+            ("datagen_tokens", Json::num(self.datagen.tokens as f64)),
+            ("eval_seeds", Json::num(self.eval.seeds as f64)),
+        ])
+    }
+}
+
+fn table_of(k: &str) -> &str {
+    k.rsplit_once('.').map(|(t, _)| t).unwrap_or("")
+}
+
+fn leaf_of(k: &str) -> &str {
+    k.rsplit_once('.').map(|(_, l)| l).unwrap_or(k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hw_scalars_match_field_order() {
+        let hw = HwConfig { in_bits: 8, qat_bits: 4, out_bits: 8, ..HwConfig::off() };
+        let s = hw.to_scalars();
+        assert_eq!(s[0], 127.0); // in_levels
+        assert_eq!(s[1], -1.0); // dyn off
+        assert_eq!(s[5], 127.0); // out_levels
+        assert_eq!(s[6], 7.0); // qat W4
+    }
+
+    #[test]
+    fn hw_labels_follow_paper_notation() {
+        assert_eq!(HwConfig::qat_train().label(), "SI8-W4");
+        assert_eq!(HwConfig::afm_train(0.02).label(), "SI8-W16-O8");
+        assert_eq!(HwConfig::off().label(), "W16");
+        let di = HwConfig { in_bits: 8, dyn_input: true, qat_bits: 4, ..HwConfig::off() };
+        assert_eq!(di.label(), "DI8-W4");
+    }
+
+    #[test]
+    fn config_defaults_and_overrides() {
+        let c = Config::load_with_overrides(None, &["train.steps=42".into(), "hw.gamma_add=0.05".into()])
+            .unwrap();
+        assert_eq!(c.train.steps, 42);
+        assert!((c.train.hw.gamma_add - 0.05).abs() < 1e-7);
+    }
+
+    #[test]
+    fn bad_override_reports_error() {
+        assert!(Config::load_with_overrides(None, &["nonsense".into()]).is_err());
+    }
+}

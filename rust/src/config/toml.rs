@@ -1,0 +1,258 @@
+//! TOML-subset parser substrate (no external crates offline).
+//!
+//! Supports the subset our config files use: `[table]` / `[a.b]`
+//! headers, `key = value` with strings, integers, floats, booleans, and
+//! flat arrays, plus `#` comments. Values land in a flat
+//! `"table.key" -> Value` map, which the typed configs in
+//! `config::mod` read with defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, String> {
+        let mut entries = BTreeMap::new();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated table header", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(format!("line {}: empty table name", lineno + 1));
+                }
+                prefix = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            let full = if prefix.is_empty() {
+                key.to_string()
+            } else {
+                format!("{prefix}.{key}")
+            };
+            entries.insert(full, val);
+        }
+        Ok(Doc { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.f64_or(key, default as f64) as f32
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(Value::as_i64).map(|i| i as usize).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(Value::as_i64).map(|i| i as u64).unwrap_or(default)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => return Err(format!("bad escape {other:?}")),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Value::Str(out));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    // number: int unless it has . e E
+    if s.contains(['.', 'e', 'E']) {
+        s.parse::<f64>().map(Value::Float).map_err(|_| format!("bad float '{s}'"))
+    } else {
+        s.parse::<i64>().map(Value::Int).map_err(|_| format!("bad int '{s}'"))
+    }
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tables_and_types() {
+        let doc = Doc::parse(
+            r#"
+# top comment
+name = "afm-nano"
+steps = 500
+[hw]
+gamma = 0.02        # noise
+enabled = true
+sweep = [0.0, 0.02, 0.05]
+[train.inner]
+lr = 1e-3
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "afm-nano");
+        assert_eq!(doc.usize_or("steps", 0), 500);
+        assert!((doc.f64_or("hw.gamma", 0.0) - 0.02).abs() < 1e-12);
+        assert!(doc.bool_or("hw.enabled", false));
+        assert_eq!(
+            doc.get("hw.sweep").unwrap(),
+            &Value::Arr(vec![Value::Float(0.0), Value::Float(0.02), Value::Float(0.05)])
+        );
+        assert!((doc.f64_or("train.inner.lr", 0.0) - 1e-3).abs() < 1e-15);
+    }
+
+    #[test]
+    fn string_escapes_and_comments_in_strings() {
+        let doc = Doc::parse(r#"msg = "a # not comment\n""#).unwrap();
+        assert_eq!(doc.str_or("msg", ""), "a # not comment\n");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Doc::parse("[unterminated").is_err());
+        assert!(Doc::parse("novalue =").is_err());
+        assert!(Doc::parse("x = 1.2.3").is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = Doc::parse("").unwrap();
+        assert_eq!(doc.usize_or("missing", 7), 7);
+        assert_eq!(doc.str_or("missing", "d"), "d");
+    }
+}

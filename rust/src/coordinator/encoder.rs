@@ -1,0 +1,341 @@
+//! Analog-RoBERTa experiment (paper appendix A / table 5).
+//!
+//! An encoder (bidirectional `encnano` config) is pre-trained with
+//! masked-LM either digitally or with HWA, then fine-tuned on GLUE-like
+//! classification tasks either digitally or with HWA, and evaluated
+//! under hardware noise. The paper's finding — HWA at the pre-training
+//! stage beats HWA only at fine-tuning, especially for small-data tasks
+//! — is what the table-5 bench reproduces.
+
+
+use anyhow::Result;
+
+use super::noise::{self, NoiseModel};
+use super::trainer::lr_schedule;
+use crate::config::HwConfig;
+use crate::data::tokenizer::{Tokenizer, PAD};
+use crate::data::world::World;
+use crate::runtime::{
+    lit_scalar_f32, lit_scalar_i32, lit_tokens, tensor_from_lit, Params, Runtime,
+};
+use crate::util::prng::Pcg64;
+
+pub const MODEL: &str = "encnano";
+
+/// GLUE-analog classification sample.
+#[derive(Clone, Debug)]
+pub struct ClsSample {
+    pub text: String,
+    pub label: usize,
+}
+
+/// The three GLUE-analog tasks. `n_train` mirrors the paper's point
+/// that small-data tasks gain most from HWA pre-training.
+pub fn cls_tasks() -> Vec<(&'static str, usize)> {
+    vec![("nli3_syn", 256), ("color2_syn", 96), ("place2_syn", 48)]
+}
+
+pub fn make_cls_samples(world: &World, task: &str, n: usize, seed: u64) -> Vec<ClsSample> {
+    let mut rng = Pcg64::with_stream(seed, 0xc15);
+    (0..n)
+        .map(|_| match task {
+            "nli3_syn" => {
+                let (p, label) = world.nli_example(&mut rng);
+                let label = match label {
+                    "yes" => 0,
+                    "no" => 1,
+                    _ => 2,
+                };
+                ClsSample { text: p.trim_end_matches("A: ").trim().to_string(), label }
+            }
+            "color2_syn" => {
+                let e = rng.below(world.n_entities());
+                let truth = rng.below(2) == 0;
+                let color = if truth {
+                    world.color(e)
+                } else {
+                    crate::data::world::COLORS
+                        [(world.color_idx(e) + 1) % crate::data::world::COLORS.len()]
+                };
+                ClsSample {
+                    text: format!("the {} is {}.", crate::data::world::ENTITIES[e], color),
+                    label: !truth as usize,
+                }
+            }
+            _ => {
+                let e = rng.below(world.n_entities());
+                let truth = rng.below(2) == 0;
+                let place = if truth {
+                    world.place(e)
+                } else {
+                    crate::data::world::PLACES
+                        [(world.place_idx(e) + 1) % crate::data::world::PLACES.len()]
+                };
+                ClsSample {
+                    text: format!("the {} is in the {}.", crate::data::world::ENTITIES[e], place),
+                    label: !truth as usize,
+                }
+            }
+        })
+        .collect()
+}
+
+pub struct EncoderPipeline<'a> {
+    pub rt: &'a Runtime,
+    pub world: World,
+    pub seed: u64,
+}
+
+impl<'a> EncoderPipeline<'a> {
+    pub fn new(rt: &'a Runtime, world: World, seed: u64) -> Self {
+        EncoderPipeline { rt, world, seed }
+    }
+
+    fn hw_scalars(hwa: bool) -> [f32; 7] {
+        if hwa {
+            HwConfig::afm_train(0.02).to_scalars()
+        } else {
+            HwConfig::off().to_scalars()
+        }
+    }
+
+    fn adamw_step(
+        &self,
+        params: Params,
+        m: Params,
+        v: Params,
+        grads: Vec<xla::Literal>,
+        std_betas: &xla::Literal,
+        std_head: &xla::Literal,
+        step: usize,
+        lr: f32,
+        hwa: bool,
+    ) -> Result<(Params, Params, Params)> {
+        let keys = params.keys.clone();
+        let nk = keys.len();
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(4 * nk + 8);
+        inputs.extend(params.to_literals()?);
+        inputs.extend(m.to_literals()?);
+        inputs.extend(v.to_literals()?);
+        inputs.extend(grads);
+        inputs.push(clone_lit(std_betas)?);
+        inputs.push(clone_lit(std_head)?);
+        inputs.push(lit_scalar_i32(step as i32));
+        inputs.push(lit_scalar_f32(lr));
+        inputs.push(lit_scalar_f32(if hwa { 3.0 } else { -1.0 })); // alpha_clip
+        inputs.push(lit_scalar_f32(15.0)); // kappa
+        inputs.push(lit_scalar_f32(20.0)); // init_steps
+        inputs.push(lit_scalar_f32(0.002)); // beta_decay
+        let outs = self.rt.exec(&format!("{MODEL}_adamw_update"), &inputs)?;
+        Ok((
+            Params::from_literals(&keys, &outs, 0)?,
+            Params::from_literals(&keys, &outs, nk)?,
+            Params::from_literals(&keys, &outs, 2 * nk)?,
+        ))
+    }
+
+    /// Masked-LM pre-training on world text (15% corruption).
+    pub fn pretrain(&self, hwa: bool, steps: usize) -> Result<Params> {
+        let dims = self.rt.manifest.dims(MODEL)?;
+        let (b, t) = (self.rt.manifest.batch_train, dims.seq_len);
+        let mut params = Params::init(dims, self.seed);
+        let mut m = Params::zeros(dims);
+        let mut v = Params::zeros(dims);
+        let mut corpus = crate::data::WorldCorpus::new(self.world.clone(), self.seed + 3);
+        let mut rng = Pcg64::with_stream(self.seed, 0x31c);
+        let hw = Self::hw_scalars(hwa);
+        let keys = params.keys.clone();
+        let nk = keys.len();
+        for step in 0..steps {
+            let clean = corpus.next_batch(b, t);
+            // corrupt 15% of non-pad positions with random char tokens
+            let mut corrupted = clean.clone();
+            let mut mask = vec![0.0f32; b * t];
+            for i in 0..b * t {
+                if clean[i] != PAD as i32 && rng.uniform() < 0.15 {
+                    corrupted[i] = (3 + rng.below(dims.vocab - 3)) as i32;
+                    mask[i] = 1.0;
+                }
+            }
+            let mut inputs: Vec<xla::Literal> = params.to_literals()?;
+            inputs.push(lit_tokens(&corrupted, &[b, t])?);
+            inputs.push(lit_tokens(&clean, &[b, t])?);
+            inputs.push(crate::runtime::literal::lit_tensor(&crate::util::tensor::Tensor::new(
+                vec![b, t],
+                mask,
+            ))?);
+            for &x in &hw {
+                inputs.push(lit_scalar_f32(x));
+            }
+            inputs.push(lit_scalar_i32(step as i32));
+            let outs = self.rt.exec(&format!("{MODEL}_mlm_grads"), &inputs)?;
+            let loss = crate::runtime::literal::f32_from_lit(&outs[0])?;
+            let grads: Vec<xla::Literal> = outs[1..1 + nk]
+                .iter()
+                .map(clone_lit)
+                .collect::<Result<_>>()?;
+            let lr = lr_schedule(3e-3, steps, 0.05, step);
+            let (p2, m2, v2) =
+                self.adamw_step(params, m, v, grads, &outs[1 + nk], &outs[2 + nk], step, lr, hwa)?;
+            params = p2;
+            m = m2;
+            v = v2;
+            if step % 50 == 0 {
+                crate::info!("enc pretrain (hwa={hwa}) step {step}/{steps}: mlm loss {loss:.3}");
+            }
+        }
+        Ok(params)
+    }
+
+    /// Fine-tune a classifier head on one task.
+    pub fn finetune(
+        &self,
+        start: &Params,
+        samples: &[ClsSample],
+        hwa: bool,
+        steps: usize,
+    ) -> Result<Params> {
+        let dims = self.rt.manifest.dims(MODEL)?;
+        let (b, t) = (self.rt.manifest.batch_train, dims.seq_len);
+        let mut params = start.clone();
+        let mut m = Params::zeros(dims);
+        let mut v = Params::zeros(dims);
+        let mut rng = Pcg64::with_stream(self.seed, 0xf17e);
+        let hw = Self::hw_scalars(hwa);
+        let keys = params.keys.clone();
+        let nk = keys.len();
+        for step in 0..steps {
+            let mut tokens = vec![PAD as i32; b * t];
+            let mut labels = vec![0i32; b];
+            for i in 0..b {
+                let s = &samples[rng.below(samples.len())];
+                let ids = Tokenizer::encode_bos(&s.text);
+                for (j, &id) in ids.iter().take(t).enumerate() {
+                    tokens[i * t + j] = id as i32;
+                }
+                labels[i] = s.label as i32;
+            }
+            let mut inputs: Vec<xla::Literal> = params.to_literals()?;
+            inputs.push(lit_tokens(&tokens, &[b, t])?);
+            inputs.push(
+                xla::Literal::vec1(&labels)
+                    .reshape(&[b as i64])
+                    .map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            );
+            for &x in &hw {
+                inputs.push(lit_scalar_f32(x));
+            }
+            inputs.push(lit_scalar_i32(step as i32));
+            let outs = self.rt.exec(&format!("{MODEL}_cls_grads"), &inputs)?;
+            let grads: Vec<xla::Literal> = outs[1..1 + nk]
+                .iter()
+                .map(clone_lit)
+                .collect::<Result<_>>()?;
+            let lr = lr_schedule(2e-3, steps, 0.1, step);
+            let (p2, m2, v2) =
+                self.adamw_step(params, m, v, grads, &outs[1 + nk], &outs[2 + nk], step, lr, hwa)?;
+            params = p2;
+            m = m2;
+            v = v2;
+        }
+        Ok(params)
+    }
+
+    /// Accuracy over held-out samples under a noise model, per seed.
+    pub fn eval(
+        &self,
+        params: &Params,
+        samples: &[ClsSample],
+        nm: &NoiseModel,
+        seeds: usize,
+        hwa_eval: bool,
+    ) -> Result<Vec<f64>> {
+        let dims = self.rt.manifest.dims(MODEL)?;
+        let (b, t) = (self.rt.manifest.batch_eval, dims.seq_len);
+        let hw = Self::hw_scalars(hwa_eval);
+        let seeds = if nm.is_none() { 1 } else { seeds };
+        let mut accs = Vec::with_capacity(seeds);
+        for seed in 0..seeds {
+            let noisy = noise::apply(params, nm, self.seed + 100 + seed as u64);
+            let lits = noisy.to_literals()?;
+            let mut correct = 0usize;
+            for chunk in samples.chunks(b) {
+                let mut tokens = vec![PAD as i32; b * t];
+                for (i, s) in chunk.iter().enumerate() {
+                    let ids = Tokenizer::encode_bos(&s.text);
+                    for (j, &id) in ids.iter().take(t).enumerate() {
+                        tokens[i * t + j] = id as i32;
+                    }
+                }
+                let tok_lit = lit_tokens(&tokens, &[b, t])?;
+                let mut inputs: Vec<&xla::Literal> = lits.iter().collect();
+                inputs.push(&tok_lit);
+                let hw_lits: Vec<xla::Literal> =
+                    hw.iter().map(|&x| xla::Literal::scalar(x)).collect();
+                for l in &hw_lits {
+                    inputs.push(l);
+                }
+                let seed_lit = lit_scalar_i32(0);
+                inputs.push(&seed_lit);
+                let outs = self.rt.exec(&format!("{MODEL}_cls_fwd"), &inputs)?;
+                let logits = tensor_from_lit(&outs[0])?;
+                for (i, s) in chunk.iter().enumerate() {
+                    let row = logits.row(i);
+                    correct += (crate::util::stats::argmax(row) == s.label) as usize;
+                }
+            }
+            accs.push(100.0 * correct as f64 / samples.len() as f64);
+        }
+        Ok(accs)
+    }
+}
+
+fn clone_lit(l: &xla::Literal) -> Result<xla::Literal> {
+    // Literal isn't Clone in the crate; round-trip through tensor data.
+    crate::runtime::literal::lit_tensor(&tensor_from_lit(l)?)
+}
+
+/// Per-task training-sample counts used in the bench, exposed for tests.
+pub fn smallest_task() -> &'static str {
+    "place2_syn"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cls_samples_cover_labels() {
+        let w = World::new(0);
+        let s = make_cls_samples(&w, "nli3_syn", 120, 1);
+        for lbl in 0..3 {
+            assert!(s.iter().any(|x| x.label == lbl), "missing label {lbl}");
+        }
+        let s2 = make_cls_samples(&w, "color2_syn", 60, 2);
+        assert!(s2.iter().any(|x| x.label == 0) && s2.iter().any(|x| x.label == 1));
+        assert!(s2.iter().all(|x| x.label < 2));
+    }
+
+    #[test]
+    fn cls_samples_deterministic() {
+        let w = World::new(0);
+        let a = make_cls_samples(&w, "color2_syn", 10, 5);
+        let b = make_cls_samples(&w, "color2_syn", 10, 5);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.text, y.text);
+            assert_eq!(x.label, y.label);
+        }
+    }
+
+    #[test]
+    fn labels_match_world_truth() {
+        let w = World::new(3);
+        for s in make_cls_samples(&w, "color2_syn", 50, 7) {
+            // label 0 <=> statement true in the world
+            let truth = (0..w.n_entities()).any(|e| {
+                s.text == format!("the {} is {}.", crate::data::world::ENTITIES[e], w.color(e))
+            });
+            assert_eq!(s.label == 0, truth, "{}", s.text);
+        }
+    }
+}

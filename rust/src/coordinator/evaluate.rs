@@ -1,0 +1,310 @@
+//! Evaluation harness (paper §3.2): run a model-under-test on the
+//! benchmark suite, repeating every noisy configuration over N seeds
+//! and aggregating mean ± std — "which we found to be crucial for
+//! meaningful comparisons".
+//!
+//! Per seed: one host-side noise application to the parameters, one
+//! literal upload, then every task runs against the cached literals.
+//! Logit tasks (MC / yes-no) use `lm_sample` last-position logits;
+//! generation tasks decode greedily through the `GenEngine`.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::generate::{GenEngine, GenRequest, SamplePolicy};
+use super::noise::{self, NoiseModel};
+use crate::config::HwConfig;
+use crate::data::tasks::{
+    extract_first_word, extract_hash_answer, is_refusal, InstrCheck, Sample, Scoring, Task,
+};
+use crate::data::tokenizer::Tokenizer;
+use crate::data::world::World;
+use crate::runtime::{lit_scalar_i32, lit_tokens, Params, Runtime};
+use crate::util::prng::Pcg64;
+
+/// A model plus the hardware configuration it is evaluated under.
+pub struct ModelUnderTest {
+    pub label: String,
+    pub params: Params,
+    pub hw: HwConfig,
+    /// evaluate through the SpinQuant rotated-forward artifacts
+    pub rot: bool,
+}
+
+/// metric name -> per-seed values (most tasks: just "acc")
+pub type TaskMetrics = BTreeMap<String, Vec<f64>>;
+/// task name -> metrics
+pub type EvalReport = BTreeMap<String, TaskMetrics>;
+
+pub struct Evaluator<'a> {
+    pub rt: &'a Runtime,
+    pub model: String,
+    /// generation budget for answer-generation tasks
+    pub max_new: usize,
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(rt: &'a Runtime, model: &str) -> Evaluator<'a> {
+        Evaluator { rt, model: model.to_string(), max_new: 32 }
+    }
+
+    /// Evaluate `m` on `tasks` under `noise`, over `seeds` hardware
+    /// instances (1 if noise is None — deterministic).
+    pub fn evaluate(
+        &self,
+        m: &ModelUnderTest,
+        nm: &NoiseModel,
+        tasks: &[Task],
+        seeds: usize,
+        base_seed: u64,
+    ) -> Result<EvalReport> {
+        let seeds = if nm.is_none() { 1 } else { seeds.max(1) };
+        let mut report: EvalReport = BTreeMap::new();
+        for seed in 0..seeds {
+            let noisy = noise::apply(&m.params, nm, base_seed + seed as u64);
+            let lits = noisy.to_literals()?;
+            let hw = m.hw.to_scalars();
+            for task in tasks {
+                let metrics = self.score_task(&lits, &hw, m.rot, task, base_seed + seed as u64)?;
+                let entry = report.entry(task.name.to_string()).or_default();
+                for (k, v) in metrics {
+                    entry.entry(k).or_default().push(v);
+                }
+            }
+            crate::info!(
+                "eval {} [{} {}] seed {seed}: done",
+                m.label,
+                m.hw.label(),
+                nm.label()
+            );
+        }
+        Ok(report)
+    }
+
+    fn score_task(
+        &self,
+        lits: &[xla::Literal],
+        hw: &[f32; 7],
+        rot: bool,
+        task: &Task,
+        seed: u64,
+    ) -> Result<BTreeMap<String, f64>> {
+        match &task.samples[0].scoring {
+            Scoring::LogitMC { .. } | Scoring::YesNo { .. } => {
+                let acc = self.score_logit_task(lits, hw, rot, &task.samples)?;
+                Ok(BTreeMap::from([("acc".to_string(), acc)]))
+            }
+            _ => self.score_generation_task(lits, hw, rot, &task.samples, seed),
+        }
+    }
+
+    /// Option-logit comparison at the last prompt position.
+    fn score_logit_task(
+        &self,
+        lits: &[xla::Literal],
+        hw: &[f32; 7],
+        rot: bool,
+        samples: &[Sample],
+    ) -> Result<f64> {
+        let artifact = if rot {
+            format!("{}_lm_sample_rot", self.model)
+        } else {
+            format!("{}_lm_sample", self.model)
+        };
+        let dims = self.rt.manifest.dims(&self.model)?;
+        let (b, t) = (self.rt.manifest.batch_gen, dims.seq_len);
+        let mut correct = 0usize;
+        let hw_lits: Vec<xla::Literal> = hw.iter().map(|&x| xla::Literal::scalar(x)).collect();
+        for chunk in samples.chunks(b) {
+            let mut tokens = vec![crate::data::tokenizer::PAD as i32; b * t];
+            let mut lens = vec![1i32; b];
+            for (i, s) in chunk.iter().enumerate() {
+                let ids = Tokenizer::encode_bos(&s.prompt);
+                let keep = ids.len().min(t);
+                let ids = &ids[ids.len() - keep..];
+                for (j, &id) in ids.iter().enumerate() {
+                    tokens[i * t + j] = id as i32;
+                }
+                lens[i] = keep as i32;
+            }
+            let tok_lit = lit_tokens(&tokens, &[b, t])?;
+            let len_lit = xla::Literal::vec1(&lens)
+                .reshape(&[b as i64])
+                .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+            let mut inputs: Vec<&xla::Literal> = lits.iter().collect();
+            inputs.push(&tok_lit);
+            inputs.push(&len_lit);
+            for l in &hw_lits {
+                inputs.push(l);
+            }
+            let seed_lit = lit_scalar_i32(0);
+            inputs.push(&seed_lit);
+            let outs = self.rt.exec(&artifact, &inputs)?;
+            let logits = crate::runtime::tensor_from_lit(&outs[0])?;
+            for (i, s) in chunk.iter().enumerate() {
+                let row = logits.row(i);
+                let ok = match &s.scoring {
+                    Scoring::LogitMC { options, correct_idx } => {
+                        let ids: Vec<usize> = options
+                            .iter()
+                            .map(|&c| Tokenizer::encode_char(c).unwrap() as usize)
+                            .collect();
+                        let best = ids
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| row[*a.1].partial_cmp(&row[*b.1]).unwrap())
+                            .map(|(i, _)| i)
+                            .unwrap();
+                        best == *correct_idx
+                    }
+                    Scoring::YesNo { truth } => {
+                        let y = row[Tokenizer::encode_char('y').unwrap() as usize];
+                        let n = row[Tokenizer::encode_char('n').unwrap() as usize];
+                        (y > n) == *truth
+                    }
+                    _ => unreachable!(),
+                };
+                correct += ok as usize;
+            }
+        }
+        Ok(100.0 * correct as f64 / samples.len() as f64)
+    }
+
+    /// Greedy generation scoring for GSM/ANLI/IFEval/XSTest mechanics.
+    fn score_generation_task(
+        &self,
+        lits: &[xla::Literal],
+        hw: &[f32; 7],
+        rot: bool,
+        samples: &[Sample],
+        seed: u64,
+    ) -> Result<BTreeMap<String, f64>> {
+        let mut engine = GenEngine::new(self.rt, &self.model, rot)?;
+        let mut rng = Pcg64::with_stream(seed, 0xe7a1);
+        let reqs: Vec<GenRequest> = samples
+            .iter()
+            .map(|s| GenRequest::from_text(&s.prompt, self.max_new, SamplePolicy::greedy()))
+            .collect();
+        let outs = engine.run(lits, hw, &reqs, &mut rng)?;
+
+        let mut n_correct = 0usize;
+        let mut n_scored = 0usize;
+        // IFEval double bookkeeping
+        let (mut prompts_ok, mut n_prompts) = (0usize, 0usize);
+        let (mut instr_ok, mut n_instr) = (0usize, 0usize);
+        // XSTest refusal bookkeeping
+        let (mut refused_harmful, mut n_harmful) = (0usize, 0usize);
+        let (mut refused_safe, mut n_safe) = (0usize, 0usize);
+
+        for (s, out) in samples.iter().zip(&outs) {
+            let text = Tokenizer::decode(out);
+            // stop-string handling: hallucinated next questions are cut
+            let text = text.split("Q:").next().unwrap_or("").to_string();
+            match &s.scoring {
+                Scoring::GenerateHash { answer } => {
+                    n_scored += 1;
+                    n_correct += (extract_hash_answer(&text) == Some(*answer)) as usize;
+                }
+                Scoring::GenerateWord { answer } => {
+                    n_scored += 1;
+                    n_correct += (extract_first_word(&text) == *answer) as usize;
+                }
+                Scoring::Instruction { checks } => {
+                    n_prompts += 1;
+                    let oks: Vec<bool> = checks.iter().map(|c| verify(c, &text)).collect();
+                    instr_ok += oks.iter().filter(|&&b| b).count();
+                    n_instr += oks.len();
+                    prompts_ok += oks.iter().all(|&b| b) as usize;
+                }
+                Scoring::Safety { harmful } => {
+                    let refused = is_refusal(&text);
+                    if *harmful {
+                        n_harmful += 1;
+                        refused_harmful += refused as usize;
+                    } else {
+                        n_safe += 1;
+                        refused_safe += refused as usize;
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+
+        let mut metrics = BTreeMap::new();
+        if n_scored > 0 {
+            metrics.insert("acc".into(), 100.0 * n_correct as f64 / n_scored as f64);
+        }
+        if n_prompts > 0 {
+            metrics.insert("prompt_acc".into(), 100.0 * prompts_ok as f64 / n_prompts as f64);
+            metrics.insert("instr_acc".into(), 100.0 * instr_ok as f64 / n_instr as f64);
+        }
+        if n_harmful + n_safe > 0 {
+            metrics.insert("iprr".into(), 100.0 * refused_harmful as f64 / n_harmful.max(1) as f64);
+            metrics.insert("vprr".into(), 100.0 * refused_safe as f64 / n_safe.max(1) as f64);
+        }
+        Ok(metrics)
+    }
+
+    /// Calibrate static input ranges post-training (PTQ models): run the
+    /// digital forward on calibration batches, set beta = kappa * std(x).
+    /// This is the paper's "static ranges calibrated in a post-training
+    /// method" (§2) for off-the-shelf / SpinQuant SI8 evaluation.
+    pub fn calibrate_input_ranges(
+        &self,
+        params: &mut Params,
+        world: &World,
+        kappa: f32,
+        rot: bool,
+    ) -> Result<()> {
+        let artifact = if rot {
+            format!("{}_lm_fwd_rot", self.model)
+        } else {
+            format!("{}_lm_fwd", self.model)
+        };
+        let dims = self.rt.manifest.dims(&self.model)?;
+        let (b, t) = (self.rt.manifest.batch_eval, dims.seq_len);
+        let mut corpus = crate::data::WorldCorpus::new(world.clone(), 0x2b);
+        let tokens = corpus.next_batch(b, t);
+        let hw = HwConfig::off().to_scalars();
+        let hw_lits: Vec<xla::Literal> = hw.iter().map(|&x| xla::Literal::scalar(x)).collect();
+        let tok_lit = lit_tokens(&tokens, &[b, t])?;
+        // owned inputs: params + tokens + hw + seed
+        let mut owned: Vec<xla::Literal> = params.to_literals()?;
+        owned.push(tok_lit);
+        owned.extend(hw_lits);
+        owned.push(lit_scalar_i32(0));
+        let outs = self.rt.exec(&artifact, &owned)?;
+        let std_idx = self.rt.out_idx(&artifact, "std_betas")?;
+        let std_betas = crate::runtime::tensor_from_lit(&outs[std_idx])?;
+        let std_head = crate::runtime::tensor_from_lit(&outs[std_idx + 1])?;
+        let betas = params.get_mut("betas");
+        for (b_, s) in betas.data.iter_mut().zip(&std_betas.data) {
+            *b_ = (kappa * s).max(1e-3);
+        }
+        let bh = params.get_mut("beta_head");
+        for (b_, s) in bh.data.iter_mut().zip(&std_head.data) {
+            *b_ = (kappa * s).max(1e-3);
+        }
+        Ok(())
+    }
+}
+
+fn verify(c: &InstrCheck, text: &str) -> bool {
+    c.verify(text)
+}
+
+/// mean over the seeds of a metric, paper-style "mean ±std" formatting.
+pub fn fmt_metric(values: &[f64]) -> String {
+    crate::util::stats::mean_std_str(values)
+}
+
+/// Average of the per-task "acc" means (the paper's Avg. column).
+pub fn avg_acc(report: &EvalReport) -> f64 {
+    let accs: Vec<f64> = report
+        .values()
+        .filter_map(|m| m.get("acc"))
+        .map(|v| crate::util::stats::mean(v))
+        .collect();
+    crate::util::stats::mean(&accs)
+}

@@ -1,0 +1,298 @@
+//! Batched autoregressive generation engine.
+//!
+//! Serves two roles from one code path:
+//!  * the paper's synthetic-data generator (§3.1 / appendix B.1:
+//!    sampling strategies SSS / RGS / SGS, top-k, no stop-at-EOS,
+//!    fixed chunk length = training sequence length);
+//!  * benchmark answer generation (greedy decode, EOS + stop-string
+//!    handling, per-task max_new_tokens) for GSM/ANLI/IFEval/XSTest and
+//!    the test-time-compute experiment (temperature 0.8 best-of-n).
+//!
+//! Requests are packed into fixed (B, T) `lm_sample` executions. The
+//! parameter literals are built once per (params, hardware-instance)
+//! and shared across every decode step — the no-recompile, no-python
+//! request path the architecture is about.
+
+use anyhow::Result;
+
+use crate::data::tokenizer::{Tokenizer, BOS, EOS, PAD};
+use crate::runtime::{lit_scalar_i32, lit_tokens, Runtime};
+use crate::util::prng::Pcg64;
+
+/// Sampling policy for one request.
+#[derive(Clone, Debug)]
+pub struct SamplePolicy {
+    /// <= 0 -> greedy decoding
+    pub temperature: f32,
+    /// 0 -> full softmax
+    pub top_k: usize,
+    /// tokens 2..2+n sampled greedily (RGS/SGS strategies)
+    pub greedy_prefix: usize,
+    /// first token drawn uniformly at random (RGS strategy)
+    pub random_first: bool,
+}
+
+impl SamplePolicy {
+    pub fn greedy() -> Self {
+        SamplePolicy { temperature: 0.0, top_k: 0, greedy_prefix: 0, random_first: false }
+    }
+
+    pub fn softmax(temperature: f32, top_k: usize) -> Self {
+        SamplePolicy { temperature, top_k, greedy_prefix: 0, random_first: false }
+    }
+
+    /// Paper appendix B.1 datagen strategies.
+    pub fn strategy(name: &str, temperature: f32, top_k: usize) -> Self {
+        match name {
+            "rgs" => SamplePolicy { temperature, top_k, greedy_prefix: 5, random_first: true },
+            "sgs" => SamplePolicy { temperature, top_k, greedy_prefix: 5, random_first: false },
+            _ => SamplePolicy::softmax(temperature, top_k), // "sss"
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub stop_at_eos: bool,
+    pub policy: SamplePolicy,
+}
+
+impl GenRequest {
+    pub fn from_text(prompt: &str, max_new: usize, policy: SamplePolicy) -> GenRequest {
+        GenRequest { prompt: Tokenizer::encode_bos(prompt), max_new, stop_at_eos: true, policy }
+    }
+}
+
+pub struct GenEngine<'a> {
+    rt: &'a Runtime,
+    artifact: String,
+    batch: usize,
+    seq_len: usize,
+    vocab: usize,
+    /// tokens decoded over this engine's lifetime (perf accounting)
+    pub tokens_out: u64,
+    /// lm_sample executions (perf accounting)
+    pub steps: u64,
+}
+
+impl<'a> GenEngine<'a> {
+    /// `rot` selects the SpinQuant rotated-forward artifact.
+    pub fn new(rt: &'a Runtime, model: &str, rot: bool) -> Result<GenEngine<'a>> {
+        let artifact = if rot {
+            format!("{model}_lm_sample_rot")
+        } else {
+            format!("{model}_lm_sample")
+        };
+        let dims = rt.manifest.dims(model)?;
+        Ok(GenEngine {
+            rt,
+            artifact,
+            batch: rt.manifest.batch_gen,
+            seq_len: dims.seq_len,
+            vocab: dims.vocab,
+            tokens_out: 0,
+            steps: 0,
+        })
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    /// Decode all requests; returns each request's completion (tokens
+    /// after the prompt, EOS excluded). `param_lits` are the model
+    /// parameter literals (noise already applied), `hw` the 7 hardware
+    /// scalars, `rng` drives sampling.
+    pub fn run(
+        &mut self,
+        param_lits: &[xla::Literal],
+        hw: &[f32; 7],
+        requests: &[GenRequest],
+        rng: &mut Pcg64,
+    ) -> Result<Vec<Vec<u32>>> {
+        let mut outputs = vec![Vec::new(); requests.len()];
+        for (chunk_i, chunk) in requests.chunks(self.batch).enumerate() {
+            let outs = self.run_chunk(param_lits, hw, chunk, rng)?;
+            for (i, o) in outs.into_iter().enumerate() {
+                outputs[chunk_i * self.batch + i] = o;
+            }
+        }
+        Ok(outputs)
+    }
+
+    fn run_chunk(
+        &mut self,
+        param_lits: &[xla::Literal],
+        hw: &[f32; 7],
+        chunk: &[GenRequest],
+        rng: &mut Pcg64,
+    ) -> Result<Vec<Vec<u32>>> {
+        let b = self.batch;
+        let t = self.seq_len;
+        // slot state: current sequence + done flag
+        let mut seqs: Vec<Vec<u32>> = chunk
+            .iter()
+            .map(|r| {
+                let mut s = r.prompt.clone();
+                if s.len() > t {
+                    s.drain(..s.len() - t); // keep the suffix window
+                }
+                s
+            })
+            .collect();
+        let mut done = vec![false; chunk.len()];
+        let mut emitted = vec![0usize; chunk.len()];
+        let hw_lits: Vec<xla::Literal> =
+            hw.iter().map(|&v| xla::Literal::scalar(v)).collect();
+
+        let mut tokens = vec![PAD as i32; b * t];
+        let mut lens = vec![1i32; b];
+        loop {
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            // pack the batch
+            for v in tokens.iter_mut() {
+                *v = PAD as i32;
+            }
+            for (i, seq) in seqs.iter().enumerate() {
+                for (j, &tok) in seq.iter().enumerate() {
+                    tokens[i * t + j] = tok as i32;
+                }
+                lens[i] = seq.len() as i32;
+            }
+            let tok_lit = lit_tokens(&tokens, &[b, t])?;
+            let len_lit = {
+                let flat = xla::Literal::vec1(&lens);
+                flat.reshape(&[b as i64]).map_err(|e| anyhow::anyhow!("{e:?}"))?
+            };
+            let mut inputs: Vec<&xla::Literal> = param_lits.iter().collect();
+            inputs.push(&tok_lit);
+            inputs.push(&len_lit);
+            for l in &hw_lits {
+                inputs.push(l);
+            }
+            let seed_lit = lit_scalar_i32(rng.next_u64() as i32);
+            inputs.push(&seed_lit);
+            let outs = self.rt.exec(&self.artifact, &inputs)?;
+            self.steps += 1;
+            let logits = crate::runtime::tensor_from_lit(&outs[0])?; // (B, V)
+            debug_assert_eq!(logits.shape, vec![b, self.vocab]);
+
+            for (i, req) in chunk.iter().enumerate() {
+                if done[i] {
+                    continue;
+                }
+                let row = logits.row(i);
+                let next = self.pick(row, req, emitted[i], rng) as u32;
+                self.tokens_out += 1;
+                if req.stop_at_eos && next == EOS {
+                    done[i] = true;
+                    continue;
+                }
+                outputs_push(&mut seqs[i], next, t);
+                emitted[i] += 1;
+                if emitted[i] >= req.max_new || seqs[i].len() >= t {
+                    done[i] = true;
+                }
+            }
+        }
+        // completions = generated suffix of each slot
+        Ok(chunk
+            .iter()
+            .zip(&seqs)
+            .zip(&emitted)
+            .map(|((req, seq), &n)| {
+                let keep = n.min(seq.len());
+                let start = seq.len() - keep;
+                let _ = req;
+                seq[start..].to_vec()
+            })
+            .collect())
+    }
+
+    fn pick(&self, logits: &[f32], req: &GenRequest, emitted: usize, rng: &mut Pcg64) -> usize {
+        let p = &req.policy;
+        // never emit PAD/BOS during generation
+        let mut masked: Vec<f32> = logits.to_vec();
+        masked[PAD as usize] = f32::NEG_INFINITY;
+        masked[BOS as usize] = f32::NEG_INFINITY;
+        if p.random_first && emitted == 0 {
+            return 3 + rng.below(self.vocab - 3); // uniform char token
+        }
+        let in_greedy_window = emitted >= 1 && emitted < 1 + p.greedy_prefix;
+        if p.temperature <= 0.0 || in_greedy_window {
+            return Pcg64::greedy(&masked);
+        }
+        rng.sample_logits(&masked, p.temperature, p.top_k)
+    }
+
+    /// Decode a completion to text.
+    pub fn decode(tokens: &[u32]) -> String {
+        Tokenizer::decode(tokens)
+    }
+}
+
+fn outputs_push(seq: &mut Vec<u32>, tok: u32, t: usize) {
+    if seq.len() >= t {
+        seq.remove(0); // sliding window (rare: prompt+answer ~ fits)
+    }
+    seq.push(tok);
+}
+
+/// Generate `n_chunks` datagen chunks of exactly `chunk_len` tokens by
+/// sampling the model from BOS (paper §3.1: sampling continues past EOS;
+/// chunk length = training sequence length).
+pub fn generate_chunks(
+    engine: &mut GenEngine,
+    param_lits: &[xla::Literal],
+    hw: &[f32; 7],
+    n_chunks: usize,
+    chunk_len: usize,
+    policy: &SamplePolicy,
+    rng: &mut Pcg64,
+) -> Result<Vec<u32>> {
+    assert!(chunk_len <= engine.seq_len());
+    let mut tokens = Vec::with_capacity(n_chunks * chunk_len);
+    let reqs: Vec<GenRequest> = (0..n_chunks)
+        .map(|_| GenRequest {
+            prompt: vec![BOS],
+            max_new: chunk_len - 1,
+            stop_at_eos: false, // keep sampling past EOS like the paper
+            policy: policy.clone(),
+        })
+        .collect();
+    let outs = engine.run(param_lits, hw, &reqs, rng)?;
+    for out in outs {
+        let mut chunk = Vec::with_capacity(chunk_len);
+        chunk.push(BOS);
+        chunk.extend(&out);
+        chunk.truncate(chunk_len);
+        chunk.resize(chunk_len, PAD);
+        tokens.extend(chunk);
+    }
+    Ok(tokens)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policies_map_to_paper_strategies() {
+        let sss = SamplePolicy::strategy("sss", 1.0, 50);
+        assert_eq!(sss.greedy_prefix, 0);
+        let rgs = SamplePolicy::strategy("rgs", 1.0, 0);
+        assert!(rgs.random_first && rgs.greedy_prefix == 5);
+        let sgs = SamplePolicy::strategy("sgs", 1.0, 0);
+        assert!(!sgs.random_first && sgs.greedy_prefix == 5);
+    }
+
+    #[test]
+    fn request_from_text_prepends_bos() {
+        let r = GenRequest::from_text("Q: hi", 8, SamplePolicy::greedy());
+        assert_eq!(r.prompt[0], BOS);
+    }
+}

@@ -1,0 +1,152 @@
+//! Training-metrics analysis: read the JSONL streams the trainer writes
+//! (`runs/<model>/*_metrics.jsonl`) and summarise loss curves — used by
+//! the e2e driver's reporting and by operators inspecting runs.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f64,
+    pub gnorm: f64,
+    pub lr: f64,
+    pub secs: f64,
+}
+
+/// Parse a metrics JSONL stream (tolerates trailing partial lines).
+pub fn read_jsonl(path: &Path) -> Result<Vec<StepRecord>> {
+    let text = std::fs::read_to_string(path).map_err(|e| anyhow!("{path:?}: {e}"))?;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Ok(j) = Json::parse(line) else { continue };
+        let num = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN);
+        out.push(StepRecord {
+            step: num("step") as usize,
+            loss: num("loss"),
+            gnorm: num("gnorm"),
+            lr: num("lr"),
+            secs: num("secs"),
+        });
+    }
+    Ok(out)
+}
+
+/// Loss-curve summary for reports: first/last smoothed loss, best loss,
+/// steps/second.
+#[derive(Clone, Debug)]
+pub struct CurveSummary {
+    pub steps: usize,
+    pub first_loss: f64,
+    pub last_loss: f64,
+    pub best_loss: f64,
+    pub steps_per_sec: f64,
+}
+
+/// Moving-average smoothing over `window` records.
+pub fn smooth(losses: &[f64], window: usize) -> Vec<f64> {
+    if losses.is_empty() {
+        return Vec::new();
+    }
+    let w = window.max(1);
+    (0..losses.len())
+        .map(|i| {
+            let lo = i.saturating_sub(w - 1);
+            stats::mean(&losses[lo..=i])
+        })
+        .collect()
+}
+
+pub fn summarize(records: &[StepRecord]) -> Option<CurveSummary> {
+    if records.is_empty() {
+        return None;
+    }
+    let losses: Vec<f64> = records.iter().map(|r| r.loss).collect();
+    let sm = smooth(&losses, 10);
+    let wall = records.last().unwrap().secs - records.first().unwrap().secs;
+    Some(CurveSummary {
+        steps: records.len(),
+        first_loss: sm[0],
+        last_loss: *sm.last().unwrap(),
+        best_loss: sm.iter().cloned().fold(f64::INFINITY, f64::min),
+        steps_per_sec: if wall > 0.0 {
+            (records.len() as f64 - 1.0) / wall
+        } else {
+            0.0
+        },
+    })
+}
+
+/// Convergence check used by tests and the e2e driver: smoothed loss
+/// decreased by at least `min_drop_frac` of its initial value.
+pub fn converged(records: &[StepRecord], min_drop_frac: f64) -> bool {
+    summarize(records)
+        .map(|s| s.last_loss <= s.first_loss * (1.0 - min_drop_frac))
+        .unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, loss: f64) -> StepRecord {
+        StepRecord { step, loss, gnorm: 1.0, lr: 1e-3, secs: step as f64 * 0.1 }
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let dir = std::env::temp_dir().join("afm_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.jsonl");
+        let mut text = String::new();
+        for i in 0..5 {
+            text.push_str(&format!(
+                "{{\"step\":{i},\"loss\":{},\"gnorm\":1.0,\"lr\":0.001,\"secs\":{}}}\n",
+                5.0 - i as f64,
+                i as f64 * 0.5
+            ));
+        }
+        text.push_str("{\"partial\":");
+        std::fs::write(&path, text).unwrap();
+        let recs = read_jsonl(&path).unwrap();
+        assert_eq!(recs.len(), 5);
+        assert_eq!(recs[0].loss, 5.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn smoothing_reduces_variance() {
+        let noisy: Vec<f64> = (0..100).map(|i| 1.0 + if i % 2 == 0 { 0.5 } else { -0.5 }).collect();
+        let sm = smooth(&noisy, 8);
+        let raw_sd = stats::std(&noisy);
+        let sm_sd = stats::std(&sm[8..].to_vec());
+        assert!(sm_sd < raw_sd / 2.0);
+    }
+
+    #[test]
+    fn summary_and_convergence() {
+        let recs: Vec<StepRecord> = (0..50).map(|i| rec(i, 5.0 / (1.0 + i as f64))).collect();
+        let s = summarize(&recs).unwrap();
+        assert!(s.last_loss < s.first_loss);
+        assert!(s.best_loss <= s.last_loss + 1e-9);
+        assert!(s.steps_per_sec > 0.0);
+        assert!(converged(&recs, 0.5));
+        let flat: Vec<StepRecord> = (0..50).map(|i| rec(i, 3.0)).collect();
+        assert!(!converged(&flat, 0.1));
+    }
+
+    #[test]
+    fn empty_inputs_are_safe() {
+        assert!(summarize(&[]).is_none());
+        assert!(smooth(&[], 4).is_empty());
+        assert!(!converged(&[], 0.1));
+    }
+}

@@ -1,0 +1,25 @@
+//! L3 coordinator: the paper's pipeline as a runtime system.
+//!
+//! * `trainer` — microbatch-accumulating training loop (pretrain / HWA
+//!   distillation / QAT / no-distill ablation)
+//! * `generate` — batched autoregressive engine (datagen + benchmark
+//!   generation + test-time scaling)
+//! * `noise` — host-side hardware-noise injection (PCM polynomial,
+//!   gaussian, affine)
+//! * `quant` — PTQ paths (RTN, SpinQuant-lite) through AOT artifacts
+//! * `evaluate` — repeated-seed benchmark harness with mean±std
+//! * `tts` — test-time compute scaling with the synthetic PRM
+//! * `encoder` — the analog-RoBERTa appendix-A experiment
+//! * `pipeline` — model-zoo orchestration (checkpoints under runs/)
+//! * `report` — paper-style tables and ASCII figures
+
+pub mod encoder;
+pub mod evaluate;
+pub mod metrics;
+pub mod generate;
+pub mod noise;
+pub mod pipeline;
+pub mod quant;
+pub mod report;
+pub mod trainer;
+pub mod tts;

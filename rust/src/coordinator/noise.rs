@@ -1,0 +1,201 @@
+//! Hardware-noise engines (paper §3.2 / appendix E.3).
+//!
+//! Noise is injected host-side into the parameter tensors, once per
+//! evaluation seed: the eval artifacts were lowered without in-graph
+//! noise, so a fresh hardware instance costs one tensor transform +
+//! literal upload, no recompilation and no python.
+//!
+//! Channels follow the training convention: per output column for the
+//! seven block linears (stacked (L, K, N): column = last axis), per
+//! vocabulary row for the tied embedding/head tile.
+
+use crate::runtime::params::{Params, ANALOG_WEIGHT_KEYS};
+use crate::util::prng::Pcg64;
+
+/// Which noise to apply at evaluation time.
+#[derive(Clone, Debug, PartialEq)]
+pub enum NoiseModel {
+    None,
+    /// additive gaussian, sigma = gamma * max|w_channel| (paper eq. 3 /
+    /// fig. 3 sweeps)
+    Gaussian { gamma: f32 },
+    /// affine gaussian (eq. 5 ablation)
+    Affine { gamma: f32, beta: f32 },
+    /// the IBM Hermes PCM programming-noise polynomial (appendix E.3)
+    Pcm,
+}
+
+impl NoiseModel {
+    pub fn label(&self) -> String {
+        match self {
+            NoiseModel::None => "".into(),
+            NoiseModel::Gaussian { gamma } => format!("gaussian noise g={gamma}"),
+            NoiseModel::Affine { gamma, beta } => format!("affine noise g={gamma} b={beta}"),
+            NoiseModel::Pcm => "hw noise".into(),
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        matches!(self, NoiseModel::None)
+    }
+}
+
+/// sigma in *fraction of channel max* for a weight at |w|/w_max = w_norm
+/// on the paper's fitted conductance polynomial. The fit is expressed in
+/// % of W_max over the chip's conductance axis (0..25 muS in fig. 8);
+/// exact zeros carry no noise (paper §3.2).
+pub fn pcm_sigma_frac(w_norm: f32) -> f32 {
+    if w_norm == 0.0 {
+        return 0.0;
+    }
+    let wx = w_norm.abs() * 25.0;
+    let pct = 1.23e-5 * wx * wx * wx - 3.06e-3 * wx * wx + 2.45e-1 * wx + 2.11;
+    pct / 100.0
+}
+
+/// Apply the noise model to a copy of `params`; `seed` selects the
+/// simulated hardware instance (the paper repeats every noisy eval over
+/// 10 seeds).
+pub fn apply(params: &Params, model: &NoiseModel, seed: u64) -> Params {
+    if model.is_none() {
+        return params.clone();
+    }
+    let mut out = params.clone();
+    let mut rng = Pcg64::with_stream(seed, 0xa1a1);
+    for key in ANALOG_WEIGHT_KEYS {
+        if let Some(t) = out.map.get_mut(*key) {
+            let mut chan_rng = rng.fold_in(fnv(key));
+            t.map_columns(|col| perturb_channel(col, model, &mut chan_rng));
+        }
+    }
+    // tied embedding/head tile: channels are vocab rows
+    if let Some(emb) = out.map.get_mut("emb") {
+        let mut chan_rng = rng.fold_in(fnv("emb"));
+        emb.map_rows(|row| perturb_channel(row, model, &mut chan_rng));
+    }
+    out
+}
+
+fn perturb_channel(chan: &mut [f32], model: &NoiseModel, rng: &mut Pcg64) {
+    let cmax = chan.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if cmax == 0.0 {
+        return;
+    }
+    match model {
+        NoiseModel::None => {}
+        NoiseModel::Gaussian { gamma } => {
+            for v in chan.iter_mut() {
+                *v += gamma * cmax * rng.normal_f32();
+            }
+        }
+        NoiseModel::Affine { gamma, beta } => {
+            for v in chan.iter_mut() {
+                let sigma = gamma * cmax + beta * v.abs();
+                *v += sigma * rng.normal_f32();
+            }
+        }
+        NoiseModel::Pcm => {
+            for v in chan.iter_mut() {
+                let sigma = pcm_sigma_frac(*v / cmax) * cmax;
+                *v += sigma * rng.normal_f32();
+            }
+        }
+    }
+}
+
+fn fnv(s: &str) -> u64 {
+    s.bytes().fold(0xcbf29ce484222325, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ModelDims;
+    use std::collections::BTreeMap;
+
+    fn dims() -> ModelDims {
+        let mut shapes = BTreeMap::new();
+        shapes.insert("emb".into(), vec![10, 4]);
+        shapes.insert("wq".into(), vec![2, 4, 4]);
+        shapes.insert("ln_f".into(), vec![4]);
+        ModelDims {
+            d_model: 4,
+            n_layers: 2,
+            n_heads: 1,
+            d_ff: 8,
+            seq_len: 8,
+            vocab: 10,
+            n_cls: 0,
+            n_params: 0,
+            param_keys: vec!["emb".into(), "wq".into(), "ln_f".into()],
+            param_shapes: shapes,
+        }
+    }
+
+    #[test]
+    fn polynomial_matches_published_coefficients() {
+        let s = pcm_sigma_frac(1.0);
+        let want = (1.23e-5 * 25f32.powi(3) - 3.06e-3 * 25f32.powi(2) + 0.245 * 25.0 + 2.11) / 100.0;
+        assert!((s - want).abs() < 1e-6);
+        assert_eq!(pcm_sigma_frac(0.0), 0.0);
+        // additive noise floor: small weights have worse SNR
+        assert!(pcm_sigma_frac(0.04) > 0.02);
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let p = Params::init(&dims(), 1);
+        assert_eq!(apply(&p, &NoiseModel::None, 3), p);
+    }
+
+    #[test]
+    fn noise_perturbs_analog_tensors_only() {
+        let p = Params::init(&dims(), 1);
+        let q = apply(&p, &NoiseModel::Gaussian { gamma: 0.05 }, 3);
+        assert_ne!(p.get("wq"), q.get("wq"));
+        assert_ne!(p.get("emb"), q.get("emb"));
+        assert_eq!(p.get("ln_f"), q.get("ln_f")); // digital param untouched
+    }
+
+    #[test]
+    fn seeds_give_independent_hardware_instances() {
+        let p = Params::init(&dims(), 1);
+        let a = apply(&p, &NoiseModel::Pcm, 1);
+        let b = apply(&p, &NoiseModel::Pcm, 2);
+        let c = apply(&p, &NoiseModel::Pcm, 1);
+        assert_ne!(a.get("wq"), b.get("wq"));
+        assert_eq!(a.get("wq"), c.get("wq")); // deterministic per seed
+    }
+
+    #[test]
+    fn gaussian_magnitude_scales_with_gamma() {
+        let p = Params::init(&dims(), 1);
+        let small = apply(&p, &NoiseModel::Gaussian { gamma: 0.01 }, 5);
+        let large = apply(&p, &NoiseModel::Gaussian { gamma: 0.10 }, 5);
+        let d_small: f32 = p
+            .get("wq")
+            .data
+            .iter()
+            .zip(&small.get("wq").data)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        let d_large: f32 = p
+            .get("wq")
+            .data
+            .iter()
+            .zip(&large.get("wq").data)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(d_large > 5.0 * d_small);
+    }
+
+    #[test]
+    fn zero_channels_stay_zero() {
+        let mut p = Params::init(&dims(), 1);
+        for v in p.get_mut("wq").data.iter_mut() {
+            *v = 0.0;
+        }
+        let q = apply(&p, &NoiseModel::Pcm, 7);
+        assert!(q.get("wq").data.iter().all(|&v| v == 0.0));
+    }
+}

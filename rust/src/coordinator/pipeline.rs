@@ -1,0 +1,191 @@
+//! End-to-end pipeline orchestration: the model zoo.
+//!
+//! Builds (or loads from `runs/<model>/`) every checkpoint the paper's
+//! evaluation compares:
+//!
+//!   teacher      — FP "off-the-shelf" model pre-trained on the world
+//!   afm          — analog foundation model: HWA distillation (fig. 2)
+//!   qat          — LLM-QAT baseline: SI8-W4 STE distillation
+//!   ce           — table-10 ablation: HWA training without distillation
+//!   afm_rtn      — afm + 4-bit RTN (digital deployment, table 3)
+//!   spin         — SpinQuant-lite PTQ of the teacher (rot artifacts)
+//!
+//! Everything is content-addressed by config label so benches reuse
+//! checkpoints instead of retraining.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use super::generate::{generate_chunks, GenEngine, SamplePolicy};
+use super::quant;
+use super::trainer::{BatchSource, ShardSource, TrainMode, Trainer};
+use crate::config::{Config, HwConfig, TrainConfig};
+use crate::data::{Shard, World, WorldCorpus};
+use crate::runtime::{Params, Runtime};
+
+pub struct Pipeline<'a> {
+    pub rt: &'a Runtime,
+    pub cfg: Config,
+    pub world: World,
+}
+
+impl<'a> Pipeline<'a> {
+    pub fn new(rt: &'a Runtime, cfg: Config) -> Pipeline<'a> {
+        let world = World::new(cfg.seed ^ 0x77_0a1d);
+        Pipeline { rt, cfg, world }
+    }
+
+    pub fn run_dir(&self) -> PathBuf {
+        PathBuf::from(&self.cfg.runs_dir).join(&self.cfg.model)
+    }
+
+    fn ckpt_dir(&self, name: &str) -> PathBuf {
+        self.run_dir().join(name)
+    }
+
+    fn have(&self, name: &str) -> bool {
+        self.ckpt_dir(name).join("params.json").exists()
+    }
+
+    fn load(&self, name: &str) -> Result<Params> {
+        super::trainer::load_ckpt(self.rt, &self.cfg.model, &self.ckpt_dir(name))
+    }
+
+    // ------------------------------------------------------------ teacher
+
+    /// FP teacher pre-trained on the synthetic world (the paper's
+    /// "off-the-shelf pre-trained model").
+    pub fn ensure_teacher(&self) -> Result<Params> {
+        if self.have("teacher") {
+            return self.load("teacher");
+        }
+        crate::info!("pretraining teacher ({} steps)...", self.cfg.pretrain_steps);
+        let dims = self.rt.manifest.dims(&self.cfg.model)?;
+        let init = Params::init(dims, self.cfg.seed);
+        let tc = TrainConfig {
+            steps: self.cfg.pretrain_steps,
+            accum: 1,
+            lr: self.cfg.pretrain_lr,
+            alpha_clip: -1.0,
+            hw: HwConfig::off(),
+            init_steps: 0.0,
+            beta_decay: 0.0,
+            ..self.cfg.train.clone()
+        };
+        let mut trainer = Trainer::new(self.rt, &self.cfg.model, tc);
+        trainer.metrics_path = Some(self.run_dir().join("teacher_metrics.jsonl"));
+        trainer.ckpt_dir = Some(self.ckpt_dir("teacher"));
+        let mut corpus = WorldCorpus::new(self.world.clone(), self.cfg.seed + 1);
+        let out = trainer.train(TrainMode::Ce, init, None, &mut corpus)?;
+        crate::info!(
+            "teacher done: loss {:.3} -> {:.3} in {:.1}s",
+            out.losses.first().unwrap_or(&0.0),
+            out.losses.last().unwrap_or(&0.0),
+            out.secs
+        );
+        Ok(out.params)
+    }
+
+    // ------------------------------------------------------------ datagen
+
+    /// Synthetic training tokens sampled from the teacher (paper §3.1).
+    pub fn ensure_shard(&self, teacher: &Params, strategy: &str, tokens: usize) -> Result<Shard> {
+        let name = format!("datagen_{strategy}_{tokens}");
+        let path = self.run_dir().join(format!("{name}.tok"));
+        if path.exists() {
+            return Ok(Shard::load(&path)?);
+        }
+        crate::info!("generating {tokens} tokens from teacher (strategy {strategy})...");
+        let timer = crate::util::Timer::start();
+        let dims = self.rt.manifest.dims(&self.cfg.model)?;
+        let chunk_len = dims.seq_len;
+        let n_chunks = tokens.div_ceil(chunk_len);
+        let mut engine = GenEngine::new(self.rt, &self.cfg.model, false)?;
+        let lits = teacher.to_literals()?;
+        let hw = HwConfig::off().to_scalars();
+        let policy =
+            SamplePolicy::strategy(strategy, self.cfg.datagen.temperature, self.cfg.datagen.top_k);
+        let mut rng = crate::util::prng::Pcg64::with_stream(self.cfg.seed, 0xd474);
+        let all =
+            generate_chunks(&mut engine, &lits, &hw, n_chunks, chunk_len, &policy, &mut rng)?;
+        let shard = Shard { tokens: all, chunk_len };
+        shard.save(&path)?;
+        crate::info!(
+            "datagen done: {} chunks in {:.1}s ({:.0} tok/s)",
+            shard.n_chunks(),
+            timer.secs(),
+            shard.tokens.len() as f64 / timer.secs()
+        );
+        Ok(shard)
+    }
+
+    /// "Public corpus" shard for the appendix-B.3 data-source ablation
+    /// (FineWeb stand-in: world text the teacher itself never produced).
+    pub fn world_shard(&self, tokens: usize) -> Result<Shard> {
+        let dims = self.rt.manifest.dims(&self.cfg.model)?;
+        let chunk_len = dims.seq_len;
+        let mut corpus = WorldCorpus::new(self.world.clone(), self.cfg.seed + 91);
+        let n_chunks = tokens.div_ceil(chunk_len);
+        let mut all = Vec::with_capacity(n_chunks * chunk_len);
+        for _ in 0..n_chunks {
+            all.extend(corpus.next_chunk(chunk_len));
+        }
+        Ok(Shard { tokens: all, chunk_len })
+    }
+
+    // ------------------------------------------------------------ training
+
+    /// Train a student (initialised from the teacher) with the given
+    /// mode/hw; checkpoints under `name`.
+    pub fn ensure_student(
+        &self,
+        name: &str,
+        teacher: &Params,
+        shard: Shard,
+        mode: TrainMode,
+        tc: TrainConfig,
+    ) -> Result<Params> {
+        if self.have(name) {
+            return self.load(name);
+        }
+        crate::info!("training {name} ({} steps, hw {})...", tc.steps, tc.hw.label());
+        let mut trainer = Trainer::new(self.rt, &self.cfg.model, tc);
+        trainer.metrics_path = Some(self.run_dir().join(format!("{name}_metrics.jsonl")));
+        trainer.ckpt_dir = Some(self.ckpt_dir(name));
+        let mut src: Box<dyn BatchSource> = Box::new(ShardSource::new(shard, self.cfg.seed + 7));
+        let out = trainer.train(mode, teacher.clone(), Some(teacher), src.as_mut())?;
+        crate::info!(
+            "{name} done: loss {:.4} -> {:.4} in {:.1}s",
+            out.losses.first().unwrap_or(&0.0),
+            out.losses.last().unwrap_or(&0.0),
+            out.secs
+        );
+        Ok(out.params)
+    }
+
+    /// The paper's analog foundation model.
+    pub fn ensure_afm(&self, teacher: &Params, shard: Shard) -> Result<Params> {
+        self.ensure_student("afm", teacher, shard, TrainMode::Distill, self.cfg.train.clone())
+    }
+
+    /// LLM-QAT baseline (SI8-W4 STE, no noise injection, no clipping).
+    pub fn ensure_qat(&self, teacher: &Params, shard: Shard) -> Result<Params> {
+        let tc = TrainConfig {
+            hw: HwConfig::qat_train(),
+            alpha_clip: -1.0,
+            ..self.cfg.train.clone()
+        };
+        self.ensure_student("qat", teacher, shard, TrainMode::Distill, tc)
+    }
+
+    // ------------------------------------------------------------ PTQ
+
+    pub fn afm_rtn(&self, afm: &Params, bits: u32) -> Result<Params> {
+        quant::rtn(self.rt, &self.cfg.model, afm, bits)
+    }
+
+    pub fn spinquant(&self, teacher: &Params, bits: u32) -> Result<Params> {
+        quant::spinquant(self.rt, &self.cfg.model, teacher, bits)
+    }
+}

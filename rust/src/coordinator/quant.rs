@@ -1,0 +1,96 @@
+//! Post-training quantization paths (paper §4.3 + SpinQuant baseline).
+//!
+//! Both run through AOT artifacts (`{model}_rtn_quant`,
+//! `{model}_spinquant_quant`) so the quantization numerics are the
+//! property-tested L1 kernels, not a rust re-implementation. A host-side
+//! RTN mirror is kept for property tests and offline tooling.
+
+use anyhow::Result;
+
+use crate::runtime::{lit_scalar_f32, Params, Runtime};
+
+fn levels(bits: u32) -> f32 {
+    ((1u32 << (bits - 1)) - 1) as f32
+}
+
+/// Round-to-nearest per-channel quantization of every analog tile
+/// (paper: "analog foundation models can be deployed on 4-bit digital
+/// hardware by applying RTN post-training").
+pub fn rtn(rt: &Runtime, model: &str, params: &Params, bits: u32) -> Result<Params> {
+    run_quant(rt, &format!("{model}_rtn_quant"), params, bits)
+}
+
+/// SpinQuant-lite: fixed orthogonal input rotations folded into the
+/// weights, then RTN. Must be evaluated through the `*_rot` forward
+/// artifacts.
+pub fn spinquant(rt: &Runtime, model: &str, params: &Params, bits: u32) -> Result<Params> {
+    run_quant(rt, &format!("{model}_spinquant_quant"), params, bits)
+}
+
+fn run_quant(rt: &Runtime, artifact: &str, params: &Params, bits: u32) -> Result<Params> {
+    let mut inputs = params.to_literals()?;
+    inputs.push(lit_scalar_f32(levels(bits)));
+    let outs = rt.exec(artifact, &inputs)?;
+    Params::from_literals(&params.keys, &outs, 0)
+}
+
+/// Host-side per-channel RTN (testing / tooling mirror of the L1 kernel).
+pub fn rtn_channel(chan: &mut [f32], bits: u32) {
+    let lv = levels(bits);
+    let cmax = chan.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if cmax == 0.0 {
+        return;
+    }
+    let scale = cmax / lv;
+    for v in chan.iter_mut() {
+        *v = (*v / scale).round().clamp(-lv, lv) * scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::check;
+
+    #[test]
+    fn rtn_channel_error_bound_property() {
+        // |w - q(w)| <= step/2 with step = cmax / levels — DESIGN.md §4.
+        check("rtn-error-bound", 100, |g| {
+            let n = g.usize_in(1, 64);
+            let mut chan = g.vec_normal(n);
+            let orig = chan.clone();
+            rtn_channel(&mut chan, 4);
+            let cmax = orig.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let step = cmax / 7.0;
+            for (o, q) in orig.iter().zip(&chan) {
+                assert!((o - q).abs() <= step / 2.0 + 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn rtn_channel_produces_grid_values() {
+        check("rtn-grid", 50, |g| {
+            let mut chan = g.vec_normal(32);
+            rtn_channel(&mut chan, 4);
+            let cmax_q = chan.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            if cmax_q == 0.0 {
+                return;
+            }
+            // every value is k * step for integer k in [-7, 7]
+            let step = cmax_q / 7.0;
+            for &v in &chan {
+                let k = v / step;
+                assert!((k - k.round()).abs() < 1e-3);
+                assert!(k.abs() <= 7.001);
+            }
+        });
+    }
+
+    #[test]
+    fn zero_channel_untouched() {
+        let mut chan = vec![0.0f32; 8];
+        rtn_channel(&mut chan, 4);
+        assert!(chan.iter().all(|&v| v == 0.0));
+    }
+}

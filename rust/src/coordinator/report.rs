@@ -1,0 +1,141 @@
+//! Paper-style table/figure rendering: markdown tables on stdout and
+//! under `runs/reports/`, simple ASCII line plots for the figures.
+
+use std::path::Path;
+
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n### {}\n\n", self.title);
+        let fmt_row = |cells: &[String]| {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}-|", "-".repeat(w + 2 - 1)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+        }
+        out
+    }
+
+    /// Print to stdout and append to runs/reports/<name>.md.
+    pub fn emit(&self, reports_dir: &Path, name: &str) {
+        let md = self.to_markdown();
+        println!("{md}");
+        let _ = std::fs::create_dir_all(reports_dir);
+        let _ = std::fs::write(reports_dir.join(format!("{name}.md")), &md);
+    }
+}
+
+/// ASCII line chart for figure-style results (series of (x, y)).
+pub fn ascii_chart(title: &str, series: &[(&str, Vec<(f64, f64)>)], height: usize) -> String {
+    let mut out = format!("\n### {title}\n\n");
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|(_, p)| p.iter().cloned()).collect();
+    if all.is_empty() {
+        return out;
+    }
+    let (ymin, ymax) = all
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), &(_, y)| (lo.min(y), hi.max(y)));
+    let span = (ymax - ymin).max(1e-9);
+    let width = series.iter().map(|(_, p)| p.len()).max().unwrap_or(0);
+    let marks = ['o', 'x', '+', '*', '#', '@'];
+    let mut grid = vec![vec![' '; width * 3]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        for (i, &(_, y)) in pts.iter().enumerate() {
+            let r = ((ymax - y) / span * (height - 1) as f64).round() as usize;
+            grid[r.min(height - 1)][i * 3] = marks[si % marks.len()];
+        }
+    }
+    for (r, row) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            format!("{ymax:7.1} |")
+        } else if r == height - 1 {
+            format!("{ymin:7.1} |")
+        } else {
+            "        |".to_string()
+        };
+        out.push_str(&label);
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str("        +");
+    out.push_str(&"-".repeat(width * 3));
+    out.push('\n');
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {name}\n", marks[si % marks.len()]));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_table_alignment() {
+        let mut t = Table::new("T", &["model", "acc"]);
+        t.row(vec!["teacher".into(), "70.0".into()]);
+        t.row(vec!["afm".into(), "66.3".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| model   | acc  |"));
+        assert!(md.contains("| teacher | 70.0 |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn ascii_chart_renders_all_series() {
+        let s = vec![
+            ("up", vec![(0.0, 1.0), (1.0, 2.0)]),
+            ("down", vec![(0.0, 2.0), (1.0, 1.0)]),
+        ];
+        let c = ascii_chart("fig", &s, 5);
+        assert!(c.contains('o') && c.contains('x'));
+        assert!(c.contains("up") && c.contains("down"));
+    }
+}

@@ -1,0 +1,216 @@
+//! Test-time compute scaling (paper §4.4, appendix F).
+//!
+//! For each MATH-analog prompt we sample `n_max` completions at
+//! temperature 0.8, score each with a process-reward-model substitute,
+//! and report accuracy for n in {1, 2, 4, ..., n_max} under the paper's
+//! three strategies: PRM (greedy) = highest reward, PRM (voting) =
+//! reward-weighted majority, and plain majority voting. Repeats are
+//! bootstrap subsamples of the n_max pool (the paper samples 256 x 5).
+//!
+//! PRM substitute: Math-Shepherd is a trained verifier whose reward
+//! correlates with solution correctness; we model exactly that —
+//! r = sigmoid(a * correct + shape(solution) + noise) with `a` chosen so
+//! the reward is informative but imperfect. The scaling *shape*
+//! (voting > greedy at large n, noisy models scaling into their clean
+//! counterparts) is driven by that correlation, which this preserves.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::generate::{GenEngine, GenRequest, SamplePolicy};
+use crate::data::tasks::{extract_hash_answer, Sample, Scoring};
+use crate::data::tokenizer::Tokenizer;
+use crate::util::prng::Pcg64;
+
+/// Reward model parameters (synthetic Math-Shepherd stand-in).
+#[derive(Clone, Debug)]
+pub struct SyntheticPrm {
+    /// correctness signal strength (higher = sharper verifier)
+    pub alpha: f32,
+    /// reward noise std
+    pub noise: f32,
+}
+
+impl Default for SyntheticPrm {
+    fn default() -> Self {
+        SyntheticPrm { alpha: 1.4, noise: 1.0 }
+    }
+}
+
+impl SyntheticPrm {
+    /// Reward in (0, 1) for a completion text given the gold answer.
+    pub fn reward(&self, text: &str, extracted: Option<i64>, gold: i64, rng: &mut Pcg64) -> f32 {
+        let correct = extracted == Some(gold);
+        // shape features a real PRM keys on: structured work + marker
+        let has_marker = text.contains("####") as i32 as f32;
+        let has_steps = text.contains('=') as i32 as f32;
+        let z = self.alpha * if correct { 1.0 } else { -1.0 }
+            + 0.4 * has_marker
+            + 0.2 * has_steps
+            + self.noise * rng.normal_f32();
+        1.0 / (1.0 + (-z).exp())
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TtsCurve {
+    /// n -> accuracy per repeat
+    pub prm_greedy: BTreeMap<usize, Vec<f64>>,
+    pub prm_voting: BTreeMap<usize, Vec<f64>>,
+    pub voting: BTreeMap<usize, Vec<f64>>,
+}
+
+/// One completion's bookkeeping.
+struct Scored {
+    answer: Option<i64>,
+    reward: f32,
+}
+
+/// Run the experiment for one model configuration.
+/// `samples` must be GenerateHash tasks (math_syn).
+#[allow(clippy::too_many_arguments)]
+pub fn tts_curve(
+    engine: &mut GenEngine,
+    param_lits: &[xla::Literal],
+    hw: &[f32; 7],
+    samples: &[Sample],
+    n_max: usize,
+    repeats: usize,
+    prm: &SyntheticPrm,
+    seed: u64,
+) -> Result<TtsCurve> {
+    let mut rng = Pcg64::with_stream(seed, 0x775);
+    // sample n_max completions per prompt (batched across everything)
+    let mut reqs = Vec::with_capacity(samples.len() * n_max);
+    for s in samples {
+        for _ in 0..n_max {
+            reqs.push(GenRequest::from_text(&s.prompt, 48, SamplePolicy::softmax(0.8, 0)));
+        }
+    }
+    let outs = engine.run(param_lits, hw, &reqs, &mut rng)?;
+
+    // score
+    let mut pools: Vec<Vec<Scored>> = Vec::with_capacity(samples.len());
+    for (si, s) in samples.iter().enumerate() {
+        let gold = match s.scoring {
+            Scoring::GenerateHash { answer } => answer,
+            _ => anyhow::bail!("tts needs GenerateHash tasks"),
+        };
+        let mut pool = Vec::with_capacity(n_max);
+        for k in 0..n_max {
+            let text = Tokenizer::decode(&outs[si * n_max + k]);
+            let text = text.split("Q:").next().unwrap_or("").to_string();
+            let ans = extract_hash_answer(&text);
+            pool.push(Scored { answer: ans, reward: prm.reward(&text, ans, gold, &mut rng) });
+        }
+        pools.push(pool);
+    }
+
+    // curves
+    let mut curve = TtsCurve {
+        prm_greedy: BTreeMap::new(),
+        prm_voting: BTreeMap::new(),
+        voting: BTreeMap::new(),
+    };
+    let mut n = 1;
+    while n <= n_max {
+        for rep in 0..repeats {
+            let mut rng_r = Pcg64::with_stream(seed ^ 0xbeef, (n * 1000 + rep) as u64);
+            let (mut g, mut v, mut mv) = (0usize, 0usize, 0usize);
+            for (pool, s) in pools.iter().zip(samples) {
+                let gold = match s.scoring {
+                    Scoring::GenerateHash { answer } => answer,
+                    _ => unreachable!(),
+                };
+                // bootstrap subset of size n
+                let mut idx: Vec<usize> = (0..n_max).collect();
+                rng_r.shuffle(&mut idx);
+                let subset: Vec<&Scored> = idx[..n].iter().map(|&i| &pool[i]).collect();
+                g += (best_by_reward(&subset) == Some(gold)) as usize;
+                v += (weighted_vote(&subset) == Some(gold)) as usize;
+                mv += (majority_vote(&subset) == Some(gold)) as usize;
+            }
+            let denom = samples.len() as f64;
+            curve.prm_greedy.entry(n).or_default().push(100.0 * g as f64 / denom);
+            curve.prm_voting.entry(n).or_default().push(100.0 * v as f64 / denom);
+            curve.voting.entry(n).or_default().push(100.0 * mv as f64 / denom);
+        }
+        n *= 2;
+    }
+    Ok(curve)
+}
+
+fn best_by_reward(subset: &[&Scored]) -> Option<i64> {
+    subset
+        .iter()
+        .max_by(|a, b| a.reward.partial_cmp(&b.reward).unwrap())
+        .and_then(|s| s.answer)
+}
+
+fn weighted_vote(subset: &[&Scored]) -> Option<i64> {
+    let mut scores: BTreeMap<i64, f64> = BTreeMap::new();
+    for s in subset {
+        if let Some(a) = s.answer {
+            *scores.entry(a).or_default() += s.reward as f64;
+        }
+    }
+    scores
+        .into_iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .map(|(a, _)| a)
+}
+
+fn majority_vote(subset: &[&Scored]) -> Option<i64> {
+    let mut counts: BTreeMap<i64, usize> = BTreeMap::new();
+    for s in subset {
+        if let Some(a) = s.answer {
+            *counts.entry(a).or_default() += 1;
+        }
+    }
+    counts.into_iter().max_by_key(|&(_, c)| c).map(|(a, _)| a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scored(vals: &[(Option<i64>, f32)]) -> Vec<Scored> {
+        vals.iter().map(|&(answer, reward)| Scored { answer, reward }).collect()
+    }
+
+    #[test]
+    fn best_by_reward_picks_max() {
+        let pool = scored(&[(Some(1), 0.2), (Some(2), 0.9), (Some(3), 0.5)]);
+        let refs: Vec<&Scored> = pool.iter().collect();
+        assert_eq!(best_by_reward(&refs), Some(2));
+    }
+
+    #[test]
+    fn weighted_vote_accumulates_rewards() {
+        // answer 1 twice with low reward beats answer 2 once with higher
+        let pool = scored(&[(Some(1), 0.4), (Some(1), 0.4), (Some(2), 0.7)]);
+        let refs: Vec<&Scored> = pool.iter().collect();
+        assert_eq!(weighted_vote(&refs), Some(1));
+    }
+
+    #[test]
+    fn majority_vote_counts() {
+        let pool = scored(&[(Some(5), 0.1), (Some(5), 0.1), (Some(9), 0.99), (None, 0.9)]);
+        let refs: Vec<&Scored> = pool.iter().collect();
+        assert_eq!(majority_vote(&refs), Some(5));
+    }
+
+    #[test]
+    fn prm_reward_correlates_with_correctness() {
+        let prm = SyntheticPrm::default();
+        let mut rng = Pcg64::new(0);
+        let (mut rc, mut rw) = (0.0, 0.0);
+        let n = 2000;
+        for _ in 0..n {
+            rc += prm.reward("1+2=3 #### 3", Some(3), 3, &mut rng) as f64;
+            rw += prm.reward("1+2=4 #### 4", Some(4), 3, &mut rng) as f64;
+        }
+        assert!(rc / n as f64 > rw / n as f64 + 0.2);
+    }
+}

@@ -1,0 +1,209 @@
+//! Corpus streams and token shards.
+//!
+//! Two token sources feed training:
+//!  * `WorldCorpus` — text sampled from the synthetic world (the
+//!    "publicly available dataset" of the paper's appendix B.3 FineWeb
+//!    ablation, and the teacher's pre-training data);
+//!  * shards produced by the datagen engine (`coordinator::generate`) —
+//!    the paper's main path: tokens sampled from the teacher itself.
+//!
+//! Both are packed the same way: documents separated by EOS, BOS at
+//! every chunk start, PAD-filled tails — matching the CE/KD loss
+//! masking in the L2 model. Shards are stored one token per byte
+//! (vocab = 98 < 256) with a JSON sidecar.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::tokenizer::{Tokenizer, BOS, EOS, PAD};
+use super::world::World;
+use crate::util::json::Json;
+use crate::util::prng::Pcg64;
+
+/// Streaming pre-training corpus over the synthetic world.
+pub struct WorldCorpus {
+    pub world: World,
+    rng: Pcg64,
+    buf: Vec<u32>,
+}
+
+impl WorldCorpus {
+    pub fn new(world: World, seed: u64) -> Self {
+        WorldCorpus { world, rng: Pcg64::with_stream(seed, 0xc0), buf: Vec::new() }
+    }
+
+    /// Next fixed-length chunk: BOS + packed docs (EOS-separated).
+    pub fn next_chunk(&mut self, t: usize) -> Vec<u32> {
+        let mut chunk = Vec::with_capacity(t);
+        chunk.push(BOS);
+        while chunk.len() < t {
+            if self.buf.is_empty() {
+                let line = self.world.corpus_line(&mut self.rng);
+                self.buf = Tokenizer::encode(&line);
+                self.buf.push(EOS);
+            }
+            let take = (t - chunk.len()).min(self.buf.len());
+            chunk.extend(self.buf.drain(..take));
+        }
+        chunk
+    }
+
+    /// A (b, t) batch flattened row-major as i32 (literal-ready).
+    pub fn next_batch(&mut self, b: usize, t: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(b * t);
+        for _ in 0..b {
+            out.extend(self.next_chunk(t).into_iter().map(|x| x as i32));
+        }
+        out
+    }
+}
+
+/// Token shard: the unit the datagen engine writes and the trainer reads.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Shard {
+    pub tokens: Vec<u32>,
+    pub chunk_len: usize,
+}
+
+impl Shard {
+    pub fn n_chunks(&self) -> usize {
+        self.tokens.len() / self.chunk_len
+    }
+
+    /// Chunk i as an i32 row.
+    pub fn chunk(&self, i: usize) -> Vec<i32> {
+        let s = i * self.chunk_len;
+        self.tokens[s..s + self.chunk_len].iter().map(|&x| x as i32).collect()
+    }
+
+    /// Assemble a (b, t) batch from chunk indices (wrapping).
+    pub fn batch(&self, indices: &[usize]) -> Vec<i32> {
+        let mut out = Vec::with_capacity(indices.len() * self.chunk_len);
+        for &i in indices {
+            out.extend(self.chunk(i % self.n_chunks()));
+        }
+        out
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let bytes: Vec<u8> = self.tokens.iter().map(|&t| t as u8).collect();
+        std::fs::File::create(path)?.write_all(&bytes)?;
+        let meta = Json::obj(vec![
+            ("chunk_len", Json::num(self.chunk_len as f64)),
+            ("n_tokens", Json::num(self.tokens.len() as f64)),
+        ]);
+        std::fs::write(path.with_extension("json"), meta.to_string())
+    }
+
+    pub fn load(path: &Path) -> std::io::Result<Shard> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut bytes)?;
+        let meta_text = std::fs::read_to_string(path.with_extension("json"))?;
+        let meta = Json::parse(&meta_text)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+        let chunk_len = meta.expect("chunk_len").as_usize().unwrap_or(64);
+        Ok(Shard { tokens: bytes.into_iter().map(|b| b as u32).collect(), chunk_len })
+    }
+}
+
+/// Pack already-generated token documents into training chunks.
+pub fn pack_documents(docs: &[Vec<u32>], chunk_len: usize) -> Shard {
+    let mut tokens = Vec::new();
+    let mut chunk: Vec<u32> = vec![BOS];
+    for doc in docs {
+        let mut rest: &[u32] = doc;
+        loop {
+            let space = chunk_len - chunk.len();
+            if rest.len() <= space {
+                chunk.extend_from_slice(rest);
+                if chunk.len() < chunk_len {
+                    chunk.push(EOS);
+                }
+                break;
+            }
+            chunk.extend_from_slice(&rest[..space]);
+            rest = &rest[space..];
+            tokens.extend(chunk.drain(..));
+            chunk.push(BOS);
+        }
+        if chunk.len() >= chunk_len {
+            tokens.extend(chunk.drain(..chunk_len));
+            chunk.clear();
+            chunk.push(BOS);
+        }
+    }
+    if chunk.len() > 1 {
+        chunk.resize(chunk_len, PAD);
+        tokens.extend(chunk);
+    }
+    Shard { tokens, chunk_len }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_have_exact_length_and_bos() {
+        let mut c = WorldCorpus::new(World::new(0), 1);
+        for _ in 0..20 {
+            let ch = c.next_chunk(64);
+            assert_eq!(ch.len(), 64);
+            assert_eq!(ch[0], BOS);
+            assert!(ch.iter().all(|&t| (t as usize) < Tokenizer::vocab()));
+        }
+    }
+
+    #[test]
+    fn batch_is_row_major() {
+        let mut c = WorldCorpus::new(World::new(0), 2);
+        let b = c.next_batch(4, 32);
+        assert_eq!(b.len(), 128);
+        assert_eq!(b[0], BOS as i32);
+        assert_eq!(b[32], BOS as i32);
+    }
+
+    #[test]
+    fn shard_roundtrip() {
+        let dir = std::env::temp_dir().join("afm_test_shard");
+        let s = Shard { tokens: (0..256).map(|i| (i % 98) as u32).collect(), chunk_len: 64 };
+        let p = dir.join("s0.tok");
+        s.save(&p).unwrap();
+        let s2 = Shard::load(&p).unwrap();
+        assert_eq!(s, s2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pack_documents_pads_and_separates() {
+        let docs = vec![vec![10, 11, 12], vec![20, 21]];
+        let s = pack_documents(&docs, 8);
+        assert_eq!(s.n_chunks(), 1);
+        let c = s.chunk(0);
+        assert_eq!(c[0], BOS as i32);
+        assert_eq!(&c[1..4], &[10, 11, 12]);
+        assert_eq!(c[4], EOS as i32);
+        assert_eq!(&c[5..7], &[20, 21]);
+        assert_eq!(c[7], EOS as i32);
+    }
+
+    #[test]
+    fn pack_documents_splits_long_docs() {
+        let docs = vec![(10..40).collect::<Vec<u32>>()];
+        let s = pack_documents(&docs, 16);
+        assert!(s.n_chunks() >= 2);
+        // continuation chunks also start with BOS
+        assert_eq!(s.chunk(1)[0], BOS as i32);
+    }
+
+    #[test]
+    fn shard_batch_wraps_indices() {
+        let s = Shard { tokens: (0..128).collect(), chunk_len: 64 };
+        let b = s.batch(&[0, 1, 2, 3]);
+        assert_eq!(b.len(), 256);
+        assert_eq!(b[128], 0); // index 2 wraps to chunk 0
+    }
+}

@@ -1,0 +1,12 @@
+//! Data substrate: tokenizer, the synthetic world (pre-training-data
+//! substitute), benchmark task generators, and token shards.
+
+pub mod corpus;
+pub mod tasks;
+pub mod tokenizer;
+pub mod world;
+
+pub use corpus::{pack_documents, Shard, WorldCorpus};
+pub use tasks::{build_task, Sample, Scoring, Task};
+pub use tokenizer::Tokenizer;
+pub use world::World;

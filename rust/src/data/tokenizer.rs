@@ -1,0 +1,110 @@
+//! Char-level tokenizer matching the vocabulary baked into the L2 model
+//! (manifest: vocab = 98 = PAD/BOS/EOS + ASCII 32..126).
+//!
+//! A char-level scheme keeps the synthetic-world corpus learnable by a
+//! sub-million-parameter model while preserving the mechanics the paper
+//! evaluates (logit comparison over answer tokens, `####`-anchored
+//! answer extraction, stop-string handling).
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const VOCAB: usize = 98;
+const CHAR_BASE: u32 = 3;
+const FIRST_CHAR: u32 = 32; // ' '
+const LAST_CHAR: u32 = 126; // '~'
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    pub fn encode_char(c: char) -> Option<u32> {
+        let cp = c as u32;
+        (FIRST_CHAR..=LAST_CHAR).contains(&cp).then(|| cp - FIRST_CHAR + CHAR_BASE)
+    }
+
+    pub fn decode_char(id: u32) -> Option<char> {
+        (CHAR_BASE..CHAR_BASE + (LAST_CHAR - FIRST_CHAR + 1))
+            .contains(&id)
+            .then(|| char::from_u32(id - CHAR_BASE + FIRST_CHAR).unwrap())
+    }
+
+    /// Encode text; unsupported chars (incl. newline) become spaces so
+    /// round-trips are total on the supported alphabet.
+    pub fn encode(text: &str) -> Vec<u32> {
+        text.chars()
+            .map(|c| Self::encode_char(c).unwrap_or_else(|| Self::encode_char(' ').unwrap()))
+            .collect()
+    }
+
+    /// Encode with BOS prefix (generation prompts).
+    pub fn encode_bos(text: &str) -> Vec<u32> {
+        let mut v = vec![BOS];
+        v.extend(Self::encode(text));
+        v
+    }
+
+    /// Decode ids, stopping at EOS; PAD/BOS are skipped.
+    pub fn decode(ids: &[u32]) -> String {
+        let mut s = String::new();
+        for &id in ids {
+            if id == EOS {
+                break;
+            }
+            if let Some(c) = Self::decode_char(id) {
+                s.push(c);
+            }
+        }
+        s
+    }
+
+    pub fn vocab() -> usize {
+        VOCAB
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::check;
+
+    #[test]
+    fn vocab_covers_all_printable_ascii() {
+        for cp in FIRST_CHAR..=LAST_CHAR {
+            let c = char::from_u32(cp).unwrap();
+            let id = Tokenizer::encode_char(c).unwrap();
+            assert!(id >= CHAR_BASE && (id as usize) < VOCAB);
+            assert_eq!(Tokenizer::decode_char(id), Some(c));
+        }
+    }
+
+    #[test]
+    fn specials_not_decodable_as_chars() {
+        for id in [PAD, BOS, EOS] {
+            assert_eq!(Tokenizer::decode_char(id), None);
+        }
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        check("tokenizer-roundtrip", 200, |g| {
+            let s = g.ascii_string(80);
+            assert_eq!(Tokenizer::decode(&Tokenizer::encode(&s)), s);
+        });
+    }
+
+    #[test]
+    fn eos_terminates_decode() {
+        let mut ids = Tokenizer::encode("abc");
+        ids.push(EOS);
+        ids.extend(Tokenizer::encode("junk"));
+        assert_eq!(Tokenizer::decode(&ids), "abc");
+    }
+
+    #[test]
+    fn bos_prefix() {
+        let ids = Tokenizer::encode_bos("x");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(Tokenizer::decode(&ids), "x");
+    }
+}

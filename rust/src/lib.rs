@@ -1,0 +1,28 @@
+//! # afm — Analog Foundation Models
+//!
+//! Rust + JAX + Pallas reproduction of *Analog Foundation Models*
+//! (Büchel et al., 2025): a three-layer system in which
+//!
+//! * **L1** (Pallas, `python/compile/kernels/`) simulates the AIMC tile —
+//!   static input DAC quantization, weight noise, analog MVM, globally
+//!   static ADC output quantization;
+//! * **L2** (JAX, `python/compile/model.py`) is a transformer LM whose
+//!   linear layers run on simulated tiles with straight-through
+//!   estimation, AOT-lowered to HLO-text artifacts;
+//! * **L3** (this crate) is the coordinator that owns everything at
+//!   runtime: teacher pre-training, synthetic data generation by
+//!   sampling the teacher, hardware-aware distillation training,
+//!   repeated-seed noisy evaluation, post-training quantization, and
+//!   test-time compute scaling — with Python never on the request path.
+//!
+//! See DESIGN.md for the full system inventory and the per-experiment
+//! index, and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod runtime;
+pub mod util;
+
+pub mod bench_support;

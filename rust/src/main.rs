@@ -1,0 +1,215 @@
+//! `afm` — CLI launcher for the Analog Foundation Models pipeline.
+//!
+//! Subcommands mirror the paper's fig. 7 flow:
+//!   pretrain  — FP teacher on the synthetic world
+//!   datagen   — sample training tokens from the teacher (SSS/RGS/SGS)
+//!   train     — HWA distillation (afm), LLM-QAT baseline
+//!   quantize  — RTN / SpinQuant post-training quantization
+//!   eval      — repeated-seed noisy benchmark evaluation
+//!   tts       — test-time compute scaling
+//!   pipeline  — all of the above, end to end
+//!
+//! Every command takes `--config <toml>` plus `--set key=value`
+//! overrides; see configs/*.toml for presets.
+
+use anyhow::{anyhow, Result};
+
+use afm::cli::{render_help, Args, FlagSpec};
+use afm::config::{Config, HwConfig};
+use afm::coordinator::evaluate::{avg_acc, fmt_metric, Evaluator, ModelUnderTest};
+use afm::coordinator::generate::GenEngine;
+use afm::coordinator::noise::NoiseModel;
+use afm::coordinator::pipeline::Pipeline;
+use afm::coordinator::report::Table;
+use afm::coordinator::{quant, tts};
+use afm::data::tasks::{build_task, TABLE1_TASKS};
+use afm::info;
+use afm::runtime::Runtime;
+
+const COMMANDS: &[(&str, &str)] = &[
+    ("pipeline", "teacher -> datagen -> afm/qat training -> RTN (model zoo)"),
+    ("pretrain", "pre-train the FP teacher on the synthetic world"),
+    ("datagen", "sample synthetic training tokens from the teacher"),
+    ("train", "HWA-distill a student (--kind afm|qat)"),
+    ("quantize", "post-training quantization (--method rtn|spinquant)"),
+    ("eval", "benchmark a checkpoint (--who teacher|afm|qat) under noise"),
+    ("tts", "test-time compute scaling on the MATH analog"),
+    ("help", "this message"),
+];
+
+fn flag_specs() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "config", takes_value: true, help: "TOML config file" },
+        FlagSpec { name: "who", takes_value: true, help: "checkpoint to evaluate" },
+        FlagSpec { name: "kind", takes_value: true, help: "student kind: afm | qat" },
+        FlagSpec { name: "method", takes_value: true, help: "quant method: rtn | spinquant" },
+        FlagSpec { name: "noise", takes_value: true, help: "none | pcm | gauss:<gamma>" },
+        FlagSpec { name: "seeds", takes_value: true, help: "noisy-eval repetitions" },
+        FlagSpec { name: "n-max", takes_value: true, help: "tts: max generations per prompt" },
+        FlagSpec { name: "quiet", takes_value: false, help: "suppress progress logging" },
+    ]
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_noise(s: &str) -> Result<NoiseModel> {
+    if s == "none" {
+        Ok(NoiseModel::None)
+    } else if s == "pcm" || s == "hw" {
+        Ok(NoiseModel::Pcm)
+    } else if let Some(g) = s.strip_prefix("gauss:") {
+        Ok(NoiseModel::Gaussian { gamma: g.parse().map_err(|_| anyhow!("bad gamma '{g}'"))? })
+    } else {
+        Err(anyhow!("unknown noise model '{s}' (none | pcm | gauss:<g>)"))
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let specs = flag_specs();
+    let args = Args::parse(argv, &specs).map_err(|e| anyhow!(e))?;
+    if args.cmd.is_empty() || args.cmd == "help" {
+        println!("{}", render_help(COMMANDS, &specs));
+        return Ok(());
+    }
+    if args.has("quiet") {
+        afm::util::set_quiet(true);
+    }
+    let cfg = Config::load_with_overrides(args.get("config"), &args.set).map_err(|e| anyhow!(e))?;
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let pipe = Pipeline::new(&rt, cfg.clone());
+
+    match args.cmd.as_str() {
+        "pretrain" => {
+            pipe.ensure_teacher()?;
+        }
+        "datagen" => {
+            let teacher = pipe.ensure_teacher()?;
+            pipe.ensure_shard(&teacher, &cfg.datagen.strategy, cfg.datagen.tokens)?;
+        }
+        "train" => {
+            let teacher = pipe.ensure_teacher()?;
+            let shard = pipe.ensure_shard(&teacher, &cfg.datagen.strategy, cfg.datagen.tokens)?;
+            match args.get_or("kind", "afm").as_str() {
+                "afm" => {
+                    pipe.ensure_afm(&teacher, shard)?;
+                }
+                "qat" => {
+                    pipe.ensure_qat(&teacher, shard)?;
+                }
+                other => return Err(anyhow!("unknown --kind {other}")),
+            }
+        }
+        "quantize" => {
+            let teacher = pipe.ensure_teacher()?;
+            match args.get_or("method", "rtn").as_str() {
+                "rtn" => {
+                    let shard =
+                        pipe.ensure_shard(&teacher, &cfg.datagen.strategy, cfg.datagen.tokens)?;
+                    let afm = pipe.ensure_afm(&teacher, shard)?;
+                    let q = pipe.afm_rtn(&afm, 4)?;
+                    q.save(&pipe.run_dir().join("afm_rtn4"))?;
+                    info!("wrote afm_rtn4 checkpoint");
+                }
+                "spinquant" => {
+                    let q = pipe.spinquant(&teacher, 4)?;
+                    q.save(&pipe.run_dir().join("spinquant4"))?;
+                    info!("wrote spinquant4 checkpoint");
+                }
+                other => return Err(anyhow!("unknown --method {other}")),
+            }
+        }
+        "eval" => {
+            let teacher = pipe.ensure_teacher()?;
+            let (params, hw, label) = match args.get_or("who", "teacher").as_str() {
+                "teacher" => (teacher.clone(), HwConfig::off(), "teacher (W16)".to_string()),
+                "afm" => {
+                    let shard =
+                        pipe.ensure_shard(&teacher, &cfg.datagen.strategy, cfg.datagen.tokens)?;
+                    let p = pipe.ensure_afm(&teacher, shard)?;
+                    (p, HwConfig::afm_train(0.0), "analog FM (SI8-W16-O8)".to_string())
+                }
+                "qat" => {
+                    let shard =
+                        pipe.ensure_shard(&teacher, &cfg.datagen.strategy, cfg.datagen.tokens)?;
+                    let p = pipe.ensure_qat(&teacher, shard)?;
+                    (p, HwConfig::qat_train(), "LLM-QAT (SI8-W4)".to_string())
+                }
+                other => return Err(anyhow!("unknown --who {other}")),
+            };
+            let nm = parse_noise(&args.get_or("noise", "none"))?;
+            let seeds = args.usize_or("seeds", cfg.eval.seeds);
+            let ev = Evaluator::new(&rt, &cfg.model);
+            let tasks: Vec<_> = TABLE1_TASKS
+                .iter()
+                .map(|n| build_task(n, &pipe.world, cfg.eval.samples_per_task, cfg.seed + 500))
+                .collect();
+            let m = ModelUnderTest { label: label.clone(), params, hw, rot: false };
+            let report = ev.evaluate(&m, &nm, &tasks, seeds, cfg.seed + 900)?;
+            let mut table =
+                Table::new(&format!("eval: {label} {}", nm.label()), &["task", "acc"]);
+            for name in TABLE1_TASKS {
+                if let Some(acc) = report.get(*name).and_then(|m| m.get("acc")) {
+                    table.row(vec![name.to_string(), fmt_metric(acc)]);
+                }
+            }
+            table.row(vec!["Avg.".into(), format!("{:.2}", avg_acc(&report))]);
+            table.emit(&pipe.run_dir().join("reports"), "eval");
+        }
+        "tts" => {
+            let teacher = pipe.ensure_teacher()?;
+            let shard = pipe.ensure_shard(&teacher, &cfg.datagen.strategy, cfg.datagen.tokens)?;
+            let afm = pipe.ensure_afm(&teacher, shard)?;
+            let n_max = args.usize_or("n-max", 16);
+            let task = build_task("math_syn", &pipe.world, 24, cfg.seed + 123);
+            let mut engine = GenEngine::new(&rt, &cfg.model, false)?;
+            let noisy = afm::coordinator::noise::apply(&afm, &NoiseModel::Pcm, cfg.seed + 42);
+            let lits = noisy.to_literals()?;
+            let hw = HwConfig::afm_train(0.0).to_scalars();
+            let curve = tts::tts_curve(
+                &mut engine,
+                &lits,
+                &hw,
+                &task.samples,
+                n_max,
+                3,
+                &tts::SyntheticPrm::default(),
+                cfg.seed,
+            )?;
+            let mut table = Table::new(
+                "test-time scaling (analog FM, hw noise)",
+                &["n", "PRM greedy", "PRM voting", "majority"],
+            );
+            for (&n, g) in &curve.prm_greedy {
+                table.row(vec![
+                    n.to_string(),
+                    fmt_metric(g),
+                    fmt_metric(&curve.prm_voting[&n]),
+                    fmt_metric(&curve.voting[&n]),
+                ]);
+            }
+            table.emit(&pipe.run_dir().join("reports"), "tts");
+        }
+        "pipeline" => {
+            let teacher = pipe.ensure_teacher()?;
+            let shard = pipe.ensure_shard(&teacher, &cfg.datagen.strategy, cfg.datagen.tokens)?;
+            let afm_p = pipe.ensure_afm(&teacher, shard.clone())?;
+            let qat_p = pipe.ensure_qat(&teacher, shard)?;
+            let _ = quant::rtn(&rt, &cfg.model, &afm_p, 4)?;
+            info!(
+                "pipeline complete: teacher/afm/qat checkpoints under {} ({} params each)",
+                pipe.run_dir().display(),
+                qat_p.n_params()
+            );
+        }
+        other => {
+            return Err(anyhow!("unknown command '{other}' — try `afm help`"));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Tensor <-> xla::Literal conversion helpers.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::tensor::Tensor;
+
+/// f32 tensor -> literal with the tensor's shape.
+pub fn lit_tensor(t: &Tensor) -> Result<xla::Literal> {
+    let flat = xla::Literal::vec1(&t.data);
+    if t.shape.is_empty() {
+        // scalar: reshape to rank-0
+        return flat.reshape(&[]).map_err(|e| anyhow!("reshape scalar: {e:?}"));
+    }
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    flat.reshape(&dims).map_err(|e| anyhow!("reshape {:?}: {e:?}", t.shape))
+}
+
+/// i32 token batch -> (rows, cols) literal.
+pub fn lit_tokens(tokens: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    assert_eq!(tokens.len(), shape.iter().product::<usize>());
+    let flat = xla::Literal::vec1(tokens);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    flat.reshape(&dims).map_err(|e| anyhow!("reshape tokens {shape:?}: {e:?}"))
+}
+
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn lit_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// literal -> f32 tensor (shape recovered from the literal).
+pub fn tensor_from_lit(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
+    Ok(Tensor::new(dims, data))
+}
+
+/// literal -> scalar f32 (rank 0 or single element).
+pub fn f32_from_lit(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(|e| anyhow!("scalar: {e:?}"))
+}

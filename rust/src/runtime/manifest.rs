@@ -1,0 +1,173 @@
+//! The manifest is the L2→L3 contract: artifact files, exact input
+//! order/shape/dtype, output order, and model dimensions. Written by
+//! `python/compile/aot.py`, parsed here with the in-repo JSON substrate.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelDims {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub n_cls: usize,
+    pub n_params: usize,
+    pub param_keys: Vec<String>,
+    pub param_shapes: BTreeMap<String, Vec<usize>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub vocab: usize,
+    pub pad_id: u32,
+    pub bos_id: u32,
+    pub eos_id: u32,
+    pub batch_eval: usize,
+    pub batch_gen: usize,
+    pub batch_train: usize,
+    pub hw_fields: Vec<String>,
+    pub configs: BTreeMap<String, ModelDims>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let batch = j.expect("batch");
+        let mut configs = BTreeMap::new();
+        for (name, c) in j.expect("configs").as_obj().ok_or_else(|| anyhow!("configs"))? {
+            let mut param_shapes = BTreeMap::new();
+            for (k, v) in c.expect("param_shapes").as_obj().unwrap() {
+                param_shapes.insert(k.clone(), v.usize_vec());
+            }
+            configs.insert(
+                name.clone(),
+                ModelDims {
+                    d_model: c.expect("d_model").as_usize().unwrap(),
+                    n_layers: c.expect("n_layers").as_usize().unwrap(),
+                    n_heads: c.expect("n_heads").as_usize().unwrap(),
+                    d_ff: c.expect("d_ff").as_usize().unwrap(),
+                    seq_len: c.expect("seq_len").as_usize().unwrap(),
+                    vocab: c.expect("vocab").as_usize().unwrap(),
+                    n_cls: c.expect("n_cls").as_usize().unwrap(),
+                    n_params: c.expect("n_params").as_usize().unwrap(),
+                    param_keys: c.expect("param_keys").str_vec(),
+                    param_shapes,
+                },
+            );
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.expect("artifacts").as_obj().ok_or_else(|| anyhow!("artifacts"))? {
+            let inputs = a
+                .expect("inputs")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|i| InputSpec {
+                    name: i.expect("name").as_str().unwrap().to_string(),
+                    shape: i.expect("shape").usize_vec(),
+                    dtype: if i.expect("dtype").as_str() == Some("i32") {
+                        DType::I32
+                    } else {
+                        DType::F32
+                    },
+                })
+                .collect();
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: a.expect("file").as_str().unwrap().to_string(),
+                    inputs,
+                    outputs: a.expect("outputs").str_vec(),
+                },
+            );
+        }
+        Ok(Manifest {
+            vocab: j.expect("vocab").as_usize().unwrap(),
+            pad_id: j.expect("pad_id").as_usize().unwrap() as u32,
+            bos_id: j.expect("bos_id").as_usize().unwrap() as u32,
+            eos_id: j.expect("eos_id").as_usize().unwrap() as u32,
+            batch_eval: batch.expect("eval").as_usize().unwrap(),
+            batch_gen: batch.expect("gen").as_usize().unwrap(),
+            batch_train: batch.expect("train").as_usize().unwrap(),
+            hw_fields: j.expect("hw_fields").str_vec(),
+            configs,
+            artifacts,
+        })
+    }
+
+    pub fn dims(&self, model: &str) -> Result<&ModelDims> {
+        self.configs
+            .get(model)
+            .ok_or_else(|| anyhow!("model config '{model}' not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "vocab": 98, "pad_id": 0, "bos_id": 1, "eos_id": 2,
+      "hw_fields": ["in_levels"],
+      "batch": {"eval": 32, "gen": 32, "train": 8},
+      "configs": {"nano": {"d_model": 64, "n_layers": 2, "n_heads": 4,
+        "d_ff": 176, "seq_len": 96, "vocab": 98, "n_cls": 0, "n_params": 123,
+        "param_keys": ["emb"], "param_shapes": {"emb": [98, 64]}}},
+      "artifacts": {"nano_lm_fwd": {"file": "nano_lm_fwd.hlo.txt",
+        "inputs": [{"name": "p_emb", "shape": [98, 64], "dtype": "f32"},
+                   {"name": "seed", "shape": [], "dtype": "i32"}],
+        "outputs": ["logits"]}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.vocab, 98);
+        assert_eq!(m.batch_train, 8);
+        let d = m.dims("nano").unwrap();
+        assert_eq!(d.param_shapes["emb"], vec![98, 64]);
+        let a = &m.artifacts["nano_lm_fwd"];
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert!(a.inputs[1].shape.is_empty());
+    }
+
+    #[test]
+    fn unknown_model_is_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.dims("giga").is_err());
+    }
+}

@@ -1,0 +1,128 @@
+//! Runtime: load + execute the AOT artifacts via the PJRT C API.
+//!
+//! `Runtime` wraps `xla::PjRtClient` (CPU): it reads
+//! `artifacts/manifest.json`, lazily parses each `*.hlo.txt`
+//! (`HloModuleProto::from_text_file` — HLO *text*, see aot.py), compiles
+//! once per artifact, caches the executable, and validates every call's
+//! literal count against the manifest. All outputs come back as a flat
+//! `Vec<Literal>` in the manifest's output order.
+
+pub mod literal;
+pub mod manifest;
+pub mod params;
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use literal::{lit_scalar_f32, lit_scalar_i32, lit_tensor, lit_tokens, tensor_from_lit};
+pub use manifest::{ArtifactSpec, Manifest, ModelDims};
+pub use params::Params;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// executions performed (perf accounting)
+    pub exec_count: std::sync::atomic::AtomicU64,
+}
+
+impl Runtime {
+    /// Open the artifact directory (compiles lazily on first use).
+    pub fn load(dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir,
+            cache: Mutex::new(HashMap::new()),
+            exec_count: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    pub fn spec(&self, artifact: &str) -> Result<&ArtifactSpec> {
+        self.manifest
+            .artifacts
+            .get(artifact)
+            .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))
+    }
+
+    fn executable(&self, artifact: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(artifact) {
+            return Ok(exe.clone());
+        }
+        let spec = self.spec(artifact)?;
+        let path = self.dir.join(&spec.file);
+        let t = crate::util::Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {artifact}: {e:?}"))?,
+        );
+        crate::info!("compiled {artifact} in {:.1}s", t.secs());
+        self.cache.lock().unwrap().insert(artifact.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Force compilation (startup warmers / perf measurement).
+    pub fn warm(&self, artifact: &str) -> Result<()> {
+        self.executable(artifact).map(|_| ())
+    }
+
+    /// Execute an artifact; inputs must match the manifest order.
+    /// Accepts owned or borrowed literals so callers can cache the big
+    /// parameter literals across many executions (the datagen/eval hot
+    /// path) and append only the per-call inputs.
+    pub fn exec<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        artifact: &str,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let spec = self.spec(artifact)?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "{artifact}: expected {} inputs per manifest, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let exe = self.executable(artifact)?;
+        let bufs = exe
+            .execute::<L>(inputs)
+            .map_err(|e| anyhow!("execute {artifact}: {e:?}"))?;
+        self.exec_count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        // aot.py lowers with return_tuple=True: one tuple result buffer.
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result {artifact}: {e:?}"))?;
+        let outs = lit.to_tuple().map_err(|e| anyhow!("untuple {artifact}: {e:?}"))?;
+        if outs.len() != spec.outputs.len() {
+            return Err(anyhow!(
+                "{artifact}: manifest promises {} outputs, artifact returned {}",
+                spec.outputs.len(),
+                outs.len()
+            ));
+        }
+        Ok(outs)
+    }
+
+    /// Position of an output name in an artifact's result tuple.
+    pub fn out_idx(&self, artifact: &str, output: &str) -> Result<usize> {
+        let spec = self.spec(artifact)?;
+        spec.outputs
+            .iter()
+            .position(|o| o == output)
+            .ok_or_else(|| anyhow!("{artifact} has no output '{output}'"))
+    }
+}

@@ -1,0 +1,199 @@
+//! Model parameter store: named f32 tensors in manifest key order, plus
+//! checkpoint save/load (raw little-endian f32 blobs + JSON sidecar).
+//!
+//! The coordinator owns params host-side between artifact executions;
+//! this is what makes per-seed hardware-noise injection cheap (tensor
+//! transform + execute, no recompilation).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::ModelDims;
+use crate::util::json::Json;
+use crate::util::prng::Pcg64;
+use crate::util::tensor::Tensor;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Params {
+    /// manifest ordering (artifact argument order)
+    pub keys: Vec<String>,
+    pub map: BTreeMap<String, Tensor>,
+}
+
+/// Weight matrices that live on analog tiles (mirror of
+/// model.ANALOG_WEIGHT_KEYS; `emb` doubles as the tied head tile).
+pub const ANALOG_WEIGHT_KEYS: &[&str] = &["wq", "wk", "wv", "wo", "wg", "wu", "wd"];
+
+impl Params {
+    /// Zero-initialised parameter set with the manifest's shapes
+    /// (optimizer state m/v starts here).
+    pub fn zeros(dims: &ModelDims) -> Params {
+        let mut map = BTreeMap::new();
+        for k in &dims.param_keys {
+            map.insert(k.clone(), Tensor::zeros(dims.param_shapes[k].clone()));
+        }
+        Params { keys: dims.param_keys.clone(), map }
+    }
+
+    /// Random init mirroring model.init_params (scale 0.02 normals for
+    /// weights, ones for norms, 3.0 for input ranges). Used for teacher
+    /// bootstrap when no checkpoint exists.
+    pub fn init(dims: &ModelDims, seed: u64) -> Params {
+        let mut rng = Pcg64::with_stream(seed, 0x11);
+        let mut map = BTreeMap::new();
+        for k in &dims.param_keys {
+            let shape = dims.param_shapes[k].clone();
+            let n: usize = shape.iter().product();
+            let t = match k.as_str() {
+                "ln_f" | "ln1" | "ln2" => Tensor::full(shape, 1.0),
+                "betas" | "beta_head" => Tensor::full(shape, 3.0),
+                "cls_b" => Tensor::zeros(shape),
+                _ => {
+                    let mut data = vec![0.0f32; n];
+                    rng.fill_normal(&mut data);
+                    for v in data.iter_mut() {
+                        *v *= 0.02;
+                    }
+                    Tensor::new(shape, data)
+                }
+            };
+            map.insert(k.clone(), t);
+        }
+        Params { keys: dims.param_keys.clone(), map }
+    }
+
+    pub fn get(&self, k: &str) -> &Tensor {
+        &self.map[k]
+    }
+
+    pub fn get_mut(&mut self, k: &str) -> &mut Tensor {
+        self.map.get_mut(k).unwrap()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.map.values().map(Tensor::len).sum()
+    }
+
+    /// Literals in artifact argument order.
+    pub fn to_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.keys
+            .iter()
+            .map(|k| super::literal::lit_tensor(&self.map[k]))
+            .collect()
+    }
+
+    /// Rebuild from a slice of output literals (artifact outputs carry
+    /// params in key order starting at `offset`).
+    pub fn from_literals(
+        keys: &[String],
+        lits: &[xla::Literal],
+        offset: usize,
+    ) -> Result<Params> {
+        let mut map = BTreeMap::new();
+        for (i, k) in keys.iter().enumerate() {
+            map.insert(k.clone(), super::literal::tensor_from_lit(&lits[offset + i])?);
+        }
+        Ok(Params { keys: keys.to_vec(), map })
+    }
+
+    // ------------------------------------------------------- checkpoints
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut meta = Vec::new();
+        for k in &self.keys {
+            let t = &self.map[k];
+            let mut f = std::fs::File::create(dir.join(format!("{k}.f32")))?;
+            let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+            f.write_all(&bytes)?;
+            meta.push((
+                k.as_str(),
+                Json::Arr(t.shape.iter().map(|&d| Json::num(d as f64)).collect()),
+            ));
+        }
+        std::fs::write(dir.join("params.json"), Json::obj(meta).to_string())?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> Result<Params> {
+        let meta_text = std::fs::read_to_string(dir.join("params.json"))
+            .with_context(|| format!("no checkpoint at {dir:?}"))?;
+        let meta = Json::parse(&meta_text).map_err(|e| anyhow!("{e}"))?;
+        let obj = meta.as_obj().ok_or_else(|| anyhow!("bad params.json"))?;
+        // key order: not stored in the json (BTreeMap); recover from the
+        // sidecar order file if present, else sorted (stable for loading
+        // into artifacts only via Manifest ordering downstream).
+        let mut map = BTreeMap::new();
+        for (k, shape) in obj {
+            let shape = shape.usize_vec();
+            let mut bytes = Vec::new();
+            std::fs::File::open(dir.join(format!("{k}.f32")))?.read_to_end(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            map.insert(k.clone(), Tensor::new(shape, data));
+        }
+        Ok(Params { keys: obj.keys().cloned().collect(), map })
+    }
+
+    /// Reorder keys to the manifest's artifact argument order.
+    pub fn align_to(&mut self, dims: &ModelDims) {
+        self.keys = dims.param_keys.clone();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        let mut param_shapes = BTreeMap::new();
+        param_shapes.insert("emb".into(), vec![8, 4]);
+        param_shapes.insert("ln_f".into(), vec![4]);
+        param_shapes.insert("betas".into(), vec![2, 7]);
+        ModelDims {
+            d_model: 4,
+            n_layers: 2,
+            n_heads: 1,
+            d_ff: 8,
+            seq_len: 16,
+            vocab: 8,
+            n_cls: 0,
+            n_params: 32 + 4 + 14,
+            param_keys: vec!["emb".into(), "ln_f".into(), "betas".into()],
+            param_shapes,
+        }
+    }
+
+    #[test]
+    fn init_respects_kinds() {
+        let p = Params::init(&dims(), 3);
+        assert!(p.get("ln_f").data.iter().all(|&v| v == 1.0));
+        assert!(p.get("betas").data.iter().all(|&v| v == 3.0));
+        assert!(p.get("emb").data.iter().any(|&v| v != 0.0));
+        assert!(p.get("emb").abs_max() < 0.2);
+        assert_eq!(p.n_params(), 32 + 4 + 14);
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        assert_eq!(Params::init(&dims(), 5), Params::init(&dims(), 5));
+        assert_ne!(Params::init(&dims(), 5), Params::init(&dims(), 6));
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_is_byte_exact() {
+        let dir = std::env::temp_dir().join("afm_test_ckpt");
+        std::fs::remove_dir_all(&dir).ok();
+        let p = Params::init(&dims(), 7);
+        p.save(&dir).unwrap();
+        let mut q = Params::load(&dir).unwrap();
+        q.align_to(&dims());
+        assert_eq!(p, q);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

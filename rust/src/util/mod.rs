@@ -1,0 +1,62 @@
+//! Shared substrates: PRNG, JSON, tensors, statistics, property testing,
+//! logging. All built in-repo (the offline environment vendors no
+//! general-purpose crates); see DESIGN.md §1 for the substitution table.
+
+pub mod json;
+pub mod prng;
+pub mod quickcheck;
+pub mod stats;
+pub mod tensor;
+
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+static QUIET: AtomicBool = AtomicBool::new(false);
+
+/// Suppress info logging (benches use this to keep tables clean).
+pub fn set_quiet(q: bool) {
+    QUIET.store(q, Ordering::Relaxed);
+}
+
+pub fn quiet() -> bool {
+    QUIET.load(Ordering::Relaxed)
+}
+
+/// Timestamped info line to stderr.
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {{
+        if !$crate::util::quiet() {
+            eprintln!("[afm] {}", format!($($arg)*));
+        }
+    }};
+}
+
+/// Wall-clock timer for §Perf measurements.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Append one JSON line to a metrics file (JSONL stream).
+pub fn append_jsonl(path: &std::path::Path, line: &json::Json) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    writeln!(f, "{}", line.to_string())
+}

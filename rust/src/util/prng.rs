@@ -1,0 +1,275 @@
+//! Deterministic, seedable PRNG substrate (no `rand` crate offline).
+//!
+//! PCG64 (PCG-XSL-RR 128/64) core with helpers for the distributions the
+//! coordinator needs: uniforms, standard normals (Box–Muller with spare
+//! caching), categorical / top-k sampling over logits, and permutations.
+//! Every stochastic component of the system (data generation, noise
+//! engines, evaluation seeds) derives from this type, which makes whole
+//! pipeline runs reproducible from a single u64 seed.
+
+/// PCG-XSL-RR 128/64 generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    /// cached second Box–Muller variate
+    spare_normal: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360ed051fc65da44385df649fccf645;
+
+impl Pcg64 {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    /// Independent stream for the same seed (used to decorrelate e.g.
+    /// the noise engine from the sampler at equal seeds).
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut g = Pcg64 {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+            spare_normal: None,
+        };
+        g.state = g.state.wrapping_mul(PCG_MULT).wrapping_add(g.inc);
+        g.state = g.state.wrapping_add(seed as u128);
+        g.state = g.state.wrapping_mul(PCG_MULT).wrapping_add(g.inc);
+        g
+    }
+
+    /// Derive a child generator (hash-fold, jax.random.fold_in-style).
+    pub fn fold_in(&self, data: u64) -> Pcg64 {
+        // mix the current state with `data` through splitmix64
+        let mut z = (self.state as u64) ^ data.wrapping_mul(0x9e3779b97f4a7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        Pcg64::with_stream(z ^ (z >> 31), data.wrapping_add(1))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn uniform_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform() as f32
+    }
+
+    /// Uniform integer in [0, n). Debiased via rejection.
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        let n = n as u64;
+        let zone = u64::MAX - (u64::MAX % n);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return (v % n) as usize;
+            }
+        }
+    }
+
+    /// Standard normal (Box–Muller, caches the spare).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(s) = self.spare_normal.take() {
+            return s;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let th = 2.0 * std::f64::consts::PI * u2;
+            self.spare_normal = Some(r * th.sin());
+            return r * th.cos();
+        }
+    }
+
+    #[inline]
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Fill a slice with standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.normal_f32();
+        }
+    }
+
+    /// Sample an index from a softmax distribution over `logits` with
+    /// `temperature`, restricted to the `top_k` highest logits
+    /// (top_k = 0 or >= len means no restriction). This is the paper's
+    /// synthetic-data sampler (appendix B.1: top-50 for Llama, full
+    /// softmax for Phi-3).
+    pub fn sample_logits(&mut self, logits: &[f32], temperature: f32, top_k: usize) -> usize {
+        assert!(!logits.is_empty());
+        let k = if top_k == 0 || top_k >= logits.len() {
+            logits.len()
+        } else {
+            top_k
+        };
+        // indices of the k largest logits
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        if k < logits.len() {
+            idx.select_nth_unstable_by(k - 1, |&a, &b| {
+                logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            idx.truncate(k);
+        }
+        let t = temperature.max(1e-6);
+        let max = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+        let mut probs: Vec<f64> = idx
+            .iter()
+            .map(|&i| (((logits[i] - max) / t) as f64).exp())
+            .collect();
+        let sum: f64 = probs.iter().sum();
+        for p in probs.iter_mut() {
+            *p /= sum;
+        }
+        let mut u = self.uniform();
+        for (j, p) in probs.iter().enumerate() {
+            if u < *p {
+                return idx[j];
+            }
+            u -= *p;
+        }
+        idx[probs.len() - 1]
+    }
+
+    /// Argmax (greedy decoding).
+    pub fn greedy(logits: &[f32]) -> usize {
+        let mut best = 0;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.below(i + 1);
+            v.swap(i, j);
+        }
+    }
+
+    /// Choose one element uniformly.
+    pub fn choose<'a, T>(&mut self, v: &'a [T]) -> &'a T {
+        &v[self.below(v.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn fold_in_decorrelates() {
+        let g = Pcg64::new(7);
+        let mut a = g.fold_in(0);
+        let mut b = g.fold_in(1);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut g = Pcg64::new(3);
+        for _ in 0..10_000 {
+            let u = g.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut g = Pcg64::new(4);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[g.below(7)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut g = Pcg64::new(5);
+        let n = 100_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = g.normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn sample_logits_respects_top_k() {
+        let mut g = Pcg64::new(6);
+        let logits = vec![0.0, 5.0, 4.0, -2.0, 3.0];
+        for _ in 0..200 {
+            let s = g.sample_logits(&logits, 1.0, 2);
+            assert!(s == 1 || s == 2, "sampled {s} outside top-2");
+        }
+    }
+
+    #[test]
+    fn sample_logits_tracks_distribution() {
+        let mut g = Pcg64::new(8);
+        let logits = vec![0.0, (4.0f32).ln()]; // p = [0.2, 0.8]
+        let hits = (0..50_000).filter(|_| g.sample_logits(&logits, 1.0, 0) == 1).count();
+        let p = hits as f64 / 50_000.0;
+        assert!((p - 0.8).abs() < 0.01, "p={p}");
+    }
+
+    #[test]
+    fn greedy_picks_argmax() {
+        assert_eq!(Pcg64::greedy(&[0.1, 0.9, 0.5]), 1);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut g = Pcg64::new(9);
+        let mut v: Vec<usize> = (0..100).collect();
+        g.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

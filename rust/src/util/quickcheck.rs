@@ -1,0 +1,110 @@
+//! Mini property-testing harness (no proptest offline).
+//!
+//! `check(name, cases, |g| { ... })` runs a property closure against
+//! `cases` independently-seeded `Gen`s; on failure it reports the seed
+//! so the case replays deterministically (`Gen::replay(seed)`), which is
+//! the shrinking story at this scale: a failing property is a one-seed
+//! reproduction. Used for the coordinator invariants listed in
+//! DESIGN.md §4.
+
+use super::prng::Pcg64;
+
+/// Generator handed to property closures: a seeded PRNG plus sizing
+/// helpers for typical inputs.
+pub struct Gen {
+    pub rng: Pcg64,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn replay(seed: u64) -> Gen {
+        Gen { rng: Pcg64::new(seed), seed }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_range(lo, hi)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.rng.uniform_range(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: usize) -> Vec<f32> {
+        let mut v = vec![0.0; len];
+        self.rng.fill_normal(&mut v);
+        v
+    }
+
+    pub fn ascii_string(&mut self, max_len: usize) -> String {
+        let len = self.rng.below(max_len + 1);
+        (0..len)
+            .map(|_| (32 + self.rng.below(95)) as u8 as char)
+            .collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+}
+
+/// Run `prop` for `cases` generated inputs; panics with the failing seed
+/// on the first violation (assert inside the closure).
+pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen)) {
+    for i in 0..cases {
+        // decorrelated but deterministic per (name, i)
+        let seed = name
+            .bytes()
+            .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+            .wrapping_add(i.wrapping_mul(0x9e3779b97f4a7c15));
+        let mut g = Gen::replay(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            eprintln!("property '{name}' FAILED at case {i} (replay seed {seed})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check("counts", 25, |_| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 50, |g| {
+            let x = g.usize_in(3, 9);
+            assert!((3..=9).contains(&x));
+            let f = g.f32_in(-1.0, 2.0);
+            assert!((-1.0..2.0).contains(&f));
+            let s = g.ascii_string(12);
+            assert!(s.len() <= 12);
+            assert!(s.chars().all(|c| (' '..='~').contains(&c)));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        check("fails", 10, |g| {
+            assert!(g.usize_in(0, 4) < 4); // will eventually draw 4
+        });
+    }
+
+    #[test]
+    fn replay_reproduces() {
+        let mut a = Gen::replay(99);
+        let mut b = Gen::replay(99);
+        assert_eq!(a.vec_f32(8, 0.0, 1.0), b.vec_f32(8, 0.0, 1.0));
+    }
+}

@@ -1,0 +1,168 @@
+//! Small numerical/statistics substrate used across the coordinator:
+//! mean/std aggregation for repeated-seed evaluations, softmax/logsumexp
+//! for sampling, kurtosis and KL-to-uniform for the fig. 6 weight-
+//! distribution analysis, and simple histogramming.
+
+/// Mean of a slice; 0 for empty input.
+pub fn mean(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.iter().sum::<f64>() / v.len() as f64
+}
+
+/// Population standard deviation (ddof = 0).
+pub fn std(v: &[f64]) -> f64 {
+    if v.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(v);
+    (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64).sqrt()
+}
+
+/// mean ± std over repeated-seed results, formatted paper-style.
+pub fn mean_std_str(v: &[f64]) -> String {
+    if v.len() <= 1 {
+        format!("{:.2}", mean(v))
+    } else {
+        format!("{:.2} ±{:.2}", mean(v), std(v))
+    }
+}
+
+/// Numerically-stable log-sum-exp.
+pub fn logsumexp(v: &[f32]) -> f32 {
+    let m = v.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return m;
+    }
+    m + v.iter().map(|x| (x - m).exp()).sum::<f32>().ln()
+}
+
+/// In-place softmax.
+pub fn softmax(v: &mut [f32]) {
+    let lse = logsumexp(v);
+    for x in v.iter_mut() {
+        *x = (*x - lse).exp();
+    }
+}
+
+/// Excess kurtosis (Fisher). Uniform ≈ -1.2, normal ≈ 0. Used as the
+/// fig. 6 proxy for weight-distribution shape under iterative clipping.
+pub fn kurtosis(v: &[f32]) -> f64 {
+    let n = v.len() as f64;
+    if n < 4.0 {
+        return 0.0;
+    }
+    let m = v.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let m2 = v.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / n;
+    let m4 = v.iter().map(|&x| (x as f64 - m).powi(4)).sum::<f64>() / n;
+    if m2 <= 0.0 {
+        return 0.0;
+    }
+    m4 / (m2 * m2) - 3.0
+}
+
+/// KL divergence from the empirical distribution of `v` (histogrammed
+/// over its support) to the uniform distribution on the same support —
+/// the other fig. 6 statistic.
+pub fn kl_to_uniform(v: &[f32], bins: usize) -> f64 {
+    if v.is_empty() || bins == 0 {
+        return 0.0;
+    }
+    let lo = v.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
+    let hi = v.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    if hi <= lo {
+        return 0.0;
+    }
+    let mut hist = vec![0usize; bins];
+    for &x in v {
+        let t = ((x as f64 - lo) / (hi - lo) * bins as f64) as usize;
+        hist[t.min(bins - 1)] += 1;
+    }
+    let n = v.len() as f64;
+    let u = 1.0 / bins as f64;
+    hist.iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / n;
+            p * (p / u).ln()
+        })
+        .sum()
+}
+
+/// Histogram of `v` into `bins` equal-width buckets over [lo, hi].
+pub fn histogram(v: &[f32], lo: f32, hi: f32, bins: usize) -> Vec<usize> {
+    let mut hist = vec![0usize; bins];
+    let w = (hi - lo) / bins as f32;
+    for &x in v {
+        if x < lo || x > hi {
+            continue;
+        }
+        let b = (((x - lo) / w) as usize).min(bins - 1);
+        hist[b] += 1;
+    }
+    hist
+}
+
+/// argmax over a slice of f32; first index wins ties.
+pub fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let v = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&v) - 5.0).abs() < 1e-12);
+        assert!((std(&v) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut v = vec![1.0f32, 2.0, 3.0, -100.0];
+        softmax(&mut v);
+        assert!((v.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(v[2] > v[1] && v[1] > v[0]);
+    }
+
+    #[test]
+    fn logsumexp_stable_for_large_inputs() {
+        let v = vec![1000.0f32, 1000.0];
+        let l = logsumexp(&v);
+        assert!((l - (1000.0 + (2.0f32).ln())).abs() < 1e-3);
+    }
+
+    #[test]
+    fn kurtosis_separates_uniform_from_normal() {
+        // deterministic pseudo-samples
+        let mut g = crate::util::prng::Pcg64::new(0);
+        let unif: Vec<f32> = (0..20_000).map(|_| g.uniform_range(-1.0, 1.0)).collect();
+        let norm: Vec<f32> = (0..20_000).map(|_| g.normal_f32()).collect();
+        assert!(kurtosis(&unif) < -1.0, "{}", kurtosis(&unif));
+        assert!(kurtosis(&norm).abs() < 0.2, "{}", kurtosis(&norm));
+    }
+
+    #[test]
+    fn kl_to_uniform_smaller_for_uniform_data() {
+        let mut g = crate::util::prng::Pcg64::new(1);
+        let unif: Vec<f32> = (0..20_000).map(|_| g.uniform_range(-1.0, 1.0)).collect();
+        let norm: Vec<f32> = (0..20_000).map(|_| g.normal_f32()).collect();
+        assert!(kl_to_uniform(&unif, 64) < kl_to_uniform(&norm, 64));
+    }
+
+    #[test]
+    fn histogram_counts_everything_in_range() {
+        let v = vec![0.0f32, 0.5, 1.0, 2.0];
+        let h = histogram(&v, 0.0, 1.0, 2);
+        assert_eq!(h.iter().sum::<usize>(), 3); // 2.0 out of range
+    }
+}

@@ -1,0 +1,175 @@
+//! Host-side f32 tensor: the coordinator's representation of model
+//! parameters and activations between PJRT executions.
+//!
+//! Deliberately minimal — shape + contiguous Vec<f32> — because all
+//! heavy math happens inside the AOT artifacts; the rust side only
+//! reshapes, slices columns, and applies elementwise transforms (noise
+//! injection, RTN) where the per-seed loop makes host application the
+//! right place.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs data len {}",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Leading dimensions collapsed: (.., K, N) viewed as matrices of
+    /// (K, N); returns (n_matrices, k, n).
+    pub fn as_matrix_stack(&self) -> (usize, usize, usize) {
+        assert!(self.rank() >= 2, "need rank>=2, got {:?}", self.shape);
+        let n = self.shape[self.rank() - 1];
+        let k = self.shape[self.rank() - 2];
+        let stack: usize = self.shape[..self.rank() - 2].iter().product();
+        (stack.max(1), k, n)
+    }
+
+    /// Apply `f(column_slice)` to every column (last-axis index) of every
+    /// (K, N) matrix in the stack. Columns are strided views, so `f`
+    /// receives gathered copies and writes back — the per-channel
+    /// operations (PCM noise, gaussian noise, RTN) all use this.
+    pub fn map_columns(&mut self, mut f: impl FnMut(&mut [f32])) {
+        let (stack, k, n) = self.as_matrix_stack();
+        let mut col = vec![0.0f32; k];
+        for s in 0..stack {
+            let base = s * k * n;
+            for j in 0..n {
+                for i in 0..k {
+                    col[i] = self.data[base + i * n + j];
+                }
+                f(&mut col);
+                for i in 0..k {
+                    self.data[base + i * n + j] = col[i];
+                }
+            }
+        }
+    }
+
+    /// Apply `f(row_slice)` to every row (second-to-last-axis index).
+    /// Rows are contiguous, so this is the cheap orientation; used for
+    /// the tied embedding whose analog channels are vocabulary rows.
+    pub fn map_rows(&mut self, mut f: impl FnMut(&mut [f32])) {
+        let (stack, k, n) = self.as_matrix_stack();
+        for s in 0..stack {
+            let base = s * k * n;
+            for i in 0..k {
+                f(&mut self.data[base + i * n..base + (i + 1) * n]);
+            }
+        }
+    }
+
+    /// Max |x| per column of every matrix in the stack.
+    pub fn col_abs_max(&self) -> Vec<f32> {
+        let (stack, k, n) = self.as_matrix_stack();
+        let mut out = vec![0.0f32; stack * n];
+        for s in 0..stack {
+            let base = s * k * n;
+            for i in 0..k {
+                for j in 0..n {
+                    let v = self.data[base + i * n + j].abs();
+                    let o = &mut out[s * n + j];
+                    if v > *o {
+                        *o = v;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Global max |x|.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Row `i` of a rank-2 tensor as a slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.rank(), 2);
+        let n = self.shape[1];
+        &self.data[i * n..(i + 1) * n]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_checks_shape() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_shape_panics() {
+        Tensor::new(vec![2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn map_columns_visits_each_column_once() {
+        // 2-stack of 2x2 matrices
+        let mut t = Tensor::new(vec![2, 2, 2], (0..8).map(|x| x as f32).collect());
+        let mut count = 0;
+        t.map_columns(|col| {
+            count += 1;
+            for v in col.iter_mut() {
+                *v += 100.0;
+            }
+        });
+        assert_eq!(count, 4); // 2 stacks x 2 columns
+        assert_eq!(t.data, (0..8).map(|x| x as f32 + 100.0).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn col_abs_max_matches_manual() {
+        let t = Tensor::new(vec![2, 2], vec![1., -5., 3., 2.]);
+        assert_eq!(t.col_abs_max(), vec![3., 5.]);
+    }
+
+    #[test]
+    fn map_columns_column_orientation() {
+        // columns are last-axis indexed: col j = [m[0][j], m[1][j]]
+        let mut t = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let mut cols = vec![];
+        t.map_columns(|c| cols.push(c.to_vec()));
+        assert_eq!(cols, vec![vec![1., 3.], vec![2., 4.]]);
+    }
+}

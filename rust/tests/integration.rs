@@ -1,0 +1,320 @@
+//! Integration tests: rust coordinator against the real AOT artifacts.
+//!
+//! These need `make artifacts` to have run (the Makefile `test` target
+//! guarantees it). One shared PJRT runtime and parameter set keep the
+//! suite fast; artifacts compile lazily on first use per test binary.
+
+use std::sync::OnceLock;
+
+use afm::config::HwConfig;
+use afm::coordinator::evaluate::{Evaluator, ModelUnderTest};
+use afm::coordinator::generate::{GenEngine, GenRequest, SamplePolicy};
+use afm::coordinator::noise::{self, NoiseModel};
+use afm::coordinator::quant;
+use afm::coordinator::trainer::{TrainMode, Trainer};
+use afm::data::tasks::build_task;
+use afm::data::tokenizer::EOS;
+use afm::data::{Tokenizer, World, WorldCorpus};
+use afm::runtime::{lit_scalar_f32, lit_scalar_i32, lit_tokens, tensor_from_lit, Params, Runtime};
+use afm::util::prng::Pcg64;
+
+const MODEL: &str = "nano";
+
+/// The xla crate's client holds `Rc`s, so `Runtime` is not Sync. Tests
+/// run with RUST_TEST_THREADS=1 (set via .cargo/config.toml [env]) so a
+/// single shared runtime is only ever touched from one thread; the
+/// wrapper just tells the compiler that.
+struct SyncRuntime(Runtime);
+unsafe impl Send for SyncRuntime {}
+unsafe impl Sync for SyncRuntime {}
+
+fn rt() -> &'static Runtime {
+    static RT: OnceLock<SyncRuntime> = OnceLock::new();
+    &RT.get_or_init(|| {
+        assert_eq!(
+            std::env::var("RUST_TEST_THREADS").as_deref(),
+            Ok("1"),
+            "integration tests must run single-threaded (see .cargo/config.toml)"
+        );
+        afm::util::set_quiet(true);
+        SyncRuntime(Runtime::load("artifacts").expect("run `make artifacts` first"))
+    })
+    .0
+}
+
+fn params() -> &'static Params {
+    static P: OnceLock<Params> = OnceLock::new();
+    P.get_or_init(|| Params::init(rt().manifest.dims(MODEL).unwrap(), 42))
+}
+
+fn exec_fwd(p: &Params, hw: &HwConfig, tokens: &[i32]) -> afm::util::tensor::Tensor {
+    let rt = rt();
+    let dims = rt.manifest.dims(MODEL).unwrap();
+    let (b, t) = (rt.manifest.batch_eval, dims.seq_len);
+    assert_eq!(tokens.len(), b * t);
+    let mut inputs = p.to_literals().unwrap();
+    inputs.push(lit_tokens(tokens, &[b, t]).unwrap());
+    for &x in &hw.to_scalars() {
+        inputs.push(lit_scalar_f32(x));
+    }
+    inputs.push(lit_scalar_i32(0));
+    let outs = rt.exec(&format!("{MODEL}_lm_fwd"), &inputs).unwrap();
+    tensor_from_lit(&outs[0]).unwrap()
+}
+
+fn demo_tokens() -> Vec<i32> {
+    let rt = rt();
+    let dims = rt.manifest.dims(MODEL).unwrap();
+    let mut corpus = WorldCorpus::new(World::new(1), 2);
+    corpus.next_batch(rt.manifest.batch_eval, dims.seq_len)
+}
+
+// ---------------------------------------------------------------- runtime
+
+#[test]
+fn manifest_lists_every_lm_artifact() {
+    let m = &rt().manifest;
+    for suffix in [
+        "lm_fwd", "lm_fwd_rot", "lm_loss", "lm_sample", "lm_sample_rot", "ce_grads",
+        "hwa_grads", "adamw_update", "rtn_quant", "spinquant_quant",
+    ] {
+        assert!(
+            m.artifacts.contains_key(&format!("{MODEL}_{suffix}")),
+            "missing {MODEL}_{suffix}"
+        );
+    }
+    assert_eq!(m.vocab, Tokenizer::vocab());
+}
+
+#[test]
+fn fwd_shapes_and_determinism() {
+    let toks = demo_tokens();
+    let a = exec_fwd(params(), &HwConfig::off(), &toks);
+    let dims = rt().manifest.dims(MODEL).unwrap();
+    assert_eq!(a.shape, vec![rt().manifest.batch_eval, dims.seq_len, dims.vocab]);
+    let b = exec_fwd(params(), &HwConfig::off(), &toks);
+    assert_eq!(a.data, b.data, "digital forward must be deterministic");
+    assert!(a.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn input_count_is_validated() {
+    let err = match rt().exec(&format!("{MODEL}_lm_fwd"), &[lit_scalar_f32(1.0)]) {
+        Err(e) => e,
+        Ok(_) => panic!("expected an input-count error"),
+    };
+    assert!(err.to_string().contains("expected"));
+}
+
+#[test]
+fn quantized_forward_differs_but_tracks_fp() {
+    let toks = demo_tokens();
+    let fp = exec_fwd(params(), &HwConfig::off(), &toks);
+    let q = exec_fwd(params(), &HwConfig::afm_train(0.0), &toks);
+    assert_ne!(fp.data, q.data);
+    let num: f32 = fp.data.iter().zip(&q.data).map(|(a, b)| (a - b) * (a - b)).sum();
+    let den: f32 = fp.data.iter().map(|a| a * a).sum();
+    assert!((num / den).sqrt() < 0.5, "SI8-O8 should be a small perturbation");
+}
+
+// ---------------------------------------------------------------- noise
+
+#[test]
+fn host_noise_perturbs_artifact_output() {
+    let toks = demo_tokens();
+    let clean = exec_fwd(params(), &HwConfig::off(), &toks);
+    let noisy_p = noise::apply(params(), &NoiseModel::Pcm, 5);
+    let noisy = exec_fwd(&noisy_p, &HwConfig::off(), &toks);
+    assert_ne!(clean.data, noisy.data);
+    // same seed -> identical simulated chip
+    let noisy_p2 = noise::apply(params(), &NoiseModel::Pcm, 5);
+    let noisy2 = exec_fwd(&noisy_p2, &HwConfig::off(), &toks);
+    assert_eq!(noisy.data, noisy2.data);
+}
+
+// ---------------------------------------------------------------- quant
+
+#[test]
+fn rtn_artifact_matches_host_mirror() {
+    // L1-kernel RTN inside the artifact == the rust host mirror,
+    // column by column (cross-layer numerical contract).
+    let q = quant::rtn(rt(), MODEL, params(), 4).unwrap();
+    let mut host = params().get("wq").clone();
+    host.map_columns(|col| quant::rtn_channel(col, 4));
+    let art = q.get("wq");
+    for (a, b) in art.data.iter().zip(&host.data) {
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+    // non-tile params untouched
+    assert_eq!(q.get("ln_f"), params().get("ln_f"));
+}
+
+#[test]
+fn spinquant_high_bits_matches_fp_forward() {
+    // With 8-bit RTN the rotated model must track the FP model closely.
+    let toks = demo_tokens();
+    let spin = quant::spinquant(rt(), MODEL, params(), 8).unwrap();
+    let fp = exec_fwd(params(), &HwConfig::off(), &toks);
+    let mut inputs = spin.to_literals().unwrap();
+    let dims = rt().manifest.dims(MODEL).unwrap();
+    inputs.push(lit_tokens(&toks, &[rt().manifest.batch_eval, dims.seq_len]).unwrap());
+    for &x in &HwConfig::off().to_scalars() {
+        inputs.push(lit_scalar_f32(x));
+    }
+    inputs.push(lit_scalar_i32(0));
+    let outs = rt().exec(&format!("{MODEL}_lm_fwd_rot"), &inputs).unwrap();
+    let rot = tensor_from_lit(&outs[0]).unwrap();
+    let num: f32 = fp.data.iter().zip(&rot.data).map(|(a, b)| (a - b) * (a - b)).sum();
+    let den: f32 = fp.data.iter().map(|a| a * a).sum();
+    assert!((num / den).sqrt() < 0.2, "rotation must be ~FP-equivalent at W8");
+}
+
+// ---------------------------------------------------------------- trainer
+
+#[test]
+fn pretraining_reduces_loss_and_is_resumable() {
+    let rt = rt();
+    let cfg = afm::config::TrainConfig {
+        steps: 6,
+        accum: 2,
+        lr: 3e-3,
+        alpha_clip: -1.0,
+        hw: HwConfig::off(),
+        init_steps: 0.0,
+        beta_decay: 0.0,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(rt, MODEL, cfg);
+    let dir = std::env::temp_dir().join("afm_it_ckpt");
+    std::fs::remove_dir_all(&dir).ok();
+    trainer.ckpt_dir = Some(dir.clone());
+    let mut corpus = WorldCorpus::new(World::new(3), 4);
+    let out = trainer
+        .train(TrainMode::Ce, Params::init(rt.manifest.dims(MODEL).unwrap(), 1), None, &mut corpus)
+        .unwrap();
+    assert_eq!(out.losses.len(), 6);
+    assert!(out.losses.iter().all(|l| l.is_finite()));
+    assert!(out.losses[5] < out.losses[0], "{:?}", out.losses);
+    // checkpoint written and byte-identical on reload
+    let mut re = Params::load(&dir).unwrap();
+    re.align_to(rt.manifest.dims(MODEL).unwrap());
+    assert_eq!(re, out.params);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn microbatch_grads_are_deterministic_and_accumulate() {
+    // same (params, tokens, seed) -> same grads; the accumulation
+    // invariant mean(g, g) == g then holds exactly.
+    let rt = rt();
+    let dims = rt.manifest.dims(MODEL).unwrap();
+    let (b, t) = (rt.manifest.batch_train, dims.seq_len);
+    let mut corpus = WorldCorpus::new(World::new(5), 6);
+    let toks = corpus.next_batch(b, t);
+    let run = || {
+        let mut inputs = params().to_literals().unwrap();
+        inputs.push(lit_tokens(&toks, &[b, t]).unwrap());
+        for &x in &HwConfig::off().to_scalars() {
+            inputs.push(lit_scalar_f32(x));
+        }
+        inputs.push(lit_scalar_i32(7));
+        let outs = rt.exec(&format!("{MODEL}_ce_grads"), &inputs).unwrap();
+        tensor_from_lit(&outs[1]).unwrap() // g_emb
+    };
+    let g1 = run();
+    let g2 = run();
+    assert_eq!(g1.data, g2.data);
+}
+
+// ---------------------------------------------------------------- engine
+
+#[test]
+fn generation_is_greedy_deterministic_and_bounded() {
+    let mut engine = GenEngine::new(rt(), MODEL, false).unwrap();
+    let lits = params().to_literals().unwrap();
+    let hw = HwConfig::off().to_scalars();
+    let reqs: Vec<GenRequest> = (0..3)
+        .map(|i| GenRequest::from_text(&format!("Q: test {i}"), 10, SamplePolicy::greedy()))
+        .collect();
+    let mut rng = Pcg64::new(1);
+    let a = engine.run(&lits, &hw, &reqs, &mut rng).unwrap();
+    let mut rng = Pcg64::new(99); // rng must not matter for greedy
+    let b = engine.run(&lits, &hw, &reqs, &mut rng).unwrap();
+    assert_eq!(a, b);
+    for out in &a {
+        assert!(out.len() <= 10, "max_new exceeded: {}", out.len());
+        assert!(out.iter().all(|&t| t != EOS), "EOS must terminate, not appear");
+    }
+}
+
+#[test]
+fn sampling_respects_seeded_reproducibility() {
+    let mut engine = GenEngine::new(rt(), MODEL, false).unwrap();
+    let lits = params().to_literals().unwrap();
+    let hw = HwConfig::off().to_scalars();
+    let req = vec![GenRequest::from_text("Q:", 12, SamplePolicy::softmax(1.0, 10))];
+    let mut r1 = Pcg64::new(7);
+    let mut r2 = Pcg64::new(7);
+    let a = engine.run(&lits, &hw, &req, &mut r1).unwrap();
+    let b = engine.run(&lits, &hw, &req, &mut r2).unwrap();
+    assert_eq!(a, b);
+    let mut r3 = Pcg64::new(8);
+    let c = engine.run(&lits, &hw, &req, &mut r3).unwrap();
+    assert_ne!(a, c, "different sampling seeds should diverge");
+}
+
+// ---------------------------------------------------------------- eval
+
+#[test]
+fn evaluator_reports_are_bounded_and_repeatable() {
+    let world = World::new(11);
+    let tasks = vec![
+        build_task("mmlu_syn", &world, 32, 3),
+        build_task("boolq_syn", &world, 32, 3),
+    ];
+    let ev = Evaluator::new(rt(), MODEL);
+    let m = ModelUnderTest {
+        label: "it".into(),
+        params: params().clone(),
+        hw: HwConfig::off(),
+        rot: false,
+    };
+    let r1 = ev.evaluate(&m, &NoiseModel::None, &tasks, 1, 77).unwrap();
+    let r2 = ev.evaluate(&m, &NoiseModel::None, &tasks, 1, 77).unwrap();
+    for (name, metrics) in &r1 {
+        for (k, vals) in metrics {
+            for v in vals {
+                assert!((0.0..=100.0).contains(v), "{name}.{k} = {v}");
+            }
+            assert_eq!(vals, &r2[name][k], "clean eval must be deterministic");
+        }
+    }
+}
+
+#[test]
+fn noisy_eval_repeats_over_seeds() {
+    let world = World::new(11);
+    let tasks = vec![build_task("mmlu_syn", &world, 32, 3)];
+    let ev = Evaluator::new(rt(), MODEL);
+    let m = ModelUnderTest {
+        label: "it".into(),
+        params: params().clone(),
+        hw: HwConfig::off(),
+        rot: false,
+    };
+    let rep = ev.evaluate(&m, &NoiseModel::Gaussian { gamma: 0.05 }, &tasks, 4, 78).unwrap();
+    assert_eq!(rep["mmlu_syn"]["acc"].len(), 4);
+}
+
+#[test]
+fn input_range_calibration_sets_positive_betas() {
+    let ev = Evaluator::new(rt(), MODEL);
+    let mut p = params().clone();
+    // zero out the ranges, calibration must repopulate them
+    for v in p.get_mut("betas").data.iter_mut() {
+        *v = 0.0;
+    }
+    ev.calibrate_input_ranges(&mut p, &World::new(1), 6.0, false).unwrap();
+    assert!(p.get("betas").data.iter().all(|&b| b > 0.0));
+    assert!(p.get("beta_head").data.iter().all(|&b| b > 0.0));
+}

@@ -1,0 +1,283 @@
+//! Property tests over the coordinator substrates (DESIGN.md §4),
+//! using the in-repo quickcheck harness (seeded generators; failures
+//! report a replay seed). No PJRT needed — these are pure-host
+//! invariants, so they run fast and first.
+
+use afm::coordinator::noise::{self, pcm_sigma_frac, NoiseModel};
+use afm::coordinator::quant::rtn_channel;
+use afm::data::corpus::{pack_documents, Shard};
+use afm::data::tasks::{build_task, extract_first_word, extract_hash_answer, Scoring};
+use afm::data::tokenizer::{Tokenizer, BOS, EOS, PAD};
+use afm::data::World;
+use afm::runtime::manifest::ModelDims;
+use afm::runtime::Params;
+use afm::util::json::Json;
+use afm::util::prng::Pcg64;
+use afm::util::quickcheck::{check, Gen};
+use afm::util::stats;
+use afm::util::tensor::Tensor;
+use std::collections::BTreeMap;
+
+// ---------------------------------------------------------------- tokenizer
+
+#[test]
+fn prop_tokenizer_roundtrip_all_printable() {
+    check("tok-roundtrip", 300, |g| {
+        let s = g.ascii_string(120);
+        let ids = Tokenizer::encode(&s);
+        assert_eq!(Tokenizer::decode(&ids), s);
+        assert!(ids.iter().all(|&i| (i as usize) < Tokenizer::vocab()));
+        assert!(ids.iter().all(|&i| i != PAD && i != BOS && i != EOS));
+    });
+}
+
+// ---------------------------------------------------------------- prng
+
+#[test]
+fn prop_top_k_sampling_stays_in_top_k() {
+    check("topk-in-topk", 100, |g| {
+        let n = g.usize_in(2, 60);
+        let k = g.usize_in(1, n);
+        let logits = g.vec_normal(n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        let allowed: std::collections::HashSet<usize> = idx[..k].iter().cloned().collect();
+        let mut rng = Pcg64::new(g.seed);
+        for _ in 0..20 {
+            let s = rng.sample_logits(&logits, 1.0, k);
+            // ties at the k-boundary may admit equal-logit indices
+            let min_allowed = logits[idx[k - 1]];
+            assert!(allowed.contains(&s) || logits[s] >= min_allowed);
+        }
+    });
+}
+
+#[test]
+fn prop_greedy_is_mode_of_low_temperature() {
+    check("greedy-low-temp", 50, |g| {
+        let logits = g.vec_normal(16);
+        let greedy = Pcg64::greedy(&logits);
+        let mut rng = Pcg64::new(g.seed);
+        // at temperature -> 0 sampling concentrates on the argmax
+        let hits = (0..50).filter(|_| rng.sample_logits(&logits, 1e-4, 0) == greedy).count();
+        assert!(hits >= 49);
+    });
+}
+
+// ---------------------------------------------------------------- rtn / noise
+
+#[test]
+fn prop_rtn_idempotent() {
+    check("rtn-idempotent", 150, |g| {
+        let len = g.usize_in(1, 48);
+        let mut chan = g.vec_normal(len);
+        rtn_channel(&mut chan, 4);
+        let once = chan.clone();
+        rtn_channel(&mut chan, 4);
+        for (a, b) in once.iter().zip(&chan) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    });
+}
+
+#[test]
+fn prop_pcm_sigma_monotone_in_conductance_and_floored() {
+    check("pcm-sigma", 100, |g| {
+        let a = g.f32_in(0.001, 1.0);
+        let b = (a + g.f32_in(0.0, 1.0 - a)).min(1.0);
+        assert!(pcm_sigma_frac(b) >= pcm_sigma_frac(a) - 1e-6);
+        assert!(pcm_sigma_frac(a) > 0.02); // >2% additive floor
+        assert_eq!(pcm_sigma_frac(0.0), 0.0);
+    });
+}
+
+fn tiny_dims(k: usize, n: usize) -> ModelDims {
+    let mut shapes = BTreeMap::new();
+    shapes.insert("wq".into(), vec![k, n]);
+    shapes.insert("emb".into(), vec![n, k]);
+    shapes.insert("ln_f".into(), vec![k]);
+    ModelDims {
+        d_model: k,
+        n_layers: 1,
+        n_heads: 1,
+        d_ff: n,
+        seq_len: 8,
+        vocab: n,
+        n_cls: 0,
+        n_params: 0,
+        param_keys: vec!["wq".into(), "emb".into(), "ln_f".into()],
+        param_shapes: shapes,
+    }
+}
+
+#[test]
+fn prop_noise_is_unbiased_and_scales() {
+    check("noise-unbiased", 20, |g| {
+        let dims = tiny_dims(g.usize_in(4, 16), g.usize_in(4, 16));
+        let p = Params::init(&dims, g.seed);
+        let gamma = g.f32_in(0.01, 0.1);
+        let mut deltas = Vec::new();
+        for seed in 0..30 {
+            let q = noise::apply(&p, &NoiseModel::Gaussian { gamma }, seed);
+            deltas.extend(
+                p.get("wq").data.iter().zip(&q.get("wq").data).map(|(a, b)| (b - a) as f64),
+            );
+        }
+        let m = stats::mean(&deltas);
+        let s = stats::std(&deltas);
+        assert!(m.abs() < 3.0 * s / (deltas.len() as f64).sqrt() + 1e-4, "biased: {m} vs {s}");
+        // std tracks gamma * E[col max]
+        let cmaxes = p.get("wq").col_abs_max();
+        let expect = gamma as f64 * stats::mean(&cmaxes.iter().map(|&x| x as f64).collect::<Vec<_>>());
+        assert!((s - expect).abs() / expect < 0.25, "std {s} vs {expect}");
+    });
+}
+
+// ---------------------------------------------------------------- tensor
+
+#[test]
+fn prop_map_columns_then_rows_touch_every_element_once() {
+    check("tensor-coverage", 60, |g| {
+        let (s, k, n) = (g.usize_in(1, 3), g.usize_in(1, 8), g.usize_in(1, 8));
+        let mut t = Tensor::zeros(vec![s, k, n]);
+        t.map_columns(|col| col.iter_mut().for_each(|v| *v += 1.0));
+        assert!(t.data.iter().all(|&v| v == 1.0));
+        t.map_rows(|row| row.iter_mut().for_each(|v| *v += 1.0));
+        assert!(t.data.iter().all(|&v| v == 2.0));
+    });
+}
+
+// ---------------------------------------------------------------- shards
+
+#[test]
+fn prop_pack_documents_preserves_content_tokens() {
+    check("pack-preserves", 100, |g| {
+        let n_docs = g.usize_in(1, 6);
+        let docs: Vec<Vec<u32>> = (0..n_docs)
+            .map(|_| (0..g.usize_in(1, 40)).map(|_| 3 + g.rng.below(90) as u32).collect())
+            .collect();
+        let chunk_len = g.usize_in(8, 32);
+        let shard = pack_documents(&docs, chunk_len);
+        assert_eq!(shard.tokens.len() % chunk_len, 0);
+        // every content token survives, in order
+        let flat_in: Vec<u32> = docs.concat();
+        let flat_out: Vec<u32> = shard
+            .tokens
+            .iter()
+            .cloned()
+            .filter(|&t| t != BOS && t != EOS && t != PAD)
+            .collect();
+        assert_eq!(flat_in, flat_out);
+    });
+}
+
+#[test]
+fn prop_shard_roundtrip() {
+    check("shard-roundtrip", 30, |g| {
+        let chunk_len = g.usize_in(4, 32);
+        let n = chunk_len * g.usize_in(1, 5);
+        let shard = Shard {
+            tokens: (0..n).map(|_| g.rng.below(98) as u32).collect(),
+            chunk_len,
+        };
+        let path = std::env::temp_dir().join(format!("afm_prop_shard_{}.tok", g.seed));
+        shard.save(&path).unwrap();
+        assert_eq!(Shard::load(&path).unwrap(), shard);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(path.with_extension("json")).ok();
+    });
+}
+
+// ---------------------------------------------------------------- tasks
+
+#[test]
+fn prop_tasks_deterministic_and_well_formed() {
+    check("tasks-wellformed", 40, |g| {
+        let world = World::new(g.rng.next_u64());
+        let names = ["mmlu_syn", "gsm_syn", "boolq_syn", "anli_syn", "xstest_syn"];
+        let name = *g.rng.choose(&names);
+        let n = g.usize_in(1, 24);
+        let seed = g.rng.next_u64();
+        let a = build_task(name, &world, n, seed);
+        let b = build_task(name, &world, n, seed);
+        assert_eq!(a.samples.len(), n);
+        for (x, y) in a.samples.iter().zip(&b.samples) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.scoring, y.scoring);
+            assert!(x.prompt.len() < 96, "prompt must fit the context: {}", x.prompt);
+            if let Scoring::LogitMC { options, correct_idx } = &x.scoring {
+                assert!(correct_idx < &options.len());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_answer_extraction_total() {
+    check("extract-total", 200, |g| {
+        // extraction never panics on arbitrary printable text
+        let s = g.ascii_string(100);
+        let _ = extract_hash_answer(&s);
+        let _ = extract_first_word(&s);
+    });
+}
+
+#[test]
+fn prop_hash_extraction_finds_planted_answer() {
+    check("extract-planted", 100, |g| {
+        let ans = g.rng.below(1000) as i64;
+        let prefix = g.ascii_string(40).replace('#', " ");
+        let text = format!("{prefix} #### {ans}");
+        assert_eq!(extract_hash_answer(&text), Some(ans));
+    });
+}
+
+// ---------------------------------------------------------------- json/toml
+
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    check("json-roundtrip", 120, |g| {
+        let doc = random_json(g, 3);
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).unwrap_or_else(|e| panic!("{e}: {text}"));
+        assert_eq!(parsed, doc);
+    });
+}
+
+fn random_json(g: &mut Gen, depth: usize) -> Json {
+    match if depth == 0 { g.usize_in(0, 2) } else { g.usize_in(0, 4) } {
+        0 => Json::Num((g.rng.below(1_000_000) as f64) / 64.0),
+        1 => Json::Str(g.ascii_string(24)),
+        2 => Json::Bool(g.bool()),
+        3 => Json::Arr((0..g.usize_in(0, 4)).map(|_| random_json(g, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..g.usize_in(0, 4))
+                .map(|i| (format!("k{i}_{}", g.usize_in(0, 9)), random_json(g, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_config_hw_label_roundtrips_bits() {
+    check("hw-label", 60, |g| {
+        let hw = afm::config::HwConfig {
+            in_bits: g.usize_in(0, 8) as u32,
+            dyn_input: g.bool(),
+            gamma_add: g.f32_in(0.0, 0.1),
+            beta_mul: 0.0,
+            lambda_adc: g.f32_in(4.0, 16.0),
+            out_bits: if g.bool() { 8 } else { 0 },
+            qat_bits: if g.bool() { 4 } else { 0 },
+        };
+        let s = hw.to_scalars();
+        // levels encode 2^(b-1)-1 or -1
+        if hw.in_bits > 0 {
+            assert_eq!(s[0], ((1u32 << (hw.in_bits - 1)) - 1) as f32);
+        } else {
+            assert_eq!(s[0], -1.0);
+        }
+        assert_eq!(s[2], hw.gamma_add);
+        assert_eq!(s[4], hw.lambda_adc);
+    });
+}
