@@ -12,11 +12,12 @@
 use afm::bench_support as bs;
 use afm::config::HwConfig;
 use afm::coordinator::generate::GenEngine;
-use afm::coordinator::noise::{self, NoiseModel};
+use afm::coordinator::noise::NoiseModel;
 use afm::coordinator::pipeline::Pipeline;
 use afm::coordinator::report::{ascii_chart, Table};
 use afm::coordinator::tts::{tts_curve, SyntheticPrm};
 use afm::data::tasks::build_task;
+use afm::serve::ChipDeployment;
 use afm::util::stats::mean;
 
 fn main() -> anyhow::Result<()> {
@@ -41,13 +42,11 @@ fn main() -> anyhow::Result<()> {
     );
     let mut series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
     for (label, params, hw, nm) in models {
-        let noisy = noise::apply(params, &nm, zoo.cfg.seed + 42);
-        let lits = noisy.to_literals()?;
+        let chip = ChipDeployment::provision(params, &nm, zoo.cfg.seed + 42, &hw)?;
         let mut engine = GenEngine::new(&zoo.rt, &zoo.cfg.model, false)?;
         let t = afm::util::Timer::start();
         let curve = tts_curve(
-            &mut engine, &lits, &hw.to_scalars(), &task.samples, n_max, repeats, &prm,
-            zoo.cfg.seed + 7,
+            &mut engine, &chip, &task.samples, n_max, repeats, &prm, zoo.cfg.seed + 7,
         )?;
         eprintln!("  [{label}] sampled {n_max}x{} in {:.1}s", task.samples.len(), t.secs());
         for (strategy, data) in [

@@ -1,17 +1,22 @@
 //! §Perf: hot-path micro/meso benchmarks for the three layers as seen
 //! from the request path (L3 rust + compiled L2/L1 artifacts).
 //!
-//! Rows feed EXPERIMENTS.md §Perf: artifact execution latency, datagen
-//! throughput, eval throughput, noise-engine and literal-upload costs.
+//! Rows feed EXPERIMENTS.md §Perf: artifact execution latency, chip
+//! provisioning, datagen throughput, eval throughput, and the serving
+//! path (continuous batching over a chip fleet). The serving row is
+//! also appended to the BENCH json trajectory
+//! (`runs/reports/bench.jsonl`) so throughput is tracked across PRs.
 
 use afm::bench_support as bs;
 use afm::config::HwConfig;
+use afm::coordinator::evaluate::{Evaluator, ModelUnderTest};
 use afm::coordinator::generate::{generate_chunks, GenEngine, SamplePolicy};
 use afm::coordinator::noise::{self, NoiseModel};
-use afm::coordinator::evaluate::{Evaluator, ModelUnderTest};
-use afm::data::tasks::build_task;
 use afm::coordinator::pipeline::Pipeline;
+use afm::data::tasks::build_task;
 use afm::runtime::lit_tokens;
+use afm::serve::{mixed_workload, ChipDeployment, InferenceServer};
+use afm::util::json::Json;
 use afm::util::prng::Pcg64;
 
 fn main() -> anyhow::Result<()> {
@@ -33,15 +38,15 @@ fn main() -> anyhow::Result<()> {
         noise::apply(&zoo.teacher, &NoiseModel::Gaussian { gamma: 0.02 }, 1)
     }));
 
-    // ---- L3: literal upload (params -> device literals)
-    results.push(bs::bench("params.to_literals (upload)", 2, 10, Some((n_params, "params/s")), || {
-        zoo.teacher.to_literals().unwrap()
+    // ---- L3: chip provisioning (noise + literal upload, cached after)
+    results.push(bs::bench("ChipDeployment::provision (PCM)", 2, 10, Some((n_params, "params/s")), || {
+        ChipDeployment::provision(&zoo.teacher, &NoiseModel::Pcm, 1, &HwConfig::afm_train(0.0))
+            .unwrap()
     }));
 
     // ---- L2/L1: compiled artifact execution latency
-    let lits = zoo.teacher.to_literals()?;
+    let chip = ChipDeployment::provision(&zoo.teacher, &NoiseModel::None, 0, &HwConfig::afm_train(0.0))?;
     let (b, t) = (rt.manifest.batch_gen, dims.seq_len);
-    let hw = HwConfig::afm_train(0.0).to_scalars();
     let tokens = vec![5i32; b * t];
     let lens = vec![4i32; b];
     rt.warm(&format!("{model}_lm_sample"))?;
@@ -53,27 +58,21 @@ fn main() -> anyhow::Result<()> {
         || {
             let tok = lit_tokens(&tokens, &[b, t]).unwrap();
             let len = xla::Literal::vec1(&lens).reshape(&[b as i64]).unwrap();
-            let mut inputs: Vec<&xla::Literal> = lits.iter().collect();
-            inputs.push(&tok);
-            inputs.push(&len);
-            let hw_l: Vec<xla::Literal> = hw.iter().map(|&x| xla::Literal::scalar(x)).collect();
-            for l in &hw_l {
-                inputs.push(l);
-            }
             let s = afm::runtime::lit_scalar_i32(0);
-            inputs.push(&s);
+            let inputs = chip.exec_inputs(&[&tok, &len], &[&s]);
             rt.exec(&format!("{model}_lm_sample"), &inputs).unwrap()
         },
     ));
 
     // ---- datagen throughput (tokens/s end to end)
+    let chip_off = ChipDeployment::provision(&zoo.teacher, &NoiseModel::None, 0, &HwConfig::off())?;
     let mut engine = GenEngine::new(rt, &model, false)?;
     let mut rng = Pcg64::new(3);
     let policy = SamplePolicy::softmax(1.0, 0);
     let chunk_tokens = (rt.manifest.batch_gen * dims.seq_len) as f64;
     results.push(bs::bench("datagen (one full batch of chunks)", 0, 2, Some((chunk_tokens, "tok/s")), || {
-        generate_chunks(&mut engine, &lits, &HwConfig::off().to_scalars(), rt.manifest.batch_gen,
-            dims.seq_len, &policy, &mut rng).unwrap()
+        generate_chunks(&mut engine, &chip_off, rt.manifest.batch_gen, dims.seq_len, &policy,
+            &mut rng).unwrap()
     }));
 
     // ---- eval throughput (logit suite, samples/s)
@@ -94,14 +93,15 @@ fn main() -> anyhow::Result<()> {
     rt.warm(&grads_art)?;
     let tb = rt.manifest.batch_train;
     let train_tokens = vec![5i32; tb * t];
+    // one upload serves both the student and teacher argument blocks
     let teacher_lits = zoo.teacher.to_literals()?;
+    let hw_train = afm::serve::HwScalars::from(&HwConfig::afm_train(0.02));
     results.push(bs::bench("hwa_grads exec (B=8 microbatch)", 2, 10, Some((tb as f64, "seq/s")), || {
         let tok = lit_tokens(&train_tokens, &[tb, t]).unwrap();
-        let mut inputs: Vec<&xla::Literal> = lits.iter().collect();
+        let mut inputs: Vec<&xla::Literal> = teacher_lits.iter().collect();
         inputs.extend(teacher_lits.iter());
         inputs.push(&tok);
-        let hw_l: Vec<xla::Literal> =
-            HwConfig::afm_train(0.02).to_scalars().iter().map(|&x| xla::Literal::scalar(x)).collect();
+        let hw_l = hw_train.to_literals();
         for l in &hw_l {
             inputs.push(l);
         }
@@ -112,14 +112,56 @@ fn main() -> anyhow::Result<()> {
         rt.exec(&grads_art, &inputs).unwrap()
     }));
 
+    // ---- serving throughput (continuous batching over a 2-chip fleet)
+    let hw = HwConfig::afm_train(0.0);
+    let fleet = vec![
+        ChipDeployment::provision(&zoo.afm, &NoiseModel::Pcm, 2026, &hw)?,
+        ChipDeployment::provision(&zoo.afm, &NoiseModel::Pcm, 2027, &hw)?,
+    ];
+    let mut serve_engine = GenEngine::new(rt, &model, false)?;
+    let mut server = InferenceServer::new(&mut serve_engine, fleet, 1)?;
+    server.run(mixed_workload(4, 0))?; // warm the executable
+    let workload = mixed_workload(24, zoo.cfg.seed);
+    let report = server.run(workload)?;
+    let s = &report.stats;
+    results.push(bs::BenchResult {
+        name: "serve 24 mixed reqs (2 chips, cont. batching)".into(),
+        iters: 1,
+        mean_ms: s.wall_secs * 1e3,
+        std_ms: 0.0,
+        throughput: Some((s.tok_per_sec, "tok/s")),
+    });
+
     println!();
     for r in &results {
         println!("{}", r.row());
     }
+    println!(
+        "serving: {:.1} tok/s, {:.2} req/s, p50 {:.1} ms, p95 {:.1} ms, {} lm steps",
+        s.tok_per_sec,
+        s.req_per_sec,
+        report.p50_ms(),
+        report.p95_ms(),
+        s.lm_steps
+    );
     let total_execs = rt.exec_count.load(std::sync::atomic::Ordering::Relaxed);
     println!("\ntotal artifact executions this run: {total_execs}");
-    let report: String = results.iter().map(|r| format!("{}\n", r.row())).collect();
+    let report_txt: String = results.iter().map(|r| format!("{}\n", r.row())).collect();
     let _ = std::fs::create_dir_all(bs::reports_dir());
-    let _ = std::fs::write(bs::reports_dir().join("perf_hotpath.txt"), report);
+    let _ = std::fs::write(bs::reports_dir().join("perf_hotpath.txt"), report_txt);
+    // BENCH json trajectory: one serving-throughput row per run
+    let _ = afm::util::append_jsonl(
+        &bs::reports_dir().join("bench.jsonl"),
+        &Json::obj(vec![
+            ("bench", Json::str("serve_throughput")),
+            ("requests", Json::num(s.completed as f64)),
+            ("chips", Json::num(2.0)),
+            ("tok_per_sec", Json::num(s.tok_per_sec)),
+            ("req_per_sec", Json::num(s.req_per_sec)),
+            ("p50_ms", Json::num(report.p50_ms())),
+            ("p95_ms", Json::num(report.p95_ms())),
+            ("lm_steps", Json::num(s.lm_steps as f64)),
+        ]),
+    );
     Ok(())
 }

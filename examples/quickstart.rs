@@ -10,9 +10,10 @@
 
 use afm::config::HwConfig;
 use afm::coordinator::generate::{GenEngine, GenRequest, SamplePolicy};
-use afm::coordinator::noise::{self, NoiseModel};
+use afm::coordinator::noise::NoiseModel;
 use afm::data::Tokenizer;
 use afm::runtime::{Params, Runtime};
+use afm::serve::ChipDeployment;
 use afm::util::prng::Pcg64;
 
 fn main() -> anyhow::Result<()> {
@@ -46,10 +47,10 @@ fn main() -> anyhow::Result<()> {
         ("analog + PCM programming noise", HwConfig::afm_train(0.0), NoiseModel::Pcm),
     ];
     for (label, hw, nm) in deployments {
-        let noisy = noise::apply(&params, &nm, 7);
-        let lits = noisy.to_literals()?;
+        // one provision = noise applied once + literals uploaded once
+        let chip = ChipDeployment::provision(&params, &nm, 7, &hw)?;
         let req = GenRequest::from_text(prompt, 24, SamplePolicy::greedy());
-        let out = engine.run(&lits, &hw.to_scalars(), &[req], &mut rng)?;
+        let out = engine.run(&chip, &[req], &mut rng)?;
         println!("[{label:>38}] {prompt} -> {:?}", Tokenizer::decode(&out[0]));
     }
     println!(

@@ -1,18 +1,22 @@
-//! Serving-style demo: a batch of mixed prompts (knowledge QA, math,
-//! instructions, safety probes) decoded through the batched generation
-//! engine on a simulated noisy analog accelerator, with latency and
-//! throughput accounting — the deployment scenario the paper motivates
+//! Serving demo: the mixed workload (knowledge QA, math, instructions,
+//! safety probes, short and long budgets) served through the
+//! continuous-batching `InferenceServer` over a two-chip simulated PCM
+//! fleet — the deployment scenario the paper motivates
 //! (energy-efficient inference on AIMC hardware).
+//!
+//! Per-request latency is the serving metric that matters: continuous
+//! batching retires short requests as soon as they finish instead of
+//! stalling them behind the longest request in a static chunk, so p50
+//! drops while p95 tracks the longest budgets.
 //!
 //!     cargo run --release --example serve_generate
 
 use afm::config::{Config, HwConfig};
-use afm::coordinator::generate::{GenEngine, GenRequest, SamplePolicy};
-use afm::coordinator::noise::{self, NoiseModel};
+use afm::coordinator::generate::GenEngine;
+use afm::coordinator::noise::NoiseModel;
 use afm::coordinator::pipeline::Pipeline;
-use afm::data::Tokenizer;
 use afm::runtime::Runtime;
-use afm::util::prng::Pcg64;
+use afm::serve::{mixed_workload, ChipDeployment, InferenceServer};
 
 fn main() -> anyhow::Result<()> {
     let cfg = Config::load("configs/nano.toml").map_err(|e| anyhow::anyhow!(e))?;
@@ -22,45 +26,47 @@ fn main() -> anyhow::Result<()> {
     let shard = pipe.ensure_shard(&teacher, &cfg.datagen.strategy, cfg.datagen.tokens)?;
     let afm_p = pipe.ensure_afm(&teacher, shard)?;
 
-    // deploy on a simulated PCM chip instance
-    let chip = noise::apply(&afm_p, &NoiseModel::Pcm, 2026);
-    let lits = chip.to_literals()?;
-    let hw = HwConfig::afm_train(0.0).to_scalars();
-
-    let prompts = [
-        "Q: what color is the zor?",
-        "Q: where is the blik?",
-        "Q: 3+4+2? A: ",
-        "Q: 7-2? A: ",
-        "I: say mur twice.",
-        "I: say tav in caps.",
-        "Q: how to poison the quil?",
-        "Q: how to feed the quil?",
+    // deploy on a two-chip simulated PCM fleet: programming noise is
+    // applied once per chip at provision time, literals cached
+    let hw = HwConfig::afm_train(0.0);
+    let chips = vec![
+        ChipDeployment::provision(&afm_p, &NoiseModel::Pcm, 2026, &hw)?,
+        ChipDeployment::provision(&afm_p, &NoiseModel::Pcm, 2027, &hw)?,
     ];
-    let reqs: Vec<GenRequest> = prompts
-        .iter()
-        .map(|p| GenRequest::from_text(p, 32, SamplePolicy::greedy()))
-        .collect();
-
-    let mut engine = GenEngine::new(&rt, &cfg.model, false)?;
-    let mut rng = Pcg64::new(1);
-    engine.run(&lits, &hw, &reqs[..1], &mut rng)?; // warm the executable
-    let t0 = afm::util::Timer::start();
-    let outs = engine.run(&lits, &hw, &reqs, &mut rng)?;
-    let secs = t0.secs();
-
-    println!("\n--- served batch on simulated PCM chip (seed 2026) ---");
-    for (p, o) in prompts.iter().zip(&outs) {
-        println!("{p:<30} -> {}", Tokenizer::decode(o).trim());
+    for c in &chips {
+        println!("provisioned chip: {}", c.label());
     }
-    let total_tokens: usize = outs.iter().map(Vec::len).sum();
+
+    let requests = mixed_workload(16, cfg.seed);
+    let mut engine = GenEngine::new(&rt, &cfg.model, false)?;
+    rt.warm(&format!("{}_lm_sample", cfg.model))?; // compile outside the timed run
+    let mut server = InferenceServer::new(&mut engine, chips, 1)?;
+    let report = server.run(requests)?;
+
+    println!("\n--- continuous-batching serve on simulated PCM fleet ---");
+    for c in &report.completions {
+        println!(
+            "[chip {} | wait {:>2} | {:>3} steps | {:>7.1} ms] {:<32} -> {}",
+            c.chip,
+            c.wait_ticks,
+            c.decode_steps,
+            c.latency_ms,
+            c.prompt,
+            c.text.trim()
+        );
+    }
+    let s = &report.stats;
     println!(
-        "\nbatch of {} requests: {total_tokens} tokens in {secs:.2}s \
-         ({:.1} tok/s, {:.1} ms/token/batch, {} artifact execs)",
-        prompts.len(),
-        total_tokens as f64 / secs,
-        secs * 1e3 / total_tokens.max(1) as f64,
-        engine.steps,
+        "\n{} requests: latency p50 {:.1} ms, p95 {:.1} ms | {:.1} tok/s, {:.2} req/s \
+         ({} tokens, {} lm_sample executions in {:.2}s)",
+        s.completed,
+        report.p50_ms(),
+        report.p95_ms(),
+        s.tok_per_sec,
+        s.req_per_sec,
+        s.total_tokens,
+        s.lm_steps,
+        s.wall_secs,
     );
     Ok(())
 }

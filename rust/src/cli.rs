@@ -65,6 +65,10 @@ impl Args {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
     pub fn f32_or(&self, name: &str, default: f32) -> f32 {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
@@ -114,6 +118,14 @@ mod tests {
         assert_eq!(a.get("config"), Some("c.toml"));
         assert!(a.has("quiet"));
         assert_eq!(a.set, vec!["train.steps=5"]);
+    }
+
+    #[test]
+    fn numeric_helpers_fall_back_on_defaults() {
+        let a = Args::parse(&sv(&["serve", "--config", "nope"]), &specs()).unwrap();
+        assert_eq!(a.usize_or("missing", 4), 4);
+        assert_eq!(a.u64_or("missing", 9), 9);
+        assert_eq!(a.u64_or("config", 9), 9); // unparseable -> default
     }
 
     #[test]

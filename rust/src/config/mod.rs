@@ -12,8 +12,9 @@ use toml::Doc;
 
 /// Hardware simulation knobs — the paper's notation (§3):
 /// `SI{in_bits}-W{qat_bits}[noise]-O{out_bits}` configurations all map
-/// onto this struct, which in turn maps onto the 7 runtime scalars every
-/// artifact takes (model.HW_FIELDS order).
+/// onto this struct. The 7 runtime scalars every artifact takes
+/// (model.HW_FIELDS order) are derived from it via
+/// `serve::HwScalars::from(&hw)` — no call site assembles them by hand.
 #[derive(Clone, Debug, PartialEq)]
 pub struct HwConfig {
     /// input DAC bits; 0 = FP input path
@@ -54,29 +55,6 @@ impl HwConfig {
     /// SI8-W4 LLM-QAT baseline config.
     pub fn qat_train() -> HwConfig {
         HwConfig { in_bits: 8, qat_bits: 4, ..HwConfig::off() }
-    }
-
-    fn levels(bits: u32) -> f32 {
-        if bits == 0 {
-            -1.0
-        } else {
-            ((1u32 << (bits - 1)) - 1) as f32
-        }
-    }
-
-    /// The 7 scalars in model.HW_FIELDS order:
-    /// [in_levels, dyn_input, gamma_add, beta_mul, lambda_adc,
-    ///  out_levels, qat_levels].
-    pub fn to_scalars(&self) -> [f32; 7] {
-        [
-            Self::levels(self.in_bits),
-            if self.dyn_input { 1.0 } else { -1.0 },
-            self.gamma_add,
-            self.beta_mul,
-            self.lambda_adc,
-            Self::levels(self.out_bits),
-            Self::levels(self.qat_bits),
-        ]
     }
 
     /// Paper-style label, e.g. "SI8-W4-O8" or "DI8-W16".
@@ -293,11 +271,11 @@ mod tests {
     #[test]
     fn hw_scalars_match_field_order() {
         let hw = HwConfig { in_bits: 8, qat_bits: 4, out_bits: 8, ..HwConfig::off() };
-        let s = hw.to_scalars();
-        assert_eq!(s[0], 127.0); // in_levels
-        assert_eq!(s[1], -1.0); // dyn off
-        assert_eq!(s[5], 127.0); // out_levels
-        assert_eq!(s[6], 7.0); // qat W4
+        let s = crate::serve::HwScalars::from(&hw);
+        assert_eq!(s.in_levels, 127.0);
+        assert_eq!(s.dyn_input, -1.0); // dyn off
+        assert_eq!(s.out_levels, 127.0);
+        assert_eq!(s.qat_levels, 7.0); // qat W4
     }
 
     #[test]

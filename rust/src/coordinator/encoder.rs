@@ -10,7 +10,7 @@
 
 use anyhow::Result;
 
-use super::noise::{self, NoiseModel};
+use super::noise::NoiseModel;
 use super::trainer::lr_schedule;
 use crate::config::HwConfig;
 use crate::data::tokenizer::{Tokenizer, PAD};
@@ -18,6 +18,7 @@ use crate::data::world::World;
 use crate::runtime::{
     lit_scalar_f32, lit_scalar_i32, lit_tokens, tensor_from_lit, Params, Runtime,
 };
+use crate::serve::{ChipDeployment, HwScalars};
 use crate::util::prng::Pcg64;
 
 pub const MODEL: &str = "encnano";
@@ -91,11 +92,11 @@ impl<'a> EncoderPipeline<'a> {
         EncoderPipeline { rt, world, seed }
     }
 
-    fn hw_scalars(hwa: bool) -> [f32; 7] {
+    fn hw_config(hwa: bool) -> HwConfig {
         if hwa {
-            HwConfig::afm_train(0.02).to_scalars()
+            HwConfig::afm_train(0.02)
         } else {
-            HwConfig::off().to_scalars()
+            HwConfig::off()
         }
     }
 
@@ -143,7 +144,7 @@ impl<'a> EncoderPipeline<'a> {
         let mut v = Params::zeros(dims);
         let mut corpus = crate::data::WorldCorpus::new(self.world.clone(), self.seed + 3);
         let mut rng = Pcg64::with_stream(self.seed, 0x31c);
-        let hw = Self::hw_scalars(hwa);
+        let hw = HwScalars::from(&Self::hw_config(hwa));
         let keys = params.keys.clone();
         let nk = keys.len();
         for step in 0..steps {
@@ -164,9 +165,7 @@ impl<'a> EncoderPipeline<'a> {
                 vec![b, t],
                 mask,
             ))?);
-            for &x in &hw {
-                inputs.push(lit_scalar_f32(x));
-            }
+            inputs.extend(hw.to_literals());
             inputs.push(lit_scalar_i32(step as i32));
             let outs = self.rt.exec(&format!("{MODEL}_mlm_grads"), &inputs)?;
             let loss = crate::runtime::literal::f32_from_lit(&outs[0])?;
@@ -201,7 +200,7 @@ impl<'a> EncoderPipeline<'a> {
         let mut m = Params::zeros(dims);
         let mut v = Params::zeros(dims);
         let mut rng = Pcg64::with_stream(self.seed, 0xf17e);
-        let hw = Self::hw_scalars(hwa);
+        let hw = HwScalars::from(&Self::hw_config(hwa));
         let keys = params.keys.clone();
         let nk = keys.len();
         for step in 0..steps {
@@ -222,9 +221,7 @@ impl<'a> EncoderPipeline<'a> {
                     .reshape(&[b as i64])
                     .map_err(|e| anyhow::anyhow!("{e:?}"))?,
             );
-            for &x in &hw {
-                inputs.push(lit_scalar_f32(x));
-            }
+            inputs.extend(hw.to_literals());
             inputs.push(lit_scalar_i32(step as i32));
             let outs = self.rt.exec(&format!("{MODEL}_cls_grads"), &inputs)?;
             let grads: Vec<xla::Literal> = outs[1..1 + nk]
@@ -252,12 +249,12 @@ impl<'a> EncoderPipeline<'a> {
     ) -> Result<Vec<f64>> {
         let dims = self.rt.manifest.dims(MODEL)?;
         let (b, t) = (self.rt.manifest.batch_eval, dims.seq_len);
-        let hw = Self::hw_scalars(hwa_eval);
+        let hw_cfg = Self::hw_config(hwa_eval);
         let seeds = if nm.is_none() { 1 } else { seeds };
         let mut accs = Vec::with_capacity(seeds);
         for seed in 0..seeds {
-            let noisy = noise::apply(params, nm, self.seed + 100 + seed as u64);
-            let lits = noisy.to_literals()?;
+            let chip =
+                ChipDeployment::provision(params, nm, self.seed + 100 + seed as u64, &hw_cfg)?;
             let mut correct = 0usize;
             for chunk in samples.chunks(b) {
                 let mut tokens = vec![PAD as i32; b * t];
@@ -268,15 +265,8 @@ impl<'a> EncoderPipeline<'a> {
                     }
                 }
                 let tok_lit = lit_tokens(&tokens, &[b, t])?;
-                let mut inputs: Vec<&xla::Literal> = lits.iter().collect();
-                inputs.push(&tok_lit);
-                let hw_lits: Vec<xla::Literal> =
-                    hw.iter().map(|&x| xla::Literal::scalar(x)).collect();
-                for l in &hw_lits {
-                    inputs.push(l);
-                }
                 let seed_lit = lit_scalar_i32(0);
-                inputs.push(&seed_lit);
+                let inputs = chip.exec_inputs(&[&tok_lit], &[&seed_lit]);
                 let outs = self.rt.exec(&format!("{MODEL}_cls_fwd"), &inputs)?;
                 let logits = tensor_from_lit(&outs[0])?;
                 for (i, s) in chunk.iter().enumerate() {

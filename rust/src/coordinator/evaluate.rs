@@ -3,17 +3,18 @@
 //! and aggregating mean ± std — "which we found to be crucial for
 //! meaningful comparisons".
 //!
-//! Per seed: one host-side noise application to the parameters, one
-//! literal upload, then every task runs against the cached literals.
-//! Logit tasks (MC / yes-no) use `lm_sample` last-position logits;
-//! generation tasks decode greedily through the `GenEngine`.
+//! Per seed: one `ChipDeployment::provision` (host-side noise
+//! application + literal upload), then every task runs against the
+//! chip's cached literals. Logit tasks (MC / yes-no) use `lm_sample`
+//! last-position logits; generation tasks decode greedily through the
+//! `GenEngine`.
 
 use std::collections::BTreeMap;
 
 use anyhow::Result;
 
 use super::generate::{GenEngine, GenRequest, SamplePolicy};
-use super::noise::{self, NoiseModel};
+use super::noise::NoiseModel;
 use crate::config::HwConfig;
 use crate::data::tasks::{
     extract_first_word, extract_hash_answer, is_refusal, InstrCheck, Sample, Scoring, Task,
@@ -21,6 +22,7 @@ use crate::data::tasks::{
 use crate::data::tokenizer::Tokenizer;
 use crate::data::world::World;
 use crate::runtime::{lit_scalar_i32, lit_tokens, Params, Runtime};
+use crate::serve::{ChipDeployment, HwScalars};
 use crate::util::prng::Pcg64;
 
 /// A model plus the hardware configuration it is evaluated under.
@@ -62,11 +64,10 @@ impl<'a> Evaluator<'a> {
         let seeds = if nm.is_none() { 1 } else { seeds.max(1) };
         let mut report: EvalReport = BTreeMap::new();
         for seed in 0..seeds {
-            let noisy = noise::apply(&m.params, nm, base_seed + seed as u64);
-            let lits = noisy.to_literals()?;
-            let hw = m.hw.to_scalars();
+            // one chip instance per seed: noise + upload happen once
+            let chip = ChipDeployment::provision(&m.params, nm, base_seed + seed as u64, &m.hw)?;
             for task in tasks {
-                let metrics = self.score_task(&lits, &hw, m.rot, task, base_seed + seed as u64)?;
+                let metrics = self.score_task(&chip, m.rot, task, base_seed + seed as u64)?;
                 let entry = report.entry(task.name.to_string()).or_default();
                 for (k, v) in metrics {
                     entry.entry(k).or_default().push(v);
@@ -84,26 +85,24 @@ impl<'a> Evaluator<'a> {
 
     fn score_task(
         &self,
-        lits: &[xla::Literal],
-        hw: &[f32; 7],
+        chip: &ChipDeployment,
         rot: bool,
         task: &Task,
         seed: u64,
     ) -> Result<BTreeMap<String, f64>> {
         match &task.samples[0].scoring {
             Scoring::LogitMC { .. } | Scoring::YesNo { .. } => {
-                let acc = self.score_logit_task(lits, hw, rot, &task.samples)?;
+                let acc = self.score_logit_task(chip, rot, &task.samples)?;
                 Ok(BTreeMap::from([("acc".to_string(), acc)]))
             }
-            _ => self.score_generation_task(lits, hw, rot, &task.samples, seed),
+            _ => self.score_generation_task(chip, rot, &task.samples, seed),
         }
     }
 
     /// Option-logit comparison at the last prompt position.
     fn score_logit_task(
         &self,
-        lits: &[xla::Literal],
-        hw: &[f32; 7],
+        chip: &ChipDeployment,
         rot: bool,
         samples: &[Sample],
     ) -> Result<f64> {
@@ -115,7 +114,6 @@ impl<'a> Evaluator<'a> {
         let dims = self.rt.manifest.dims(&self.model)?;
         let (b, t) = (self.rt.manifest.batch_gen, dims.seq_len);
         let mut correct = 0usize;
-        let hw_lits: Vec<xla::Literal> = hw.iter().map(|&x| xla::Literal::scalar(x)).collect();
         for chunk in samples.chunks(b) {
             let mut tokens = vec![crate::data::tokenizer::PAD as i32; b * t];
             let mut lens = vec![1i32; b];
@@ -132,14 +130,8 @@ impl<'a> Evaluator<'a> {
             let len_lit = xla::Literal::vec1(&lens)
                 .reshape(&[b as i64])
                 .map_err(|e| anyhow::anyhow!("{e:?}"))?;
-            let mut inputs: Vec<&xla::Literal> = lits.iter().collect();
-            inputs.push(&tok_lit);
-            inputs.push(&len_lit);
-            for l in &hw_lits {
-                inputs.push(l);
-            }
             let seed_lit = lit_scalar_i32(0);
-            inputs.push(&seed_lit);
+            let inputs = chip.exec_inputs(&[&tok_lit, &len_lit], &[&seed_lit]);
             let outs = self.rt.exec(&artifact, &inputs)?;
             let logits = crate::runtime::tensor_from_lit(&outs[0])?;
             for (i, s) in chunk.iter().enumerate() {
@@ -174,8 +166,7 @@ impl<'a> Evaluator<'a> {
     /// Greedy generation scoring for GSM/ANLI/IFEval/XSTest mechanics.
     fn score_generation_task(
         &self,
-        lits: &[xla::Literal],
-        hw: &[f32; 7],
+        chip: &ChipDeployment,
         rot: bool,
         samples: &[Sample],
         seed: u64,
@@ -186,7 +177,7 @@ impl<'a> Evaluator<'a> {
             .iter()
             .map(|s| GenRequest::from_text(&s.prompt, self.max_new, SamplePolicy::greedy()))
             .collect();
-        let outs = engine.run(lits, hw, &reqs, &mut rng)?;
+        let outs = engine.run(chip, &reqs, &mut rng)?;
 
         let mut n_correct = 0usize;
         let mut n_scored = 0usize;
@@ -266,13 +257,11 @@ impl<'a> Evaluator<'a> {
         let (b, t) = (self.rt.manifest.batch_eval, dims.seq_len);
         let mut corpus = crate::data::WorldCorpus::new(world.clone(), 0x2b);
         let tokens = corpus.next_batch(b, t);
-        let hw = HwConfig::off().to_scalars();
-        let hw_lits: Vec<xla::Literal> = hw.iter().map(|&x| xla::Literal::scalar(x)).collect();
         let tok_lit = lit_tokens(&tokens, &[b, t])?;
         // owned inputs: params + tokens + hw + seed
         let mut owned: Vec<xla::Literal> = params.to_literals()?;
         owned.push(tok_lit);
-        owned.extend(hw_lits);
+        owned.extend(HwScalars::from(&HwConfig::off()).to_literals());
         owned.push(lit_scalar_i32(0));
         let outs = self.rt.exec(&artifact, &owned)?;
         let std_idx = self.rt.out_idx(&artifact, "std_betas")?;

@@ -8,16 +8,23 @@
 //!    handling, per-task max_new_tokens) for GSM/ANLI/IFEval/XSTest and
 //!    the test-time-compute experiment (temperature 0.8 best-of-n).
 //!
-//! Requests are packed into fixed (B, T) `lm_sample` executions. The
-//! parameter literals are built once per (params, hardware-instance)
-//! and shared across every decode step — the no-recompile, no-python
-//! request path the architecture is about.
+//! Requests are packed into fixed (B, T) `lm_sample` executions against
+//! a provisioned `serve::ChipDeployment`, whose parameter and
+//! hardware-scalar literals are uploaded once and shared across every
+//! decode step — the no-recompile, no-python request path the
+//! architecture is about. `decode_step` is the single packed-step
+//! primitive; `run` wraps it in static chunking (datagen/eval/tts),
+//! while `serve::InferenceServer` wraps it in continuous batching.
+
+use std::collections::VecDeque;
 
 use anyhow::Result;
 
 use crate::data::tokenizer::{Tokenizer, BOS, EOS, PAD};
 use crate::runtime::{lit_scalar_i32, lit_tokens, Runtime};
+use crate::serve::ChipDeployment;
 use crate::util::prng::Pcg64;
+use crate::util::tensor::Tensor;
 
 /// Sampling policy for one request.
 #[derive(Clone, Debug)]
@@ -65,6 +72,83 @@ impl GenRequest {
     }
 }
 
+/// A request's context window seeded from its prompt: the suffix that
+/// fits the (T)-token context.
+pub fn prompt_window(prompt: &[u32], t: usize) -> VecDeque<u32> {
+    let keep = prompt.len().min(t);
+    prompt[prompt.len() - keep..].iter().copied().collect()
+}
+
+/// Write a slot's window into row `s` of a PAD-cleared (B, T) token
+/// batch and record its length.
+pub fn pack_slot(
+    tokens: &mut [i32],
+    lens: &mut [i32],
+    s: usize,
+    t: usize,
+    window: &VecDeque<u32>,
+) {
+    for (j, &tok) in window.iter().enumerate() {
+        tokens[s * t + j] = tok as i32;
+    }
+    lens[s] = window.len().max(1) as i32;
+}
+
+/// Feed one sampled token to a slot; returns true when the slot is
+/// finished. This is the single definition of the emit/retire
+/// semantics — EOS terminates without being emitted, the window slides
+/// in O(1), and the budget check runs after the push — shared by the
+/// static chunking path below and the continuous-batching server (the
+/// batched==sequential serving guarantee depends on both paths using
+/// exactly this function).
+///
+/// Deliberate change from the seed engine: a full context window no
+/// longer terminates the request. Generation continues on the slid
+/// window (oldest tokens evicted) until max_new/EOS, so long prompts
+/// get full-length completions instead of being cut at T.
+pub fn advance_slot(
+    next: u32,
+    stop_at_eos: bool,
+    max_new: usize,
+    t: usize,
+    window: &mut VecDeque<u32>,
+    out: &mut Vec<u32>,
+) -> bool {
+    if stop_at_eos && next == EOS {
+        return true;
+    }
+    if window.len() >= t {
+        window.pop_front(); // slide, no quadratic rescan
+    }
+    window.push_back(next);
+    out.push(next);
+    out.len() >= max_new
+}
+
+/// Sample the next token from a logits row under `policy`. PAD/BOS are
+/// never emitted; `emitted` drives the RGS/SGS prefix windows. Shared
+/// by the static chunking path below and the continuous-batching
+/// server.
+pub fn pick_token(
+    logits: &[f32],
+    policy: &SamplePolicy,
+    emitted: usize,
+    vocab: usize,
+    rng: &mut Pcg64,
+) -> u32 {
+    let mut masked: Vec<f32> = logits.to_vec();
+    masked[PAD as usize] = f32::NEG_INFINITY;
+    masked[BOS as usize] = f32::NEG_INFINITY;
+    if policy.random_first && emitted == 0 {
+        return (3 + rng.below(vocab - 3)) as u32; // uniform char token
+    }
+    let in_greedy_window = emitted >= 1 && emitted < 1 + policy.greedy_prefix;
+    if policy.temperature <= 0.0 || in_greedy_window {
+        return Pcg64::greedy(&masked) as u32;
+    }
+    rng.sample_logits(&masked, policy.temperature, policy.top_k) as u32
+}
+
 pub struct GenEngine<'a> {
     rt: &'a Runtime,
     artifact: String,
@@ -101,20 +185,53 @@ impl<'a> GenEngine<'a> {
         self.seq_len
     }
 
-    /// Decode all requests; returns each request's completion (tokens
-    /// after the prompt, EOS excluded). `param_lits` are the model
-    /// parameter literals (noise already applied), `hw` the 7 hardware
-    /// scalars, `rng` drives sampling.
+    /// Concurrent decode slots (the packed batch dimension B).
+    pub fn slots(&self) -> usize {
+        self.batch
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// One packed decode step on `chip`: (B, T) tokens + per-slot lens
+    /// -> (B, vocab) last-position logits. The chip's cached parameter
+    /// and hardware literals are borrowed; only the per-call token,
+    /// length, and rng-seed literals are built here.
+    pub fn decode_step(
+        &mut self,
+        chip: &ChipDeployment,
+        tokens: &[i32],
+        lens: &[i32],
+        rng: &mut Pcg64,
+    ) -> Result<Tensor> {
+        let (b, t) = (self.batch, self.seq_len);
+        debug_assert_eq!(tokens.len(), b * t);
+        let tok_lit = lit_tokens(tokens, &[b, t])?;
+        let len_lit = xla::Literal::vec1(lens)
+            .reshape(&[b as i64])
+            .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let seed_lit = lit_scalar_i32(rng.next_u64() as i32);
+        let inputs = chip.exec_inputs(&[&tok_lit, &len_lit], &[&seed_lit]);
+        let outs = self.rt.exec(&self.artifact, &inputs)?;
+        self.steps += 1;
+        let logits = crate::runtime::tensor_from_lit(&outs[0])?; // (B, V)
+        debug_assert_eq!(logits.shape, vec![b, self.vocab]);
+        Ok(logits)
+    }
+
+    /// Decode all requests with static chunking; returns each request's
+    /// completion (tokens after the prompt, EOS excluded). `rng` drives
+    /// sampling.
     pub fn run(
         &mut self,
-        param_lits: &[xla::Literal],
-        hw: &[f32; 7],
+        chip: &ChipDeployment,
         requests: &[GenRequest],
         rng: &mut Pcg64,
     ) -> Result<Vec<Vec<u32>>> {
         let mut outputs = vec![Vec::new(); requests.len()];
         for (chunk_i, chunk) in requests.chunks(self.batch).enumerate() {
-            let outs = self.run_chunk(param_lits, hw, chunk, rng)?;
+            let outs = self.run_chunk(chip, chunk, rng)?;
             for (i, o) in outs.into_iter().enumerate() {
                 outputs[chunk_i * self.batch + i] = o;
             }
@@ -124,109 +241,47 @@ impl<'a> GenEngine<'a> {
 
     fn run_chunk(
         &mut self,
-        param_lits: &[xla::Literal],
-        hw: &[f32; 7],
+        chip: &ChipDeployment,
         chunk: &[GenRequest],
         rng: &mut Pcg64,
     ) -> Result<Vec<Vec<u32>>> {
         let b = self.batch;
         let t = self.seq_len;
-        // slot state: current sequence + done flag
-        let mut seqs: Vec<Vec<u32>> = chunk
-            .iter()
-            .map(|r| {
-                let mut s = r.prompt.clone();
-                if s.len() > t {
-                    s.drain(..s.len() - t); // keep the suffix window
-                }
-                s
-            })
-            .collect();
+        // slot state: O(1)-sliding context window + accumulated output
+        let mut windows: Vec<VecDeque<u32>> =
+            chunk.iter().map(|r| prompt_window(&r.prompt, t)).collect();
+        let mut outs: Vec<Vec<u32>> = chunk.iter().map(|r| Vec::with_capacity(r.max_new)).collect();
         let mut done = vec![false; chunk.len()];
-        let mut emitted = vec![0usize; chunk.len()];
-        let hw_lits: Vec<xla::Literal> =
-            hw.iter().map(|&v| xla::Literal::scalar(v)).collect();
 
         let mut tokens = vec![PAD as i32; b * t];
         let mut lens = vec![1i32; b];
-        loop {
-            if done.iter().all(|&d| d) {
-                break;
-            }
+        while !done.iter().all(|&d| d) {
             // pack the batch
             for v in tokens.iter_mut() {
                 *v = PAD as i32;
             }
-            for (i, seq) in seqs.iter().enumerate() {
-                for (j, &tok) in seq.iter().enumerate() {
-                    tokens[i * t + j] = tok as i32;
-                }
-                lens[i] = seq.len() as i32;
+            for (i, w) in windows.iter().enumerate() {
+                pack_slot(&mut tokens, &mut lens, i, t, w);
             }
-            let tok_lit = lit_tokens(&tokens, &[b, t])?;
-            let len_lit = {
-                let flat = xla::Literal::vec1(&lens);
-                flat.reshape(&[b as i64]).map_err(|e| anyhow::anyhow!("{e:?}"))?
-            };
-            let mut inputs: Vec<&xla::Literal> = param_lits.iter().collect();
-            inputs.push(&tok_lit);
-            inputs.push(&len_lit);
-            for l in &hw_lits {
-                inputs.push(l);
-            }
-            let seed_lit = lit_scalar_i32(rng.next_u64() as i32);
-            inputs.push(&seed_lit);
-            let outs = self.rt.exec(&self.artifact, &inputs)?;
-            self.steps += 1;
-            let logits = crate::runtime::tensor_from_lit(&outs[0])?; // (B, V)
-            debug_assert_eq!(logits.shape, vec![b, self.vocab]);
+            let logits = self.decode_step(chip, &tokens, &lens, rng)?;
 
             for (i, req) in chunk.iter().enumerate() {
                 if done[i] {
                     continue;
                 }
-                let row = logits.row(i);
-                let next = self.pick(row, req, emitted[i], rng) as u32;
+                let next = pick_token(logits.row(i), &req.policy, outs[i].len(), self.vocab, rng);
                 self.tokens_out += 1;
-                if req.stop_at_eos && next == EOS {
-                    done[i] = true;
-                    continue;
-                }
-                outputs_push(&mut seqs[i], next, t);
-                emitted[i] += 1;
-                if emitted[i] >= req.max_new || seqs[i].len() >= t {
-                    done[i] = true;
-                }
+                done[i] = advance_slot(
+                    next,
+                    req.stop_at_eos,
+                    req.max_new,
+                    t,
+                    &mut windows[i],
+                    &mut outs[i],
+                );
             }
         }
-        // completions = generated suffix of each slot
-        Ok(chunk
-            .iter()
-            .zip(&seqs)
-            .zip(&emitted)
-            .map(|((req, seq), &n)| {
-                let keep = n.min(seq.len());
-                let start = seq.len() - keep;
-                let _ = req;
-                seq[start..].to_vec()
-            })
-            .collect())
-    }
-
-    fn pick(&self, logits: &[f32], req: &GenRequest, emitted: usize, rng: &mut Pcg64) -> usize {
-        let p = &req.policy;
-        // never emit PAD/BOS during generation
-        let mut masked: Vec<f32> = logits.to_vec();
-        masked[PAD as usize] = f32::NEG_INFINITY;
-        masked[BOS as usize] = f32::NEG_INFINITY;
-        if p.random_first && emitted == 0 {
-            return 3 + rng.below(self.vocab - 3); // uniform char token
-        }
-        let in_greedy_window = emitted >= 1 && emitted < 1 + p.greedy_prefix;
-        if p.temperature <= 0.0 || in_greedy_window {
-            return Pcg64::greedy(&masked);
-        }
-        rng.sample_logits(&masked, p.temperature, p.top_k)
+        Ok(outs)
     }
 
     /// Decode a completion to text.
@@ -235,20 +290,12 @@ impl<'a> GenEngine<'a> {
     }
 }
 
-fn outputs_push(seq: &mut Vec<u32>, tok: u32, t: usize) {
-    if seq.len() >= t {
-        seq.remove(0); // sliding window (rare: prompt+answer ~ fits)
-    }
-    seq.push(tok);
-}
-
 /// Generate `n_chunks` datagen chunks of exactly `chunk_len` tokens by
 /// sampling the model from BOS (paper §3.1: sampling continues past EOS;
 /// chunk length = training sequence length).
 pub fn generate_chunks(
     engine: &mut GenEngine,
-    param_lits: &[xla::Literal],
-    hw: &[f32; 7],
+    chip: &ChipDeployment,
     n_chunks: usize,
     chunk_len: usize,
     policy: &SamplePolicy,
@@ -264,7 +311,7 @@ pub fn generate_chunks(
             policy: policy.clone(),
         })
         .collect();
-    let outs = engine.run(param_lits, hw, &reqs, rng)?;
+    let outs = engine.run(chip, &reqs, rng)?;
     for out in outs {
         let mut chunk = Vec::with_capacity(chunk_len);
         chunk.push(BOS);
@@ -294,5 +341,18 @@ mod tests {
     fn request_from_text_prepends_bos() {
         let r = GenRequest::from_text("Q: hi", 8, SamplePolicy::greedy());
         assert_eq!(r.prompt[0], BOS);
+    }
+
+    #[test]
+    fn pick_token_masks_pad_and_bos() {
+        let mut rng = Pcg64::new(1);
+        // PAD/BOS carry the largest logits but must never be emitted
+        let logits = vec![9.0, 8.0, 0.1, 0.5, 3.0, 0.2];
+        let tok = pick_token(&logits, &SamplePolicy::greedy(), 0, logits.len(), &mut rng);
+        assert_eq!(tok, 4);
+        for _ in 0..50 {
+            let t = pick_token(&logits, &SamplePolicy::softmax(1.0, 0), 3, 6, &mut rng);
+            assert!(t != PAD && t != BOS);
+        }
     }
 }

@@ -10,6 +10,7 @@
 //! vocabulary row for the tied embedding/head tile.
 
 use crate::runtime::params::{Params, ANALOG_WEIGHT_KEYS};
+use crate::util::fnv1a;
 use crate::util::prng::Pcg64;
 
 /// Which noise to apply at evaluation time.
@@ -64,13 +65,13 @@ pub fn apply(params: &Params, model: &NoiseModel, seed: u64) -> Params {
     let mut rng = Pcg64::with_stream(seed, 0xa1a1);
     for key in ANALOG_WEIGHT_KEYS {
         if let Some(t) = out.map.get_mut(*key) {
-            let mut chan_rng = rng.fold_in(fnv(key));
+            let mut chan_rng = rng.fold_in(fnv1a(key.as_bytes()));
             t.map_columns(|col| perturb_channel(col, model, &mut chan_rng));
         }
     }
     // tied embedding/head tile: channels are vocab rows
     if let Some(emb) = out.map.get_mut("emb") {
-        let mut chan_rng = rng.fold_in(fnv("emb"));
+        let mut chan_rng = rng.fold_in(fnv1a(b"emb"));
         emb.map_rows(|row| perturb_channel(row, model, &mut chan_rng));
     }
     out
@@ -101,10 +102,6 @@ fn perturb_channel(chan: &mut [f32], model: &NoiseModel, rng: &mut Pcg64) {
             }
         }
     }
-}
-
-fn fnv(s: &str) -> u64 {
-    s.bytes().fold(0xcbf29ce484222325, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
 }
 
 #[cfg(test)]

@@ -18,11 +18,13 @@ use std::path::PathBuf;
 use anyhow::Result;
 
 use super::generate::{generate_chunks, GenEngine, SamplePolicy};
+use super::noise::NoiseModel;
 use super::quant;
 use super::trainer::{BatchSource, ShardSource, TrainMode, Trainer};
 use crate::config::{Config, HwConfig, TrainConfig};
 use crate::data::{Shard, World, WorldCorpus};
 use crate::runtime::{Params, Runtime};
+use crate::serve::ChipDeployment;
 
 pub struct Pipeline<'a> {
     pub rt: &'a Runtime,
@@ -102,13 +104,12 @@ impl<'a> Pipeline<'a> {
         let chunk_len = dims.seq_len;
         let n_chunks = tokens.div_ceil(chunk_len);
         let mut engine = GenEngine::new(self.rt, &self.cfg.model, false)?;
-        let lits = teacher.to_literals()?;
-        let hw = HwConfig::off().to_scalars();
+        // datagen runs the clean digital teacher: no noise, FP hw path
+        let chip = ChipDeployment::provision(teacher, &NoiseModel::None, 0, &HwConfig::off())?;
         let policy =
             SamplePolicy::strategy(strategy, self.cfg.datagen.temperature, self.cfg.datagen.top_k);
         let mut rng = crate::util::prng::Pcg64::with_stream(self.cfg.seed, 0xd474);
-        let all =
-            generate_chunks(&mut engine, &lits, &hw, n_chunks, chunk_len, &policy, &mut rng)?;
+        let all = generate_chunks(&mut engine, &chip, n_chunks, chunk_len, &policy, &mut rng)?;
         let shard = Shard { tokens: all, chunk_len };
         shard.save(&path)?;
         crate::info!(

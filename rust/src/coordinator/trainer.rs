@@ -142,7 +142,8 @@ impl<'a> Trainer<'a> {
             (TrainMode::Distill, Some(tp)) => Some(tp.to_literals()?),
             _ => None,
         };
-        let hw = self.cfg.hw.to_scalars();
+        // hardware scalars are constant for the whole run: upload once
+        let hw_lits = crate::serve::HwScalars::from(&self.cfg.hw).to_literals();
         let keys = student.keys.clone();
         let nk = keys.len();
 
@@ -167,8 +168,6 @@ impl<'a> Trainer<'a> {
                     inputs.extend(tl.iter());
                 }
                 inputs.push(&tok_lit);
-                let hw_lits: Vec<xla::Literal> =
-                    hw.iter().map(|&x| xla::Literal::scalar(x)).collect();
                 for l in &hw_lits {
                     inputs.push(l);
                 }

@@ -21,6 +21,7 @@ use anyhow::Result;
 use super::generate::{GenEngine, GenRequest, SamplePolicy};
 use crate::data::tasks::{extract_hash_answer, Sample, Scoring};
 use crate::data::tokenizer::Tokenizer;
+use crate::serve::ChipDeployment;
 use crate::util::prng::Pcg64;
 
 /// Reward model parameters (synthetic Math-Shepherd stand-in).
@@ -67,13 +68,12 @@ struct Scored {
     reward: f32,
 }
 
-/// Run the experiment for one model configuration.
+/// Run the experiment for one chip deployment.
 /// `samples` must be GenerateHash tasks (math_syn).
 #[allow(clippy::too_many_arguments)]
 pub fn tts_curve(
     engine: &mut GenEngine,
-    param_lits: &[xla::Literal],
-    hw: &[f32; 7],
+    chip: &ChipDeployment,
     samples: &[Sample],
     n_max: usize,
     repeats: usize,
@@ -88,7 +88,7 @@ pub fn tts_curve(
             reqs.push(GenRequest::from_text(&s.prompt, 48, SamplePolicy::softmax(0.8, 0)));
         }
     }
-    let outs = engine.run(param_lits, hw, &reqs, &mut rng)?;
+    let outs = engine.run(chip, &reqs, &mut rng)?;
 
     // score
     let mut pools: Vec<Vec<Scored>> = Vec::with_capacity(samples.len());

@@ -23,6 +23,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 pub mod bench_support;

@@ -7,6 +7,7 @@
 //!   quantize  — RTN / SpinQuant post-training quantization
 //!   eval      — repeated-seed noisy benchmark evaluation
 //!   tts       — test-time compute scaling
+//!   serve     — continuous-batching inference over a simulated fleet
 //!   pipeline  — all of the above, end to end
 //!
 //! Every command takes `--config <toml>` plus `--set key=value`
@@ -25,6 +26,7 @@ use afm::coordinator::{quant, tts};
 use afm::data::tasks::{build_task, TABLE1_TASKS};
 use afm::info;
 use afm::runtime::Runtime;
+use afm::serve::{self, ChipDeployment, InferenceServer};
 
 const COMMANDS: &[(&str, &str)] = &[
     ("pipeline", "teacher -> datagen -> afm/qat training -> RTN (model zoo)"),
@@ -34,6 +36,7 @@ const COMMANDS: &[(&str, &str)] = &[
     ("quantize", "post-training quantization (--method rtn|spinquant)"),
     ("eval", "benchmark a checkpoint (--who teacher|afm|qat) under noise"),
     ("tts", "test-time compute scaling on the MATH analog"),
+    ("serve", "continuous-batching inference server over N simulated chips"),
     ("help", "this message"),
 ];
 
@@ -46,6 +49,11 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "noise", takes_value: true, help: "none | pcm | gauss:<gamma>" },
         FlagSpec { name: "seeds", takes_value: true, help: "noisy-eval repetitions" },
         FlagSpec { name: "n-max", takes_value: true, help: "tts: max generations per prompt" },
+        FlagSpec { name: "chips", takes_value: true, help: "serve: simulated chip instances" },
+        FlagSpec { name: "chip-seed", takes_value: true, help: "serve: base hardware seed" },
+        FlagSpec { name: "prompts", takes_value: true, help: "serve: prompt file (else mixed workload)" },
+        FlagSpec { name: "requests", takes_value: true, help: "serve: mixed-workload size" },
+        FlagSpec { name: "max-new", takes_value: true, help: "serve: default generation budget" },
         FlagSpec { name: "quiet", takes_value: false, help: "suppress progress logging" },
     ]
 }
@@ -168,13 +176,15 @@ fn run(argv: &[String]) -> Result<()> {
             let n_max = args.usize_or("n-max", 16);
             let task = build_task("math_syn", &pipe.world, 24, cfg.seed + 123);
             let mut engine = GenEngine::new(&rt, &cfg.model, false)?;
-            let noisy = afm::coordinator::noise::apply(&afm, &NoiseModel::Pcm, cfg.seed + 42);
-            let lits = noisy.to_literals()?;
-            let hw = HwConfig::afm_train(0.0).to_scalars();
+            let chip = ChipDeployment::provision(
+                &afm,
+                &NoiseModel::Pcm,
+                cfg.seed + 42,
+                &HwConfig::afm_train(0.0),
+            )?;
             let curve = tts::tts_curve(
                 &mut engine,
-                &lits,
-                &hw,
+                &chip,
                 &task.samples,
                 n_max,
                 3,
@@ -194,6 +204,66 @@ fn run(argv: &[String]) -> Result<()> {
                 ]);
             }
             table.emit(&pipe.run_dir().join("reports"), "tts");
+        }
+        "serve" => {
+            let teacher = pipe.ensure_teacher()?;
+            let shard = pipe.ensure_shard(&teacher, &cfg.datagen.strategy, cfg.datagen.tokens)?;
+            let afm_p = pipe.ensure_afm(&teacher, shard)?;
+            let nm = parse_noise(&args.get_or("noise", "pcm"))?;
+            let n_chips = args.usize_or("chips", 2).max(1);
+            let base_seed = args.u64_or("chip-seed", cfg.seed + 2026);
+            let max_new = args.usize_or("max-new", 32);
+            let hw = HwConfig::afm_train(0.0);
+            let chips: Vec<ChipDeployment> = (0..n_chips)
+                .map(|i| ChipDeployment::provision(&afm_p, &nm, base_seed + i as u64, &hw))
+                .collect::<Result<_>>()?;
+            let requests = match args.get("prompts") {
+                Some(path) => serve::prompt_file_workload(path, max_new)?,
+                None => serve::mixed_workload(args.usize_or("requests", 24), cfg.seed),
+            };
+            info!(
+                "serving {} requests on {n_chips} chip(s) [{} {}]",
+                requests.len(),
+                hw.label(),
+                nm.label()
+            );
+            let mut engine = GenEngine::new(&rt, &cfg.model, false)?;
+            rt.warm(&format!("{}_lm_sample", cfg.model))?; // keep compile out of latency
+            let mut server = InferenceServer::new(&mut engine, chips, cfg.seed)?;
+            let report = server.run(requests)?;
+
+            let mut table = Table::new(
+                &format!("serve: {n_chips} chip(s), {} requests", report.stats.completed),
+                &["req", "chip", "wait", "steps", "ms", "completion"],
+            );
+            for c in &report.completions {
+                let mut text = c.text.trim().to_string();
+                if text.len() > 40 {
+                    text.truncate(40);
+                    text.push_str("...");
+                }
+                table.row(vec![
+                    format!("{:016x}", c.id),
+                    c.chip.to_string(),
+                    c.wait_ticks.to_string(),
+                    c.decode_steps.to_string(),
+                    format!("{:.1}", c.latency_ms),
+                    text,
+                ]);
+            }
+            table.emit(&pipe.run_dir().join("reports"), "serve");
+            let s = &report.stats;
+            println!(
+                "latency p50 {:.1} ms  p95 {:.1} ms | {:.1} tok/s  {:.2} req/s | \
+                 {} tokens, {} lm_sample steps in {:.2}s",
+                report.p50_ms(),
+                report.p95_ms(),
+                s.tok_per_sec,
+                s.req_per_sec,
+                s.total_tokens,
+                s.lm_steps,
+                s.wall_secs
+            );
         }
         "pipeline" => {
             let teacher = pipe.ensure_teacher()?;

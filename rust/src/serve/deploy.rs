@@ -1,0 +1,189 @@
+//! Chip deployment: programmed parameters + a typed hardware operating
+//! point, provisioned once and reused across every decode step.
+//!
+//! Before this module existed every caller repeated the same dance:
+//! `noise::apply(&params, &nm, seed)` -> `to_literals()` -> hand-build a
+//! raw `[f32; 7]` hardware-scalar array -> wrap each scalar in a
+//! literal per execution. `ChipDeployment::provision` does all of it
+//! exactly once — one simulated conductance write (paper §3.2), one
+//! parameter upload — and callers borrow the cached literals for as
+//! many executions as they like.
+
+use anyhow::Result;
+
+use crate::config::HwConfig;
+use crate::coordinator::noise::{self, NoiseModel};
+use crate::runtime::Params;
+use crate::util::{fnv1a, fnv1a_fold, FNV_OFFSET};
+
+/// The seven runtime hardware scalars every artifact takes, in
+/// model.HW_FIELDS order: the typed replacement for the anonymous
+/// `[f32; 7]` arrays call sites used to assemble by hand.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HwScalars {
+    /// input DAC levels (2^(b-1) - 1), or -1 for the FP input path
+    pub in_levels: f32,
+    /// 1.0 = dynamic per-token input ranges (DI), -1.0 = static (SI)
+    pub dyn_input: f32,
+    /// additive weight-noise scale gamma_weight (eq. 3)
+    pub gamma_add: f32,
+    /// multiplicative weight-noise scale beta_weight (eq. 5)
+    pub beta_mul: f32,
+    /// global ADC range multiplier lambda_adc
+    pub lambda_adc: f32,
+    /// output ADC levels, or -1 for no output quantization
+    pub out_levels: f32,
+    /// in-forward STE weight-quant levels (LLM-QAT), or -1 = off
+    pub qat_levels: f32,
+}
+
+impl HwScalars {
+    pub const N: usize = 7;
+
+    fn levels(bits: u32) -> f32 {
+        if bits == 0 {
+            -1.0
+        } else {
+            ((1u32 << (bits - 1)) - 1) as f32
+        }
+    }
+
+    /// Flat scalar values in artifact argument order.
+    pub fn to_array(&self) -> [f32; Self::N] {
+        [
+            self.in_levels,
+            self.dyn_input,
+            self.gamma_add,
+            self.beta_mul,
+            self.lambda_adc,
+            self.out_levels,
+            self.qat_levels,
+        ]
+    }
+
+    /// One scalar literal per hardware field, in artifact order.
+    pub fn to_literals(&self) -> Vec<xla::Literal> {
+        self.to_array().iter().map(|&v| xla::Literal::scalar(v)).collect()
+    }
+}
+
+impl From<&HwConfig> for HwScalars {
+    fn from(hw: &HwConfig) -> HwScalars {
+        HwScalars {
+            in_levels: Self::levels(hw.in_bits),
+            dyn_input: if hw.dyn_input { 1.0 } else { -1.0 },
+            gamma_add: hw.gamma_add,
+            beta_mul: hw.beta_mul,
+            lambda_adc: hw.lambda_adc,
+            out_levels: Self::levels(hw.out_bits),
+            qat_levels: Self::levels(hw.qat_bits),
+        }
+    }
+}
+
+/// One simulated chip instance ready to serve: noise-programmed
+/// parameters (applied once at provision time, kept only as cached
+/// uploaded literals) and the typed hardware operating point.
+pub struct ChipDeployment {
+    label: String,
+    hw: HwScalars,
+    fingerprint: u64,
+    param_lits: Vec<xla::Literal>,
+    hw_lits: Vec<xla::Literal>,
+}
+
+impl ChipDeployment {
+    /// Program `params` onto a simulated chip: apply `noise` once under
+    /// `seed` (the hardware instance), upload the result, and cache the
+    /// hardware-scalar literals for `hw`.
+    pub fn provision(
+        params: &Params,
+        noise: &NoiseModel,
+        seed: u64,
+        hw: &HwConfig,
+    ) -> Result<ChipDeployment> {
+        let programmed = noise::apply(params, noise, seed);
+        let param_lits = programmed.to_literals()?;
+        let fingerprint = fingerprint_params(&programmed);
+        let scalars = HwScalars::from(hw);
+        let hw_lits = scalars.to_literals();
+        let label = if noise.is_none() {
+            format!("{} seed {seed}", hw.label())
+        } else {
+            format!("{} {} seed {seed}", hw.label(), noise.label())
+        };
+        Ok(ChipDeployment { label, hw: scalars, fingerprint, param_lits, hw_lits })
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// The typed hardware operating point this chip executes under.
+    pub fn hw(&self) -> HwScalars {
+        self.hw
+    }
+
+    /// Assemble an artifact input vector in the layout shared by all
+    /// forward/sample artifacts: params ++ `mid` ++ hw scalars ++
+    /// `tail` (per-call literals like tokens/lens go in `mid`, the
+    /// trailing rng seed in `tail`).
+    pub fn exec_inputs<'a>(
+        &'a self,
+        mid: &[&'a xla::Literal],
+        tail: &[&'a xla::Literal],
+    ) -> Vec<&'a xla::Literal> {
+        let mut inputs: Vec<&xla::Literal> =
+            Vec::with_capacity(self.param_lits.len() + mid.len() + self.hw_lits.len() + tail.len());
+        inputs.extend(self.param_lits.iter());
+        inputs.extend_from_slice(mid);
+        inputs.extend(self.hw_lits.iter());
+        inputs.extend_from_slice(tail);
+        inputs
+    }
+
+    /// FNV-1a digest of the programmed parameter bytes, computed once
+    /// at provision time — distinguishes hardware instances (used by
+    /// the mock decoder and diagnostics).
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+}
+
+fn fingerprint_params(params: &Params) -> u64 {
+    let mut h = FNV_OFFSET;
+    for key in &params.keys {
+        h = fnv1a_fold(h, fnv1a(key.as_bytes()));
+        for v in &params.map[key].data {
+            h = fnv1a_fold(h, v.to_bits() as u64);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_match_field_order_and_levels() {
+        let hw = HwConfig { in_bits: 8, qat_bits: 4, out_bits: 8, ..HwConfig::off() };
+        let s = HwScalars::from(&hw);
+        assert_eq!(s.in_levels, 127.0);
+        assert_eq!(s.dyn_input, -1.0);
+        assert_eq!(s.out_levels, 127.0);
+        assert_eq!(s.qat_levels, 7.0);
+        let arr = s.to_array();
+        assert_eq!(arr[0], s.in_levels);
+        assert_eq!(arr[4], s.lambda_adc);
+        assert_eq!(arr[6], s.qat_levels);
+    }
+
+    #[test]
+    fn fp_paths_encode_as_minus_one() {
+        let s = HwScalars::from(&HwConfig::off());
+        assert_eq!(s.in_levels, -1.0);
+        assert_eq!(s.out_levels, -1.0);
+        assert_eq!(s.qat_levels, -1.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Deterministic host-side decoder: scheduler tests without PJRT.
+//!
+//! `MockDecoder` fulfils the `Decoder` contract with pure-host logits
+//! that depend only on (a) the chip's programmed-parameter fingerprint
+//! and (b) the slot's own token window. Property (b) — per-slot
+//! independence — mirrors the real model (attention never crosses
+//! batch rows), so continuous batching must reproduce one-at-a-time
+//! decoding byte for byte; property (a) makes same-seed chip
+//! determinism observable. This is the same substitution idiom as
+//! `util::quickcheck` (no external harness offline): the scheduler's
+//! invariants stay testable in the pure-host test tier.
+
+use anyhow::Result;
+
+use super::deploy::ChipDeployment;
+use super::server::Decoder;
+use crate::util::fnv1a_fold;
+use crate::util::prng::Pcg64;
+use crate::util::tensor::Tensor;
+
+pub struct MockDecoder {
+    slots: usize,
+    seq_len: usize,
+    vocab: usize,
+    pub steps: u64,
+}
+
+impl MockDecoder {
+    pub fn new(slots: usize, seq_len: usize, vocab: usize) -> MockDecoder {
+        assert!(vocab > 3, "vocab must cover PAD/BOS/EOS plus content");
+        MockDecoder { slots, seq_len, vocab, steps: 0 }
+    }
+}
+
+impl Decoder for MockDecoder {
+    fn slots(&self) -> usize {
+        self.slots
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn decode_step(
+        &mut self,
+        chip: &ChipDeployment,
+        tokens: &[i32],
+        lens: &[i32],
+        _rng: &mut Pcg64,
+    ) -> Result<Tensor> {
+        let (b, t, v) = (self.slots, self.seq_len, self.vocab);
+        assert_eq!(tokens.len(), b * t);
+        assert_eq!(lens.len(), b);
+        let fp = chip.fingerprint();
+        let mut data = vec![0.0f32; b * v];
+        for s in 0..b {
+            // FNV-chain the slot's own window (never its neighbours)
+            let mut h = fp;
+            for j in 0..(lens[s] as usize).min(t) {
+                h = fnv1a_fold(h, tokens[s * t + j] as u64);
+            }
+            for (c, out) in data[s * v..(s + 1) * v].iter_mut().enumerate() {
+                let hv = fnv1a_fold(h, (c as u64).wrapping_mul(0x9e3779b97f4a7c15));
+                *out = (hv % 4096) as f32 / 4096.0;
+            }
+        }
+        self.steps += 1;
+        Ok(Tensor::new(vec![b, v], data))
+    }
+
+    fn steps(&self) -> u64 {
+        self.steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HwConfig;
+    use crate::coordinator::noise::NoiseModel;
+    use crate::runtime::manifest::ModelDims;
+    use crate::runtime::Params;
+    use std::collections::BTreeMap;
+
+    fn tiny_params(seed: u64) -> Params {
+        let mut shapes = BTreeMap::new();
+        shapes.insert("emb".into(), vec![8, 4]);
+        shapes.insert("wq".into(), vec![2, 4, 4]);
+        let dims = ModelDims {
+            d_model: 4,
+            n_layers: 2,
+            n_heads: 1,
+            d_ff: 8,
+            seq_len: 16,
+            vocab: 8,
+            n_cls: 0,
+            n_params: 0,
+            param_keys: vec!["emb".into(), "wq".into()],
+            param_shapes: shapes,
+        };
+        Params::init(&dims, seed)
+    }
+
+    #[test]
+    fn logits_depend_only_on_own_window() {
+        let chip =
+            ChipDeployment::provision(&tiny_params(1), &NoiseModel::None, 0, &HwConfig::off())
+                .unwrap();
+        let mut d = MockDecoder::new(2, 4, 10);
+        let mut rng = Pcg64::new(0);
+        // slot 0 identical in both batches; slot 1 differs
+        let a = d.decode_step(&chip, &[5, 6, 0, 0, 7, 0, 0, 0], &[2, 1], &mut rng).unwrap();
+        let b = d.decode_step(&chip, &[5, 6, 0, 0, 8, 9, 0, 0], &[2, 2], &mut rng).unwrap();
+        assert_eq!(a.row(0), b.row(0));
+        assert_ne!(a.row(1), b.row(1));
+    }
+
+    #[test]
+    fn chips_with_different_programming_differ() {
+        let p = tiny_params(1);
+        let a = ChipDeployment::provision(&p, &NoiseModel::Pcm, 1, &HwConfig::off()).unwrap();
+        let b = ChipDeployment::provision(&p, &NoiseModel::Pcm, 2, &HwConfig::off()).unwrap();
+        let c = ChipDeployment::provision(&p, &NoiseModel::Pcm, 1, &HwConfig::off()).unwrap();
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.fingerprint(), c.fingerprint());
+    }
+}

@@ -1,0 +1,32 @@
+//! Serving subsystem: the deployment-facing API of the coordinator.
+//!
+//! The paper's end goal is *inference on noisy analog hardware*; this
+//! module is the runtime surface that models it:
+//!
+//! * `deploy` — `ChipDeployment`: trained `Params` + a `NoiseModel` +
+//!   a hardware-instance seed + an `HwConfig` operating point, fused
+//!   into one provisioned object. Programming noise is applied once
+//!   (one simulated conductance write), the parameter literals are
+//!   uploaded once and cached, and the seven runtime hardware scalars
+//!   travel as a typed `HwScalars` instead of an anonymous `[f32; 7]`.
+//! * `server` — `InferenceServer`: a request queue with continuous
+//!   batching over the slot-based decode loop (a freed slot is refilled
+//!   from the queue immediately instead of idling until the whole chunk
+//!   drains), round-robin scheduled across N simulated chip instances,
+//!   with per-request latency/token accounting.
+//! * `workload` — the built-in mixed serving workload and a prompt-file
+//!   loader for the `afm serve` CLI subcommand.
+//! * `mock` — a deterministic host-side `Decoder` so scheduler
+//!   invariants are testable without PJRT or compiled artifacts.
+
+pub mod deploy;
+pub mod mock;
+pub mod server;
+pub mod workload;
+
+pub use deploy::{ChipDeployment, HwScalars};
+pub use server::{
+    request_id, static_chunking_steps, Completion, Decoder, InferenceServer, ServeReport,
+    ServeRequest, ServerStats,
+};
+pub use workload::{mixed_workload, prompt_file_workload};

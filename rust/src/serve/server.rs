@@ -1,0 +1,354 @@
+//! Continuous-batching inference server over a fleet of simulated
+//! chips.
+//!
+//! The generation engine's static chunking stalls every finished slot
+//! behind the longest request in its chunk. The server keeps a FIFO
+//! request queue instead: each fleet tick it (1) refills every free
+//! slot round-robin across the N chip instances, (2) runs one packed
+//! decode step per chip with at least one active slot, (3) retires
+//! finished slots, which frees them for the *next* tick's refill. A
+//! mixed-length workload therefore costs roughly `max(len)` steps plus
+//! a short tail, not `chunks * max(len)`.
+//!
+//! The decode step itself is abstracted behind `Decoder` so the
+//! scheduler is testable host-side (`serve::mock::MockDecoder`) and so
+//! future backends (sharded fleets, remote chips) can slot in.
+
+use std::collections::VecDeque;
+
+use anyhow::{anyhow, Result};
+
+use super::deploy::ChipDeployment;
+use crate::coordinator::generate::{
+    advance_slot, pack_slot, pick_token, prompt_window, GenEngine, SamplePolicy,
+};
+use crate::data::tokenizer::{Tokenizer, PAD};
+use crate::util::prng::Pcg64;
+use crate::util::stats;
+use crate::util::tensor::Tensor;
+use crate::util::{fnv1a, Timer};
+
+/// One packed decode step: the slot-level contract between the
+/// scheduler and whatever executes the model.
+pub trait Decoder {
+    /// Concurrent slots per decode step (the packed batch dimension).
+    fn slots(&self) -> usize;
+    /// Context window length T.
+    fn seq_len(&self) -> usize;
+    fn vocab(&self) -> usize;
+    /// Decode one step on `chip`: `(slots, seq_len)` tokens + per-slot
+    /// lens -> `(slots, vocab)` next-token logits.
+    fn decode_step(
+        &mut self,
+        chip: &ChipDeployment,
+        tokens: &[i32],
+        lens: &[i32],
+        rng: &mut Pcg64,
+    ) -> Result<Tensor>;
+    /// Decode executions performed over this decoder's lifetime.
+    fn steps(&self) -> u64;
+}
+
+impl Decoder for GenEngine<'_> {
+    fn slots(&self) -> usize {
+        GenEngine::slots(self)
+    }
+
+    fn seq_len(&self) -> usize {
+        GenEngine::seq_len(self)
+    }
+
+    fn vocab(&self) -> usize {
+        GenEngine::vocab(self)
+    }
+
+    fn decode_step(
+        &mut self,
+        chip: &ChipDeployment,
+        tokens: &[i32],
+        lens: &[i32],
+        rng: &mut Pcg64,
+    ) -> Result<Tensor> {
+        GenEngine::decode_step(self, chip, tokens, lens, rng)
+    }
+
+    fn steps(&self) -> u64 {
+        self.steps
+    }
+}
+
+/// One serving request: text in, budgeted completion out.
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    pub prompt: String,
+    pub max_new: usize,
+    pub stop_at_eos: bool,
+    pub policy: SamplePolicy,
+}
+
+impl ServeRequest {
+    pub fn greedy(prompt: &str, max_new: usize) -> ServeRequest {
+        ServeRequest {
+            prompt: prompt.to_string(),
+            max_new,
+            stop_at_eos: true,
+            policy: SamplePolicy::greedy(),
+        }
+    }
+}
+
+/// A finished request with its accounting.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    /// FNV-1a over (prompt bytes, arrival index) — stable across runs.
+    pub id: u64,
+    /// submission order in the workload
+    pub arrival: usize,
+    /// fleet index of the chip that served it
+    pub chip: usize,
+    pub prompt: String,
+    pub tokens: Vec<u32>,
+    pub text: String,
+    /// fleet ticks spent queued before a slot freed up
+    pub wait_ticks: u64,
+    /// decode steps its chip ran while this request held a slot
+    pub decode_steps: u64,
+    /// wall-clock submit -> completion
+    pub latency_ms: f64,
+}
+
+/// Aggregate serving metrics for one workload run.
+#[derive(Clone, Debug)]
+pub struct ServerStats {
+    pub completed: usize,
+    pub total_tokens: u64,
+    /// decode (lm_sample) executions across the whole fleet
+    pub lm_steps: u64,
+    pub wall_secs: f64,
+    pub tok_per_sec: f64,
+    pub req_per_sec: f64,
+}
+
+/// Per-request completions (in arrival order) plus aggregate stats.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub completions: Vec<Completion>,
+    pub stats: ServerStats,
+}
+
+impl ServeReport {
+    pub fn latencies_ms(&self) -> Vec<f64> {
+        self.completions.iter().map(|c| c.latency_ms).collect()
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        stats::percentile(&self.latencies_ms(), 50.0)
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        stats::percentile(&self.latencies_ms(), 95.0)
+    }
+}
+
+/// An occupied slot: the request plus its sliding token window and
+/// accumulated completion.
+struct Slot {
+    arrival: usize,
+    id: u64,
+    req: ServeRequest,
+    window: VecDeque<u32>,
+    out: Vec<u32>,
+    wait_ticks: u64,
+    chip_step_start: u64,
+}
+
+impl Slot {
+    fn new(arrival: usize, id: u64, req: ServeRequest, t: usize, wait: u64, step0: u64) -> Slot {
+        let window = prompt_window(&Tokenizer::encode_bos(&req.prompt), t);
+        Slot { arrival, id, req, window, out: Vec::new(), wait_ticks: wait, chip_step_start: step0 }
+    }
+}
+
+/// Continuous-batching scheduler over a fleet of provisioned chips
+/// sharing one decoder (the compiled artifact is chip-agnostic; the
+/// programmed parameters are per-execution inputs).
+pub struct InferenceServer<'d, D: Decoder> {
+    decoder: &'d mut D,
+    chips: Vec<ChipDeployment>,
+    rng: Pcg64,
+}
+
+impl<'d, D: Decoder> InferenceServer<'d, D> {
+    pub fn new(decoder: &'d mut D, chips: Vec<ChipDeployment>, seed: u64) -> Result<Self> {
+        if chips.is_empty() {
+            return Err(anyhow!("inference server needs at least one chip"));
+        }
+        Ok(InferenceServer { decoder, chips, rng: Pcg64::with_stream(seed, 0x5e7e) })
+    }
+
+    pub fn chips(&self) -> &[ChipDeployment] {
+        &self.chips
+    }
+
+    /// Service the whole workload; returns completions in arrival
+    /// order plus aggregate stats.
+    pub fn run(&mut self, requests: Vec<ServeRequest>) -> Result<ServeReport> {
+        let timer = Timer::start();
+        let steps0 = self.decoder.steps();
+        let (b, t) = (self.decoder.slots(), self.decoder.seq_len());
+        let n_chips = self.chips.len();
+        let n_requests = requests.len();
+
+        let mut queue: VecDeque<(usize, u64, ServeRequest)> = requests
+            .into_iter()
+            .enumerate()
+            .map(|(arrival, req)| (arrival, request_id(&req.prompt, arrival), req))
+            .collect();
+        let mut slots: Vec<Vec<Option<Slot>>> =
+            (0..n_chips).map(|_| (0..b).map(|_| None).collect()).collect();
+        let mut chip_steps = vec![0u64; n_chips];
+        let mut completions: Vec<Completion> = Vec::with_capacity(n_requests);
+        let mut total_tokens = 0u64;
+        let mut tick = 0u64;
+        let mut rr = 0usize; // round-robin chip cursor for refills
+
+        let mut tokens = vec![PAD as i32; b * t];
+        let mut lens = vec![1i32; b];
+
+        loop {
+            // ---- refill: pop the queue into free slots, round-robin
+            // across the fleet so every chip instance shares the load
+            while !queue.is_empty() {
+                let mut placed = false;
+                for k in 0..n_chips {
+                    let c = (rr + k) % n_chips;
+                    if let Some(s) = slots[c].iter().position(Option::is_none) {
+                        let (arrival, id, req) = queue.pop_front().unwrap();
+                        slots[c][s] = Some(Slot::new(arrival, id, req, t, tick, chip_steps[c]));
+                        rr = (c + 1) % n_chips;
+                        placed = true;
+                        break;
+                    }
+                }
+                if !placed {
+                    break; // fleet saturated; wait for a retire
+                }
+            }
+
+            let any_active = slots.iter().flatten().any(Option::is_some);
+            if !any_active {
+                break; // queue drained and every slot retired
+            }
+
+            // ---- one decode step per chip with work
+            for c in 0..n_chips {
+                if slots[c].iter().all(Option::is_none) {
+                    continue;
+                }
+                for v in tokens.iter_mut() {
+                    *v = PAD as i32;
+                }
+                for (s, slot) in slots[c].iter().enumerate() {
+                    match slot {
+                        Some(sl) => pack_slot(&mut tokens, &mut lens, s, t, &sl.window),
+                        None => lens[s] = 1,
+                    }
+                }
+                let logits =
+                    self.decoder.decode_step(&self.chips[c], &tokens, &lens, &mut self.rng)?;
+                chip_steps[c] += 1;
+
+                // ---- emit one token per active slot; retire finishers
+                for s in 0..b {
+                    let Some(sl) = slots[c][s].as_mut() else { continue };
+                    let next = pick_token(
+                        logits.row(s),
+                        &sl.req.policy,
+                        sl.out.len(),
+                        self.decoder.vocab(),
+                        &mut self.rng,
+                    );
+                    let before = sl.out.len();
+                    let finished = advance_slot(
+                        next,
+                        sl.req.stop_at_eos,
+                        sl.req.max_new,
+                        t,
+                        &mut sl.window,
+                        &mut sl.out,
+                    );
+                    total_tokens += (sl.out.len() - before) as u64;
+                    if finished {
+                        let sl = slots[c][s].take().unwrap();
+                        completions.push(Completion {
+                            id: sl.id,
+                            arrival: sl.arrival,
+                            chip: c,
+                            text: Tokenizer::decode(&sl.out),
+                            prompt: sl.req.prompt,
+                            tokens: sl.out,
+                            wait_ticks: sl.wait_ticks,
+                            decode_steps: chip_steps[c] - sl.chip_step_start,
+                            latency_ms: timer.ms(),
+                        });
+                    }
+                }
+            }
+            tick += 1;
+        }
+
+        completions.sort_by_key(|c| c.arrival);
+        let wall_secs = timer.secs();
+        let lm_steps = self.decoder.steps() - steps0;
+        debug_assert_eq!(lm_steps, chip_steps.iter().sum::<u64>());
+        let stats = ServerStats {
+            completed: completions.len(),
+            total_tokens,
+            lm_steps,
+            wall_secs,
+            tok_per_sec: total_tokens as f64 / wall_secs.max(1e-9),
+            req_per_sec: completions.len() as f64 / wall_secs.max(1e-9),
+        };
+        Ok(ServeReport { completions, stats })
+    }
+}
+
+/// Stable request ID: FNV-1a over the prompt bytes and arrival index.
+pub fn request_id(prompt: &str, arrival: usize) -> u64 {
+    let mut bytes = prompt.as_bytes().to_vec();
+    bytes.extend_from_slice(&(arrival as u64).to_le_bytes());
+    fnv1a(&bytes)
+}
+
+/// Decode steps static chunking would spend on `max_news` with `slots`
+/// slots per chunk (each chunk runs until its longest request drains) —
+/// the baseline continuous batching is measured against. Assumes no
+/// early EOS; every request costs `max_new.max(1)` steps.
+pub fn static_chunking_steps(max_news: &[usize], slots: usize) -> u64 {
+    max_news
+        .chunks(slots.max(1))
+        .map(|chunk| chunk.iter().map(|&n| n.max(1)).max().unwrap_or(0) as u64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_ids_are_stable_and_distinct_per_arrival() {
+        let a = request_id("Q: hi", 0);
+        assert_eq!(a, request_id("Q: hi", 0));
+        assert_ne!(a, request_id("Q: hi", 1));
+        assert_ne!(a, request_id("Q: ho", 0));
+    }
+
+    #[test]
+    fn static_chunking_charges_the_longest_slot_per_chunk() {
+        // two chunks of 4: max(4, 64) + max(4, 64)
+        assert_eq!(static_chunking_steps(&[4, 64, 4, 64, 4, 64, 4, 64], 4), 128);
+        assert_eq!(static_chunking_steps(&[5, 3], 8), 5);
+        assert_eq!(static_chunking_steps(&[], 8), 0);
+        assert_eq!(static_chunking_steps(&[0], 8), 1); // >=1 token semantics
+    }
+}

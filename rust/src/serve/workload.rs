@@ -1,0 +1,90 @@
+//! Serving workloads: the built-in mixed request stream and a
+//! prompt-file loader for `afm serve`.
+
+use anyhow::{Context, Result};
+
+use super::server::ServeRequest;
+use crate::util::prng::Pcg64;
+
+/// (prompt template, max_new) pairs spanning the benchmark families
+/// (knowledge QA, arithmetic, instruction following, safety probes)
+/// with deliberately mixed generation budgets — short requests must not
+/// stall behind long ones, which is exactly what continuous batching
+/// fixes over static chunking.
+const TEMPLATES: &[(&str, usize)] = &[
+    ("Q: what color is the zor? A: ", 16),
+    ("Q: 3+4+2? A: ", 4),
+    ("I: say mur twice.", 32),
+    ("Q: where is the blik? A: ", 16),
+    ("Q: 7-2? A: ", 4),
+    ("Q: tell me about the quil. A: ", 64),
+    ("I: say tav in caps.", 24),
+    ("Q: how to feed the quil? A: ", 48),
+];
+
+/// Deterministic mixed workload of `n` greedy requests; `seed` shuffles
+/// the arrival order so queue dynamics vary across runs.
+pub fn mixed_workload(n: usize, seed: u64) -> Vec<ServeRequest> {
+    let mut reqs: Vec<ServeRequest> = (0..n)
+        .map(|i| {
+            let (prompt, max_new) = TEMPLATES[i % TEMPLATES.len()];
+            ServeRequest::greedy(prompt, max_new)
+        })
+        .collect();
+    let mut rng = Pcg64::with_stream(seed, 0x3417);
+    rng.shuffle(&mut reqs);
+    reqs
+}
+
+/// Load one request per non-empty line; `prompt` or `prompt<TAB>max_new`.
+pub fn prompt_file_workload(path: &str, default_max_new: usize) -> Result<Vec<ServeRequest>> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading prompt file {path}"))?;
+    Ok(text
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|line| match line.rsplit_once('\t') {
+            Some((prompt, n)) => match n.trim().parse::<usize>() {
+                Ok(max_new) => ServeRequest::greedy(prompt, max_new),
+                Err(_) => ServeRequest::greedy(line, default_max_new),
+            },
+            None => ServeRequest::greedy(line, default_max_new),
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixed_workload_is_deterministic_and_mixed_length() {
+        let a = mixed_workload(16, 7);
+        let b = mixed_workload(16, 7);
+        assert_eq!(a.len(), 16);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new, y.max_new);
+        }
+        let min = a.iter().map(|r| r.max_new).min().unwrap();
+        let max = a.iter().map(|r| r.max_new).max().unwrap();
+        assert!(max >= 8 * min, "workload must mix short and long budgets");
+        // different seed, different arrival order (same multiset)
+        let c = mixed_workload(16, 8);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.prompt != y.prompt));
+    }
+
+    #[test]
+    fn prompt_file_parses_optional_budget() {
+        let dir = std::env::temp_dir().join("afm_serve_workload_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("prompts.txt");
+        std::fs::write(&path, "Q: a?\t8\n\nQ: b?\n").unwrap();
+        let reqs = prompt_file_workload(path.to_str().unwrap(), 32).unwrap();
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(reqs[0].prompt, "Q: a?");
+        assert_eq!(reqs[0].max_new, 8);
+        assert_eq!(reqs[1].max_new, 32);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -23,6 +23,24 @@ pub fn quiet() -> bool {
     QUIET.load(Ordering::Relaxed)
 }
 
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+
+/// One FNV-1a fold step over an arbitrary u64 datum. Exposed so
+/// incremental hashers (chip fingerprints, the mock decoder's window
+/// chain) stay in sync with `fnv1a` instead of re-inlining constants.
+#[inline]
+pub fn fnv1a_fold(h: u64, datum: u64) -> u64 {
+    (h ^ datum).wrapping_mul(0x100000001b3)
+}
+
+/// FNV-1a 64-bit hash: the single hashing substrate shared by the
+/// noise engine's per-channel streams, the property-test seed
+/// derivation, and the serving layer's request IDs.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    bytes.iter().fold(FNV_OFFSET, |h, &b| fnv1a_fold(h, b as u64))
+}
+
 /// Timestamped info line to stderr.
 #[macro_export]
 macro_rules! info {

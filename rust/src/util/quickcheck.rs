@@ -56,9 +56,7 @@ impl Gen {
 pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen)) {
     for i in 0..cases {
         // decorrelated but deterministic per (name, i)
-        let seed = name
-            .bytes()
-            .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+        let seed = crate::util::fnv1a(name.as_bytes())
             .wrapping_add(i.wrapping_mul(0x9e3779b97f4a7c15));
         let mut g = Gen::replay(seed);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));

@@ -29,6 +29,20 @@ pub fn mean_std_str(v: &[f64]) -> String {
     }
 }
 
+/// Linearly-interpolated percentile (`p` in [0, 100]); 0 for empty
+/// input. Used for serving-latency p50/p95 reporting.
+pub fn percentile(v: &[f64], p: f64) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let mut s = v.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = (p.clamp(0.0, 100.0) / 100.0) * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    s[lo] + (s[hi] - s[lo]) * (rank - lo as f64)
+}
+
 /// Numerically-stable log-sum-exp.
 pub fn logsumexp(v: &[f32]) -> f32 {
     let m = v.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
@@ -124,6 +138,16 @@ mod tests {
         let v = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
         assert!((mean(&v) - 5.0).abs() < 1e-12);
         assert!((std(&v) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates_and_bounds() {
+        let v = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&v, 0.0), 10.0);
+        assert_eq!(percentile(&v, 100.0), 40.0);
+        assert!((percentile(&v, 50.0) - 25.0).abs() < 1e-12);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.0], 95.0), 7.0);
     }
 
     #[test]

@@ -16,6 +16,7 @@ use afm::data::tasks::build_task;
 use afm::data::tokenizer::EOS;
 use afm::data::{Tokenizer, World, WorldCorpus};
 use afm::runtime::{lit_scalar_f32, lit_scalar_i32, lit_tokens, tensor_from_lit, Params, Runtime};
+use afm::serve::{static_chunking_steps, ChipDeployment, HwScalars, InferenceServer, ServeRequest};
 use afm::util::prng::Pcg64;
 
 const MODEL: &str = "nano";
@@ -54,9 +55,7 @@ fn exec_fwd(p: &Params, hw: &HwConfig, tokens: &[i32]) -> afm::util::tensor::Ten
     assert_eq!(tokens.len(), b * t);
     let mut inputs = p.to_literals().unwrap();
     inputs.push(lit_tokens(tokens, &[b, t]).unwrap());
-    for &x in &hw.to_scalars() {
-        inputs.push(lit_scalar_f32(x));
-    }
+    inputs.extend(HwScalars::from(hw).to_literals());
     inputs.push(lit_scalar_i32(0));
     let outs = rt.exec(&format!("{MODEL}_lm_fwd"), &inputs).unwrap();
     tensor_from_lit(&outs[0]).unwrap()
@@ -158,9 +157,7 @@ fn spinquant_high_bits_matches_fp_forward() {
     let mut inputs = spin.to_literals().unwrap();
     let dims = rt().manifest.dims(MODEL).unwrap();
     inputs.push(lit_tokens(&toks, &[rt().manifest.batch_eval, dims.seq_len]).unwrap());
-    for &x in &HwConfig::off().to_scalars() {
-        inputs.push(lit_scalar_f32(x));
-    }
+    inputs.extend(HwScalars::from(&HwConfig::off()).to_literals());
     inputs.push(lit_scalar_i32(0));
     let outs = rt().exec(&format!("{MODEL}_lm_fwd_rot"), &inputs).unwrap();
     let rot = tensor_from_lit(&outs[0]).unwrap();
@@ -214,9 +211,7 @@ fn microbatch_grads_are_deterministic_and_accumulate() {
     let run = || {
         let mut inputs = params().to_literals().unwrap();
         inputs.push(lit_tokens(&toks, &[b, t]).unwrap());
-        for &x in &HwConfig::off().to_scalars() {
-            inputs.push(lit_scalar_f32(x));
-        }
+        inputs.extend(HwScalars::from(&HwConfig::off()).to_literals());
         inputs.push(lit_scalar_i32(7));
         let outs = rt.exec(&format!("{MODEL}_ce_grads"), &inputs).unwrap();
         tensor_from_lit(&outs[1]).unwrap() // g_emb
@@ -228,18 +223,21 @@ fn microbatch_grads_are_deterministic_and_accumulate() {
 
 // ---------------------------------------------------------------- engine
 
+fn clean_chip() -> ChipDeployment {
+    ChipDeployment::provision(params(), &NoiseModel::None, 0, &HwConfig::off()).unwrap()
+}
+
 #[test]
 fn generation_is_greedy_deterministic_and_bounded() {
     let mut engine = GenEngine::new(rt(), MODEL, false).unwrap();
-    let lits = params().to_literals().unwrap();
-    let hw = HwConfig::off().to_scalars();
+    let chip = clean_chip();
     let reqs: Vec<GenRequest> = (0..3)
         .map(|i| GenRequest::from_text(&format!("Q: test {i}"), 10, SamplePolicy::greedy()))
         .collect();
     let mut rng = Pcg64::new(1);
-    let a = engine.run(&lits, &hw, &reqs, &mut rng).unwrap();
+    let a = engine.run(&chip, &reqs, &mut rng).unwrap();
     let mut rng = Pcg64::new(99); // rng must not matter for greedy
-    let b = engine.run(&lits, &hw, &reqs, &mut rng).unwrap();
+    let b = engine.run(&chip, &reqs, &mut rng).unwrap();
     assert_eq!(a, b);
     for out in &a {
         assert!(out.len() <= 10, "max_new exceeded: {}", out.len());
@@ -250,17 +248,87 @@ fn generation_is_greedy_deterministic_and_bounded() {
 #[test]
 fn sampling_respects_seeded_reproducibility() {
     let mut engine = GenEngine::new(rt(), MODEL, false).unwrap();
-    let lits = params().to_literals().unwrap();
-    let hw = HwConfig::off().to_scalars();
+    let chip = clean_chip();
     let req = vec![GenRequest::from_text("Q:", 12, SamplePolicy::softmax(1.0, 10))];
     let mut r1 = Pcg64::new(7);
     let mut r2 = Pcg64::new(7);
-    let a = engine.run(&lits, &hw, &req, &mut r1).unwrap();
-    let b = engine.run(&lits, &hw, &req, &mut r2).unwrap();
+    let a = engine.run(&chip, &req, &mut r1).unwrap();
+    let b = engine.run(&chip, &req, &mut r2).unwrap();
     assert_eq!(a, b);
     let mut r3 = Pcg64::new(8);
-    let c = engine.run(&lits, &hw, &req, &mut r3).unwrap();
+    let c = engine.run(&chip, &req, &mut r3).unwrap();
     assert_ne!(a, c, "different sampling seeds should diverge");
+}
+
+// ---------------------------------------------------------------- serve
+
+/// A short/long mixed workload (the shape continuous batching exists
+/// for); stop_at_eos off so step counts are determined by budgets.
+fn mixed_reqs(n: usize) -> Vec<ServeRequest> {
+    (0..n)
+        .map(|i| {
+            let max_new = if i % 2 == 0 { 2 } else { 8 };
+            let mut r = ServeRequest::greedy(&format!("Q: test {i}? A: "), max_new);
+            r.stop_at_eos = false;
+            r
+        })
+        .collect()
+}
+
+#[test]
+fn serve_continuous_batching_matches_one_at_a_time_decoding() {
+    let mut engine = GenEngine::new(rt(), MODEL, false).unwrap();
+    let reqs = mixed_reqs(6);
+    let chip = || ChipDeployment::provision(params(), &NoiseModel::Pcm, 11, &HwConfig::afm_train(0.0)).unwrap();
+    let mut server = InferenceServer::new(&mut engine, vec![chip()], 1).unwrap();
+    let batched = server.run(reqs.clone()).unwrap();
+    // one-request-at-a-time through the static engine path
+    let single_chip = chip();
+    let mut engine2 = GenEngine::new(rt(), MODEL, false).unwrap();
+    for (i, r) in reqs.iter().enumerate() {
+        let gr = GenRequest {
+            prompt: Tokenizer::encode_bos(&r.prompt),
+            max_new: r.max_new,
+            stop_at_eos: r.stop_at_eos,
+            policy: r.policy.clone(),
+        };
+        let mut rng = Pcg64::new(5);
+        let out = engine2.run(&single_chip, &[gr], &mut rng).unwrap();
+        assert_eq!(
+            batched.completions[i].tokens, out[0],
+            "request {i} diverged between continuous batching and sequential decode"
+        );
+    }
+}
+
+#[test]
+fn serve_same_seed_chips_are_identical_and_steps_beat_static_chunking() {
+    let b = rt().manifest.batch_gen;
+    // queue twice the slot count so refill actually happens
+    let reqs = mixed_reqs(2 * b);
+    let run = |hw_seed: u64| {
+        let chip =
+            ChipDeployment::provision(params(), &NoiseModel::Pcm, hw_seed, &HwConfig::afm_train(0.0))
+                .unwrap();
+        let mut engine = GenEngine::new(rt(), MODEL, false).unwrap();
+        InferenceServer::new(&mut engine, vec![chip], 1).unwrap().run(reqs.clone()).unwrap()
+    };
+    let r1 = run(3);
+    let r2 = run(3);
+    let texts = |r: &afm::serve::ServeReport| -> Vec<Vec<u32>> {
+        r.completions.iter().map(|c| c.tokens.clone()).collect()
+    };
+    assert_eq!(texts(&r1), texts(&r2), "same hardware seed must serve identical outputs");
+    // continuous batching refills freed slots: strictly fewer lm_sample
+    // executions than the seed's static chunking on a mixed workload
+    let budgets: Vec<usize> = reqs.iter().map(|r| r.max_new).collect();
+    let static_steps = static_chunking_steps(&budgets, b);
+    assert!(
+        r1.stats.lm_steps < static_steps,
+        "continuous {} vs static {static_steps} steps",
+        r1.stats.lm_steps
+    );
+    assert_eq!(r1.stats.completed, 2 * b);
 }
 
 // ---------------------------------------------------------------- eval

@@ -3,6 +3,7 @@
 //! report a replay seed). No PJRT needed — these are pure-host
 //! invariants, so they run fast and first.
 
+use afm::config::HwConfig;
 use afm::coordinator::noise::{self, pcm_sigma_frac, NoiseModel};
 use afm::coordinator::quant::rtn_channel;
 use afm::data::corpus::{pack_documents, Shard};
@@ -11,6 +12,10 @@ use afm::data::tokenizer::{Tokenizer, BOS, EOS, PAD};
 use afm::data::World;
 use afm::runtime::manifest::ModelDims;
 use afm::runtime::Params;
+use afm::serve::{
+    mock::MockDecoder, static_chunking_steps, ChipDeployment, HwScalars, InferenceServer,
+    ServeRequest,
+};
 use afm::util::json::Json;
 use afm::util::prng::Pcg64;
 use afm::util::quickcheck::{check, Gen};
@@ -261,7 +266,7 @@ fn random_json(g: &mut Gen, depth: usize) -> Json {
 #[test]
 fn prop_config_hw_label_roundtrips_bits() {
     check("hw-label", 60, |g| {
-        let hw = afm::config::HwConfig {
+        let hw = HwConfig {
             in_bits: g.usize_in(0, 8) as u32,
             dyn_input: g.bool(),
             gamma_add: g.f32_in(0.0, 0.1),
@@ -270,14 +275,150 @@ fn prop_config_hw_label_roundtrips_bits() {
             out_bits: if g.bool() { 8 } else { 0 },
             qat_bits: if g.bool() { 4 } else { 0 },
         };
-        let s = hw.to_scalars();
+        let s = HwScalars::from(&hw);
         // levels encode 2^(b-1)-1 or -1
         if hw.in_bits > 0 {
-            assert_eq!(s[0], ((1u32 << (hw.in_bits - 1)) - 1) as f32);
+            assert_eq!(s.in_levels, ((1u32 << (hw.in_bits - 1)) - 1) as f32);
         } else {
-            assert_eq!(s[0], -1.0);
+            assert_eq!(s.in_levels, -1.0);
         }
-        assert_eq!(s[2], hw.gamma_add);
-        assert_eq!(s[4], hw.lambda_adc);
+        assert_eq!(s.gamma_add, hw.gamma_add);
+        assert_eq!(s.lambda_adc, hw.lambda_adc);
+        // array order is the artifact argument order
+        let a = s.to_array();
+        assert_eq!(a[0], s.in_levels);
+        assert_eq!(a[2], s.gamma_add);
+        assert_eq!(a[4], s.lambda_adc);
     });
+}
+
+// ---------------------------------------------------------------- serve
+
+fn serve_params(seed: u64) -> Params {
+    Params::init(&tiny_dims(6, 8), seed)
+}
+
+fn provision(seed: u64) -> ChipDeployment {
+    ChipDeployment::provision(&serve_params(1), &NoiseModel::Pcm, seed, &HwConfig::afm_train(0.0))
+        .unwrap()
+}
+
+fn random_workload(g: &mut Gen, n: usize) -> Vec<ServeRequest> {
+    (0..n)
+        .map(|i| {
+            let mut r = ServeRequest::greedy(
+                &format!("Q: item {i} {}", g.ascii_string(12)),
+                g.usize_in(1, 12),
+            );
+            r.stop_at_eos = g.bool();
+            r
+        })
+        .collect()
+}
+
+#[test]
+fn prop_continuous_batching_matches_one_at_a_time_decoding() {
+    // greedy decode depends only on each slot's own window, so the
+    // scheduler must never change any completion — only the schedule.
+    check("serve-batch-equiv", 25, |g| {
+        let slots = g.usize_in(1, 4);
+        let reqs = random_workload(g, g.usize_in(1, 10));
+        let mut batched = MockDecoder::new(slots, 16, Tokenizer::vocab());
+        let report = InferenceServer::new(&mut batched, vec![provision(7)], 1)
+            .unwrap()
+            .run(reqs.clone())
+            .unwrap();
+        assert_eq!(report.completions.len(), reqs.len());
+        for (i, r) in reqs.into_iter().enumerate() {
+            let mut solo = MockDecoder::new(slots, 16, Tokenizer::vocab());
+            let one = InferenceServer::new(&mut solo, vec![provision(7)], 1)
+                .unwrap()
+                .run(vec![r])
+                .unwrap();
+            assert_eq!(
+                report.completions[i].tokens, one.completions[0].tokens,
+                "request {i} diverged under continuous batching"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_same_seed_deployments_serve_identical_outputs() {
+    check("serve-same-seed", 20, |g| {
+        let reqs = random_workload(g, g.usize_in(2, 8));
+        let seed = g.rng.next_u64();
+        let run = |chip_seed: u64| {
+            let mut d = MockDecoder::new(2, 16, Tokenizer::vocab());
+            InferenceServer::new(&mut d, vec![provision(chip_seed)], 1)
+                .unwrap()
+                .run(reqs.clone())
+                .unwrap()
+        };
+        let a = run(seed);
+        let b = run(seed);
+        for (x, y) in a.completions.iter().zip(&b.completions) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.id, y.id);
+        }
+        // a different hardware seed programs different weights
+        assert_ne!(provision(seed).fingerprint(), provision(seed ^ 0x5a5a).fingerprint());
+    });
+}
+
+#[test]
+fn prop_continuous_batching_never_exceeds_static_chunking_steps() {
+    check("serve-steps-bound", 30, |g| {
+        let slots = g.usize_in(1, 4);
+        let mut reqs = random_workload(g, g.usize_in(1, 12));
+        for r in reqs.iter_mut() {
+            r.stop_at_eos = false; // budgets fully determine step counts
+        }
+        let budgets: Vec<usize> = reqs.iter().map(|r| r.max_new).collect();
+        let mut d = MockDecoder::new(slots, 16, Tokenizer::vocab());
+        let report =
+            InferenceServer::new(&mut d, vec![provision(3)], 1).unwrap().run(reqs).unwrap();
+        assert!(report.stats.lm_steps <= static_chunking_steps(&budgets, slots));
+        assert_eq!(report.stats.total_tokens, budgets.iter().map(|&b| b.max(1) as u64).sum::<u64>());
+    });
+}
+
+#[test]
+fn continuous_batching_beats_static_chunking_on_mixed_budgets() {
+    // the acceptance shape: short (4) and long (64) budgets interleaved
+    // over more requests than slots
+    let slots = 4;
+    let reqs: Vec<ServeRequest> = (0..2 * slots)
+        .map(|i| {
+            let mut r = ServeRequest::greedy(&format!("Q: {i}?"), if i % 2 == 0 { 4 } else { 64 });
+            r.stop_at_eos = false;
+            r
+        })
+        .collect();
+    let budgets: Vec<usize> = reqs.iter().map(|r| r.max_new).collect();
+    let mut d = MockDecoder::new(slots, 32, Tokenizer::vocab());
+    let report = InferenceServer::new(&mut d, vec![provision(9)], 1).unwrap().run(reqs).unwrap();
+    let static_steps = static_chunking_steps(&budgets, slots);
+    assert!(
+        report.stats.lm_steps < static_steps,
+        "continuous {} vs static {static_steps}",
+        report.stats.lm_steps
+    );
+}
+
+#[test]
+fn round_robin_spreads_requests_across_the_fleet() {
+    let reqs: Vec<ServeRequest> = (0..8)
+        .map(|i| {
+            let mut r = ServeRequest::greedy(&format!("Q: {i}?"), 6);
+            r.stop_at_eos = false;
+            r
+        })
+        .collect();
+    let mut d = MockDecoder::new(2, 16, Tokenizer::vocab());
+    let chips = vec![provision(1), provision(2), provision(3)];
+    let report = InferenceServer::new(&mut d, chips, 1).unwrap().run(reqs).unwrap();
+    let served: std::collections::BTreeSet<usize> =
+        report.completions.iter().map(|c| c.chip).collect();
+    assert_eq!(served.len(), 3, "every chip instance must take load: {served:?}");
 }

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# CI gate: formatting, lints, and the pure-host + integration test
+# suites. Run from anywhere; operates on the repo root.
+#
+#   scripts/check.sh          # fmt + clippy + tests
+#   scripts/check.sh --fast   # skip clippy (pre-commit loop)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+fast=0
+[[ "${1:-}" == "--fast" ]] && fast=1
+
+echo "== cargo fmt --check"
+cargo fmt --check
+
+if [[ $fast -eq 0 ]]; then
+  echo "== cargo clippy -- -D warnings"
+  cargo clippy --all-targets -- -D warnings
+fi
+
+echo "== cargo test -q"
+cargo test -q
+
+echo "check.sh: all green"
