@@ -1,0 +1,115 @@
+//! Drift figure: average benchmark accuracy as a function of
+//! deployment age t ∈ {1s, 1h, 1d, 1mo, 1y}, with and without Global
+//! Drift Compensation (Rasch et al., arXiv:2302.08469, the result the
+//! drift subsystem reproduces).
+//!
+//! Expected shape: without compensation the power-law conductance decay
+//! g(t) = g0·(t/t0)^(-ν) collapses accuracy within hours-to-days; with
+//! GDC (a per-tile output rescale recalibrated from a small calibration
+//! batch) the analog FM holds close to its fresh accuracy out to a
+//! year. Every (age, arm) cell repeats over hardware seeds and reports
+//! mean ± std; the 1-year cell pair is appended to the BENCH json
+//! trajectory (`runs/reports/bench.jsonl`) so drift robustness is
+//! tracked across PRs.
+
+use afm::bench_support as bs;
+use afm::config::HwConfig;
+use afm::coordinator::drift;
+use afm::coordinator::evaluate::{avg_acc_per_seed, DriftSpec, Evaluator, ModelUnderTest};
+use afm::coordinator::noise::NoiseModel;
+use afm::coordinator::pipeline::Pipeline;
+use afm::coordinator::report::{ascii_chart, Table};
+use afm::util::json::Json;
+use afm::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    bs::banner("fig_drift_gdc", "accuracy vs deployment age ± GDC (Rasch et al. 2023)");
+    afm::util::set_quiet(true);
+    let zoo = bs::bench_zoo()?;
+    let pipe = Pipeline::new(&zoo.rt, zoo.cfg.clone());
+    let tasks = bs::suite(&pipe.world, 24, zoo.cfg.seed + 500);
+    let seeds = 3; // mean ± std over >= 3 simulated hardware instances
+    let ages = [
+        1.0,
+        drift::SECS_PER_HOUR,
+        drift::SECS_PER_DAY,
+        drift::SECS_PER_MONTH,
+        drift::SECS_PER_YEAR,
+    ];
+
+    let ev = Evaluator::new(&zoo.rt, &zoo.cfg.model);
+    let m = ModelUnderTest {
+        label: "analog FM (SI8-W16-O8)".into(),
+        params: zoo.afm.clone(),
+        hw: HwConfig::afm_train(0.0),
+        rot: false,
+    };
+
+    let mut table = Table::new(
+        "Drift — avg accuracy vs deployment age (analog FM, hw noise)",
+        &["age", "no GDC", "GDC"],
+    );
+    let mut series: Vec<(&str, Vec<(f64, f64)>)> =
+        vec![("no GDC", Vec::new()), ("GDC", Vec::new())];
+    // per-age [no-GDC, GDC] per-seed Avg. vectors, kept for the jsonl row
+    let mut cells: Vec<[Vec<f64>; 2]> = Vec::new();
+    for (i, &age) in ages.iter().enumerate() {
+        let mut row = vec![drift::fmt_age(age)];
+        let mut pair: [Vec<f64>; 2] = [Vec::new(), Vec::new()];
+        for (arm, gdc) in [false, true].into_iter().enumerate() {
+            let spec = DriftSpec::at(age, gdc);
+            let rep = ev.evaluate_with_drift(
+                &m,
+                &NoiseModel::Pcm,
+                &tasks,
+                seeds,
+                zoo.cfg.seed + 901,
+                Some(&spec),
+            )?;
+            let per_seed = avg_acc_per_seed(&rep);
+            row.push(stats::mean_std_str(&per_seed));
+            series[arm].1.push((i as f64, stats::mean(&per_seed)));
+            eprintln!(
+                "  [{}] age {}: avg {}",
+                if gdc { "GDC   " } else { "no GDC" },
+                drift::fmt_age(age),
+                stats::mean_std_str(&per_seed)
+            );
+            pair[arm] = per_seed;
+        }
+        table.row(row);
+        cells.push(pair);
+    }
+    table.emit(&bs::reports_dir(), "fig_drift_gdc");
+    let chart = ascii_chart("Drift (x = 1s, 1h, 1d, 1mo, 1y)", &series, 14);
+    println!("{chart}");
+    let _ = std::fs::write(bs::reports_dir().join("fig_drift_gdc_chart.txt"), &chart);
+
+    // BENCH json trajectory: the 1-year pair, plus how much of the
+    // drift-induced drop GDC recovers (the headline number)
+    let fresh = stats::mean(&cells[0][1]); // 1s, GDC == no drift to speak of
+    let year_raw = stats::mean(&cells[ages.len() - 1][0]);
+    let year_gdc = stats::mean(&cells[ages.len() - 1][1]);
+    let drop = (fresh - year_raw).max(0.0);
+    let recovered = if drop > 0.0 { ((year_gdc - year_raw) / drop).clamp(0.0, 1.0) } else { 1.0 };
+    println!(
+        "1y: no-GDC {year_raw:.2}, GDC {year_gdc:.2} (fresh {fresh:.2}) — GDC recovers \
+         {:.0}% of the drift-induced drop",
+        100.0 * recovered
+    );
+    let _ = afm::util::append_jsonl(
+        &bs::reports_dir().join("bench.jsonl"),
+        &Json::obj(vec![
+            ("bench", Json::str("drift_gdc")),
+            ("age_secs", Json::num(drift::SECS_PER_YEAR)),
+            ("seeds", Json::num(seeds as f64)),
+            ("acc_fresh", Json::num(fresh)),
+            ("acc_1y_no_gdc", Json::num(year_raw)),
+            ("acc_1y_no_gdc_std", Json::num(stats::std(&cells[ages.len() - 1][0]))),
+            ("acc_1y_gdc", Json::num(year_gdc)),
+            ("acc_1y_gdc_std", Json::num(stats::std(&cells[ages.len() - 1][1]))),
+            ("gdc_recovered_frac", Json::num(recovered)),
+        ]),
+    );
+    Ok(())
+}

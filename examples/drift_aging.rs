@@ -1,0 +1,81 @@
+//! Deployment-aging demo: a two-chip simulated PCM fleet serves a
+//! sustained workload while its conductances decay on a drift schedule
+//! (g(t) = g0·(t/t0)^(-ν)), one arm uncompensated and one with periodic
+//! Global Drift Compensation recalibration — the long-running
+//! heavy-traffic scenario where chips age *mid-workload* rather than
+//! between workloads.
+//!
+//!     cargo run --release --example drift_aging
+
+use afm::config::{Config, HwConfig};
+use afm::coordinator::drift::fmt_age;
+use afm::coordinator::generate::GenEngine;
+use afm::coordinator::noise::NoiseModel;
+use afm::coordinator::pipeline::Pipeline;
+use afm::runtime::Runtime;
+use afm::serve::{sustained_workload, ChipDeployment, DriftSchedule, InferenceServer};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::load("configs/nano.toml").map_err(|e| anyhow::anyhow!(e))?;
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let pipe = Pipeline::new(&rt, cfg.clone());
+    let teacher = pipe.ensure_teacher()?;
+    let shard = pipe.ensure_shard(&teacher, &cfg.datagen.strategy, cfg.datagen.tokens)?;
+    let afm_p = pipe.ensure_afm(&teacher, shard)?;
+
+    let hw = HwConfig::afm_train(0.0);
+    let provision_fleet = || -> anyhow::Result<Vec<ChipDeployment>> {
+        Ok(vec![
+            ChipDeployment::provision(&afm_p, &NoiseModel::Pcm, 2026, &hw)?,
+            ChipDeployment::provision(&afm_p, &NoiseModel::Pcm, 2027, &hw)?,
+        ])
+    };
+
+    // each fleet tick ages the chips by a simulated week; the GDC arm
+    // recalibrates its per-tile output scales every 8 ticks
+    let week = 7.0 * 86_400.0;
+    let arms: [(&str, DriftSchedule); 2] = [
+        ("no GDC", DriftSchedule::uncompensated(week, 1)),
+        (
+            "GDC every 8 ticks",
+            DriftSchedule {
+                secs_per_tick: week,
+                age_every_ticks: 1,
+                recalibrate_every_ticks: Some(8),
+            },
+        ),
+    ];
+
+    let requests = sustained_workload(4, 8, cfg.seed);
+    rt.warm(&format!("{}_lm_sample", cfg.model))?;
+    for (name, schedule) in arms {
+        let mut engine = GenEngine::new(&rt, &cfg.model, false)?;
+        let mut server =
+            InferenceServer::with_drift(&mut engine, provision_fleet()?, 1, schedule)?;
+        let report = server.run(requests.clone())?;
+        println!("\n--- {name} ---");
+        for c in &report.completions {
+            println!(
+                "[chip {} | age {:>4} | {:>3} steps] {:<32} -> {}",
+                c.chip,
+                fmt_age(c.chip_age_secs),
+                c.decode_steps,
+                c.prompt,
+                c.text.trim()
+            );
+        }
+        let (p50, p95) = report.p50_p95_ms();
+        let final_age = report
+            .completions
+            .iter()
+            .map(|c| c.chip_age_secs)
+            .fold(0.0f64, f64::max);
+        println!(
+            "{} requests, fleet aged to {} | p50 {p50:.1} ms p95 {p95:.1} ms | {:.1} tok/s",
+            report.stats.completed,
+            fmt_age(final_age),
+            report.stats.tok_per_sec,
+        );
+    }
+    Ok(())
+}

@@ -56,17 +56,11 @@ fn main() -> anyhow::Result<()> {
         );
     }
     let s = &report.stats;
+    let (p50, p95) = report.p50_p95_ms();
     println!(
-        "\n{} requests: latency p50 {:.1} ms, p95 {:.1} ms | {:.1} tok/s, {:.2} req/s \
+        "\n{} requests: latency p50 {p50:.1} ms, p95 {p95:.1} ms | {:.1} tok/s, {:.2} req/s \
          ({} tokens, {} lm_sample executions in {:.2}s)",
-        s.completed,
-        report.p50_ms(),
-        report.p95_ms(),
-        s.tok_per_sec,
-        s.req_per_sec,
-        s.total_tokens,
-        s.lm_steps,
-        s.wall_secs,
+        s.completed, s.tok_per_sec, s.req_per_sec, s.total_tokens, s.lm_steps, s.wall_secs,
     );
     Ok(())
 }

@@ -73,6 +73,10 @@ impl Args {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
     pub fn has(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name)
     }
@@ -126,6 +130,8 @@ mod tests {
         assert_eq!(a.usize_or("missing", 4), 4);
         assert_eq!(a.u64_or("missing", 9), 9);
         assert_eq!(a.u64_or("config", 9), 9); // unparseable -> default
+        assert_eq!(a.f64_or("missing", 2.5), 2.5);
+        assert_eq!(a.f64_or("config", 2.5), 2.5);
     }
 
     #[test]

@@ -1,0 +1,304 @@
+//! Conductance drift + Global Drift Compensation (GDC).
+//!
+//! PCM programming noise (paper §3.2 / appendix E.3) is a *write-time*
+//! effect; after programming, conductances decay as a power law
+//!
+//!     g(t) = g0 · (t / t0)^(-ν)
+//!
+//! with a per-device drift exponent ν sampled around ν ≈ 0.06 (Rasch et
+//! al., arXiv:2302.08469). Left uncompensated, the shrinking weights
+//! scale every tile's output down and accuracy collapses within hours;
+//! hardware-aware-trained models hold iso-accuracy over months only when
+//! paired with *Global Drift Compensation* — a per-tile output rescale
+//! recalibrated in the field from a small calibration batch.
+//!
+//! This module is the host-side engine for both: `apply` ages a
+//! parameter set to a target time (deterministic per hardware seed, so
+//! two simulated chips with the same seed age identically), and
+//! `gdc_calibrate` estimates the per-tile correction scales that
+//! `serve::ChipDeployment::gdc_calibrate` folds back into the deployed
+//! literals. The channel/tile convention matches `noise`: the seven
+//! block linears plus the tied embedding/head tile are analog.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::params::{Params, ANALOG_WEIGHT_KEYS};
+use crate::util::fnv1a;
+use crate::util::prng::Pcg64;
+
+pub const SECS_PER_MINUTE: f64 = 60.0;
+pub const SECS_PER_HOUR: f64 = 3_600.0;
+pub const SECS_PER_DAY: f64 = 86_400.0;
+/// 30-day month, the paper-adjacent "deployment age" unit.
+pub const SECS_PER_MONTH: f64 = 30.0 * SECS_PER_DAY;
+pub const SECS_PER_YEAR: f64 = 365.0 * SECS_PER_DAY;
+
+/// rng stream tag for drift-exponent sampling (decorrelated from the
+/// programming-noise stream 0xa1a1 at equal seeds)
+const DRIFT_STREAM: u64 = 0xd21f;
+
+/// The power-law drift law `g(t) = g0 · (t/t0)^(-ν)` with per-device
+/// exponent ν ~ N(nu_mean, nu_std²) clipped at 0.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DriftModel {
+    /// reference read time t0 (secs after programming); ages t <= t0
+    /// are clamped to t0, so a freshly-programmed chip never amplifies
+    pub t0_secs: f64,
+    /// mean drift exponent (PCM ≈ 0.06)
+    pub nu_mean: f32,
+    /// per-device exponent spread (σ of the clipped normal). The mean
+    /// decay is what GDC corrects; this spread is what it cannot — at
+    /// one year every 0.01 of ν-spread is ≈ e^(0.01·ln(3e7)) − 1 ≈ 17%
+    /// multiplicative weight noise *after* compensation, so the default
+    /// stays modest (the regime where GDC holds iso-accuracy over
+    /// months, per Rasch et al.). Raise it to model sloppier devices.
+    pub nu_std: f32,
+}
+
+impl Default for DriftModel {
+    fn default() -> Self {
+        DriftModel { t0_secs: 1.0, nu_mean: 0.06, nu_std: 0.005 }
+    }
+}
+
+impl DriftModel {
+    /// Drift disabled: every device keeps ν = 0 (identity at any age).
+    pub fn none() -> DriftModel {
+        DriftModel { nu_mean: 0.0, nu_std: 0.0, ..DriftModel::default() }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.nu_mean == 0.0 && self.nu_std == 0.0
+    }
+}
+
+/// The analog tile keys drift acts on, in a fixed order (block linears
+/// plus the tied embedding/head tile) — the same set the noise engine
+/// perturbs.
+fn analog_tiles() -> impl Iterator<Item = &'static str> {
+    ANALOG_WEIGHT_KEYS.iter().copied().chain(std::iter::once("emb"))
+}
+
+/// Age a copy of `params` to `t_secs` after programming. `seed` is the
+/// hardware instance: the per-device ν draws depend only on
+/// (seed, tile key, device index), never on t, so aging the same chip
+/// to two different times uses the same exponents — `apply(p, m, t, s)`
+/// is a pure function of its arguments, not of aging history.
+pub fn apply(params: &Params, model: &DriftModel, t_secs: f64, seed: u64) -> Params {
+    let t = t_secs.max(model.t0_secs);
+    if model.is_none() || t <= model.t0_secs {
+        return params.clone();
+    }
+    let log_ratio = (t / model.t0_secs).ln();
+    let mut out = params.clone();
+    let rng = Pcg64::with_stream(seed, DRIFT_STREAM);
+    for key in analog_tiles() {
+        if let Some(tile) = out.map.get_mut(key) {
+            let mut dev_rng = rng.fold_in(fnv1a(key.as_bytes()));
+            for g in tile.data.iter_mut() {
+                let nu = (model.nu_mean + model.nu_std * dev_rng.normal_f32()).max(0.0);
+                // g *= (t/t0)^(-ν); exact zeros stay zero (multiplicative)
+                *g *= (-(nu as f64) * log_ratio).exp() as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Calibration vectors per tile for GDC estimation (a "small
+/// calibration batch" in Rasch et al.'s terms).
+pub const GDC_CALIB_VECS: usize = 8;
+
+/// Estimate per-tile GDC output scales: push `n_vecs` seeded random
+/// input vectors through every (K, N) matrix of each analog tile in
+/// both the `reference` (programmed, pre-drift) and `drifted` parameter
+/// sets, and return scale = Σ|y_ref| / Σ|y_drift| per tile key — the
+/// factor that restores the tile's mean output magnitude. The inputs
+/// are identical across the two parameter sets, so on an undrifted chip
+/// every scale is exactly 1.
+pub fn gdc_calibrate(
+    reference: &Params,
+    drifted: &Params,
+    n_vecs: usize,
+    seed: u64,
+) -> BTreeMap<String, f32> {
+    let mut scales = BTreeMap::new();
+    for key in analog_tiles() {
+        let (Some(r), Some(d)) = (reference.map.get(key), drifted.map.get(key)) else {
+            continue;
+        };
+        debug_assert_eq!(r.shape, d.shape);
+        let (stack, k, n) = r.as_matrix_stack();
+        let mut rng = Pcg64::with_stream(seed, 0x6dc0).fold_in(fnv1a(key.as_bytes()));
+        let mut x = vec![0.0f32; k];
+        let (mut sum_r, mut sum_d) = (0.0f64, 0.0f64);
+        for _ in 0..n_vecs.max(1) {
+            for s in 0..stack {
+                rng.fill_normal(&mut x);
+                let base = s * k * n;
+                for j in 0..n {
+                    let (mut yr, mut yd) = (0.0f32, 0.0f32);
+                    for (i, &xi) in x.iter().enumerate() {
+                        yr += xi * r.data[base + i * n + j];
+                        yd += xi * d.data[base + i * n + j];
+                    }
+                    sum_r += yr.abs() as f64;
+                    sum_d += yd.abs() as f64;
+                }
+            }
+        }
+        let scale = if sum_d > 0.0 { (sum_r / sum_d) as f32 } else { 1.0 };
+        scales.insert(key.to_string(), scale);
+    }
+    scales
+}
+
+/// Fold per-tile GDC scales into `params` (the simulated equivalent of
+/// the field-side digital output rescale).
+pub fn apply_scales(params: &mut Params, scales: &BTreeMap<String, f32>) {
+    for (key, &s) in scales {
+        if let Some(tile) = params.map.get_mut(key) {
+            for v in tile.data.iter_mut() {
+                *v *= s;
+            }
+        }
+    }
+}
+
+/// Parse a human deployment age: a number with an optional unit suffix
+/// `s | m | h | d | mo | y` ("1h", "2d", "1mo", "1y"; bare numbers are
+/// seconds).
+pub fn parse_age(s: &str) -> Result<f64, String> {
+    let s = s.trim();
+    let (num, mult) = if let Some(v) = s.strip_suffix("mo") {
+        (v, SECS_PER_MONTH)
+    } else if let Some(v) = s.strip_suffix('y') {
+        (v, SECS_PER_YEAR)
+    } else if let Some(v) = s.strip_suffix('d') {
+        (v, SECS_PER_DAY)
+    } else if let Some(v) = s.strip_suffix('h') {
+        (v, SECS_PER_HOUR)
+    } else if let Some(v) = s.strip_suffix('m') {
+        (v, SECS_PER_MINUTE)
+    } else if let Some(v) = s.strip_suffix('s') {
+        (v, 1.0)
+    } else {
+        (s, 1.0)
+    };
+    let v: f64 = num.trim().parse().map_err(|_| format!("bad age '{s}'"))?;
+    if v < 0.0 {
+        return Err(format!("age '{s}' must be >= 0"));
+    }
+    Ok(v * mult)
+}
+
+/// Compact age label for tables/reports ("1s", "2.0h", "1.0y").
+pub fn fmt_age(secs: f64) -> String {
+    let units = [
+        (SECS_PER_YEAR, "y"),
+        (SECS_PER_MONTH, "mo"),
+        (SECS_PER_DAY, "d"),
+        (SECS_PER_HOUR, "h"),
+        (SECS_PER_MINUTE, "m"),
+    ];
+    for (span, unit) in units {
+        if secs >= span {
+            let v = secs / span;
+            return if (v - v.round()).abs() < 1e-9 {
+                format!("{}{unit}", v.round() as i64)
+            } else {
+                format!("{v:.1}{unit}")
+            };
+        }
+    }
+    if (secs - secs.round()).abs() < 1e-9 {
+        format!("{}s", secs.round() as i64)
+    } else {
+        format!("{secs:.1}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ModelDims;
+    use std::collections::BTreeMap;
+
+    fn dims() -> ModelDims {
+        let mut shapes = BTreeMap::new();
+        shapes.insert("emb".into(), vec![12, 8]);
+        shapes.insert("wq".into(), vec![2, 8, 8]);
+        shapes.insert("ln_f".into(), vec![8]);
+        ModelDims {
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 1,
+            d_ff: 16,
+            seq_len: 8,
+            vocab: 12,
+            n_cls: 0,
+            n_params: 0,
+            param_keys: vec!["emb".into(), "wq".into(), "ln_f".into()],
+            param_shapes: shapes,
+        }
+    }
+
+    #[test]
+    fn drift_shrinks_analog_tiles_and_spares_digital_params() {
+        let p = Params::init(&dims(), 1);
+        let aged = apply(&p, &DriftModel::default(), SECS_PER_YEAR, 3);
+        let mean_abs = |t: &crate::util::tensor::Tensor| {
+            t.data.iter().map(|v| v.abs() as f64).sum::<f64>() / t.len() as f64
+        };
+        assert!(mean_abs(aged.get("wq")) < 0.6 * mean_abs(p.get("wq")));
+        assert!(mean_abs(aged.get("emb")) < 0.6 * mean_abs(p.get("emb")));
+        assert_eq!(aged.get("ln_f"), p.get("ln_f"));
+    }
+
+    #[test]
+    fn fresh_chips_and_nu_zero_are_identity() {
+        let p = Params::init(&dims(), 2);
+        // t <= t0 clamps to the reference read: no decay
+        assert_eq!(apply(&p, &DriftModel::default(), 0.0, 7), p);
+        assert_eq!(apply(&p, &DriftModel::default(), 1.0, 7), p);
+        // ν = 0 is the identity at any age
+        assert_eq!(apply(&p, &DriftModel::none(), SECS_PER_YEAR, 7), p);
+    }
+
+    #[test]
+    fn gdc_scales_are_unity_without_drift_and_compensate_with_it() {
+        let p = Params::init(&dims(), 3);
+        let same = gdc_calibrate(&p, &p, GDC_CALIB_VECS, 9);
+        assert!(same.values().all(|&s| s == 1.0), "{same:?}");
+        let aged = apply(&p, &DriftModel::default(), SECS_PER_MONTH, 4);
+        let scales = gdc_calibrate(&p, &aged, GDC_CALIB_VECS, 9);
+        // decayed conductances need an upscale on every tile present
+        assert!(scales.len() >= 2);
+        assert!(scales.values().all(|&s| s > 1.0), "{scales:?}");
+        let mut corrected = aged.clone();
+        apply_scales(&mut corrected, &scales);
+        assert_ne!(corrected.get("wq"), aged.get("wq"));
+    }
+
+    #[test]
+    fn parse_age_units_and_errors() {
+        assert_eq!(parse_age("1s").unwrap(), 1.0);
+        assert_eq!(parse_age("90").unwrap(), 90.0);
+        assert_eq!(parse_age("2m").unwrap(), 120.0);
+        assert_eq!(parse_age("1h").unwrap(), SECS_PER_HOUR);
+        assert_eq!(parse_age("1d").unwrap(), SECS_PER_DAY);
+        assert_eq!(parse_age("1mo").unwrap(), SECS_PER_MONTH);
+        assert_eq!(parse_age("1y").unwrap(), SECS_PER_YEAR);
+        assert!(parse_age("fast").is_err());
+        assert!(parse_age("-1h").is_err());
+    }
+
+    #[test]
+    fn fmt_age_picks_the_largest_unit() {
+        assert_eq!(fmt_age(1.0), "1s");
+        assert_eq!(fmt_age(SECS_PER_HOUR), "1h");
+        assert_eq!(fmt_age(SECS_PER_MONTH), "1mo");
+        assert_eq!(fmt_age(SECS_PER_YEAR), "1y");
+        assert_eq!(fmt_age(1.5 * SECS_PER_DAY), "1.5d");
+    }
+}

@@ -13,6 +13,7 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
+use super::drift::DriftModel;
 use super::generate::{GenEngine, GenRequest, SamplePolicy};
 use super::noise::NoiseModel;
 use crate::config::HwConfig;
@@ -39,6 +40,22 @@ pub type TaskMetrics = BTreeMap<String, Vec<f64>>;
 /// task name -> metrics
 pub type EvalReport = BTreeMap<String, TaskMetrics>;
 
+/// Deployment age for an evaluation: every per-seed chip is aged to
+/// `age_secs` under `model` after provisioning, optionally followed by
+/// a GDC field calibration — the accuracy-vs-deployment-age axis.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DriftSpec {
+    pub model: DriftModel,
+    pub age_secs: f64,
+    pub gdc: bool,
+}
+
+impl DriftSpec {
+    pub fn at(age_secs: f64, gdc: bool) -> DriftSpec {
+        DriftSpec { model: DriftModel::default(), age_secs, gdc }
+    }
+}
+
 pub struct Evaluator<'a> {
     pub rt: &'a Runtime,
     pub model: String,
@@ -61,11 +78,37 @@ impl<'a> Evaluator<'a> {
         seeds: usize,
         base_seed: u64,
     ) -> Result<EvalReport> {
-        let seeds = if nm.is_none() { 1 } else { seeds.max(1) };
+        self.evaluate_with_drift(m, nm, tasks, seeds, base_seed, None)
+    }
+
+    /// `evaluate`, with each per-seed chip aged to a deployment time
+    /// before scoring (and optionally GDC-recalibrated there). This is
+    /// the engine behind `afm drift` and `benches/fig_drift_gdc.rs`.
+    pub fn evaluate_with_drift(
+        &self,
+        m: &ModelUnderTest,
+        nm: &NoiseModel,
+        tasks: &[Task],
+        seeds: usize,
+        base_seed: u64,
+        drift: Option<&DriftSpec>,
+    ) -> Result<EvalReport> {
+        // drift draws per-device ν, so an aged eval is stochastic over
+        // hardware seeds even under NoiseModel::None
+        let stochastic = !nm.is_none() || matches!(drift, Some(d) if !d.model.is_none());
+        let seeds = if stochastic { seeds.max(1) } else { 1 };
         let mut report: EvalReport = BTreeMap::new();
         for seed in 0..seeds {
             // one chip instance per seed: noise + upload happen once
-            let chip = ChipDeployment::provision(&m.params, nm, base_seed + seed as u64, &m.hw)?;
+            let mut chip =
+                ChipDeployment::provision(&m.params, nm, base_seed + seed as u64, &m.hw)?;
+            if let Some(d) = drift {
+                chip.set_drift_model(d.model);
+                chip.age_to(d.age_secs)?;
+                if d.gdc {
+                    chip.gdc_calibrate()?;
+                }
+            }
             for task in tasks {
                 let metrics = self.score_task(&chip, m.rot, task, base_seed + seed as u64)?;
                 let entry = report.entry(task.name.to_string()).or_default();
@@ -74,10 +117,17 @@ impl<'a> Evaluator<'a> {
                 }
             }
             crate::info!(
-                "eval {} [{} {}] seed {seed}: done",
+                "eval {} [{} {}{}] seed {seed}: done",
                 m.label,
                 m.hw.label(),
-                nm.label()
+                nm.label(),
+                drift
+                    .map(|d| format!(
+                        " age {}{}",
+                        super::drift::fmt_age(d.age_secs),
+                        if d.gdc { " +GDC" } else { "" }
+                    ))
+                    .unwrap_or_default()
             );
         }
         Ok(report)
@@ -296,4 +346,18 @@ pub fn avg_acc(report: &EvalReport) -> f64 {
         .map(|v| crate::util::stats::mean(v))
         .collect();
     crate::util::stats::mean(&accs)
+}
+
+/// Per-seed Avg.: the cross-task "acc" average of each hardware seed
+/// separately (per-seed vectors are index-aligned by construction), so
+/// repeated-seed sweeps can report mean ± std of the Avg. column.
+pub fn avg_acc_per_seed(report: &EvalReport) -> Vec<f64> {
+    let accs: Vec<&Vec<f64>> = report.values().filter_map(|m| m.get("acc")).collect();
+    let n_seeds = accs.iter().map(|v| v.len()).min().unwrap_or(0);
+    (0..n_seeds)
+        .map(|s| {
+            let per_task: Vec<f64> = accs.iter().map(|v| v[s]).collect();
+            crate::util::stats::mean(&per_task)
+        })
+        .collect()
 }

@@ -6,6 +6,8 @@
 //!   generation + test-time scaling)
 //! * `noise` — host-side hardware-noise injection (PCM polynomial,
 //!   gaussian, affine)
+//! * `drift` — conductance decay g(t) = g0·(t/t0)^(-ν) + global drift
+//!   compensation (the temporal axis of every deployment)
 //! * `quant` — PTQ paths (RTN, SpinQuant-lite) through AOT artifacts
 //! * `evaluate` — repeated-seed benchmark harness with mean±std
 //! * `tts` — test-time compute scaling with the synthetic PRM
@@ -13,6 +15,7 @@
 //! * `pipeline` — model-zoo orchestration (checkpoints under runs/)
 //! * `report` — paper-style tables and ASCII figures
 
+pub mod drift;
 pub mod encoder;
 pub mod evaluate;
 pub mod metrics;

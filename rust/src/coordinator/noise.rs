@@ -82,25 +82,17 @@ fn perturb_channel(chan: &mut [f32], model: &NoiseModel, rng: &mut Pcg64) {
     if cmax == 0.0 {
         return;
     }
-    match model {
-        NoiseModel::None => {}
-        NoiseModel::Gaussian { gamma } => {
-            for v in chan.iter_mut() {
-                *v += gamma * cmax * rng.normal_f32();
-            }
+    for v in chan.iter_mut() {
+        if *v == 0.0 {
+            continue; // exact zeros carry no noise (§3.2) — every model
         }
-        NoiseModel::Affine { gamma, beta } => {
-            for v in chan.iter_mut() {
-                let sigma = gamma * cmax + beta * v.abs();
-                *v += sigma * rng.normal_f32();
-            }
-        }
-        NoiseModel::Pcm => {
-            for v in chan.iter_mut() {
-                let sigma = pcm_sigma_frac(*v / cmax) * cmax;
-                *v += sigma * rng.normal_f32();
-            }
-        }
+        let sigma = match model {
+            NoiseModel::None => 0.0,
+            NoiseModel::Gaussian { gamma } => gamma * cmax,
+            NoiseModel::Affine { gamma, beta } => gamma * cmax + beta * v.abs(),
+            NoiseModel::Pcm => pcm_sigma_frac(*v / cmax) * cmax,
+        };
+        *v += sigma * rng.normal_f32();
     }
 }
 
@@ -188,11 +180,45 @@ mod tests {
 
     #[test]
     fn zero_channels_stay_zero() {
+        let models = [
+            NoiseModel::Gaussian { gamma: 0.05 },
+            NoiseModel::Affine { gamma: 0.05, beta: 0.02 },
+            NoiseModel::Pcm,
+        ];
+        // all-zero channels: no model may invent conductance
         let mut p = Params::init(&dims(), 1);
         for v in p.get_mut("wq").data.iter_mut() {
             *v = 0.0;
         }
-        let q = apply(&p, &NoiseModel::Pcm, 7);
-        assert!(q.get("wq").data.iter().all(|&v| v == 0.0));
+        for nm in &models {
+            let q = apply(&p, nm, 7);
+            assert!(q.get("wq").data.iter().all(|&v| v == 0.0), "{}", nm.label());
+        }
+    }
+
+    #[test]
+    fn exact_zeros_inside_live_channels_stay_zero() {
+        // the paper's §3.2 convention: exact zeros carry no noise even
+        // when their channel max is nonzero — for every noise model
+        let models = [
+            NoiseModel::Gaussian { gamma: 0.05 },
+            NoiseModel::Affine { gamma: 0.05, beta: 0.02 },
+            NoiseModel::Pcm,
+        ];
+        let mut p = Params::init(&dims(), 1);
+        let zero_every_third: Vec<usize> =
+            (0..p.get("wq").data.len()).filter(|i| i % 3 == 0).collect();
+        for &i in &zero_every_third {
+            p.get_mut("wq").data[i] = 0.0;
+        }
+        for nm in &models {
+            let q = apply(&p, nm, 11);
+            let wq = &q.get("wq").data;
+            for &i in &zero_every_third {
+                assert_eq!(wq[i], 0.0, "{} perturbed an exact zero", nm.label());
+            }
+            // the nonzero neighbours were perturbed
+            assert_ne!(wq, &p.get("wq").data, "{}", nm.label());
+        }
     }
 }

@@ -9,8 +9,21 @@ use anyhow::Result;
 
 use crate::runtime::{lit_scalar_f32, Params, Runtime};
 
-fn levels(bits: u32) -> f32 {
-    ((1u32 << (bits - 1)) - 1) as f32
+/// Signed symmetric quantization levels for a bit width: 2^(bits-1)-1,
+/// with the degenerate widths guarded. 0 bits means "off" and maps to
+/// the FP sentinel -1.0 (the convention `HwScalars` ships to the
+/// artifacts); 1 bit clamps to a single level instead of the formula's
+/// zero, which would turn every downstream `cmax / levels` scale
+/// infinite. This is the one bits->levels mapping in the crate —
+/// `HwScalars` and the RTN paths both call it (the unguarded copies
+/// used to underflow `bits - 1` in debug builds when `bits == 0`).
+pub fn levels(bits: u32) -> f32 {
+    match bits {
+        0 => -1.0,
+        1 => 1.0,
+        // max legal u32 shift is 31, so only bits >= 33 need clamping
+        b => ((1u32 << (b.min(32) - 1)) - 1) as f32,
+    }
 }
 
 /// Round-to-nearest per-channel quantization of every analog tile
@@ -28,8 +41,15 @@ pub fn spinquant(rt: &Runtime, model: &str, params: &Params, bits: u32) -> Resul
 }
 
 fn run_quant(rt: &Runtime, artifact: &str, params: &Params, bits: u32) -> Result<Params> {
+    let lv = levels(bits);
+    if lv <= 0.0 {
+        // 0 bits = quantization off. The quant artifacts have no
+        // sentinel path, so shipping -1.0 would corrupt every weight
+        // (scale = cmax / -1); match the host mirror's identity.
+        return Ok(params.clone());
+    }
     let mut inputs = params.to_literals()?;
-    inputs.push(lit_scalar_f32(levels(bits)));
+    inputs.push(lit_scalar_f32(lv));
     let outs = rt.exec(artifact, &inputs)?;
     Params::from_literals(&params.keys, &outs, 0)
 }
@@ -37,6 +57,9 @@ fn run_quant(rt: &Runtime, artifact: &str, params: &Params, bits: u32) -> Result
 /// Host-side per-channel RTN (testing / tooling mirror of the L1 kernel).
 pub fn rtn_channel(chan: &mut [f32], bits: u32) {
     let lv = levels(bits);
+    if lv <= 0.0 {
+        return; // 0 bits = quantization off, never an infinite scale
+    }
     let cmax = chan.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
     if cmax == 0.0 {
         return;
@@ -92,5 +115,27 @@ mod tests {
         let mut chan = vec![0.0f32; 8];
         rtn_channel(&mut chan, 4);
         assert!(chan.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn levels_guards_degenerate_bit_widths() {
+        assert_eq!(levels(0), -1.0); // off -> FP sentinel
+        assert_eq!(levels(1), 1.0); // never 0 (inf scale)
+        assert_eq!(levels(4), 7.0);
+        assert_eq!(levels(8), 127.0);
+        assert_eq!(levels(32), (i32::MAX as u32) as f32); // full-width shift is legal
+        assert_eq!(levels(33), levels(32)); // wider widths clamp, no shift overflow
+    }
+
+    #[test]
+    fn rtn_channel_is_finite_at_zero_and_one_bit() {
+        let mut off = vec![0.3f32, -1.2, 0.7];
+        let orig = off.clone();
+        rtn_channel(&mut off, 0); // quantization off: identity, no NaN
+        assert_eq!(off, orig);
+        let mut one = vec![0.3f32, -1.2, 0.7];
+        rtn_channel(&mut one, 1); // single level: snaps onto {-cmax, 0, cmax}
+        assert!(one.iter().all(|v| v.is_finite()));
+        assert_eq!(one, vec![0.0, -1.2, 1.2]);
     }
 }

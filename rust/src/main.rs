@@ -6,8 +6,10 @@
 //!   train     — HWA distillation (afm), LLM-QAT baseline
 //!   quantize  — RTN / SpinQuant post-training quantization
 //!   eval      — repeated-seed noisy benchmark evaluation
+//!   drift     — accuracy vs deployment age, with/without GDC
 //!   tts       — test-time compute scaling
 //!   serve     — continuous-batching inference over a simulated fleet
+//!               (optionally with a conductance-drift schedule)
 //!   pipeline  — all of the above, end to end
 //!
 //! Every command takes `--config <toml>` plus `--set key=value`
@@ -17,7 +19,10 @@ use anyhow::{anyhow, Result};
 
 use afm::cli::{render_help, Args, FlagSpec};
 use afm::config::{Config, HwConfig};
-use afm::coordinator::evaluate::{avg_acc, fmt_metric, Evaluator, ModelUnderTest};
+use afm::coordinator::drift::{fmt_age, parse_age};
+use afm::coordinator::evaluate::{
+    avg_acc, avg_acc_per_seed, fmt_metric, DriftSpec, Evaluator, ModelUnderTest,
+};
 use afm::coordinator::generate::GenEngine;
 use afm::coordinator::noise::NoiseModel;
 use afm::coordinator::pipeline::Pipeline;
@@ -25,8 +30,9 @@ use afm::coordinator::report::Table;
 use afm::coordinator::{quant, tts};
 use afm::data::tasks::{build_task, TABLE1_TASKS};
 use afm::info;
-use afm::runtime::Runtime;
-use afm::serve::{self, ChipDeployment, InferenceServer};
+use afm::runtime::{Params, Runtime};
+use afm::serve::{self, ChipDeployment, DriftSchedule, InferenceServer};
+use afm::util::stats;
 
 const COMMANDS: &[(&str, &str)] = &[
     ("pipeline", "teacher -> datagen -> afm/qat training -> RTN (model zoo)"),
@@ -35,6 +41,7 @@ const COMMANDS: &[(&str, &str)] = &[
     ("train", "HWA-distill a student (--kind afm|qat)"),
     ("quantize", "post-training quantization (--method rtn|spinquant)"),
     ("eval", "benchmark a checkpoint (--who teacher|afm|qat) under noise"),
+    ("drift", "accuracy vs deployment age (conductance drift, ± GDC)"),
     ("tts", "test-time compute scaling on the MATH analog"),
     ("serve", "continuous-batching inference server over N simulated chips"),
     ("help", "this message"),
@@ -54,6 +61,22 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "prompts", takes_value: true, help: "serve: prompt file (else mixed workload)" },
         FlagSpec { name: "requests", takes_value: true, help: "serve: mixed-workload size" },
         FlagSpec { name: "max-new", takes_value: true, help: "serve: default generation budget" },
+        FlagSpec { name: "ages", takes_value: true, help: "drift: comma list (1s,1h,1d,1mo,1y)" },
+        FlagSpec {
+            name: "drift",
+            takes_value: true,
+            help: "serve: chip age per fleet tick (secs or 1h/1d/1mo)",
+        },
+        FlagSpec {
+            name: "age-every",
+            takes_value: true,
+            help: "serve: re-derive drifted weights every K ticks",
+        },
+        FlagSpec {
+            name: "recal-every",
+            takes_value: true,
+            help: "serve: GDC recalibration cadence in ticks (0 = never)",
+        },
         FlagSpec { name: "quiet", takes_value: false, help: "suppress progress logging" },
     ]
 }
@@ -75,6 +98,30 @@ fn parse_noise(s: &str) -> Result<NoiseModel> {
         Ok(NoiseModel::Gaussian { gamma: g.parse().map_err(|_| anyhow!("bad gamma '{g}'"))? })
     } else {
         Err(anyhow!("unknown noise model '{s}' (none | pcm | gauss:<g>)"))
+    }
+}
+
+/// Resolve `--who` into (checkpoint, hardware config, label) — the
+/// model-under-test selection shared by `eval` and `drift`.
+fn resolve_who(
+    who: &str,
+    pipe: &Pipeline,
+    cfg: &Config,
+    teacher: &Params,
+) -> Result<(Params, HwConfig, String)> {
+    match who {
+        "teacher" => Ok((teacher.clone(), HwConfig::off(), "teacher (W16)".to_string())),
+        "afm" => {
+            let shard = pipe.ensure_shard(teacher, &cfg.datagen.strategy, cfg.datagen.tokens)?;
+            let p = pipe.ensure_afm(teacher, shard)?;
+            Ok((p, HwConfig::afm_train(0.0), "analog FM (SI8-W16-O8)".to_string()))
+        }
+        "qat" => {
+            let shard = pipe.ensure_shard(teacher, &cfg.datagen.strategy, cfg.datagen.tokens)?;
+            let p = pipe.ensure_qat(teacher, shard)?;
+            Ok((p, HwConfig::qat_train(), "LLM-QAT (SI8-W4)".to_string()))
+        }
+        other => Err(anyhow!("unknown --who {other}")),
     }
 }
 
@@ -134,22 +181,8 @@ fn run(argv: &[String]) -> Result<()> {
         }
         "eval" => {
             let teacher = pipe.ensure_teacher()?;
-            let (params, hw, label) = match args.get_or("who", "teacher").as_str() {
-                "teacher" => (teacher.clone(), HwConfig::off(), "teacher (W16)".to_string()),
-                "afm" => {
-                    let shard =
-                        pipe.ensure_shard(&teacher, &cfg.datagen.strategy, cfg.datagen.tokens)?;
-                    let p = pipe.ensure_afm(&teacher, shard)?;
-                    (p, HwConfig::afm_train(0.0), "analog FM (SI8-W16-O8)".to_string())
-                }
-                "qat" => {
-                    let shard =
-                        pipe.ensure_shard(&teacher, &cfg.datagen.strategy, cfg.datagen.tokens)?;
-                    let p = pipe.ensure_qat(&teacher, shard)?;
-                    (p, HwConfig::qat_train(), "LLM-QAT (SI8-W4)".to_string())
-                }
-                other => return Err(anyhow!("unknown --who {other}")),
-            };
+            let (params, hw, label) =
+                resolve_who(&args.get_or("who", "teacher"), &pipe, &cfg, &teacher)?;
             let nm = parse_noise(&args.get_or("noise", "none"))?;
             let seeds = args.usize_or("seeds", cfg.eval.seeds);
             let ev = Evaluator::new(&rt, &cfg.model);
@@ -168,6 +201,45 @@ fn run(argv: &[String]) -> Result<()> {
             }
             table.row(vec!["Avg.".into(), format!("{:.2}", avg_acc(&report))]);
             table.emit(&pipe.run_dir().join("reports"), "eval");
+        }
+        "drift" => {
+            let teacher = pipe.ensure_teacher()?;
+            let (params, hw, label) = resolve_who(&args.get_or("who", "afm"), &pipe, &cfg, &teacher)?;
+            let nm = parse_noise(&args.get_or("noise", "pcm"))?;
+            let seeds = args.usize_or("seeds", 3);
+            let ages: Vec<f64> = args
+                .get_or("ages", "1s,1h,1d,1mo,1y")
+                .split(',')
+                .map(|a| parse_age(a).map_err(|e| anyhow!(e)))
+                .collect::<Result<_>>()?;
+            let ev = Evaluator::new(&rt, &cfg.model);
+            let tasks: Vec<_> = TABLE1_TASKS
+                .iter()
+                .map(|n| build_task(n, &pipe.world, cfg.eval.samples_per_task, cfg.seed + 500))
+                .collect();
+            let m = ModelUnderTest { label: label.clone(), params, hw, rot: false };
+            let mut table = Table::new(
+                &format!("drift: {label} {} — avg acc vs deployment age", nm.label()),
+                &["age", "no GDC", "GDC"],
+            );
+            for &age in &ages {
+                let mut cells = vec![fmt_age(age)];
+                for gdc in [false, true] {
+                    let spec = DriftSpec::at(age, gdc);
+                    let rep = ev.evaluate_with_drift(
+                        &m,
+                        &nm,
+                        &tasks,
+                        seeds,
+                        cfg.seed + 900,
+                        Some(&spec),
+                    )?;
+                    let per_seed = avg_acc_per_seed(&rep);
+                    cells.push(stats::mean_std_str(&per_seed));
+                }
+                table.row(cells);
+            }
+            table.emit(&pipe.run_dir().join("reports"), "drift");
         }
         "tts" => {
             let teacher = pipe.ensure_teacher()?;
@@ -230,11 +302,27 @@ fn run(argv: &[String]) -> Result<()> {
             let mut engine = GenEngine::new(&rt, &cfg.model, false)?;
             rt.warm(&format!("{}_lm_sample", cfg.model))?; // keep compile out of latency
             let mut server = InferenceServer::new(&mut engine, chips, cfg.seed)?;
+            // `--drift` takes an age per tick: bare seconds or a human
+            // unit ("1h", "1d", "1mo")
+            let secs_per_tick = match args.get("drift") {
+                Some(v) => parse_age(v).map_err(|e| anyhow!(e))?,
+                None => 0.0,
+            };
+            if secs_per_tick > 0.0 {
+                let recal = args.u64_or("recal-every", 0);
+                let schedule = DriftSchedule {
+                    secs_per_tick,
+                    age_every_ticks: args.u64_or("age-every", 16),
+                    recalibrate_every_ticks: if recal > 0 { Some(recal) } else { None },
+                };
+                info!("drift schedule: {schedule:?}");
+                server.set_drift_schedule(Some(schedule));
+            }
             let report = server.run(requests)?;
 
             let mut table = Table::new(
                 &format!("serve: {n_chips} chip(s), {} requests", report.stats.completed),
-                &["req", "chip", "wait", "steps", "ms", "completion"],
+                &["req", "chip", "age", "wait", "steps", "ms", "completion"],
             );
             for c in &report.completions {
                 let mut text = c.text.trim().to_string();
@@ -245,6 +333,7 @@ fn run(argv: &[String]) -> Result<()> {
                 table.row(vec![
                     format!("{:016x}", c.id),
                     c.chip.to_string(),
+                    fmt_age(c.chip_age_secs),
                     c.wait_ticks.to_string(),
                     c.decode_steps.to_string(),
                     format!("{:.1}", c.latency_ms),
@@ -253,11 +342,10 @@ fn run(argv: &[String]) -> Result<()> {
             }
             table.emit(&pipe.run_dir().join("reports"), "serve");
             let s = &report.stats;
+            let (p50, p95) = report.p50_p95_ms();
             println!(
-                "latency p50 {:.1} ms  p95 {:.1} ms | {:.1} tok/s  {:.2} req/s | \
+                "latency p50 {p50:.1} ms  p95 {p95:.1} ms | {:.1} tok/s  {:.2} req/s | \
                  {} tokens, {} lm_sample steps in {:.2}s",
-                report.p50_ms(),
-                report.p95_ms(),
                 s.tok_per_sec,
                 s.req_per_sec,
                 s.total_tokens,

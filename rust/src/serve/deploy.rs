@@ -9,10 +9,14 @@
 //! parameter upload — and callers borrow the cached literals for as
 //! many executions as they like.
 
+use std::collections::BTreeMap;
+
 use anyhow::Result;
 
 use crate::config::HwConfig;
+use crate::coordinator::drift::{self, DriftModel};
 use crate::coordinator::noise::{self, NoiseModel};
+use crate::coordinator::quant;
 use crate::runtime::Params;
 use crate::util::{fnv1a, fnv1a_fold, FNV_OFFSET};
 
@@ -40,14 +44,6 @@ pub struct HwScalars {
 impl HwScalars {
     pub const N: usize = 7;
 
-    fn levels(bits: u32) -> f32 {
-        if bits == 0 {
-            -1.0
-        } else {
-            ((1u32 << (bits - 1)) - 1) as f32
-        }
-    }
-
     /// Flat scalar values in artifact argument order.
     pub fn to_array(&self) -> [f32; Self::N] {
         [
@@ -69,33 +65,49 @@ impl HwScalars {
 
 impl From<&HwConfig> for HwScalars {
     fn from(hw: &HwConfig) -> HwScalars {
+        // quant::levels is the single guarded bits->levels mapping
+        // (0 bits -> the -1 FP sentinel, 1 bit -> one level, never 0)
         HwScalars {
-            in_levels: Self::levels(hw.in_bits),
+            in_levels: quant::levels(hw.in_bits),
             dyn_input: if hw.dyn_input { 1.0 } else { -1.0 },
             gamma_add: hw.gamma_add,
             beta_mul: hw.beta_mul,
             lambda_adc: hw.lambda_adc,
-            out_levels: Self::levels(hw.out_bits),
-            qat_levels: Self::levels(hw.qat_bits),
+            out_levels: quant::levels(hw.out_bits),
+            qat_levels: quant::levels(hw.qat_bits),
         }
     }
 }
 
 /// One simulated chip instance ready to serve: noise-programmed
-/// parameters (applied once at provision time, kept only as cached
-/// uploaded literals) and the typed hardware operating point.
+/// parameters (applied once at provision time) and the typed hardware
+/// operating point. The programmed (pre-drift) tensors are retained so
+/// the chip carries a conductance clock: `age_to` re-derives the
+/// uploaded literals at any deployment age from the pristine
+/// programming, and `gdc_calibrate` folds the per-tile global-drift-
+/// compensation scales back in.
 pub struct ChipDeployment {
     label: String,
     hw: HwScalars,
     fingerprint: u64,
     param_lits: Vec<xla::Literal>,
     hw_lits: Vec<xla::Literal>,
+    /// programmed (post-noise, pre-drift) parameters — the reference
+    /// state both aging and GDC calibration re-derive from
+    programmed: Params,
+    /// hardware-instance seed; also drives the per-device ν draws
+    seed: u64,
+    drift: DriftModel,
+    age_secs: f64,
+    /// per-tile GDC output scales from the last field calibration
+    gdc_scales: Option<BTreeMap<String, f32>>,
 }
 
 impl ChipDeployment {
     /// Program `params` onto a simulated chip: apply `noise` once under
     /// `seed` (the hardware instance), upload the result, and cache the
-    /// hardware-scalar literals for `hw`.
+    /// hardware-scalar literals for `hw`. The chip starts at age 0
+    /// (conductances exactly as programmed) with no GDC calibration.
     pub fn provision(
         params: &Params,
         noise: &NoiseModel,
@@ -112,7 +124,96 @@ impl ChipDeployment {
         } else {
             format!("{} {} seed {seed}", hw.label(), noise.label())
         };
-        Ok(ChipDeployment { label, hw: scalars, fingerprint, param_lits, hw_lits })
+        Ok(ChipDeployment {
+            label,
+            hw: scalars,
+            fingerprint,
+            param_lits,
+            hw_lits,
+            programmed,
+            seed,
+            drift: DriftModel::default(),
+            age_secs: 0.0,
+            gdc_scales: None,
+        })
+    }
+
+    /// Override the drift law (per-chip ν statistics / t0). Takes
+    /// effect on the next `age_to`.
+    pub fn set_drift_model(&mut self, model: DriftModel) {
+        self.drift = model;
+    }
+
+    pub fn drift_model(&self) -> DriftModel {
+        self.drift
+    }
+
+    /// Deployment age of the conductances currently uploaded (secs
+    /// after programming).
+    pub fn age_secs(&self) -> f64 {
+        self.age_secs
+    }
+
+    /// Whether a GDC calibration is currently folded into the literals.
+    pub fn gdc_calibrated(&self) -> bool {
+        self.gdc_scales.is_some()
+    }
+
+    /// Age the chip to `t_secs` after programming: re-derive the
+    /// drifted tensors from the retained programmed state (never
+    /// cumulatively — aging is a pure function of (programmed, seed,
+    /// t)) and refresh the uploaded literals + fingerprint. A stored
+    /// GDC calibration keeps applying — like the field, where the
+    /// digital output scales persist until the next recalibration — so
+    /// `age_to(0.0)` restores the exact programmed state only once no
+    /// calibration is active (`clear_gdc` first, or never calibrated).
+    pub fn age_to(&mut self, t_secs: f64) -> Result<()> {
+        self.set_age(t_secs, false)
+    }
+
+    /// Run a field GDC calibration at the current age: estimate the
+    /// per-tile output scales against the programmed reference on a
+    /// small seeded calibration batch, store them, and fold them into
+    /// the uploaded literals. Recalibrating later (after more aging)
+    /// replaces the stored scales.
+    pub fn gdc_calibrate(&mut self) -> Result<()> {
+        self.set_age(self.age_secs, true)
+    }
+
+    /// `age_to` + `gdc_calibrate` in one drift derivation and one
+    /// literal upload — what a scheduled field recalibration uses.
+    pub fn age_and_recalibrate(&mut self, t_secs: f64) -> Result<()> {
+        self.set_age(t_secs, true)
+    }
+
+    /// Drop the stored GDC calibration and re-derive literals at the
+    /// current age without it.
+    pub fn clear_gdc(&mut self) -> Result<()> {
+        self.gdc_scales = None;
+        self.set_age(self.age_secs, false)
+    }
+
+    fn set_age(&mut self, t_secs: f64, recalibrate: bool) -> Result<()> {
+        self.age_secs = t_secs;
+        let drifted = drift::apply(&self.programmed, &self.drift, t_secs, self.seed);
+        if recalibrate {
+            self.gdc_scales = Some(drift::gdc_calibrate(
+                &self.programmed,
+                &drifted,
+                drift::GDC_CALIB_VECS,
+                self.seed,
+            ));
+        }
+        self.refresh(drifted)
+    }
+
+    fn refresh(&mut self, mut params: Params) -> Result<()> {
+        if let Some(scales) = &self.gdc_scales {
+            drift::apply_scales(&mut params, scales);
+        }
+        self.param_lits = params.to_literals()?;
+        self.fingerprint = fingerprint_params(&params);
+        Ok(())
     }
 
     pub fn label(&self) -> &str {
@@ -142,9 +243,10 @@ impl ChipDeployment {
         inputs
     }
 
-    /// FNV-1a digest of the programmed parameter bytes, computed once
-    /// at provision time — distinguishes hardware instances (used by
-    /// the mock decoder and diagnostics).
+    /// FNV-1a digest of the currently-uploaded parameter bytes —
+    /// distinguishes hardware instances *and* their deployment age
+    /// (refreshed by `age_to` / `gdc_calibrate`; used by the mock
+    /// decoder and diagnostics).
     pub fn fingerprint(&self) -> u64 {
         self.fingerprint
     }
@@ -185,5 +287,63 @@ mod tests {
         assert_eq!(s.in_levels, -1.0);
         assert_eq!(s.out_levels, -1.0);
         assert_eq!(s.qat_levels, -1.0);
+    }
+
+    use crate::runtime::manifest::ModelDims;
+    use std::collections::BTreeMap as Map;
+
+    fn chip(seed: u64) -> ChipDeployment {
+        let mut shapes = Map::new();
+        shapes.insert("emb".into(), vec![10, 6]);
+        shapes.insert("wq".into(), vec![2, 6, 6]);
+        let dims = ModelDims {
+            d_model: 6,
+            n_layers: 2,
+            n_heads: 1,
+            d_ff: 12,
+            seq_len: 8,
+            vocab: 10,
+            n_cls: 0,
+            n_params: 0,
+            param_keys: vec!["emb".into(), "wq".into()],
+            param_shapes: shapes,
+        };
+        let p = Params::init(&dims, 1);
+        ChipDeployment::provision(&p, &NoiseModel::Pcm, seed, &HwConfig::afm_train(0.0)).unwrap()
+    }
+
+    #[test]
+    fn aging_is_deterministic_and_reversible() {
+        let mut a = chip(5);
+        let fresh = a.fingerprint();
+        a.age_to(drift::SECS_PER_YEAR).unwrap();
+        let aged = a.fingerprint();
+        assert_ne!(aged, fresh, "a year of drift must change the conductances");
+        assert_eq!(a.age_secs(), drift::SECS_PER_YEAR);
+        // same seed + same age -> byte-identical chip state
+        let mut b = chip(5);
+        b.age_to(drift::SECS_PER_YEAR).unwrap();
+        assert_eq!(b.fingerprint(), aged);
+        // aging is re-derived from the programmed state, not cumulative
+        a.age_to(0.0).unwrap();
+        assert_eq!(a.fingerprint(), fresh);
+    }
+
+    #[test]
+    fn gdc_calibration_changes_state_and_recalibrates() {
+        let mut c = chip(9);
+        assert!(!c.gdc_calibrated());
+        c.age_to(drift::SECS_PER_MONTH).unwrap();
+        let uncompensated = c.fingerprint();
+        c.gdc_calibrate().unwrap();
+        assert!(c.gdc_calibrated());
+        assert_ne!(c.fingerprint(), uncompensated);
+        // a later aging keeps applying the stored (now stale) scales;
+        // clearing GDC returns to the raw drifted state
+        c.age_to(drift::SECS_PER_YEAR).unwrap();
+        let stale = c.fingerprint();
+        c.clear_gdc().unwrap();
+        assert!(!c.gdc_calibrated());
+        assert_ne!(c.fingerprint(), stale);
     }
 }

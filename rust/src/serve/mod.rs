@@ -9,11 +9,16 @@
 //!   (one simulated conductance write), the parameter literals are
 //!   uploaded once and cached, and the seven runtime hardware scalars
 //!   travel as a typed `HwScalars` instead of an anonymous `[f32; 7]`.
+//!   Every chip carries a conductance clock: `age_to(t_secs)` re-derives
+//!   the literals under power-law drift (`coordinator::drift`) and
+//!   `gdc_calibrate()` folds in Global Drift Compensation.
 //! * `server` — `InferenceServer`: a request queue with continuous
 //!   batching over the slot-based decode loop (a freed slot is refilled
 //!   from the queue immediately instead of idling until the whole chunk
 //!   drains), round-robin scheduled across N simulated chip instances,
-//!   with per-request latency/token accounting.
+//!   with per-request latency/token/chip-age accounting. An optional
+//!   `DriftSchedule` ages the fleet at tick marks (with an optional GDC
+//!   recalibration cadence) so chips degrade mid-workload.
 //! * `workload` — the built-in mixed serving workload and a prompt-file
 //!   loader for the `afm serve` CLI subcommand.
 //! * `mock` — a deterministic host-side `Decoder` so scheduler
@@ -26,7 +31,7 @@ pub mod workload;
 
 pub use deploy::{ChipDeployment, HwScalars};
 pub use server::{
-    request_id, static_chunking_steps, Completion, Decoder, InferenceServer, ServeReport,
-    ServeRequest, ServerStats,
+    request_id, static_chunking_steps, Completion, Decoder, DriftSchedule, InferenceServer,
+    ServeReport, ServeRequest, ServerStats,
 };
-pub use workload::{mixed_workload, prompt_file_workload};
+pub use workload::{mixed_workload, prompt_file_workload, sustained_workload};

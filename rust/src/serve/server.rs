@@ -115,6 +115,9 @@ pub struct Completion {
     pub decode_steps: u64,
     /// wall-clock submit -> completion
     pub latency_ms: f64,
+    /// simulated conductance age of the serving chip at retirement
+    /// (secs since programming; 0 when no drift schedule is active)
+    pub chip_age_secs: f64,
 }
 
 /// Aggregate serving metrics for one workload run.
@@ -141,12 +144,51 @@ impl ServeReport {
         self.completions.iter().map(|c| c.latency_ms).collect()
     }
 
+    /// Several latency percentiles from one sort of the latency vector
+    /// — the report path for anything that wants more than one cut.
+    pub fn latency_percentiles_ms(&self, ps: &[f64]) -> Vec<f64> {
+        stats::percentiles(&self.latencies_ms(), ps)
+    }
+
+    /// (p50, p95) latency in one pass; prefer this over separate
+    /// `p50_ms()` + `p95_ms()` calls, which each re-sort.
+    pub fn p50_p95_ms(&self) -> (f64, f64) {
+        let ps = self.latency_percentiles_ms(&[50.0, 95.0]);
+        (ps[0], ps[1])
+    }
+
     pub fn p50_ms(&self) -> f64 {
         stats::percentile(&self.latencies_ms(), 50.0)
     }
 
     pub fn p95_ms(&self) -> f64 {
         stats::percentile(&self.latencies_ms(), 95.0)
+    }
+}
+
+/// Conductance clock for a serving run: how fast simulated chips age
+/// while the fleet serves, and how often the (cheap) aging re-derive
+/// and the (costlier) GDC field recalibration run. All cadences are in
+/// fleet ticks, so a fixed (seed, schedule) pair is byte-deterministic
+/// — no wall-clock leaks into the simulated clock.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DriftSchedule {
+    /// simulated seconds of chip age per fleet tick
+    pub secs_per_tick: f64,
+    /// re-derive drifted conductances every K ticks (aging granularity)
+    pub age_every_ticks: u64,
+    /// re-run GDC calibration every N ticks — an independent grid from
+    /// the aging marks; a recalibration tick also brings the chip to
+    /// the current simulated age. None = never recalibrate (chips
+    /// serve on increasingly stale — or no — compensation)
+    pub recalibrate_every_ticks: Option<u64>,
+}
+
+impl DriftSchedule {
+    /// Age chips by `secs_per_tick` every `age_every_ticks` ticks,
+    /// without any GDC recalibration.
+    pub fn uncompensated(secs_per_tick: f64, age_every_ticks: u64) -> DriftSchedule {
+        DriftSchedule { secs_per_tick, age_every_ticks, recalibrate_every_ticks: None }
     }
 }
 
@@ -176,6 +218,10 @@ pub struct InferenceServer<'d, D: Decoder> {
     decoder: &'d mut D,
     chips: Vec<ChipDeployment>,
     rng: Pcg64,
+    drift: Option<DriftSchedule>,
+    /// fleet ticks carried across `run` calls, so a long-running server
+    /// keeps aging through successive workloads
+    clock_ticks: u64,
 }
 
 impl<'d, D: Decoder> InferenceServer<'d, D> {
@@ -183,11 +229,61 @@ impl<'d, D: Decoder> InferenceServer<'d, D> {
         if chips.is_empty() {
             return Err(anyhow!("inference server needs at least one chip"));
         }
-        Ok(InferenceServer { decoder, chips, rng: Pcg64::with_stream(seed, 0x5e7e) })
+        Ok(InferenceServer {
+            decoder,
+            chips,
+            rng: Pcg64::with_stream(seed, 0x5e7e),
+            drift: None,
+            clock_ticks: 0,
+        })
+    }
+
+    /// A server whose chips age while it serves.
+    pub fn with_drift(
+        decoder: &'d mut D,
+        chips: Vec<ChipDeployment>,
+        seed: u64,
+        schedule: DriftSchedule,
+    ) -> Result<Self> {
+        let mut s = Self::new(decoder, chips, seed)?;
+        s.set_drift_schedule(Some(schedule));
+        Ok(s)
+    }
+
+    pub fn set_drift_schedule(&mut self, schedule: Option<DriftSchedule>) {
+        self.drift = schedule;
     }
 
     pub fn chips(&self) -> &[ChipDeployment] {
         &self.chips
+    }
+
+    /// Advance the conductance clock by one fleet tick. Aging marks and
+    /// recalibration marks are independent grids: a recalibration tick
+    /// ages the chip to the current simulated time as a side effect (a
+    /// field recalibration reads the conductances as they are *now*),
+    /// in one drift derivation + one literal upload per chip.
+    fn tick_drift(&mut self, tick: u64) -> Result<()> {
+        let Some(sch) = self.drift else {
+            return Ok(());
+        };
+        if tick == 0 {
+            return Ok(());
+        }
+        let do_age = tick % sch.age_every_ticks.max(1) == 0;
+        let do_recal = matches!(sch.recalibrate_every_ticks, Some(n) if tick % n.max(1) == 0);
+        if !do_age && !do_recal {
+            return Ok(());
+        }
+        let age = tick as f64 * sch.secs_per_tick;
+        for chip in &mut self.chips {
+            if do_recal {
+                chip.age_and_recalibrate(age)?;
+            } else {
+                chip.age_to(age)?;
+            }
+        }
+        Ok(())
     }
 
     /// Service the whole workload; returns completions in arrival
@@ -240,6 +336,10 @@ impl<'d, D: Decoder> InferenceServer<'d, D> {
                 break; // queue drained and every slot retired
             }
 
+            // ---- conductance clock: age the fleet at schedule marks
+            // (global ticks, so aging continues across `run` calls)
+            self.tick_drift(self.clock_ticks + tick)?;
+
             // ---- one decode step per chip with work
             for c in 0..n_chips {
                 if slots[c].iter().all(Option::is_none) {
@@ -290,6 +390,7 @@ impl<'d, D: Decoder> InferenceServer<'d, D> {
                             wait_ticks: sl.wait_ticks,
                             decode_steps: chip_steps[c] - sl.chip_step_start,
                             latency_ms: timer.ms(),
+                            chip_age_secs: self.chips[c].age_secs(),
                         });
                     }
                 }
@@ -297,6 +398,7 @@ impl<'d, D: Decoder> InferenceServer<'d, D> {
             tick += 1;
         }
 
+        self.clock_ticks += tick;
         completions.sort_by_key(|c| c.arrival);
         let wall_secs = timer.secs();
         let lm_steps = self.decoder.steps() - steps0;

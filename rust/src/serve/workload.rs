@@ -36,6 +36,16 @@ pub fn mixed_workload(n: usize, seed: u64) -> Vec<ServeRequest> {
     reqs
 }
 
+/// Deterministic long-haul stream for drift-schedule serving: `waves`
+/// independently-shuffled mixed workloads back to back, so a fleet
+/// stays saturated long enough for its conductance clock to matter
+/// (the ROADMAP's long-running heavy-traffic scenario — chips age
+/// mid-workload instead of between workloads).
+pub fn sustained_workload(waves: usize, per_wave: usize, seed: u64) -> Vec<ServeRequest> {
+    let mut rng = Pcg64::with_stream(seed, 0x3418);
+    (0..waves).flat_map(|_| mixed_workload(per_wave, rng.next_u64())).collect()
+}
+
 /// Load one request per non-empty line; `prompt` or `prompt<TAB>max_new`.
 pub fn prompt_file_workload(path: &str, default_max_new: usize) -> Result<Vec<ServeRequest>> {
     let text =
@@ -72,6 +82,22 @@ mod tests {
         // different seed, different arrival order (same multiset)
         let c = mixed_workload(16, 8);
         assert!(a.iter().zip(&c).any(|(x, y)| x.prompt != y.prompt));
+    }
+
+    #[test]
+    fn sustained_workload_is_deterministic_and_wave_shuffled() {
+        let a = sustained_workload(3, 8, 5);
+        let b = sustained_workload(3, 8, 5);
+        assert_eq!(a.len(), 24);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new, y.max_new);
+        }
+        // waves reshuffle: the stream is not one workload repeated
+        let differs = |x: &[ServeRequest], y: &[ServeRequest]| {
+            x.iter().zip(y).any(|(a, b)| a.prompt != b.prompt)
+        };
+        assert!(differs(&a[..8], &a[8..16]) || differs(&a[..8], &a[16..24]));
     }
 
     #[test]

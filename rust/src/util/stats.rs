@@ -30,17 +30,29 @@ pub fn mean_std_str(v: &[f64]) -> String {
 }
 
 /// Linearly-interpolated percentile (`p` in [0, 100]); 0 for empty
-/// input. Used for serving-latency p50/p95 reporting.
+/// input. Used for serving-latency p50/p95 reporting. For several
+/// percentiles of the same data use `percentiles`, which sorts once.
 pub fn percentile(v: &[f64], p: f64) -> f64 {
+    percentiles(v, &[p])[0]
+}
+
+/// Linearly-interpolated percentiles over one sorted copy of `v` —
+/// one sort regardless of how many cut points are requested. Empty
+/// input yields 0 for every percentile.
+pub fn percentiles(v: &[f64], ps: &[f64]) -> Vec<f64> {
     if v.is_empty() {
-        return 0.0;
+        return vec![0.0; ps.len()];
     }
     let mut s = v.to_vec();
     s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-    let rank = (p.clamp(0.0, 100.0) / 100.0) * (s.len() - 1) as f64;
-    let lo = rank.floor() as usize;
-    let hi = rank.ceil() as usize;
-    s[lo] + (s[hi] - s[lo]) * (rank - lo as f64)
+    ps.iter()
+        .map(|&p| {
+            let rank = (p.clamp(0.0, 100.0) / 100.0) * (s.len() - 1) as f64;
+            let lo = rank.floor() as usize;
+            let hi = rank.ceil() as usize;
+            s[lo] + (s[hi] - s[lo]) * (rank - lo as f64)
+        })
+        .collect()
 }
 
 /// Numerically-stable log-sum-exp.
@@ -105,11 +117,25 @@ pub fn kl_to_uniform(v: &[f32], bins: usize) -> f64 {
 }
 
 /// Histogram of `v` into `bins` equal-width buckets over [lo, hi].
+/// Degenerate ranges (`hi <= lo`, or a NaN bound) have zero-width bins,
+/// so nothing is countable: the result is all-zero instead of the NaN
+/// division silently piling every sample into bin 0. NaN *samples* are
+/// dropped like any other out-of-range value. `bins == 0` returns an
+/// empty vector.
 pub fn histogram(v: &[f32], lo: f32, hi: f32, bins: usize) -> Vec<usize> {
+    if bins == 0 {
+        return Vec::new();
+    }
     let mut hist = vec![0usize; bins];
+    // NaN bounds compare as not-greater and land here too
+    if !matches!(hi.partial_cmp(&lo), Some(std::cmp::Ordering::Greater)) {
+        return hist;
+    }
     let w = (hi - lo) / bins as f32;
     for &x in v {
-        if x < lo || x > hi {
+        // contains() also drops NaN samples, which fail both `< lo`
+        // and `> hi` and would otherwise land in bin 0
+        if !(lo..=hi).contains(&x) {
             continue;
         }
         let b = (((x - lo) / w) as usize).min(bins - 1);
@@ -188,5 +214,32 @@ mod tests {
         let v = vec![0.0f32, 0.5, 1.0, 2.0];
         let h = histogram(&v, 0.0, 1.0, 2);
         assert_eq!(h.iter().sum::<usize>(), 3); // 2.0 out of range
+    }
+
+    #[test]
+    fn histogram_degenerate_ranges_are_safe() {
+        let v = vec![1.0f32, 1.0, 1.0];
+        // hi == lo used to divide by a zero bin width (NaN -> bin 0)
+        assert_eq!(histogram(&v, 1.0, 1.0, 4), vec![0, 0, 0, 0]);
+        // inverted and NaN bounds count nothing
+        assert_eq!(histogram(&v, 2.0, 0.0, 3), vec![0, 0, 0]);
+        assert_eq!(histogram(&v, f32::NAN, 1.0, 2), vec![0, 0]);
+        // NaN samples are dropped, not binned into bin 0
+        assert_eq!(histogram(&[f32::NAN, 1.0], 0.0, 2.0, 2), vec![0, 1]);
+        // zero bins: empty result, no panic
+        assert_eq!(histogram(&v, 0.0, 1.0, 0), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn percentiles_match_percentile_with_one_sort() {
+        let v = [40.0, 10.0, 30.0, 20.0];
+        let ps = percentiles(&v, &[0.0, 50.0, 95.0, 100.0]);
+        assert_eq!(ps[0], 10.0);
+        assert!((ps[1] - 25.0).abs() < 1e-12);
+        assert_eq!(ps[3], 40.0);
+        for (i, &p) in [0.0, 50.0, 95.0, 100.0].iter().enumerate() {
+            assert_eq!(ps[i], percentile(&v, p));
+        }
+        assert_eq!(percentiles(&[], &[50.0, 95.0]), vec![0.0, 0.0]);
     }
 }

@@ -7,7 +7,8 @@
 use std::sync::OnceLock;
 
 use afm::config::HwConfig;
-use afm::coordinator::evaluate::{Evaluator, ModelUnderTest};
+use afm::coordinator::drift;
+use afm::coordinator::evaluate::{DriftSpec, Evaluator, ModelUnderTest};
 use afm::coordinator::generate::{GenEngine, GenRequest, SamplePolicy};
 use afm::coordinator::noise::{self, NoiseModel};
 use afm::coordinator::quant;
@@ -329,6 +330,65 @@ fn serve_same_seed_chips_are_identical_and_steps_beat_static_chunking() {
         r1.stats.lm_steps
     );
     assert_eq!(r1.stats.completed, 2 * b);
+}
+
+// ---------------------------------------------------------------- drift
+
+#[test]
+fn aged_chip_perturbs_artifact_output_and_is_reversible() {
+    let hw = HwConfig::afm_train(0.0);
+    let mut chip = ChipDeployment::provision(params(), &NoiseModel::Pcm, 11, &hw).unwrap();
+    let fresh_fp = chip.fingerprint();
+    let mut engine = GenEngine::new(rt(), MODEL, false).unwrap();
+    let (b, t) = (engine.slots(), engine.seq_len());
+    let tokens = vec![5i32; b * t];
+    let lens = vec![3i32; b];
+    let mut rng = Pcg64::new(1);
+    let fresh = engine.decode_step(&chip, &tokens, &lens, &mut rng).unwrap();
+
+    // a year of drift changes the uploaded literals and the real logits
+    chip.age_to(drift::SECS_PER_YEAR).unwrap();
+    assert_ne!(chip.fingerprint(), fresh_fp);
+    let mut rng = Pcg64::new(1);
+    let aged = engine.decode_step(&chip, &tokens, &lens, &mut rng).unwrap();
+    assert_ne!(fresh.data, aged.data, "drifted conductances must move the logits");
+    assert!(aged.data.iter().all(|v| v.is_finite()));
+
+    // GDC calibration executes and changes the state again
+    chip.gdc_calibrate().unwrap();
+    let mut rng = Pcg64::new(1);
+    let gdc = engine.decode_step(&chip, &tokens, &lens, &mut rng).unwrap();
+    assert_ne!(aged.data, gdc.data);
+
+    // aging is derived from the retained programmed state: age 0
+    // restores the exact provisioned chip
+    chip.clear_gdc().unwrap();
+    chip.age_to(0.0).unwrap();
+    assert_eq!(chip.fingerprint(), fresh_fp);
+}
+
+#[test]
+fn drift_eval_runs_with_and_without_gdc() {
+    let world = World::new(11);
+    let tasks = vec![build_task("mmlu_syn", &world, 16, 3)];
+    let ev = Evaluator::new(rt(), MODEL);
+    let m = ModelUnderTest {
+        label: "it".into(),
+        params: params().clone(),
+        hw: HwConfig::off(),
+        rot: false,
+    };
+    for gdc in [false, true] {
+        let spec = DriftSpec::at(drift::SECS_PER_MONTH, gdc);
+        let rep = ev
+            .evaluate_with_drift(&m, &NoiseModel::None, &tasks, 2, 78, Some(&spec))
+            .unwrap();
+        // drift is stochastic over hardware seeds even without noise
+        assert_eq!(rep["mmlu_syn"]["acc"].len(), 2);
+        for v in &rep["mmlu_syn"]["acc"] {
+            assert!((0.0..=100.0).contains(v));
+        }
+    }
 }
 
 // ---------------------------------------------------------------- eval

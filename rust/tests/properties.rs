@@ -4,6 +4,7 @@
 //! invariants, so they run fast and first.
 
 use afm::config::HwConfig;
+use afm::coordinator::drift::{self, DriftModel};
 use afm::coordinator::noise::{self, pcm_sigma_frac, NoiseModel};
 use afm::coordinator::quant::rtn_channel;
 use afm::data::corpus::{pack_documents, Shard};
@@ -13,8 +14,8 @@ use afm::data::World;
 use afm::runtime::manifest::ModelDims;
 use afm::runtime::Params;
 use afm::serve::{
-    mock::MockDecoder, static_chunking_steps, ChipDeployment, HwScalars, InferenceServer,
-    ServeRequest,
+    mock::MockDecoder, static_chunking_steps, sustained_workload, ChipDeployment, DriftSchedule,
+    HwScalars, InferenceServer, ServeRequest,
 };
 use afm::util::json::Json;
 use afm::util::prng::Pcg64;
@@ -136,6 +137,82 @@ fn prop_noise_is_unbiased_and_scales() {
         let expect = gamma as f64 * stats::mean(&cmaxes.iter().map(|&x| x as f64).collect::<Vec<_>>());
         assert!((s - expect).abs() / expect < 0.25, "std {s} vs {expect}");
     });
+}
+
+// ---------------------------------------------------------------- drift
+
+#[test]
+fn prop_drift_decay_is_monotone_in_t() {
+    // |g(t2)| <= |g(t1)| elementwise for t1 <= t2: ν is clipped at 0,
+    // so conductance magnitude never recovers on its own
+    check("drift-monotone", 30, |g| {
+        let dims = tiny_dims(g.usize_in(4, 12), g.usize_in(4, 12));
+        let p = Params::init(&dims, g.seed);
+        let seed = g.rng.next_u64();
+        let t1 = g.f32_in(1.0, 1e6) as f64;
+        let t2 = t1 * (1.0 + g.f32_in(0.1, 100.0) as f64);
+        let a = drift::apply(&p, &DriftModel::default(), t1, seed);
+        let b = drift::apply(&p, &DriftModel::default(), t2, seed);
+        for key in ["wq", "emb"] {
+            for (x, y) in a.get(key).data.iter().zip(&b.get(key).data) {
+                assert!(y.abs() <= x.abs() + 1e-12, "grew: |{y}| > |{x}|");
+                assert_eq!(x.signum(), y.signum()); // decay never flips sign
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_drift_identity_cases_and_determinism() {
+    check("drift-identity-determinism", 30, |g| {
+        let dims = tiny_dims(g.usize_in(4, 10), g.usize_in(4, 10));
+        let p = Params::init(&dims, g.seed);
+        let seed = g.rng.next_u64();
+        let t = g.f32_in(1.0, 1e7) as f64;
+        // ν = 0 is the identity at any age; t <= t0 clamps to t0
+        assert_eq!(drift::apply(&p, &DriftModel::none(), t, seed), p);
+        assert_eq!(drift::apply(&p, &DriftModel::default(), 0.0, seed), p);
+        // deterministic per (seed, t); different seeds draw different ν
+        let a = drift::apply(&p, &DriftModel::default(), t, seed);
+        let b = drift::apply(&p, &DriftModel::default(), t, seed);
+        assert_eq!(a, b);
+        let c = drift::apply(&p, &DriftModel::default(), t, seed ^ 0x5a5a);
+        assert_ne!(a.get("wq"), c.get("wq"));
+    });
+}
+
+#[test]
+fn gdc_restores_per_tile_mean_output_within_tolerance() {
+    // After a year of drift the mean |tile output| collapses to
+    // ~(t/t0)^-ν of the programmed level; the GDC rescale must bring it
+    // back within a few percent (estimated and verified on independent
+    // calibration batches).
+    let dims = tiny_dims(16, 16);
+    let p = Params::init(&dims, 42);
+    let aged = drift::apply(&p, &DriftModel::default(), drift::SECS_PER_YEAR, 7);
+    let scales = drift::gdc_calibrate(&p, &aged, 32, 1001);
+    let mut corrected = aged.clone();
+    drift::apply_scales(&mut corrected, &scales);
+    // per-tile output level relative to the programmed reference,
+    // measured on an independent verification batch (different seed
+    // than calibration): gdc_calibrate(a, b) returns Σ|y_a| / Σ|y_b|
+    let level = |q: &Params, key: &str| drift::gdc_calibrate(q, &p, 32, 2002)[key];
+    for key in ["wq", "emb"] {
+        let drift_level = level(&aged, key);
+        let corrected_level = level(&corrected, key);
+        assert!(
+            drift_level < 0.7,
+            "{key}: a year of drift must visibly shrink outputs, got {drift_level}"
+        );
+        assert!(
+            (corrected_level - 1.0).abs() < 0.2,
+            "{key}: GDC must restore mean output, got {corrected_level}"
+        );
+        assert!(
+            (corrected_level - 1.0).abs() < (drift_level - 1.0).abs() / 3.0,
+            "{key}: GDC {corrected_level} barely improves on drift {drift_level}"
+        );
+    }
 }
 
 // ---------------------------------------------------------------- tensor
@@ -276,11 +353,12 @@ fn prop_config_hw_label_roundtrips_bits() {
             qat_bits: if g.bool() { 4 } else { 0 },
         };
         let s = HwScalars::from(&hw);
-        // levels encode 2^(b-1)-1 or -1
-        if hw.in_bits > 0 {
-            assert_eq!(s.in_levels, ((1u32 << (hw.in_bits - 1)) - 1) as f32);
-        } else {
-            assert_eq!(s.in_levels, -1.0);
+        // levels encode 2^(b-1)-1, with the degenerate widths guarded:
+        // 0 bits is the FP sentinel, 1 bit clamps to one level (never 0)
+        match hw.in_bits {
+            0 => assert_eq!(s.in_levels, -1.0),
+            1 => assert_eq!(s.in_levels, 1.0),
+            b => assert_eq!(s.in_levels, ((1u32 << (b - 1)) - 1) as f32),
         }
         assert_eq!(s.gamma_add, hw.gamma_add);
         assert_eq!(s.lambda_adc, hw.lambda_adc);
@@ -404,6 +482,80 @@ fn continuous_batching_beats_static_chunking_on_mixed_budgets() {
         "continuous {} vs static {static_steps}",
         report.stats.lm_steps
     );
+}
+
+#[test]
+fn prop_drift_schedule_serving_is_deterministic_and_reports_age() {
+    // acceptance shape: fixed (seed, schedule) -> byte-identical
+    // completions, with per-completion chip_age_secs accounting
+    check("serve-drift-deterministic", 15, |g| {
+        let schedule = DriftSchedule {
+            secs_per_tick: g.f32_in(10.0, 1e5) as f64,
+            age_every_ticks: g.usize_in(1, 4) as u64,
+            recalibrate_every_ticks: if g.bool() { Some(g.usize_in(2, 8) as u64) } else { None },
+        };
+        let reqs = sustained_workload(2, g.usize_in(4, 8), g.seed);
+        let run = || {
+            let mut d = MockDecoder::new(2, 16, Tokenizer::vocab());
+            InferenceServer::with_drift(&mut d, vec![provision(21)], 1, schedule)
+                .unwrap()
+                .run(reqs.clone())
+                .unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.completions.len(), reqs.len());
+        for (x, y) in a.completions.iter().zip(&b.completions) {
+            assert_eq!(x.tokens, y.tokens, "drift serving must be deterministic");
+            assert_eq!(x.chip_age_secs, y.chip_age_secs);
+        }
+        // ages are reported on the schedule's grid and never regress
+        // in retirement order (the conductance clock only moves forward)
+        let mut by_retire: Vec<&afm::serve::Completion> = a.completions.iter().collect();
+        // tie-break equal wall timestamps by age so coarse timers can't
+        // order two same-instant retirements backwards
+        by_retire.sort_by(|x, y| {
+            (x.latency_ms, x.chip_age_secs)
+                .partial_cmp(&(y.latency_ms, y.chip_age_secs))
+                .unwrap()
+        });
+        let mut last = 0.0f64;
+        for c in by_retire {
+            assert!(c.chip_age_secs >= last);
+            let ticks = c.chip_age_secs / schedule.secs_per_tick;
+            assert!((ticks - ticks.round()).abs() < 1e-9, "age off the tick grid");
+            last = c.chip_age_secs;
+        }
+    });
+}
+
+#[test]
+fn drift_schedule_changes_outputs_and_gdc_recalibration_counters_it() {
+    // a chip aging mid-workload must eventually serve different tokens
+    // than a fresh chip, and a GDC-recalibrated fleet differs from an
+    // uncompensated one at the same age
+    let reqs = sustained_workload(4, 8, 3);
+    let run = |schedule: Option<DriftSchedule>| {
+        let mut d = MockDecoder::new(2, 16, Tokenizer::vocab());
+        let mut srv = InferenceServer::new(&mut d, vec![provision(33)], 1).unwrap();
+        srv.set_drift_schedule(schedule);
+        srv.run(reqs.clone()).unwrap()
+    };
+    let fresh = run(None);
+    // one month per tick: drastic aging so the fingerprint moves fast
+    let aged = run(Some(DriftSchedule::uncompensated(2_592_000.0, 1)));
+    let gdc = run(Some(DriftSchedule {
+        secs_per_tick: 2_592_000.0,
+        age_every_ticks: 1,
+        recalibrate_every_ticks: Some(1),
+    }));
+    let toks = |r: &afm::serve::ServeReport| -> Vec<Vec<u32>> {
+        r.completions.iter().map(|c| c.tokens.clone()).collect()
+    };
+    assert!(fresh.completions.iter().all(|c| c.chip_age_secs == 0.0));
+    assert!(aged.completions.iter().any(|c| c.chip_age_secs > 0.0));
+    assert_ne!(toks(&fresh), toks(&aged), "drift must perturb served tokens");
+    assert_ne!(toks(&aged), toks(&gdc), "GDC recalibration must change the aged fleet");
 }
 
 #[test]

@@ -2,13 +2,33 @@
 # CI gate: formatting, lints, and the pure-host + integration test
 # suites. Run from anywhere; operates on the repo root.
 #
-#   scripts/check.sh          # fmt + clippy + tests
-#   scripts/check.sh --fast   # skip clippy (pre-commit loop)
+#   scripts/check.sh            # fmt + clippy + tests
+#   scripts/check.sh --fast     # skip clippy (pre-commit loop)
+#   scripts/check.sh --offline  # no network: cargo must resolve the
+#                               # xla git dependency from a vendored /
+#                               # [patch]-ed local checkout (see
+#                               # Cargo.toml header and CHANGES.md PR 1)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 fast=0
-[[ "${1:-}" == "--fast" ]] && fast=1
+offline=0
+for arg in "$@"; do
+  case "$arg" in
+    --fast) fast=1 ;;
+    --offline) offline=1 ;;
+    *) echo "unknown flag $arg (--fast | --offline)" >&2; exit 2 ;;
+  esac
+done
+
+if [[ $offline -eq 1 ]]; then
+  # Fail loudly at resolve time instead of hanging on the network. The
+  # xla dependency is a git ref; offline environments must vendor it
+  # (`cargo vendor`) or point a [patch."https://github.com/..."] entry
+  # at a local checkout before this passes.
+  export CARGO_NET_OFFLINE=true
+  echo "== offline mode: CARGO_NET_OFFLINE=true (vendored xla checkout required)"
+fi
 
 echo "== cargo fmt --check"
 cargo fmt --check
