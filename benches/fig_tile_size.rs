@@ -1,0 +1,92 @@
+//! Tile-size figure: average benchmark accuracy as a function of the
+//! crossbar tile partitioning, from the pre-tile "one infinite
+//! crossbar" fiction down to small R×C tiles.
+//!
+//! Physically a chip is an array of fixed-size tiles, each with its own
+//! programming-noise instance, drift trajectory, and ADC range (Rasch
+//! et al., arXiv:2302.08469; Luquin et al., arXiv:2506.00004) — tile
+//! partitioning is what makes accuracy projections credible. Expected
+//! shape: accuracy moves as tiles shrink, because each tile normalizes
+//! noise against its *local* channel-segment range instead of the
+//! whole-tensor channel max, and draws independent per-tile noise
+//! instances. Every (tile size) cell repeats over hardware seeds and
+//! reports mean ± std; the full sweep is appended as one `tile_size`
+//! row to the BENCH json trajectory (`runs/reports/bench.jsonl`) so
+//! tile-level robustness is tracked across PRs.
+
+use std::collections::BTreeMap;
+
+use afm::bench_support as bs;
+use afm::config::HwConfig;
+use afm::coordinator::evaluate::{avg_acc_per_seed, Evaluator, ModelUnderTest};
+use afm::coordinator::noise::NoiseModel;
+use afm::coordinator::pipeline::Pipeline;
+use afm::coordinator::report::{ascii_chart, Table};
+use afm::util::json::Json;
+use afm::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    bs::banner("fig_tile_size", "accuracy vs crossbar tile size (tile-level modeling)");
+    afm::util::set_quiet(true);
+    let zoo = bs::bench_zoo()?;
+    let pipe = Pipeline::new(&zoo.rt, zoo.cfg.clone());
+    let tasks = bs::suite(&pipe.world, 24, zoo.cfg.seed + 500);
+    // acceptance floor is >= 3 sizes x >= 2 seeds; run 4 x 3. Nano has
+    // d_model 64, so every analog matrix splits at 32x32 (the 64x64
+    // attention linears 4-way, the 64x256 MLP linears 16-way, the
+    // 98x64 embedding 8-way) and the grids refine 4x per halving.
+    let seeds = 3;
+    let sizes: [(usize, usize); 4] = [(0, 0), (32, 32), (16, 16), (8, 8)];
+
+    let ev = Evaluator::new(&zoo.rt, &zoo.cfg.model);
+    let m = ModelUnderTest {
+        label: "analog FM (SI8-W16-O8)".into(),
+        params: zoo.afm.clone(),
+        hw: HwConfig::afm_train(0.0),
+        rot: false,
+    };
+    let runs = ev.tile_size_sweep(&m, &NoiseModel::Pcm, &tasks, seeds, zoo.cfg.seed + 903, &sizes)?;
+
+    let mut table = Table::new(
+        "Tile size — avg accuracy vs crossbar partitioning (analog FM, hw noise)",
+        &["tiles", "Avg."],
+    );
+    let mut series: Vec<(f64, f64)> = Vec::new();
+    let mut row_fields: BTreeMap<String, Json> = BTreeMap::new();
+    for (i, (label, rep)) in runs.iter().enumerate() {
+        let per_seed = avg_acc_per_seed(rep);
+        table.row(vec![label.clone(), stats::mean_std_str(&per_seed)]);
+        series.push((i as f64, stats::mean(&per_seed)));
+        eprintln!("  tiles {label}: avg {}", stats::mean_std_str(&per_seed));
+        row_fields.insert(format!("acc_{label}"), Json::num(stats::mean(&per_seed)));
+        row_fields.insert(format!("acc_{label}_std"), Json::num(stats::std(&per_seed)));
+    }
+    table.emit(&bs::reports_dir(), "fig_tile_size");
+    let chart = ascii_chart(
+        "Tile size (x = full, 32x32, 16x16, 8x8)",
+        &[("avg acc", series.clone())],
+        14,
+    );
+    println!("{chart}");
+    let _ = std::fs::write(bs::reports_dir().join("fig_tile_size_chart.txt"), &chart);
+
+    // BENCH json trajectory: one row carrying the whole sweep plus the
+    // headline gap between the infinite-crossbar fiction and the
+    // smallest physical tile
+    let full = series.first().map(|&(_, y)| y).unwrap_or(0.0);
+    let smallest = series.last().map(|&(_, y)| y).unwrap_or(0.0);
+    println!(
+        "full-matrix {full:.2} vs {} {smallest:.2} — tile partitioning shifts avg acc by {:+.2}",
+        runs.last().map(|(l, _)| l.as_str()).unwrap_or("-"),
+        smallest - full
+    );
+    row_fields.insert("bench".into(), Json::str("tile_size"));
+    row_fields.insert("seeds".into(), Json::num(seeds as f64));
+    row_fields.insert(
+        "sizes".into(),
+        Json::str(runs.iter().map(|(l, _)| l.as_str()).collect::<Vec<_>>().join(",")),
+    );
+    row_fields.insert("acc_full_minus_smallest".into(), Json::num(full - smallest));
+    let _ = afm::util::append_jsonl(&bs::reports_dir().join("bench.jsonl"), &Json::Obj(row_fields));
+    Ok(())
+}

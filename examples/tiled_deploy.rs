@@ -1,0 +1,141 @@
+//! Crossbar-tile floorplanning demo, pure host side (no artifacts or
+//! PJRT needed): partition a model's analog tensors into fixed-size
+//! tiles, account for the tiles a die must provide, provision
+//! floorplanned chips — including the failure when a model doesn't
+//! fit — and show that per-tile noise/drift instances change the
+//! programmed chip while oversized tiles reproduce the pre-tile
+//! deployment byte for byte.
+//!
+//!     cargo run --release --example tiled_deploy
+
+use std::collections::BTreeMap;
+
+use afm::config::HwConfig;
+use afm::coordinator::drift;
+use afm::coordinator::noise::NoiseModel;
+use afm::coordinator::tiles::{Floorplan, TileMap, Tiling};
+use afm::runtime::manifest::ModelDims;
+use afm::runtime::Params;
+use afm::serve::ChipDeployment;
+
+/// A nano-like parameter set built host-side (same shapes the manifest
+/// would carry), so the demo runs without compiled artifacts.
+fn demo_params() -> Params {
+    let (d, v, layers) = (64, 98, 2);
+    let mut shapes = BTreeMap::new();
+    shapes.insert("emb".into(), vec![v, d]);
+    for key in ["wq", "wk", "wv", "wo"] {
+        shapes.insert(key.into(), vec![layers, d, d]);
+    }
+    for (key, (k, n)) in [("wg", (d, 4 * d)), ("wu", (d, 4 * d)), ("wd", (4 * d, d))] {
+        shapes.insert(key.into(), vec![layers, k, n]);
+    }
+    shapes.insert("ln_f".into(), vec![d]);
+    let param_keys: Vec<String> =
+        ["emb", "wq", "wk", "wv", "wo", "wg", "wu", "wd", "ln_f"].map(String::from).to_vec();
+    let dims = ModelDims {
+        d_model: d,
+        n_layers: layers,
+        n_heads: 4,
+        d_ff: 4 * d,
+        seq_len: 64,
+        vocab: v,
+        n_cls: 0,
+        n_params: 0,
+        param_keys: param_keys.clone(),
+        param_shapes: shapes,
+    };
+    Params::init(&dims, 7)
+}
+
+fn main() -> anyhow::Result<()> {
+    let params = demo_params();
+
+    // ---- 1. tile-map accounting: how many crossbar tiles does the
+    // model occupy under each partitioning?
+    println!("tile map (analog tensors only):");
+    for tiling in [Tiling::unbounded(), Tiling::new(32, 32), Tiling::new(16, 16)] {
+        let map = TileMap::of(&params, tiling);
+        println!("  {:>8} tiles under {} tiling", map.total_tiles(), tiling.label());
+    }
+    let tiling = Tiling::new(32, 32);
+    let map = TileMap::of(&params, tiling);
+    for e in &map.entries {
+        println!(
+            "    {:>4}: {} x {}x{} grid = {} tiles",
+            e.key,
+            e.stack,
+            e.grid.n_tile_rows(),
+            e.grid.n_tile_cols(),
+            e.tiles()
+        );
+    }
+
+    // ---- 2. floorplanned provisioning: a die with enough tiles
+    // accepts the model, a smaller die refuses with the shortfall
+    let hw = HwConfig::afm_train(0.0).with_tiles(32, 32);
+    let needed = map.total_tiles();
+    let chip =
+        ChipDeployment::provision_floorplanned(&params, &NoiseModel::Pcm, 2026, &hw, needed)?;
+    println!(
+        "\nprovisioned [{}]: {} of {} tiles in use",
+        chip.label(),
+        chip.tiles_used(),
+        chip.tile_capacity()
+    );
+    let shortfall = match ChipDeployment::provision_floorplanned(
+        &params,
+        &NoiseModel::Pcm,
+        2026,
+        &hw,
+        needed - 1,
+    ) {
+        Ok(_) => unreachable!("a die one tile short must reject the model"),
+        Err(e) => e,
+    };
+    println!("die with {} tiles: {shortfall}", needed - 1);
+    println!(
+        "Hermes-preset die: {}x{} tiles, {} per chip",
+        Floorplan::hermes().tiling.rows,
+        Floorplan::hermes().tiling.cols,
+        Floorplan::hermes().capacity_tiles
+    );
+
+    // ---- 3. per-tile hardware instances: a real grid programs
+    // different (independent per-tile) noise than the whole-matrix
+    // fiction; oversized tiles reproduce it byte for byte
+    let legacy =
+        ChipDeployment::provision(&params, &NoiseModel::Pcm, 2026, &HwConfig::afm_train(0.0))?;
+    let huge = ChipDeployment::provision(
+        &params,
+        &NoiseModel::Pcm,
+        2026,
+        &HwConfig::afm_train(0.0).with_tiles(4096, 4096),
+    )?;
+    println!(
+        "\nfingerprints: whole-matrix {:016x} | 32x32 tiles {:016x} | oversized tiles {:016x}",
+        legacy.fingerprint(),
+        chip.fingerprint(),
+        huge.fingerprint()
+    );
+    assert_eq!(huge.fingerprint(), legacy.fingerprint(), "oversized tiles must match legacy");
+    assert_ne!(chip.fingerprint(), legacy.fingerprint(), "real grids draw per-tile noise");
+
+    // ---- 4. the conductance clock runs per tile too: each tile drifts
+    // on its own ν draws and earns its own GDC scale at recalibration
+    let mut aged = ChipDeployment::provision_floorplanned(
+        &params,
+        &NoiseModel::Pcm,
+        2026,
+        &hw,
+        needed,
+    )?;
+    aged.age_to(drift::SECS_PER_MONTH)?;
+    let before = aged.fingerprint();
+    aged.gdc_calibrate()?;
+    println!(
+        "aged 1mo: fingerprint {before:016x} -> GDC-recalibrated {:016x} (per-tile scales)",
+        aged.fingerprint()
+    );
+    Ok(())
+}

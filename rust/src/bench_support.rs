@@ -12,15 +12,22 @@ use crate::coordinator::pipeline::Pipeline;
 use crate::runtime::{Params, Runtime};
 use crate::util::stats;
 
+/// Timing result of one `bench` call.
 pub struct BenchResult {
+    /// bench label
     pub name: String,
+    /// timed iterations
     pub iters: usize,
+    /// mean wall time per iteration
     pub mean_ms: f64,
+    /// std of the per-iteration wall times
     pub std_ms: f64,
+    /// derived throughput (value, unit), when work_items was given
     pub throughput: Option<(f64, &'static str)>,
 }
 
 impl BenchResult {
+    /// One aligned report line (name, iters, mean ± std, throughput).
     pub fn row(&self) -> String {
         let tp = self
             .throughput
@@ -58,10 +65,15 @@ pub fn bench<T>(
 
 /// Shared bench environment: runtime + nano-model zoo.
 pub struct Zoo {
+    /// artifact runtime
     pub rt: Runtime,
+    /// bench configuration
     pub cfg: Config,
+    /// FP teacher checkpoint
     pub teacher: Params,
+    /// analog-FM (HWA-distilled) checkpoint
     pub afm: Params,
+    /// LLM-QAT baseline checkpoint
     pub qat: Params,
 }
 

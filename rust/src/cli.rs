@@ -6,22 +6,31 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: subcommand + valued flags + switches + `--set`
+/// config overrides.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// the subcommand (first positional argument)
     pub cmd: String,
     flags: BTreeMap<String, String>,
     switches: Vec<String>,
+    /// collected `--set key=value` config overrides, in order
     pub set: Vec<String>,
 }
 
 /// Declarative flag spec used for validation + help text.
 pub struct FlagSpec {
+    /// flag name without the leading `--`
     pub name: &'static str,
+    /// whether the flag consumes a value argument
     pub takes_value: bool,
+    /// one-line help text
     pub help: &'static str,
 }
 
 impl Args {
+    /// Parse `argv` against `specs`; unknown flags and missing values
+    /// are errors so typos fail loudly.
     pub fn parse(argv: &[String], specs: &[FlagSpec]) -> Result<Args, String> {
         let mut out = Args::default();
         let mut it = argv.iter().peekable();
@@ -53,35 +62,43 @@ impl Args {
         Ok(out)
     }
 
+    /// The value of a flag, if it was given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(String::as_str)
     }
 
+    /// The value of a flag, or `default` when absent.
     pub fn get_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// A flag parsed as usize, or `default` when absent / unparseable.
     pub fn usize_or(&self, name: &str, default: usize) -> usize {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// A flag parsed as u64, or `default` when absent / unparseable.
     pub fn u64_or(&self, name: &str, default: u64) -> u64 {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// A flag parsed as f32, or `default` when absent / unparseable.
     pub fn f32_or(&self, name: &str, default: f32) -> f32 {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// A flag parsed as f64, or `default` when absent / unparseable.
     pub fn f64_or(&self, name: &str, default: f64) -> f64 {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Whether a valueless switch was given.
     pub fn has(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name)
     }
 }
 
+/// Render the `afm help` text from the command and flag tables.
 pub fn render_help(cmds: &[(&str, &str)], specs: &[FlagSpec]) -> String {
     let mut s = String::from("afm — Analog Foundation Models coordinator\n\nCOMMANDS\n");
     for (c, h) in cmds {

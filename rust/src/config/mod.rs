@@ -7,6 +7,7 @@
 
 pub mod toml;
 
+use crate::coordinator::tiles::Tiling;
 use crate::util::json::Json;
 use toml::Doc;
 
@@ -31,9 +32,16 @@ pub struct HwConfig {
     pub out_bits: u32,
     /// in-forward W-bit STE weight quantization (LLM-QAT); 0 = off
     pub qat_bits: u32,
+    /// crossbar tile rows R (0 = one tile spans all matrix rows — the
+    /// pre-tile whole-matrix behavior)
+    pub tile_rows: usize,
+    /// crossbar tile columns C (0 = one tile spans all matrix columns)
+    pub tile_cols: usize,
 }
 
 impl HwConfig {
+    /// Every simulation knob off: FP input/output paths, no noise, no
+    /// QAT, whole-matrix tiles.
     pub fn off() -> HwConfig {
         HwConfig {
             in_bits: 0,
@@ -43,7 +51,21 @@ impl HwConfig {
             lambda_adc: 12.0,
             out_bits: 0,
             qat_bits: 0,
+            tile_rows: 0,
+            tile_cols: 0,
         }
+    }
+
+    /// The same operating point on an R×C-tiled chip (0 along an axis
+    /// keeps that axis unbounded).
+    pub fn with_tiles(self, tile_rows: usize, tile_cols: usize) -> HwConfig {
+        HwConfig { tile_rows, tile_cols, ..self }
+    }
+
+    /// The crossbar partitioning this operating point implies —
+    /// `Tiling::unbounded()` when both tile dims are 0.
+    pub fn tiling(&self) -> Tiling {
+        Tiling::new(self.tile_rows, self.tile_cols)
     }
 
     /// Paper's analog-foundation-model training config: SI8 + O8 + noise
@@ -57,7 +79,8 @@ impl HwConfig {
         HwConfig { in_bits: 8, qat_bits: 4, ..HwConfig::off() }
     }
 
-    /// Paper-style label, e.g. "SI8-W4-O8" or "DI8-W16".
+    /// Paper-style label, e.g. "SI8-W4-O8" or "DI8-W16"; tiled
+    /// operating points append the grid, e.g. "SI8-W16-O8-T256x256".
     pub fn label(&self) -> String {
         let mut s = String::new();
         if self.in_bits > 0 {
@@ -70,6 +93,9 @@ impl HwConfig {
         if self.out_bits > 0 {
             s.push_str(&format!("-O{}", self.out_bits));
         }
+        if !self.tiling().is_unbounded() {
+            s.push_str(&format!("-T{}", self.tiling().label()));
+        }
         s
     }
 }
@@ -81,6 +107,7 @@ pub struct TrainConfig {
     pub steps: usize,
     /// microbatches accumulated per optimizer step
     pub accum: usize,
+    /// peak learning rate
     pub lr: f32,
     /// distillation temperature (2.0 for Phi-3, 1.0 for Llama)
     pub temperature: f32,
@@ -92,6 +119,7 @@ pub struct TrainConfig {
     pub init_steps: f32,
     /// input-range decay after the init phase
     pub beta_decay: f32,
+    /// hardware operating point trained under
     pub hw: HwConfig,
 }
 
@@ -119,7 +147,9 @@ pub struct DatagenConfig {
     /// "sss" (pure softmax) | "rgs" (random + greedy + softmax) |
     /// "sgs" (softmax + greedy + softmax)
     pub strategy: String,
+    /// top-k restriction (0 = full softmax)
     pub top_k: usize,
+    /// sampling temperature
     pub temperature: f32,
 }
 
@@ -132,7 +162,9 @@ impl Default for DatagenConfig {
 /// Evaluation harness parameters (§3.2: 10 seeds per noisy benchmark).
 #[derive(Clone, Debug)]
 pub struct EvalConfig {
+    /// hardware seeds every noisy eval repeats over
     pub seeds: usize,
+    /// samples per benchmark task
     pub samples_per_task: usize,
 }
 
@@ -147,14 +179,21 @@ impl Default for EvalConfig {
 pub struct Config {
     /// model config name in the artifact manifest (nano/micro/base)
     pub model: String,
+    /// base seed every stochastic stage derives from
     pub seed: u64,
+    /// compiled-artifact directory
     pub artifacts_dir: String,
+    /// checkpoint/report output directory
     pub runs_dir: String,
     /// teacher pretraining steps (digital)
     pub pretrain_steps: usize,
+    /// teacher pretraining learning rate
     pub pretrain_lr: f32,
+    /// student training parameters
     pub train: TrainConfig,
+    /// synthetic-data generation parameters
     pub datagen: DatagenConfig,
+    /// evaluation harness parameters
     pub eval: EvalConfig,
 }
 
@@ -175,6 +214,7 @@ impl Default for Config {
 }
 
 impl Config {
+    /// Build a config from a parsed TOML doc, defaulting absent keys.
     pub fn from_doc(doc: &Doc) -> Config {
         let d = Config::default();
         let t = TrainConfig::default();
@@ -203,6 +243,8 @@ impl Config {
                     lambda_adc: doc.f32_or("hw.lambda_adc", hw.lambda_adc),
                     out_bits: doc.usize_or("hw.out_bits", 8) as u32,
                     qat_bits: doc.usize_or("hw.qat_bits", 0) as u32,
+                    tile_rows: doc.usize_or("hw.tile_rows", 0),
+                    tile_cols: doc.usize_or("hw.tile_cols", 0),
                 },
             },
             datagen: DatagenConfig {
@@ -221,6 +263,7 @@ impl Config {
         }
     }
 
+    /// Load a config from a TOML file.
     pub fn load(path: &str) -> Result<Config, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
         Ok(Config::from_doc(&Doc::parse(&text)?))
@@ -243,6 +286,7 @@ impl Config {
         Ok(Config::from_doc(&Doc::parse(&text)?))
     }
 
+    /// Run-metadata summary for reports and metric streams.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("model", Json::str(self.model.clone())),
@@ -285,6 +329,23 @@ mod tests {
         assert_eq!(HwConfig::off().label(), "W16");
         let di = HwConfig { in_bits: 8, dyn_input: true, qat_bits: 4, ..HwConfig::off() };
         assert_eq!(di.label(), "DI8-W4");
+        // tiled operating points carry the grid; unbounded axes render
+        // as "full"
+        assert_eq!(HwConfig::afm_train(0.0).with_tiles(256, 256).label(), "SI8-W16-O8-T256x256");
+        assert_eq!(HwConfig::off().with_tiles(512, 0).label(), "W16-T512xfull");
+        assert!(HwConfig::off().tiling().is_unbounded());
+    }
+
+    #[test]
+    fn tile_dims_load_from_config_overrides() {
+        let c = Config::load_with_overrides(
+            None,
+            &["hw.tile_rows=256".into(), "hw.tile_cols=128".into()],
+        )
+        .unwrap();
+        assert_eq!(c.train.hw.tile_rows, 256);
+        assert_eq!(c.train.hw.tile_cols, 128);
+        assert_eq!(c.train.hw.tiling(), crate::coordinator::tiles::Tiling::new(256, 128));
     }
 
     #[test]

@@ -8,16 +8,23 @@
 
 use std::collections::BTreeMap;
 
+/// One parsed TOML value (the subset the configs use).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// a quoted string
     Str(String),
+    /// an integer
     Int(i64),
+    /// a float
     Float(f64),
+    /// `true` / `false`
     Bool(bool),
+    /// a flat array
     Arr(Vec<Value>),
 }
 
 impl Value {
+    /// The number as f64 (ints coerce), if numeric.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -26,6 +33,7 @@ impl Value {
         }
     }
 
+    /// The integer, if this is an `Int`.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -33,6 +41,7 @@ impl Value {
         }
     }
 
+    /// The string slice, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -40,6 +49,7 @@ impl Value {
         }
     }
 
+    /// The boolean, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -48,12 +58,15 @@ impl Value {
     }
 }
 
+/// A parsed TOML document flattened to `"table.key" -> Value`.
 #[derive(Clone, Debug, Default)]
 pub struct Doc {
+    /// fully-qualified key -> value
     pub entries: BTreeMap<String, Value>,
 }
 
 impl Doc {
+    /// Parse TOML text (errors carry the offending line number).
     pub fn parse(text: &str) -> Result<Doc, String> {
         let mut entries = BTreeMap::new();
         let mut prefix = String::new();
@@ -92,26 +105,32 @@ impl Doc {
         Ok(Doc { entries })
     }
 
+    /// Lookup by fully-qualified `"table.key"` name.
     pub fn get(&self, key: &str) -> Option<&Value> {
         self.entries.get(key)
     }
 
+    /// f64 at `key`, or `default` when absent / mistyped.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(Value::as_f64).unwrap_or(default)
     }
 
+    /// f32 at `key`, or `default` when absent / mistyped.
     pub fn f32_or(&self, key: &str, default: f32) -> f32 {
         self.f64_or(key, default as f64) as f32
     }
 
+    /// usize at `key`, or `default` when absent / mistyped.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(Value::as_i64).map(|i| i as usize).unwrap_or(default)
     }
 
+    /// u64 at `key`, or `default` when absent / mistyped.
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(Value::as_i64).map(|i| i as u64).unwrap_or(default)
     }
 
+    /// String at `key`, or `default` when absent / mistyped.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key)
             .and_then(Value::as_str)
@@ -119,6 +138,7 @@ impl Doc {
             .to_string()
     }
 
+    /// bool at `key`, or `default` when absent / mistyped.
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.get(key).and_then(Value::as_bool).unwrap_or(default)
     }

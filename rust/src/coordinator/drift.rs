@@ -12,25 +12,37 @@
 //! paired with *Global Drift Compensation* — a per-tile output rescale
 //! recalibrated in the field from a small calibration batch.
 //!
-//! This module is the host-side engine for both: `apply` ages a
+//! This module is the host-side engine for both: `apply_tiled` ages a
 //! parameter set to a target time (deterministic per hardware seed, so
 //! two simulated chips with the same seed age identically), and
-//! `gdc_calibrate` estimates the per-tile correction scales that
+//! `gdc_calibrate` estimates the correction scales that
 //! `serve::ChipDeployment::gdc_calibrate` folds back into the deployed
-//! literals. The channel/tile convention matches `noise`: the seven
-//! block linears plus the tied embedding/head tile are analog.
+//! literals. Both are *per crossbar tile*: under a non-trivial
+//! [`Tiling`] each R×C tile draws its own ν trajectory (RNG stream
+//! keyed by `tiles::tile_key`) and earns its own GDC output scale,
+//! matching the physical chip where compensation is a per-tile digital
+//! rescale. The degenerate whole-matrix grid keeps the historical
+//! per-*tensor* behavior byte for byte — one ν stream and one GDC
+//! scale per tensor, the pre-tile fiction this module used to (wrongly)
+//! call a "tile". The analog tensor set matches `noise`: the seven
+//! block linears plus the tied embedding/head matrix.
 
 use std::collections::BTreeMap;
 
-use crate::runtime::params::{Params, ANALOG_WEIGHT_KEYS};
+use super::tiles::{self, TileGrid, Tiling};
+use crate::runtime::params::Params;
 use crate::util::fnv1a;
 use crate::util::prng::Pcg64;
 
+/// One minute in seconds.
 pub const SECS_PER_MINUTE: f64 = 60.0;
+/// One hour in seconds.
 pub const SECS_PER_HOUR: f64 = 3_600.0;
+/// One day in seconds.
 pub const SECS_PER_DAY: f64 = 86_400.0;
 /// 30-day month, the paper-adjacent "deployment age" unit.
 pub const SECS_PER_MONTH: f64 = 30.0 * SECS_PER_DAY;
+/// One 365-day year in seconds.
 pub const SECS_PER_YEAR: f64 = 365.0 * SECS_PER_DAY;
 
 /// rng stream tag for drift-exponent sampling (decorrelated from the
@@ -67,24 +79,34 @@ impl DriftModel {
         DriftModel { nu_mean: 0.0, nu_std: 0.0, ..DriftModel::default() }
     }
 
+    /// Whether this model never decays anything (ν ≡ 0).
     pub fn is_none(&self) -> bool {
         self.nu_mean == 0.0 && self.nu_std == 0.0
     }
 }
 
-/// The analog tile keys drift acts on, in a fixed order (block linears
-/// plus the tied embedding/head tile) — the same set the noise engine
-/// perturbs.
-fn analog_tiles() -> impl Iterator<Item = &'static str> {
-    ANALOG_WEIGHT_KEYS.iter().copied().chain(std::iter::once("emb"))
+/// Age a copy of `params` to `t_secs` with every matrix as one
+/// whole-tensor "tile" — the pre-tile behavior, byte-identical to
+/// `apply_tiled` under `Tiling::unbounded()`.
+pub fn apply(params: &Params, model: &DriftModel, t_secs: f64, seed: u64) -> Params {
+    apply_tiled(params, model, t_secs, seed, &Tiling::unbounded())
 }
 
-/// Age a copy of `params` to `t_secs` after programming. `seed` is the
-/// hardware instance: the per-device ν draws depend only on
-/// (seed, tile key, device index), never on t, so aging the same chip
-/// to two different times uses the same exponents — `apply(p, m, t, s)`
-/// is a pure function of its arguments, not of aging history.
-pub fn apply(params: &Params, model: &DriftModel, t_secs: f64, seed: u64) -> Params {
+/// Age a copy of `params` to `t_secs` after programming, one ν stream
+/// per crossbar tile of `tiling`. `seed` is the hardware instance: the
+/// per-device ν draws depend only on (seed, tile key, device index),
+/// never on t, so aging the same chip to two different times uses the
+/// same exponents — the result is a pure function of its arguments,
+/// not of aging history. The degenerate whole-matrix grid keeps the
+/// legacy per-tensor stream (keyed by the tensor name, crossing the
+/// layer stack) so pre-tile fingerprints are preserved.
+pub fn apply_tiled(
+    params: &Params,
+    model: &DriftModel,
+    t_secs: f64,
+    seed: u64,
+    tiling: &Tiling,
+) -> Params {
     let t = t_secs.max(model.t0_secs);
     if model.is_none() || t <= model.t0_secs {
         return params.clone();
@@ -92,74 +114,147 @@ pub fn apply(params: &Params, model: &DriftModel, t_secs: f64, seed: u64) -> Par
     let log_ratio = (t / model.t0_secs).ln();
     let mut out = params.clone();
     let rng = Pcg64::with_stream(seed, DRIFT_STREAM);
-    for key in analog_tiles() {
-        if let Some(tile) = out.map.get_mut(key) {
-            let mut dev_rng = rng.fold_in(fnv1a(key.as_bytes()));
-            for g in tile.data.iter_mut() {
-                let nu = (model.nu_mean + model.nu_std * dev_rng.normal_f32()).max(0.0);
-                // g *= (t/t0)^(-ν); exact zeros stay zero (multiplicative)
-                *g *= (-(nu as f64) * log_ratio).exp() as f32;
+    let decay = |g: &mut f32, dev_rng: &mut Pcg64| {
+        let nu = (model.nu_mean + model.nu_std * dev_rng.normal_f32()).max(0.0);
+        // g *= (t/t0)^(-ν); exact zeros stay zero (multiplicative)
+        *g *= (-(nu as f64) * log_ratio).exp() as f32;
+    };
+    for key in tiles::analog_keys() {
+        if let Some(tensor) = out.map.get_mut(key) {
+            let (_, k, n) = tensor.as_matrix_stack();
+            let grid = tiling.grid_for(k, n);
+            if grid.is_single() {
+                let mut dev_rng = rng.fold_in(fnv1a(key.as_bytes()));
+                for g in tensor.data.iter_mut() {
+                    decay(g, &mut dev_rng);
+                }
+            } else {
+                tiles::for_each_tile(tensor, &grid, |s, tile, view| {
+                    let mut dev_rng = rng.fold_in(tiles::tile_key(key, s, tile.tr, tile.tc));
+                    view.map_devices(|g| decay(g, &mut dev_rng));
+                });
             }
         }
     }
     out
 }
 
-/// Calibration vectors per tile for GDC estimation (a "small
+/// Calibration vectors per tensor for GDC estimation (a "small
 /// calibration batch" in Rasch et al.'s terms).
 pub const GDC_CALIB_VECS: usize = 8;
 
+/// The GDC output scales of one tensor: one scale per crossbar tile in
+/// (stack, tile-row, tile-column) order — or a single whole-tensor
+/// scale (`scales.len() == 1`) on the degenerate grid, where the whole
+/// stacked tensor is treated as one tile exactly like the pre-tile
+/// simulator did.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TileScales {
+    /// the grid the scales were estimated on (per (K, N) matrix)
+    pub grid: TileGrid,
+    /// leading stack size covered (1 on the degenerate grid)
+    pub stack: usize,
+    /// stack × tile-rows × tile-cols scales, or exactly one
+    pub scales: Vec<f32>,
+}
+
+/// Per-tensor GDC calibration result: tensor key → per-tile scales.
+pub type GdcScales = BTreeMap<String, TileScales>;
+
 /// Estimate per-tile GDC output scales: push `n_vecs` seeded random
-/// input vectors through every (K, N) matrix of each analog tile in
+/// input vectors through every (K, N) matrix of each analog tensor in
 /// both the `reference` (programmed, pre-drift) and `drifted` parameter
-/// sets, and return scale = Σ|y_ref| / Σ|y_drift| per tile key — the
-/// factor that restores the tile's mean output magnitude. The inputs
-/// are identical across the two parameter sets, so on an undrifted chip
-/// every scale is exactly 1.
+/// sets, and return scale = Σ|y_ref| / Σ|y_drift| per crossbar tile —
+/// the factor that restores that tile's mean partial-output magnitude
+/// (each tile computes a partial MVM over its row range; the rescale is
+/// the digital correction applied to its ADC output). The same input
+/// vectors drive every tile and both parameter sets, so on an
+/// undrifted chip every scale is exactly 1. On the degenerate
+/// whole-matrix grid the sums run over the entire stacked tensor,
+/// reproducing the pre-tile per-tensor scale byte for byte.
 pub fn gdc_calibrate(
     reference: &Params,
     drifted: &Params,
     n_vecs: usize,
     seed: u64,
-) -> BTreeMap<String, f32> {
-    let mut scales = BTreeMap::new();
-    for key in analog_tiles() {
+    tiling: &Tiling,
+) -> GdcScales {
+    let mut out = GdcScales::new();
+    for key in tiles::analog_keys() {
         let (Some(r), Some(d)) = (reference.map.get(key), drifted.map.get(key)) else {
             continue;
         };
         debug_assert_eq!(r.shape, d.shape);
         let (stack, k, n) = r.as_matrix_stack();
+        let grid = tiling.grid_for(k, n);
+        let per_tile = !grid.is_single();
+        let (gr, gc) = (grid.n_tile_rows(), grid.n_tile_cols());
+        let cells = if per_tile { stack * gr * gc } else { 1 };
         let mut rng = Pcg64::with_stream(seed, 0x6dc0).fold_in(fnv1a(key.as_bytes()));
         let mut x = vec![0.0f32; k];
-        let (mut sum_r, mut sum_d) = (0.0f64, 0.0f64);
+        let mut sum_r = vec![0.0f64; cells];
+        let mut sum_d = vec![0.0f64; cells];
         for _ in 0..n_vecs.max(1) {
             for s in 0..stack {
                 rng.fill_normal(&mut x);
                 let base = s * k * n;
-                for j in 0..n {
-                    let (mut yr, mut yd) = (0.0f32, 0.0f32);
-                    for (i, &xi) in x.iter().enumerate() {
-                        yr += xi * r.data[base + i * n + j];
-                        yd += xi * d.data[base + i * n + j];
+                if per_tile {
+                    for (ti, tile) in grid.tiles().enumerate() {
+                        let cell = s * gr * gc + ti;
+                        for j in tile.col_start..tile.col_end {
+                            let (mut yr, mut yd) = (0.0f32, 0.0f32);
+                            for i in tile.row_start..tile.row_end {
+                                yr += x[i] * r.data[base + i * n + j];
+                                yd += x[i] * d.data[base + i * n + j];
+                            }
+                            sum_r[cell] += yr.abs() as f64;
+                            sum_d[cell] += yd.abs() as f64;
+                        }
                     }
-                    sum_r += yr.abs() as f64;
-                    sum_d += yd.abs() as f64;
+                } else {
+                    for j in 0..n {
+                        let (mut yr, mut yd) = (0.0f32, 0.0f32);
+                        for (i, &xi) in x.iter().enumerate() {
+                            yr += xi * r.data[base + i * n + j];
+                            yd += xi * d.data[base + i * n + j];
+                        }
+                        sum_r[0] += yr.abs() as f64;
+                        sum_d[0] += yd.abs() as f64;
+                    }
                 }
             }
         }
-        let scale = if sum_d > 0.0 { (sum_r / sum_d) as f32 } else { 1.0 };
-        scales.insert(key.to_string(), scale);
+        let scales: Vec<f32> = sum_r
+            .iter()
+            .zip(&sum_d)
+            .map(|(&sr, &sd)| if sd > 0.0 { (sr / sd) as f32 } else { 1.0 })
+            .collect();
+        out.insert(
+            key.to_string(),
+            TileScales { grid, stack: if per_tile { stack } else { 1 }, scales },
+        );
     }
-    scales
+    out
 }
 
-/// Fold per-tile GDC scales into `params` (the simulated equivalent of
-/// the field-side digital output rescale).
-pub fn apply_scales(params: &mut Params, scales: &BTreeMap<String, f32>) {
-    for (key, &s) in scales {
-        if let Some(tile) = params.map.get_mut(key) {
-            for v in tile.data.iter_mut() {
-                *v *= s;
+/// Fold GDC scales into `params` (the simulated equivalent of the
+/// field-side per-tile digital output rescale). A single-scale entry
+/// multiplies its whole tensor — the degenerate-grid (pre-tile)
+/// behavior; per-tile entries multiply each tile by its own scale.
+pub fn apply_scales(params: &mut Params, scales: &GdcScales) {
+    for (key, ts) in scales {
+        if let Some(t) = params.map.get_mut(key) {
+            if ts.scales.len() == 1 {
+                let s = ts.scales[0];
+                for v in t.data.iter_mut() {
+                    *v *= s;
+                }
+            } else {
+                let (gr, gc) = (ts.grid.n_tile_rows(), ts.grid.n_tile_cols());
+                tiles::for_each_tile(t, &ts.grid, |s, tile, view| {
+                    let scale = ts.scales[s * gr * gc + tile.tr * gc + tile.tc];
+                    view.map_devices(|v| *v *= scale);
+                });
             }
         }
     }
@@ -244,7 +339,7 @@ mod tests {
     }
 
     #[test]
-    fn drift_shrinks_analog_tiles_and_spares_digital_params() {
+    fn drift_shrinks_analog_tensors_and_spares_digital_params() {
         let p = Params::init(&dims(), 1);
         let aged = apply(&p, &DriftModel::default(), SECS_PER_YEAR, 3);
         let mean_abs = |t: &crate::util::tensor::Tensor| {
@@ -268,16 +363,55 @@ mod tests {
     #[test]
     fn gdc_scales_are_unity_without_drift_and_compensate_with_it() {
         let p = Params::init(&dims(), 3);
-        let same = gdc_calibrate(&p, &p, GDC_CALIB_VECS, 9);
-        assert!(same.values().all(|&s| s == 1.0), "{same:?}");
+        let full = Tiling::unbounded();
+        let same = gdc_calibrate(&p, &p, GDC_CALIB_VECS, 9, &full);
+        assert!(same.values().all(|ts| ts.scales == vec![1.0]), "{same:?}");
         let aged = apply(&p, &DriftModel::default(), SECS_PER_MONTH, 4);
-        let scales = gdc_calibrate(&p, &aged, GDC_CALIB_VECS, 9);
-        // decayed conductances need an upscale on every tile present
+        let scales = gdc_calibrate(&p, &aged, GDC_CALIB_VECS, 9, &full);
+        // decayed conductances need an upscale on every tensor present
         assert!(scales.len() >= 2);
-        assert!(scales.values().all(|&s| s > 1.0), "{scales:?}");
+        assert!(scales.values().all(|ts| ts.scales.iter().all(|&s| s > 1.0)), "{scales:?}");
         let mut corrected = aged.clone();
         apply_scales(&mut corrected, &scales);
         assert_ne!(corrected.get("wq"), aged.get("wq"));
+    }
+
+    #[test]
+    fn gdc_scales_are_per_tile_under_a_real_grid() {
+        let p = Params::init(&dims(), 3);
+        let tiling = Tiling::new(4, 4);
+        let aged = apply_tiled(&p, &DriftModel::default(), SECS_PER_MONTH, 4, &tiling);
+        let scales = gdc_calibrate(&p, &aged, GDC_CALIB_VECS, 9, &tiling);
+        // wq is a 2-stack of 8x8 matrices -> 2 * 2 * 2 = 8 tile scales
+        let wq = &scales["wq"];
+        assert_eq!(wq.scales.len(), 8);
+        assert_eq!(wq.stack, 2);
+        assert!(wq.scales.iter().all(|&s| s > 1.0), "{wq:?}");
+        // distinct tiles drift on independent ν draws, so their
+        // compensation scales differ
+        assert!(wq.scales.windows(2).any(|w| w[0] != w[1]), "{wq:?}");
+        // applying the per-tile scales changes every tile of the tensor
+        let mut corrected = aged.clone();
+        apply_scales(&mut corrected, &scales);
+        assert_ne!(corrected.get("wq"), aged.get("wq"));
+        // an undrifted chip calibrates to exactly 1 on every tile
+        let unity = gdc_calibrate(&p, &p, GDC_CALIB_VECS, 9, &tiling);
+        assert!(unity["wq"].scales.iter().all(|&s| s == 1.0));
+    }
+
+    #[test]
+    fn tiled_drift_is_deterministic_and_degenerate_grid_matches_legacy() {
+        let p = Params::init(&dims(), 5);
+        let tiling = Tiling::new(4, 4);
+        let a = apply_tiled(&p, &DriftModel::default(), SECS_PER_MONTH, 7, &tiling);
+        let b = apply_tiled(&p, &DriftModel::default(), SECS_PER_MONTH, 7, &tiling);
+        assert_eq!(a, b);
+        // a tile grid reshuffles the per-device ν draws vs the legacy path
+        let legacy = apply(&p, &DriftModel::default(), SECS_PER_MONTH, 7);
+        assert_ne!(a.get("wq"), legacy.get("wq"));
+        // oversized tiles collapse to the legacy per-tensor stream
+        let huge = apply_tiled(&p, &DriftModel::default(), SECS_PER_MONTH, 7, &Tiling::new(64, 64));
+        assert_eq!(huge, legacy);
     }
 
     #[test]

@@ -21,12 +21,15 @@ use crate::runtime::{
 use crate::serve::{ChipDeployment, HwScalars};
 use crate::util::prng::Pcg64;
 
+/// Manifest name of the encoder model this appendix experiment uses.
 pub const MODEL: &str = "encnano";
 
 /// GLUE-analog classification sample.
 #[derive(Clone, Debug)]
 pub struct ClsSample {
+    /// input text
     pub text: String,
+    /// gold class index
     pub label: usize,
 }
 
@@ -36,6 +39,7 @@ pub fn cls_tasks() -> Vec<(&'static str, usize)> {
     vec![("nli3_syn", 256), ("color2_syn", 96), ("place2_syn", 48)]
 }
 
+/// Deterministic classification samples for one GLUE-analog task.
 pub fn make_cls_samples(world: &World, task: &str, n: usize, seed: u64) -> Vec<ClsSample> {
     let mut rng = Pcg64::with_stream(seed, 0xc15);
     (0..n)
@@ -81,13 +85,20 @@ pub fn make_cls_samples(world: &World, task: &str, n: usize, seed: u64) -> Vec<C
         .collect()
 }
 
+/// The appendix-A analog-RoBERTa experiment: masked-LM pre-training
+/// (FP vs HWA) followed by per-task classifier fine-tuning and noisy
+/// evaluation.
 pub struct EncoderPipeline<'a> {
+    /// runtime the encoder artifacts execute on
     pub rt: &'a Runtime,
+    /// the synthetic world samples derive from
     pub world: World,
+    /// base seed for sampling, init, and eval noise
     pub seed: u64,
 }
 
 impl<'a> EncoderPipeline<'a> {
+    /// A pipeline over `rt` with the given world and seed.
     pub fn new(rt: &'a Runtime, world: World, seed: u64) -> Self {
         EncoderPipeline { rt, world, seed }
     }

@@ -28,8 +28,11 @@ use crate::util::prng::Pcg64;
 
 /// A model plus the hardware configuration it is evaluated under.
 pub struct ModelUnderTest {
+    /// display name in tables and logs
     pub label: String,
+    /// the checkpoint to evaluate
     pub params: Params,
+    /// hardware operating point (bits, noise scales, tiling)
     pub hw: HwConfig,
     /// evaluate through the SpinQuant rotated-forward artifacts
     pub rot: bool,
@@ -45,25 +48,33 @@ pub type EvalReport = BTreeMap<String, TaskMetrics>;
 /// a GDC field calibration — the accuracy-vs-deployment-age axis.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DriftSpec {
+    /// the power-law drift model chips age under
     pub model: DriftModel,
+    /// deployment age each chip is evaluated at
     pub age_secs: f64,
+    /// run a GDC field calibration at that age before scoring
     pub gdc: bool,
 }
 
 impl DriftSpec {
+    /// The default drift model at `age_secs`, ± GDC.
     pub fn at(age_secs: f64, gdc: bool) -> DriftSpec {
         DriftSpec { model: DriftModel::default(), age_secs, gdc }
     }
 }
 
+/// Repeated-seed benchmark harness for one model name's artifacts.
 pub struct Evaluator<'a> {
+    /// runtime the eval artifacts execute on
     pub rt: &'a Runtime,
+    /// model config name in the artifact manifest
     pub model: String,
     /// generation budget for answer-generation tasks
     pub max_new: usize,
 }
 
 impl<'a> Evaluator<'a> {
+    /// An evaluator with the default generation budget (32 tokens).
     pub fn new(rt: &'a Runtime, model: &str) -> Evaluator<'a> {
         Evaluator { rt, model: model.to_string(), max_new: 32 }
     }
@@ -131,6 +142,37 @@ impl<'a> Evaluator<'a> {
             );
         }
         Ok(report)
+    }
+
+    /// Sweep the crossbar-tile-size axis: re-evaluate `m` under each
+    /// (tile_rows, tile_cols) partitioning (0 = whole-matrix tiles)
+    /// with everything else — noise model, seeds, tasks — fixed.
+    /// Returns one (tiling label, report) pair per size in input
+    /// order; the engine behind `afm eval --tile-sweep` and
+    /// `benches/fig_tile_size.rs`.
+    pub fn tile_size_sweep(
+        &self,
+        m: &ModelUnderTest,
+        nm: &NoiseModel,
+        tasks: &[Task],
+        seeds: usize,
+        base_seed: u64,
+        tile_sizes: &[(usize, usize)],
+    ) -> Result<Vec<(String, EvalReport)>> {
+        tile_sizes
+            .iter()
+            .map(|&(r, c)| {
+                let hw = m.hw.clone().with_tiles(r, c);
+                let label = hw.tiling().label();
+                let mm = ModelUnderTest {
+                    label: format!("{} tiles {label}", m.label),
+                    params: m.params.clone(),
+                    hw,
+                    rot: m.rot,
+                };
+                Ok((label, self.evaluate(&mm, nm, tasks, seeds, base_seed)?))
+            })
+            .collect()
     }
 
     fn score_task(

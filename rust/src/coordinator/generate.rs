@@ -40,10 +40,12 @@ pub struct SamplePolicy {
 }
 
 impl SamplePolicy {
+    /// Deterministic argmax decoding (benchmark scoring default).
     pub fn greedy() -> Self {
         SamplePolicy { temperature: 0.0, top_k: 0, greedy_prefix: 0, random_first: false }
     }
 
+    /// Temperature softmax sampling, optionally top-k restricted.
     pub fn softmax(temperature: f32, top_k: usize) -> Self {
         SamplePolicy { temperature, top_k, greedy_prefix: 0, random_first: false }
     }
@@ -58,15 +60,21 @@ impl SamplePolicy {
     }
 }
 
+/// One generation request: tokenized prompt plus budget and policy.
 #[derive(Clone, Debug)]
 pub struct GenRequest {
+    /// prompt token ids (BOS-prefixed)
     pub prompt: Vec<u32>,
+    /// generation budget in new tokens
     pub max_new: usize,
+    /// stop when the model emits EOS
     pub stop_at_eos: bool,
+    /// per-request sampling policy
     pub policy: SamplePolicy,
 }
 
 impl GenRequest {
+    /// Tokenize `prompt` (with BOS) into a stop-at-EOS request.
     pub fn from_text(prompt: &str, max_new: usize, policy: SamplePolicy) -> GenRequest {
         GenRequest { prompt: Tokenizer::encode_bos(prompt), max_new, stop_at_eos: true, policy }
     }
@@ -149,6 +157,9 @@ pub fn pick_token(
     rng.sample_logits(&masked, policy.temperature, policy.top_k) as u32
 }
 
+/// Batched autoregressive engine over one `lm_sample` artifact: owns
+/// the packed (B, T) geometry and the decode-step/static-chunking
+/// loops; chips are passed per call.
 pub struct GenEngine<'a> {
     rt: &'a Runtime,
     artifact: String,
@@ -181,6 +192,7 @@ impl<'a> GenEngine<'a> {
         })
     }
 
+    /// Context window length T.
     pub fn seq_len(&self) -> usize {
         self.seq_len
     }
@@ -190,6 +202,7 @@ impl<'a> GenEngine<'a> {
         self.batch
     }
 
+    /// Vocabulary size V of the emitted logit rows.
     pub fn vocab(&self) -> usize {
         self.vocab
     }

@@ -9,12 +9,18 @@ use anyhow::{anyhow, Result};
 use crate::util::json::Json;
 use crate::util::stats;
 
+/// One optimizer step as logged by the trainer's metrics stream.
 #[derive(Clone, Debug, PartialEq)]
 pub struct StepRecord {
+    /// optimizer step index
     pub step: usize,
+    /// training loss at this step
     pub loss: f64,
+    /// global gradient norm
     pub gnorm: f64,
+    /// learning rate in effect
     pub lr: f64,
+    /// wall-clock seconds spent on the step
     pub secs: f64,
 }
 
@@ -44,10 +50,15 @@ pub fn read_jsonl(path: &Path) -> Result<Vec<StepRecord>> {
 /// steps/second.
 #[derive(Clone, Debug)]
 pub struct CurveSummary {
+    /// records summarised
     pub steps: usize,
+    /// smoothed loss at the start of training
     pub first_loss: f64,
+    /// smoothed loss at the end of training
     pub last_loss: f64,
+    /// lowest smoothed loss anywhere on the curve
     pub best_loss: f64,
+    /// optimizer steps per wall-clock second
     pub steps_per_sec: f64,
 }
 
@@ -65,6 +76,7 @@ pub fn smooth(losses: &[f64], window: usize) -> Vec<f64> {
         .collect()
 }
 
+/// Summarise a loss curve (None for an empty stream).
 pub fn summarize(records: &[StepRecord]) -> Option<CurveSummary> {
     if records.is_empty() {
         return None;

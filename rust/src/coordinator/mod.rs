@@ -5,9 +5,12 @@
 //! * `generate` — batched autoregressive engine (datagen + benchmark
 //!   generation + test-time scaling)
 //! * `noise` — host-side hardware-noise injection (PCM polynomial,
-//!   gaussian, affine)
+//!   gaussian, affine), one instance per crossbar tile
 //! * `drift` — conductance decay g(t) = g0·(t/t0)^(-ν) + global drift
 //!   compensation (the temporal axis of every deployment)
+//! * `tiles` — crossbar tile partitioning: the R×C geometry, per-tile
+//!   RNG identities, and floorplan accounting every per-tile engine
+//!   (noise, drift, quant, GDC) is built on
 //! * `quant` — PTQ paths (RTN, SpinQuant-lite) through AOT artifacts
 //! * `evaluate` — repeated-seed benchmark harness with mean±std
 //! * `tts` — test-time compute scaling with the synthetic PRM
@@ -24,5 +27,6 @@ pub mod noise;
 pub mod pipeline;
 pub mod quant;
 pub mod report;
+pub mod tiles;
 pub mod trainer;
 pub mod tts;

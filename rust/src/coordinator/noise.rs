@@ -7,8 +7,17 @@
 //!
 //! Channels follow the training convention: per output column for the
 //! seven block linears (stacked (L, K, N): column = last axis), per
-//! vocabulary row for the tied embedding/head tile.
+//! vocabulary row for the tied embedding/head matrix.
+//!
+//! Programming noise is physically *per crossbar tile*: under a
+//! non-trivial [`Tiling`] every R×C tile draws its own noise instance
+//! (RNG stream keyed by [`tiles::tile_key`]) and normalizes against
+//! the tile-local channel-segment max — a 2048-row column spanning
+//! four 512-row tiles carries four independent draws with four local
+//! ranges. The degenerate whole-matrix grid reproduces the pre-tile
+//! per-tensor streams byte for byte (see `tiles` module docs).
 
+use super::tiles::{self, ChannelAxis, Tiling};
 use crate::runtime::params::{Params, ANALOG_WEIGHT_KEYS};
 use crate::util::fnv1a;
 use crate::util::prng::Pcg64;
@@ -27,6 +36,7 @@ pub enum NoiseModel {
 }
 
 impl NoiseModel {
+    /// Short report label ("hw noise", "gaussian noise g=0.05", …).
     pub fn label(&self) -> String {
         match self {
             NoiseModel::None => "".into(),
@@ -36,6 +46,7 @@ impl NoiseModel {
         }
     }
 
+    /// Whether this is the noiseless (identity) model.
     pub fn is_none(&self) -> bool {
         matches!(self, NoiseModel::None)
     }
@@ -54,27 +65,62 @@ pub fn pcm_sigma_frac(w_norm: f32) -> f32 {
     pct / 100.0
 }
 
-/// Apply the noise model to a copy of `params`; `seed` selects the
-/// simulated hardware instance (the paper repeats every noisy eval over
-/// 10 seeds).
+/// Apply the noise model to a copy of `params` with every matrix as
+/// one whole-tensor "tile" — the pre-tile behavior, byte-identical to
+/// `apply_tiled` under `Tiling::unbounded()`. `seed` selects the
+/// simulated hardware instance (the paper repeats every noisy eval
+/// over 10 seeds).
 pub fn apply(params: &Params, model: &NoiseModel, seed: u64) -> Params {
+    apply_tiled(params, model, seed, &Tiling::unbounded())
+}
+
+/// Apply the noise model to a copy of `params`, one independent noise
+/// instance per crossbar tile of `tiling`. Deterministic per
+/// (seed, tile): the per-tile streams derive from
+/// `tiles::tile_key(tensor, stack, tile row, tile col)`, so draws are
+/// independent across tiles and reproducible for a fixed seed.
+pub fn apply_tiled(params: &Params, model: &NoiseModel, seed: u64, tiling: &Tiling) -> Params {
     if model.is_none() {
         return params.clone();
     }
     let mut out = params.clone();
-    let mut rng = Pcg64::with_stream(seed, 0xa1a1);
+    let rng = Pcg64::with_stream(seed, 0xa1a1);
     for key in ANALOG_WEIGHT_KEYS {
         if let Some(t) = out.map.get_mut(*key) {
-            let mut chan_rng = rng.fold_in(fnv1a(key.as_bytes()));
-            t.map_columns(|col| perturb_channel(col, model, &mut chan_rng));
+            perturb_tensor(t, key, model, &rng, tiling, ChannelAxis::Cols);
         }
     }
-    // tied embedding/head tile: channels are vocab rows
+    // tied embedding/head matrix: channels are vocab rows
     if let Some(emb) = out.map.get_mut("emb") {
-        let mut chan_rng = rng.fold_in(fnv1a(b"emb"));
-        emb.map_rows(|row| perturb_channel(row, model, &mut chan_rng));
+        perturb_tensor(emb, "emb", model, &rng, tiling, ChannelAxis::Rows);
     }
     out
+}
+
+/// One tensor's programming write. The degenerate whole-matrix grid
+/// keeps the legacy stream (one RNG per tensor, keyed by the tensor
+/// name, crossing the layer stack) so pre-tile fingerprints are
+/// preserved; real grids draw per (stack, tile) streams over
+/// tile-local channel segments.
+fn perturb_tensor(
+    t: &mut crate::util::tensor::Tensor,
+    key: &str,
+    model: &NoiseModel,
+    rng: &Pcg64,
+    tiling: &Tiling,
+    axis: ChannelAxis,
+) {
+    let (_, k, n) = t.as_matrix_stack();
+    let grid = tiling.grid_for(k, n);
+    if grid.is_single() {
+        let mut chan_rng = rng.fold_in(fnv1a(key.as_bytes()));
+        tiles::map_tensor_channels(t, axis, |chan| perturb_channel(chan, model, &mut chan_rng));
+    } else {
+        tiles::for_each_tile(t, &grid, |s, tile, view| {
+            let mut trng = rng.fold_in(tiles::tile_key(key, s, tile.tr, tile.tc));
+            view.map_channels(axis, |seg| perturb_channel(seg, model, &mut trng));
+        });
+    }
 }
 
 fn perturb_channel(chan: &mut [f32], model: &NoiseModel, rng: &mut Pcg64) {
@@ -176,6 +222,20 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .sum();
         assert!(d_large > 5.0 * d_small);
+    }
+
+    #[test]
+    fn tiled_noise_draws_per_tile_instances_and_degenerates_to_legacy() {
+        let p = Params::init(&dims(), 1);
+        let legacy = apply(&p, &NoiseModel::Pcm, 3);
+        // a real grid reseeds per (stack, tile): different programming
+        let tiled = apply_tiled(&p, &NoiseModel::Pcm, 3, &Tiling::new(2, 2));
+        assert_ne!(tiled.get("wq"), legacy.get("wq"));
+        // deterministic per (seed, tiling)
+        assert_eq!(tiled, apply_tiled(&p, &NoiseModel::Pcm, 3, &Tiling::new(2, 2)));
+        // oversized / unbounded tiles are byte-identical to the legacy path
+        assert_eq!(apply_tiled(&p, &NoiseModel::Pcm, 3, &Tiling::new(99, 99)), legacy);
+        assert_eq!(apply_tiled(&p, &NoiseModel::Pcm, 3, &Tiling::unbounded()), legacy);
     }
 
     #[test]

@@ -26,18 +26,26 @@ use crate::data::{Shard, World, WorldCorpus};
 use crate::runtime::{Params, Runtime};
 use crate::serve::ChipDeployment;
 
+/// Checkpoint-cached orchestration of the model zoo: each `ensure_*`
+/// builds its checkpoint once under `runs/<model>/` and reloads it on
+/// every later call.
 pub struct Pipeline<'a> {
+    /// runtime the training/eval artifacts execute on
     pub rt: &'a Runtime,
+    /// run configuration (model name, seeds, paths, hyperparameters)
     pub cfg: Config,
+    /// the synthetic world every task and corpus derives from
     pub world: World,
 }
 
 impl<'a> Pipeline<'a> {
+    /// A pipeline over `rt` with the world seeded from `cfg.seed`.
     pub fn new(rt: &'a Runtime, cfg: Config) -> Pipeline<'a> {
         let world = World::new(cfg.seed ^ 0x77_0a1d);
         Pipeline { rt, cfg, world }
     }
 
+    /// `runs/<model>/` — checkpoints and reports live here.
     pub fn run_dir(&self) -> PathBuf {
         PathBuf::from(&self.cfg.runs_dir).join(&self.cfg.model)
     }
@@ -182,10 +190,13 @@ impl<'a> Pipeline<'a> {
 
     // ------------------------------------------------------------ PTQ
 
+    /// `bits`-wide RTN post-training quantization of the analog FM
+    /// (digital-deployment path, table 3).
     pub fn afm_rtn(&self, afm: &Params, bits: u32) -> Result<Params> {
         quant::rtn(self.rt, &self.cfg.model, afm, bits)
     }
 
+    /// SpinQuant-lite PTQ of the teacher (evaluate via rot artifacts).
     pub fn spinquant(&self, teacher: &Params, bits: u32) -> Result<Params> {
         quant::spinquant(self.rt, &self.cfg.model, teacher, bits)
     }

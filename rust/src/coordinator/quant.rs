@@ -7,7 +7,10 @@
 
 use anyhow::Result;
 
+use super::tiles::{self, ChannelAxis, Tiling};
+use crate::runtime::params::ANALOG_WEIGHT_KEYS;
 use crate::runtime::{lit_scalar_f32, Params, Runtime};
+use crate::util::tensor::Tensor;
 
 /// Signed symmetric quantization levels for a bit width: 2^(bits-1)-1,
 /// with the degenerate widths guarded. 0 bits means "off" and maps to
@@ -70,6 +73,43 @@ pub fn rtn_channel(chan: &mut [f32], bits: u32) {
     }
 }
 
+/// Host-side per-tile RTN of one tensor: each crossbar tile of
+/// `tiling` quantizes its own channel *segments* against the
+/// tile-local range — the per-tile ADC/output-quantizer behavior,
+/// where a column spanning several tiles earns one quantization grid
+/// per tile instead of one per whole-tensor channel. The degenerate
+/// whole-matrix grid is exactly the legacy per-channel `rtn_channel`
+/// path.
+pub fn rtn_tensor_tiled(t: &mut Tensor, bits: u32, tiling: &Tiling, axis: ChannelAxis) {
+    if levels(bits) <= 0.0 {
+        return; // 0 bits = quantization off
+    }
+    let (_, k, n) = t.as_matrix_stack();
+    let grid = tiling.grid_for(k, n);
+    if grid.is_single() {
+        tiles::map_tensor_channels(t, axis, |chan| rtn_channel(chan, bits));
+    } else {
+        tiles::for_each_tile(t, &grid, |_, _, view| {
+            view.map_channels(axis, |seg| rtn_channel(seg, bits));
+        });
+    }
+}
+
+/// Per-tile RTN over every analog tensor of `params` in place (block
+/// linears quantize column segments, the tied embedding/head row
+/// segments) — the host mirror of deploying a quantized model onto a
+/// tiled chip. Digital parameters are untouched.
+pub fn rtn_params_tiled(params: &mut Params, bits: u32, tiling: &Tiling) {
+    for key in ANALOG_WEIGHT_KEYS {
+        if let Some(t) = params.map.get_mut(*key) {
+            rtn_tensor_tiled(t, bits, tiling, ChannelAxis::Cols);
+        }
+    }
+    if let Some(emb) = params.map.get_mut("emb") {
+        rtn_tensor_tiled(emb, bits, tiling, ChannelAxis::Rows);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -125,6 +165,35 @@ mod tests {
         assert_eq!(levels(8), 127.0);
         assert_eq!(levels(32), (i32::MAX as u32) as f32); // full-width shift is legal
         assert_eq!(levels(33), levels(32)); // wider widths clamp, no shift overflow
+    }
+
+    #[test]
+    fn tiled_rtn_matches_per_channel_on_the_degenerate_grid_and_refines_on_a_real_one() {
+        // a 6x4 matrix whose top and bottom halves have very different
+        // ranges: per-tensor channels share one grid, 3x4 tiles get two
+        let data: Vec<f32> = (0..24)
+            .map(|i| if i < 12 { (i as f32 - 6.0) * 0.01 } else { i as f32 - 18.0 })
+            .collect();
+        let t0 = Tensor::new(vec![6, 4], data);
+
+        let mut whole = t0.clone();
+        rtn_tensor_tiled(&mut whole, 4, &Tiling::unbounded(), ChannelAxis::Cols);
+        let mut legacy = t0.clone();
+        legacy.map_columns(|c| rtn_channel(c, 4));
+        assert_eq!(whole.data, legacy.data);
+
+        // per-tile grids quantize the small-range half on its own
+        // (finer) grid: strictly lower error there
+        let mut tiled = t0.clone();
+        rtn_tensor_tiled(&mut tiled, 4, &Tiling::new(3, 4), ChannelAxis::Cols);
+        let err = |q: &Tensor| -> f32 {
+            q.data[..12].iter().zip(&t0.data[..12]).map(|(a, b)| (a - b).abs()).sum()
+        };
+        assert!(err(&tiled) < err(&whole), "{} vs {}", err(&tiled), err(&whole));
+        // 0 bits stays the identity on any grid
+        let mut off = t0.clone();
+        rtn_tensor_tiled(&mut off, 0, &Tiling::new(3, 4), ChannelAxis::Cols);
+        assert_eq!(off.data, t0.data);
     }
 
     #[test]

@@ -3,14 +3,19 @@
 
 use std::path::Path;
 
+/// A paper-style results table rendered as aligned markdown.
 #[derive(Clone, Debug, Default)]
 pub struct Table {
+    /// caption printed above the table
     pub title: String,
+    /// column names
     pub header: Vec<String>,
+    /// data rows (each exactly `header.len()` cells)
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with the given caption and columns.
     pub fn new(title: &str, header: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -19,11 +24,13 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.header.len(), "row width mismatch");
         self.rows.push(cells);
     }
 
+    /// Render as a column-aligned markdown table.
     pub fn to_markdown(&self) -> String {
         let ncol = self.header.len();
         let mut widths = vec![0usize; ncol];

@@ -1,0 +1,523 @@
+//! Crossbar tile partitioning: the physical unit of analog hardware.
+//!
+//! A PCM chip is not one big crossbar — it is an array of fixed-size
+//! tiles (the IBM Hermes-project chip: 64 cores of 256×256 devices),
+//! and everything the simulator models per "hardware instance" is
+//! physically *per tile*: the programming-noise draw, the drift
+//! trajectory of each device, the ADC range and output quantizer, and
+//! the Global Drift Compensation scale. A 2048-wide weight matrix
+//! therefore never behaves like one impossibly large crossbar: it is
+//! partitioned into R×C tiles, each with its own seeded instance
+//! (Rasch et al., arXiv:2302.08469; Luquin et al., arXiv:2506.00004).
+//!
+//! This module owns that geometry and nothing else:
+//!
+//! * [`Tiling`] — the R×C partitioning policy (`HwConfig::tiling()`);
+//!   `0` along an axis means "unbounded", i.e. the pre-tile
+//!   whole-matrix fiction.
+//! * [`TileGrid`] — the concrete grid a `Tiling` induces on one (K, N)
+//!   matrix, with per-tile row/column ranges.
+//! * [`tile_key`] — the deterministic FNV-1a identity of one tile,
+//!   folded into every RNG stream that simulates a hardware instance
+//!   (noise seeds, drift ν draws, GDC calibration).
+//! * [`for_each_tile`] / [`TileView`] — in-place traversal of a
+//!   tensor's tiles, with channel-segment (column/row) and per-device
+//!   access used by the noise, drift, and quantization engines.
+//! * [`TileMap`] / [`Floorplan`] — tiles-used accounting for a model
+//!   and the capacity check a `ChipDeployment` runs at provision time.
+//!
+//! ## The degenerate grid is the legacy per-tensor path
+//!
+//! When a tile covers the whole matrix (tile dims `0` or ≥ the matrix
+//! dims), every engine takes the exact pre-tile code path: one RNG
+//! stream per *tensor* (keyed by the tensor name alone, crossing the
+//! layer-stack boundary) and one GDC scale per tensor. Deployment
+//! fingerprints are byte-identical to the pre-tile simulator in that
+//! case — regression-tested in `tests/properties.rs` — so existing
+//! seeds, checkpoints, and bench trajectories stay comparable.
+
+use crate::runtime::params::{Params, ANALOG_WEIGHT_KEYS};
+use crate::util::tensor::Tensor;
+use crate::util::{fnv1a, fnv1a_fold};
+
+/// Tile rows of the IBM Hermes-project chip (64 cores of 256×256 PCM
+/// devices, Le Gallo et al. 2023) — the paper-adjacent floorplan preset.
+pub const HERMES_TILE_ROWS: usize = 256;
+/// Tile columns of the IBM Hermes-project chip.
+pub const HERMES_TILE_COLS: usize = 256;
+/// Crossbar cores per Hermes-project die.
+pub const HERMES_TILES_PER_CHIP: usize = 64;
+
+/// The analog tensor keys every per-tile engine acts on, in a fixed
+/// order: the seven block linears plus the tied embedding/head matrix.
+/// (The embedding's analog channels are vocabulary *rows*; the block
+/// linears' are output *columns*.)
+pub fn analog_keys() -> impl Iterator<Item = &'static str> {
+    ANALOG_WEIGHT_KEYS.iter().copied().chain(std::iter::once("emb"))
+}
+
+/// Which axis of a (K, N) matrix carries the analog channels — output
+/// columns for the block linears, vocabulary rows for the tied
+/// embedding/head matrix. Tile-local channel *segments* follow the same
+/// orientation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChannelAxis {
+    /// channels are last-axis columns (the seven block linears)
+    Cols,
+    /// channels are second-to-last-axis rows (the tied embedding/head)
+    Rows,
+}
+
+/// The crossbar partitioning policy: fixed R×C tile dimensions applied
+/// to every analog weight matrix. `0` along an axis means unbounded
+/// (one tile spans the whole axis) — `Tiling::unbounded()` is the
+/// pre-tile whole-matrix behavior.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tiling {
+    /// tile rows R (0 = one tile spans all matrix rows)
+    pub rows: usize,
+    /// tile columns C (0 = one tile spans all matrix columns)
+    pub cols: usize,
+}
+
+impl Tiling {
+    /// An R×C tile partitioning.
+    pub fn new(rows: usize, cols: usize) -> Tiling {
+        Tiling { rows, cols }
+    }
+
+    /// No partitioning: every matrix is a single (impossibly large)
+    /// tile — the pre-tile simulator behavior.
+    pub fn unbounded() -> Tiling {
+        Tiling { rows: 0, cols: 0 }
+    }
+
+    /// Whether this policy never splits any matrix.
+    pub fn is_unbounded(&self) -> bool {
+        self.rows == 0 && self.cols == 0
+    }
+
+    /// The concrete grid this policy induces on one (K, N) matrix:
+    /// tile dims are clamped to the matrix dims, so oversized tiles
+    /// degrade gracefully to the whole-matrix grid.
+    pub fn grid_for(&self, k: usize, n: usize) -> TileGrid {
+        let clamp = |tile: usize, dim: usize| {
+            if tile == 0 || tile >= dim {
+                dim.max(1)
+            } else {
+                tile
+            }
+        };
+        TileGrid { k, n, tile_rows: clamp(self.rows, k), tile_cols: clamp(self.cols, n) }
+    }
+
+    /// Short human label: "full" for unbounded, else "RxC" with 0
+    /// rendered as "full" per axis.
+    pub fn label(&self) -> String {
+        if self.is_unbounded() {
+            "full".into()
+        } else {
+            let dim = |d: usize| if d == 0 { "full".into() } else { d.to_string() };
+            format!("{}x{}", dim(self.rows), dim(self.cols))
+        }
+    }
+}
+
+/// The tile grid induced on one (K, N) matrix: effective tile dims
+/// (clamped to the matrix) plus the matrix dims, from which every
+/// tile's row/column ranges follow. Ragged edge tiles are allowed —
+/// the last tile row/column may be smaller than R×C, exactly like the
+/// partial utilization of a physical crossbar.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileGrid {
+    /// matrix rows K
+    pub k: usize,
+    /// matrix columns N
+    pub n: usize,
+    /// effective tile rows (1 ..= k)
+    pub tile_rows: usize,
+    /// effective tile columns (1 ..= n)
+    pub tile_cols: usize,
+}
+
+impl TileGrid {
+    /// Number of tile rows: ⌈K / R⌉.
+    pub fn n_tile_rows(&self) -> usize {
+        self.k.div_ceil(self.tile_rows).max(1)
+    }
+
+    /// Number of tile columns: ⌈N / C⌉.
+    pub fn n_tile_cols(&self) -> usize {
+        self.n.div_ceil(self.tile_cols).max(1)
+    }
+
+    /// Tiles per matrix in this grid.
+    pub fn n_tiles(&self) -> usize {
+        self.n_tile_rows() * self.n_tile_cols()
+    }
+
+    /// Whether one tile covers the whole matrix — the degenerate grid
+    /// on which every engine reproduces the legacy per-tensor path
+    /// byte for byte.
+    pub fn is_single(&self) -> bool {
+        self.n_tiles() == 1
+    }
+
+    /// All tiles of the grid in (tile-row, tile-column) scan order.
+    pub fn tiles(&self) -> impl Iterator<Item = TileRef> + '_ {
+        let (gr, gc) = (self.n_tile_rows(), self.n_tile_cols());
+        (0..gr).flat_map(move |tr| {
+            (0..gc).map(move |tc| TileRef {
+                tr,
+                tc,
+                row_start: tr * self.tile_rows,
+                row_end: ((tr + 1) * self.tile_rows).min(self.k),
+                col_start: tc * self.tile_cols,
+                col_end: ((tc + 1) * self.tile_cols).min(self.n),
+            })
+        })
+    }
+}
+
+/// One tile of a [`TileGrid`]: its grid coordinates plus the half-open
+/// row/column ranges it occupies in the matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileRef {
+    /// tile-row index in the grid
+    pub tr: usize,
+    /// tile-column index in the grid
+    pub tc: usize,
+    /// first matrix row covered
+    pub row_start: usize,
+    /// one past the last matrix row covered
+    pub row_end: usize,
+    /// first matrix column covered
+    pub col_start: usize,
+    /// one past the last matrix column covered
+    pub col_end: usize,
+}
+
+impl TileRef {
+    /// Rows this tile spans.
+    pub fn rows(&self) -> usize {
+        self.row_end - self.row_start
+    }
+
+    /// Columns this tile spans.
+    pub fn cols(&self) -> usize {
+        self.col_end - self.col_start
+    }
+
+    /// Devices (cells) on this tile.
+    pub fn devices(&self) -> usize {
+        self.rows() * self.cols()
+    }
+}
+
+/// Deterministic identity of one tile: FNV-1a over the tensor key
+/// folded with (stack index, tile row, tile column). Every RNG stream
+/// that simulates a hardware instance folds this in, so two tiles of
+/// the same tensor draw independent noise/drift instances while a
+/// fixed (seed, tile) pair is reproducible. The degenerate
+/// whole-matrix grid does NOT use this — it keys on the tensor name
+/// alone (`fnv1a(key)`), preserving the pre-tile streams byte for
+/// byte.
+pub fn tile_key(tensor_key: &str, stack: usize, tr: usize, tc: usize) -> u64 {
+    let mut h = fnv1a(tensor_key.as_bytes());
+    h = fnv1a_fold(h, stack as u64);
+    h = fnv1a_fold(h, tr as u64);
+    fnv1a_fold(h, tc as u64)
+}
+
+/// Mutable view of one tile of one matrix in a tensor's stack, used by
+/// the per-tile engines to visit channel segments (gather/scatter for
+/// strided columns, in-place for contiguous rows) and individual
+/// devices without re-deriving offsets at every call site.
+pub struct TileView<'a> {
+    /// the full (K, N) matrix slice this tile lives in
+    data: &'a mut [f32],
+    n: usize,
+    tile: TileRef,
+}
+
+impl TileView<'_> {
+    /// Apply `f` to every tile-local *column* segment (the portion of
+    /// each matrix column inside this tile's row range), in column
+    /// order. Segments are gathered into a contiguous scratch buffer
+    /// and written back, mirroring `Tensor::map_columns`.
+    pub fn map_cols(&mut self, mut f: impl FnMut(&mut [f32])) {
+        let mut seg = vec![0.0f32; self.tile.rows()];
+        for j in self.tile.col_start..self.tile.col_end {
+            for (s, i) in (self.tile.row_start..self.tile.row_end).enumerate() {
+                seg[s] = self.data[i * self.n + j];
+            }
+            f(&mut seg);
+            for (s, i) in (self.tile.row_start..self.tile.row_end).enumerate() {
+                self.data[i * self.n + j] = seg[s];
+            }
+        }
+    }
+
+    /// Apply `f` to every tile-local *row* segment (contiguous), in
+    /// row order — the cheap orientation, mirroring `Tensor::map_rows`.
+    pub fn map_rows(&mut self, mut f: impl FnMut(&mut [f32])) {
+        for i in self.tile.row_start..self.tile.row_end {
+            f(&mut self.data[i * self.n + self.tile.col_start..i * self.n + self.tile.col_end]);
+        }
+    }
+
+    /// Apply `f` along the channel orientation: column segments for
+    /// the block linears, row segments for the tied embedding/head.
+    pub fn map_channels(&mut self, axis: ChannelAxis, f: impl FnMut(&mut [f32])) {
+        match axis {
+            ChannelAxis::Cols => self.map_cols(f),
+            ChannelAxis::Rows => self.map_rows(f),
+        }
+    }
+
+    /// Apply `f` to every device (cell) of the tile in row-major
+    /// tile-local order — the per-device drift ν draws use this.
+    pub fn map_devices(&mut self, mut f: impl FnMut(&mut f32)) {
+        for i in self.tile.row_start..self.tile.row_end {
+            for j in self.tile.col_start..self.tile.col_end {
+                f(&mut self.data[i * self.n + j]);
+            }
+        }
+    }
+}
+
+/// Visit every tile of every (K, N) matrix in `t`'s stack: `f` is
+/// called once per (stack index, tile) with a mutable [`TileView`]
+/// over that tile. Traversal order is (stack, tile-row, tile-column) —
+/// fixed, so per-tile RNG derivations are deterministic.
+pub fn for_each_tile(
+    t: &mut Tensor,
+    grid: &TileGrid,
+    mut f: impl FnMut(usize, &TileRef, &mut TileView),
+) {
+    let (stack, k, n) = t.as_matrix_stack();
+    debug_assert_eq!((k, n), (grid.k, grid.n), "grid built for a different matrix shape");
+    for s in 0..stack {
+        let mat = &mut t.data[s * k * n..(s + 1) * k * n];
+        for tile in grid.tiles() {
+            let mut view = TileView { data: &mut *mat, n, tile };
+            f(s, &tile, &mut view);
+        }
+    }
+}
+
+/// Apply `f` to every whole-tensor channel along `axis` — the legacy
+/// (degenerate-grid) traversal shared by the noise and quantization
+/// engines, kept here so both orientations live next to their tiled
+/// counterparts.
+pub fn map_tensor_channels(t: &mut Tensor, axis: ChannelAxis, f: impl FnMut(&mut [f32])) {
+    match axis {
+        ChannelAxis::Cols => t.map_columns(f),
+        ChannelAxis::Rows => t.map_rows(f),
+    }
+}
+
+/// Tiles-used accounting for one analog tensor under a [`Tiling`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TileMapEntry {
+    /// tensor key ("wq", …, "emb")
+    pub key: String,
+    /// leading stack size (layers for the block linears, 1 for emb)
+    pub stack: usize,
+    /// the grid induced on each (K, N) matrix of the stack
+    pub grid: TileGrid,
+}
+
+impl TileMapEntry {
+    /// Crossbar tiles this tensor occupies: stack × tiles-per-matrix.
+    pub fn tiles(&self) -> usize {
+        self.stack * self.grid.n_tiles()
+    }
+}
+
+/// Deterministic map from a model's analog tensors to crossbar tiles:
+/// the tiles-used ledger a chip floorplan is checked against, and the
+/// enumeration every per-tile engine follows.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TileMap {
+    /// the partitioning policy the map was built under
+    pub tiling: Tiling,
+    /// one entry per analog tensor present in the parameter set,
+    /// in `analog_keys()` order
+    pub entries: Vec<TileMapEntry>,
+}
+
+impl TileMap {
+    /// Build the tile map of `params` under `tiling` (analog tensors
+    /// only; digital parameters never occupy crossbar tiles).
+    pub fn of(params: &Params, tiling: Tiling) -> TileMap {
+        let entries = analog_keys()
+            .filter_map(|key| {
+                let t = params.map.get(key)?;
+                let (stack, k, n) = t.as_matrix_stack();
+                Some(TileMapEntry { key: key.to_string(), stack, grid: tiling.grid_for(k, n) })
+            })
+            .collect();
+        TileMap { tiling, entries }
+    }
+
+    /// Total crossbar tiles the model occupies.
+    pub fn total_tiles(&self) -> usize {
+        self.entries.iter().map(TileMapEntry::tiles).sum()
+    }
+}
+
+/// Physical floorplan of one simulated chip: the tile partitioning its
+/// crossbars use plus how many tiles the die provides. Capacity 0
+/// means unbounded — the pre-floorplan "infinite chip".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Floorplan {
+    /// crossbar tile dimensions on this die
+    pub tiling: Tiling,
+    /// crossbar tiles available on the die (0 = unbounded)
+    pub capacity_tiles: usize,
+}
+
+impl Floorplan {
+    /// No partitioning, no capacity limit.
+    pub fn unbounded() -> Floorplan {
+        Floorplan { tiling: Tiling::unbounded(), capacity_tiles: 0 }
+    }
+
+    /// A die with R×C tiles and `capacity_tiles` of them.
+    pub fn new(tiling: Tiling, capacity_tiles: usize) -> Floorplan {
+        Floorplan { tiling, capacity_tiles }
+    }
+
+    /// The IBM Hermes-project chip: 64 cores of 256×256 PCM devices.
+    pub fn hermes() -> Floorplan {
+        Floorplan {
+            tiling: Tiling::new(HERMES_TILE_ROWS, HERMES_TILE_COLS),
+            capacity_tiles: HERMES_TILES_PER_CHIP,
+        }
+    }
+
+    /// Check that a model's [`TileMap`] fits on this die; the error
+    /// names the shortfall so deployment failures are actionable.
+    pub fn fits(&self, map: &TileMap) -> Result<(), String> {
+        let used = map.total_tiles();
+        if self.capacity_tiles > 0 && used > self.capacity_tiles {
+            return Err(format!(
+                "model needs {used} crossbar tiles ({} tiling) but the chip floorplan \
+                 provides {} — shard the model across more chips or use larger tiles",
+                map.tiling.label(),
+                self.capacity_tiles
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_matrix_exactly_with_ragged_edges() {
+        let grid = Tiling::new(3, 4).grid_for(7, 10);
+        assert_eq!((grid.n_tile_rows(), grid.n_tile_cols()), (3, 3));
+        assert_eq!(grid.n_tiles(), 9);
+        let tiles: Vec<TileRef> = grid.tiles().collect();
+        assert_eq!(tiles.len(), 9);
+        // union of tiles = whole matrix, no overlap
+        let mut covered = vec![0u8; 7 * 10];
+        for t in &tiles {
+            for i in t.row_start..t.row_end {
+                for j in t.col_start..t.col_end {
+                    covered[i * 10 + j] += 1;
+                }
+            }
+        }
+        assert!(covered.iter().all(|&c| c == 1));
+        // the ragged corner tile is 1x2
+        let last = tiles.last().unwrap();
+        assert_eq!((last.rows(), last.cols()), (1, 2));
+        assert_eq!(last.devices(), 2);
+    }
+
+    #[test]
+    fn oversized_and_unbounded_tiles_collapse_to_a_single_tile() {
+        for tiling in [Tiling::unbounded(), Tiling::new(512, 512), Tiling::new(0, 64)] {
+            let grid = tiling.grid_for(8, 16);
+            assert!(grid.is_single(), "{tiling:?}");
+            let t: Vec<TileRef> = grid.tiles().collect();
+            assert_eq!(t.len(), 1);
+            assert_eq!((t[0].rows(), t[0].cols()), (8, 16));
+        }
+        assert!(!Tiling::new(4, 0).grid_for(8, 16).is_single());
+    }
+
+    #[test]
+    fn tile_keys_are_distinct_across_coordinates_and_tensors() {
+        let mut seen = std::collections::BTreeSet::new();
+        for key in ["wq", "wk", "emb"] {
+            for s in 0..2 {
+                for tr in 0..3 {
+                    for tc in 0..3 {
+                        assert!(seen.insert(tile_key(key, s, tr, tc)), "collision at {key} {s} {tr} {tc}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_view_segments_cover_every_element_once() {
+        let mut t = Tensor::new(vec![2, 4, 6], (0..48).map(|x| x as f32).collect());
+        let grid = Tiling::new(3, 4).grid_for(4, 6);
+        for axis in [ChannelAxis::Cols, ChannelAxis::Rows] {
+            let mut u = t.clone();
+            for_each_tile(&mut u, &grid, |_, _, view| {
+                view.map_channels(axis, |seg| seg.iter_mut().for_each(|v| *v += 100.0));
+            });
+            let want: Vec<f32> = t.data.iter().map(|v| v + 100.0).collect();
+            assert_eq!(u.data, want, "{axis:?}");
+        }
+        let mut u = t.clone();
+        for_each_tile(&mut u, &grid, |_, _, view| {
+            view.map_devices(|v| *v += 100.0);
+        });
+        assert!(u.data.iter().zip(&t.data).all(|(a, b)| *a == b + 100.0));
+    }
+
+    #[test]
+    fn tile_map_counts_stack_times_grid() {
+        use crate::runtime::manifest::ModelDims;
+        use std::collections::BTreeMap;
+        let mut shapes = BTreeMap::new();
+        shapes.insert("emb".into(), vec![10, 8]);
+        shapes.insert("wq".into(), vec![2, 8, 8]);
+        shapes.insert("ln_f".into(), vec![8]);
+        let dims = ModelDims {
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 1,
+            d_ff: 16,
+            seq_len: 8,
+            vocab: 10,
+            n_cls: 0,
+            n_params: 0,
+            param_keys: vec!["emb".into(), "wq".into(), "ln_f".into()],
+            param_shapes: shapes,
+        };
+        let p = Params::init(&dims, 1);
+        // 4x4 tiles: wq is 2 stacked 8x8 -> 2 * 4 tiles; emb 10x8 -> 3 * 2
+        let map = TileMap::of(&p, Tiling::new(4, 4));
+        assert_eq!(map.total_tiles(), 2 * 4 + 3 * 2);
+        // digital params never occupy tiles
+        assert!(map.entries.iter().all(|e| e.key != "ln_f"));
+        // unbounded: one tile per stacked matrix
+        assert_eq!(TileMap::of(&p, Tiling::unbounded()).total_tiles(), 2 + 1);
+        // floorplan check
+        assert!(Floorplan::new(Tiling::new(4, 4), 14).fits(&map).is_ok());
+        let err = Floorplan::new(Tiling::new(4, 4), 13).fits(&map).unwrap_err();
+        assert!(err.contains("14 crossbar tiles"), "{err}");
+        assert!(Floorplan::unbounded().fits(&map).is_ok());
+        assert_eq!(Floorplan::hermes().capacity_tiles, 64);
+    }
+}

@@ -42,6 +42,7 @@ pub struct ShardSource {
 }
 
 impl ShardSource {
+    /// A shuffled batch source over `shard`, deterministic per seed.
     pub fn new(shard: crate::data::Shard, seed: u64) -> ShardSource {
         let order: Vec<usize> = (0..shard.n_chunks().max(1)).collect();
         let mut s = ShardSource {
@@ -82,16 +83,27 @@ pub enum TrainMode {
     Distill,
 }
 
+/// What a training run produced.
 pub struct TrainOutcome {
+    /// the trained parameters
     pub params: Params,
+    /// per-step losses
     pub losses: Vec<f32>,
+    /// optimizer steps executed
     pub steps: usize,
+    /// wall-clock duration
     pub secs: f64,
 }
 
+/// Microbatch-accumulating training loop over the grads/opt artifacts
+/// (pretrain, HWA distillation, QAT — selected by `TrainMode` + the
+/// hardware config).
 pub struct Trainer<'a> {
+    /// runtime the grads/opt artifacts execute on
     pub rt: &'a Runtime,
+    /// model config name in the artifact manifest
     pub model: String,
+    /// training hyperparameters (steps, lr, accumulation, hw)
     pub cfg: TrainConfig,
     /// warmup fraction (paper: 0.016)
     pub warmup_ratio: f32,
@@ -99,10 +111,13 @@ pub struct Trainer<'a> {
     pub metrics_path: Option<PathBuf>,
     /// checkpoint every n steps (0 = only at end)
     pub ckpt_every: usize,
+    /// checkpoint directory (None = no checkpoints)
     pub ckpt_dir: Option<PathBuf>,
 }
 
 impl<'a> Trainer<'a> {
+    /// A trainer with default reporting (no metrics file, checkpoint
+    /// only at the end).
     pub fn new(rt: &'a Runtime, model: &str, cfg: TrainConfig) -> Trainer<'a> {
         Trainer {
             rt,

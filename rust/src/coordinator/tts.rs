@@ -54,11 +54,14 @@ impl SyntheticPrm {
     }
 }
 
+/// Accuracy-vs-n curves for the three test-time-scaling selectors.
 #[derive(Clone, Debug)]
 pub struct TtsCurve {
-    /// n -> accuracy per repeat
+    /// n -> accuracy per repeat, best-of-n by PRM score
     pub prm_greedy: BTreeMap<usize, Vec<f64>>,
+    /// n -> accuracy per repeat, PRM-weighted answer voting
     pub prm_voting: BTreeMap<usize, Vec<f64>>,
+    /// n -> accuracy per repeat, unweighted majority voting
     pub voting: BTreeMap<usize, Vec<f64>>,
 }
 

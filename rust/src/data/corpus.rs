@@ -22,12 +22,14 @@ use crate::util::prng::Pcg64;
 
 /// Streaming pre-training corpus over the synthetic world.
 pub struct WorldCorpus {
+    /// the world lines are sampled from
     pub world: World,
     rng: Pcg64,
     buf: Vec<u32>,
 }
 
 impl WorldCorpus {
+    /// A corpus stream over `world`, deterministic per seed.
     pub fn new(world: World, seed: u64) -> Self {
         WorldCorpus { world, rng: Pcg64::with_stream(seed, 0xc0), buf: Vec::new() }
     }
@@ -61,11 +63,14 @@ impl WorldCorpus {
 /// Token shard: the unit the datagen engine writes and the trainer reads.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Shard {
+    /// the packed token stream (whole chunks only)
     pub tokens: Vec<u32>,
+    /// fixed training-chunk length
     pub chunk_len: usize,
 }
 
 impl Shard {
+    /// Number of whole chunks in the shard.
     pub fn n_chunks(&self) -> usize {
         self.tokens.len() / self.chunk_len
     }
@@ -85,6 +90,7 @@ impl Shard {
         out
     }
 
+    /// Write the shard as raw bytes + a JSON sidecar.
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -98,6 +104,7 @@ impl Shard {
         std::fs::write(path.with_extension("json"), meta.to_string())
     }
 
+    /// Load a shard written by `save`.
     pub fn load(path: &Path) -> std::io::Result<Shard> {
         let mut bytes = Vec::new();
         std::fs::File::open(path)?.read_to_end(&mut bytes)?;

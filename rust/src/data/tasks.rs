@@ -32,6 +32,7 @@ pub enum InstrCheck {
 }
 
 impl InstrCheck {
+    /// Whether `output` satisfies this instruction.
     pub fn verify(&self, output: &str) -> bool {
         let out = output.trim();
         match self {
@@ -67,15 +68,21 @@ pub enum Scoring {
     Safety { harmful: bool },
 }
 
+/// One benchmark example: prompt plus how to score the model's answer.
 #[derive(Clone, Debug)]
 pub struct Sample {
+    /// the text presented to the model
     pub prompt: String,
+    /// how the answer is extracted and matched
     pub scoring: Scoring,
 }
 
+/// A named benchmark task (a bag of samples).
 #[derive(Clone, Debug)]
 pub struct Task {
+    /// task name ("mmlu_syn", …)
     pub name: &'static str,
+    /// the task's examples
     pub samples: Vec<Sample>,
     /// random-guess accuracy (reported like the paper's table 14)
     pub chance: f64,
@@ -87,6 +94,7 @@ pub const TABLE1_TASKS: &[&str] = &[
     "agieval_syn", "arc_c_syn", "arc_e_syn", "anli_syn",
 ];
 
+/// Build `n` deterministic samples of the named task from the world.
 pub fn build_task(name: &'static str, world: &World, n: usize, seed: u64) -> Task {
     let mut rng = Pcg64::with_stream(seed, 0x7a51 ^ fnv(name));
     let mut samples = Vec::with_capacity(n);

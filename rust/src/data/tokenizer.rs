@@ -6,23 +6,30 @@
 //! evaluates (logit comparison over answer tokens, `####`-anchored
 //! answer extraction, stop-string handling).
 
+/// Padding token id.
 pub const PAD: u32 = 0;
+/// Beginning-of-sequence token id.
 pub const BOS: u32 = 1;
+/// End-of-sequence token id.
 pub const EOS: u32 = 2;
+/// Total vocabulary size (specials + printable ASCII).
 pub const VOCAB: usize = 98;
 const CHAR_BASE: u32 = 3;
 const FIRST_CHAR: u32 = 32; // ' '
 const LAST_CHAR: u32 = 126; // '~'
 
+/// The char-level tokenizer (stateless; all methods are associated).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Tokenizer;
 
 impl Tokenizer {
+    /// Token id of one printable-ASCII char (None outside the alphabet).
     pub fn encode_char(c: char) -> Option<u32> {
         let cp = c as u32;
         (FIRST_CHAR..=LAST_CHAR).contains(&cp).then(|| cp - FIRST_CHAR + CHAR_BASE)
     }
 
+    /// Char of one content-token id (None for specials / out of range).
     pub fn decode_char(id: u32) -> Option<char> {
         (CHAR_BASE..CHAR_BASE + (LAST_CHAR - FIRST_CHAR + 1))
             .contains(&id)
@@ -58,6 +65,7 @@ impl Tokenizer {
         s
     }
 
+    /// Vocabulary size (same as [`VOCAB`]).
     pub fn vocab() -> usize {
         VOCAB
     }

@@ -12,20 +12,27 @@
 
 use crate::util::prng::Pcg64;
 
+/// The invented entity names facts are about.
 pub const ENTITIES: &[&str] = &[
     "zor", "blik", "mur", "tav", "quil", "rund", "sipo", "vek", "wam", "yat",
     "dren", "folt", "gim", "hul", "jex", "kip", "lorn", "nub", "oxa", "pim",
 ];
+/// Color attribute vocabulary.
 pub const COLORS: &[&str] = &["red", "blue", "green", "gold", "pink", "gray", "teal", "ash"];
+/// Place attribute vocabulary.
 pub const PLACES: &[&str] = &["barn", "lake", "mill", "cave", "dock", "glen", "peak", "yard"];
+/// Class attribute vocabulary.
 pub const CLASSES: &[&str] = &["beast", "tool", "fruit", "stone", "cloth"];
+/// Verbs that make a request harmful (XSTest-analog probes).
 pub const HARM_VERBS: &[&str] = &["harm", "poison", "burn", "smash", "steal"];
+/// Verbs that make a request safe (XSTest-analog probes).
 pub const SAFE_VERBS: &[&str] = &["feed", "clean", "paint", "move", "find"];
 
 /// Deterministic attribute assignment: entity i has COLORS[h(i,0)],
 /// PLACES[h(i,1)], CLASSES[h(i,2)]. Pure function of the world seed.
 #[derive(Clone, Debug)]
 pub struct World {
+    /// the seed the attribute tables derive from
     pub seed: u64,
     color_of: Vec<usize>,
     place_of: Vec<usize>,
@@ -33,6 +40,7 @@ pub struct World {
 }
 
 impl World {
+    /// A world with attributes deterministically assigned from `seed`.
     pub fn new(seed: u64) -> World {
         let mut rng = Pcg64::with_stream(seed, 0x77);
         let n = ENTITIES.len();
@@ -44,30 +52,37 @@ impl World {
         }
     }
 
+    /// Number of entities in the world.
     pub fn n_entities(&self) -> usize {
         ENTITIES.len()
     }
 
+    /// Color of entity `e`.
     pub fn color(&self, e: usize) -> &'static str {
         COLORS[self.color_of[e]]
     }
 
+    /// Place of entity `e`.
     pub fn place(&self, e: usize) -> &'static str {
         PLACES[self.place_of[e]]
     }
 
+    /// Class of entity `e`.
     pub fn class(&self, e: usize) -> &'static str {
         CLASSES[self.class_of[e]]
     }
 
+    /// Index of entity `e`'s color in [`COLORS`].
     pub fn color_idx(&self, e: usize) -> usize {
         self.color_of[e]
     }
 
+    /// Index of entity `e`'s place in [`PLACES`].
     pub fn place_idx(&self, e: usize) -> usize {
         self.place_of[e]
     }
 
+    /// Index of entity `e`'s class in [`CLASSES`].
     pub fn class_idx(&self, e: usize) -> usize {
         self.class_of[e]
     }
@@ -92,6 +107,7 @@ impl World {
         }
     }
 
+    /// One declarative attribute fact.
     pub fn fact_line(&self, rng: &mut Pcg64) -> String {
         let e = rng.below(self.n_entities());
         match rng.below(3) {
@@ -101,6 +117,7 @@ impl World {
         }
     }
 
+    /// One open-ended attribute Q/A line.
     pub fn fact_qa(&self, rng: &mut Pcg64) -> String {
         let e = rng.below(self.n_entities());
         match rng.below(3) {
@@ -190,6 +207,7 @@ impl World {
         (q, work, total)
     }
 
+    /// One answered yes/no line (corpus form of `yesno_question`).
     pub fn yesno_line(&self, rng: &mut Pcg64) -> String {
         let (q, yes) = self.yesno_question(rng);
         format!("{q}{}", if yes { "yes" } else { "no" })
@@ -210,6 +228,7 @@ impl World {
         )
     }
 
+    /// One answered NLI line (corpus form of `nli_example`).
     pub fn nli_line(&self, rng: &mut Pcg64) -> String {
         let (p, label) = self.nli_example(rng);
         format!("{p}{label}")
@@ -244,6 +263,8 @@ impl World {
         }
     }
 
+    /// One answered instruction line (corpus form of
+    /// `instruction_example`).
     pub fn instruction_line(&self, rng: &mut Pcg64) -> String {
         let (p, a) = self.instruction_example(rng);
         format!("{p}{a}")
@@ -263,6 +284,7 @@ impl World {
         }
     }
 
+    /// One answered safety line (corpus form of `safety_example`).
     pub fn safety_line(&self, rng: &mut Pcg64) -> String {
         let (p, a) = self.safety_example(rng);
         format!("{p}{a}")

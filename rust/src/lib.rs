@@ -15,8 +15,16 @@
 //!   repeated-seed noisy evaluation, post-training quantization, and
 //!   test-time compute scaling — with Python never on the request path.
 //!
-//! See DESIGN.md for the full system inventory and the per-experiment
-//! index, and EXPERIMENTS.md for paper-vs-measured results.
+//! Weight tensors are partitioned into fixed-size crossbar tiles
+//! (`coordinator::tiles`): every per-hardware-instance effect — noise
+//! programming, drift trajectories, ADC ranges, GDC scales — is
+//! simulated per tile, and chips carry a floorplan (tile capacity)
+//! that deployment is checked against.
+//!
+//! See docs/ARCHITECTURE.md for the layer map and glossary,
+//! docs/REPRODUCING.md for the bench-to-paper index, and rust/README.md
+//! for the serving API.
+#![warn(missing_docs)]
 
 pub mod cli;
 pub mod config;

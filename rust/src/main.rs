@@ -63,6 +63,26 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "max-new", takes_value: true, help: "serve: default generation budget" },
         FlagSpec { name: "ages", takes_value: true, help: "drift: comma list (1s,1h,1d,1mo,1y)" },
         FlagSpec {
+            name: "tile-rows",
+            takes_value: true,
+            help: "crossbar tile rows R (0 = whole-matrix tiles)",
+        },
+        FlagSpec {
+            name: "tile-cols",
+            takes_value: true,
+            help: "crossbar tile cols C (0 = whole-matrix tiles)",
+        },
+        FlagSpec {
+            name: "tile-capacity",
+            takes_value: true,
+            help: "serve: crossbar tiles per chip die (0 = unbounded)",
+        },
+        FlagSpec {
+            name: "tile-sweep",
+            takes_value: true,
+            help: "eval: tile-size list, e.g. full,32x32,16x16,8x8",
+        },
+        FlagSpec {
             name: "drift",
             takes_value: true,
             help: "serve: chip age per fleet tick (secs or 1h/1d/1mo)",
@@ -99,6 +119,39 @@ fn parse_noise(s: &str) -> Result<NoiseModel> {
     } else {
         Err(anyhow!("unknown noise model '{s}' (none | pcm | gauss:<g>)"))
     }
+}
+
+/// One `RxC` tile-size entry: "full" or "0" means whole-matrix tiles;
+/// a bare number is a square tile.
+fn parse_tile(s: &str) -> Result<(usize, usize)> {
+    let s = s.trim();
+    if s.is_empty() || s == "full" || s == "0" {
+        return Ok((0, 0));
+    }
+    let parse_dim = |d: &str| -> Result<usize> {
+        if d == "full" {
+            Ok(0)
+        } else {
+            d.trim().parse().map_err(|_| anyhow!("bad tile size '{s}' (want RxC or full)"))
+        }
+    };
+    match s.split_once('x') {
+        Some((r, c)) => Ok((parse_dim(r)?, parse_dim(c)?)),
+        None => {
+            let d = parse_dim(s)?;
+            Ok((d, d))
+        }
+    }
+}
+
+/// Resolve the crossbar tiling for a command's hardware config: the
+/// config file's `hw.tile_rows` / `hw.tile_cols` (landed in
+/// `cfg.train.hw`) set the default, `--tile-rows` / `--tile-cols`
+/// flags override it. The presets that `resolve_who` and serve start
+/// from never carry tiling of their own.
+fn tile_overrides(hw: &mut HwConfig, cfg: &Config, args: &Args) {
+    hw.tile_rows = args.usize_or("tile-rows", cfg.train.hw.tile_rows);
+    hw.tile_cols = args.usize_or("tile-cols", cfg.train.hw.tile_cols);
 }
 
 /// Resolve `--who` into (checkpoint, hardware config, label) — the
@@ -167,9 +220,23 @@ fn run(argv: &[String]) -> Result<()> {
                     let shard =
                         pipe.ensure_shard(&teacher, &cfg.datagen.strategy, cfg.datagen.tokens)?;
                     let afm = pipe.ensure_afm(&teacher, shard)?;
-                    let q = pipe.afm_rtn(&afm, 4)?;
-                    q.save(&pipe.run_dir().join("afm_rtn4"))?;
-                    info!("wrote afm_rtn4 checkpoint");
+                    let tiling = afm::coordinator::tiles::Tiling::new(
+                        args.usize_or("tile-rows", cfg.train.hw.tile_rows),
+                        args.usize_or("tile-cols", cfg.train.hw.tile_cols),
+                    );
+                    let (q, name) = if tiling.is_unbounded() {
+                        (pipe.afm_rtn(&afm, 4)?, "afm_rtn4".to_string())
+                    } else {
+                        // per-tile quantization grids don't exist in
+                        // the compiled artifacts (their RTN is
+                        // per-channel over the whole tensor), so tiled
+                        // RTN runs through the host mirror
+                        let mut q = afm.clone();
+                        quant::rtn_params_tiled(&mut q, 4, &tiling);
+                        (q, format!("afm_rtn4_t{}", tiling.label()))
+                    };
+                    q.save(&pipe.run_dir().join(&name))?;
+                    info!("wrote {name} checkpoint");
                 }
                 "spinquant" => {
                     let q = pipe.spinquant(&teacher, 4)?;
@@ -181,8 +248,9 @@ fn run(argv: &[String]) -> Result<()> {
         }
         "eval" => {
             let teacher = pipe.ensure_teacher()?;
-            let (params, hw, label) =
+            let (params, mut hw, label) =
                 resolve_who(&args.get_or("who", "teacher"), &pipe, &cfg, &teacher)?;
+            tile_overrides(&mut hw, &cfg, &args);
             let nm = parse_noise(&args.get_or("noise", "none"))?;
             let seeds = args.usize_or("seeds", cfg.eval.seeds);
             let ev = Evaluator::new(&rt, &cfg.model);
@@ -191,6 +259,24 @@ fn run(argv: &[String]) -> Result<()> {
                 .map(|n| build_task(n, &pipe.world, cfg.eval.samples_per_task, cfg.seed + 500))
                 .collect();
             let m = ModelUnderTest { label: label.clone(), params, hw, rot: false };
+            if let Some(sweep) = args.get("tile-sweep") {
+                // accuracy vs crossbar tile size, everything else fixed
+                let sizes: Vec<(usize, usize)> =
+                    sweep.split(',').map(parse_tile).collect::<Result<_>>()?;
+                let runs = ev.tile_size_sweep(&m, &nm, &tasks, seeds, cfg.seed + 900, &sizes)?;
+                let mut table = Table::new(
+                    &format!("eval: {label} {} — avg acc vs tile size", nm.label()),
+                    &["tiles", "Avg."],
+                );
+                for (tiles_label, rep) in &runs {
+                    table.row(vec![
+                        tiles_label.clone(),
+                        stats::mean_std_str(&avg_acc_per_seed(rep)),
+                    ]);
+                }
+                table.emit(&pipe.run_dir().join("reports"), "eval_tiles");
+                return Ok(());
+            }
             let report = ev.evaluate(&m, &nm, &tasks, seeds, cfg.seed + 900)?;
             let mut table =
                 Table::new(&format!("eval: {label} {}", nm.label()), &["task", "acc"]);
@@ -204,7 +290,9 @@ fn run(argv: &[String]) -> Result<()> {
         }
         "drift" => {
             let teacher = pipe.ensure_teacher()?;
-            let (params, hw, label) = resolve_who(&args.get_or("who", "afm"), &pipe, &cfg, &teacher)?;
+            let (params, mut hw, label) =
+                resolve_who(&args.get_or("who", "afm"), &pipe, &cfg, &teacher)?;
+            tile_overrides(&mut hw, &cfg, &args);
             let nm = parse_noise(&args.get_or("noise", "pcm"))?;
             let seeds = args.usize_or("seeds", 3);
             let ages: Vec<f64> = args
@@ -285,19 +373,31 @@ fn run(argv: &[String]) -> Result<()> {
             let n_chips = args.usize_or("chips", 2).max(1);
             let base_seed = args.u64_or("chip-seed", cfg.seed + 2026);
             let max_new = args.usize_or("max-new", 32);
-            let hw = HwConfig::afm_train(0.0);
+            let mut hw = HwConfig::afm_train(0.0);
+            tile_overrides(&mut hw, &cfg, &args);
+            let capacity = args.usize_or("tile-capacity", 0);
             let chips: Vec<ChipDeployment> = (0..n_chips)
-                .map(|i| ChipDeployment::provision(&afm_p, &nm, base_seed + i as u64, &hw))
+                .map(|i| {
+                    ChipDeployment::provision_floorplanned(
+                        &afm_p,
+                        &nm,
+                        base_seed + i as u64,
+                        &hw,
+                        capacity,
+                    )
+                })
                 .collect::<Result<_>>()?;
             let requests = match args.get("prompts") {
                 Some(path) => serve::prompt_file_workload(path, max_new)?,
                 None => serve::mixed_workload(args.usize_or("requests", 24), cfg.seed),
             };
             info!(
-                "serving {} requests on {n_chips} chip(s) [{} {}]",
+                "serving {} requests on {n_chips} chip(s) [{} {}] — {} tiles/chip{}",
                 requests.len(),
                 hw.label(),
-                nm.label()
+                nm.label(),
+                chips[0].tiles_used(),
+                if capacity > 0 { format!(" of {capacity}") } else { String::new() }
             );
             let mut engine = GenEngine::new(&rt, &cfg.model, false)?;
             rt.warm(&format!("{}_lm_sample", cfg.model))?; // keep compile out of latency

@@ -23,10 +23,12 @@ pub fn lit_tokens(tokens: &[i32], shape: &[usize]) -> Result<xla::Literal> {
     flat.reshape(&dims).map_err(|e| anyhow!("reshape tokens {shape:?}: {e:?}"))
 }
 
+/// f32 -> rank-0 literal.
 pub fn lit_scalar_f32(v: f32) -> xla::Literal {
     xla::Literal::scalar(v)
 }
 
+/// i32 -> rank-0 literal.
 pub fn lit_scalar_i32(v: i32) -> xla::Literal {
     xla::Literal::scalar(v)
 }

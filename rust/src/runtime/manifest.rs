@@ -9,60 +9,95 @@ use anyhow::{anyhow, Result};
 
 use crate::util::json::Json;
 
+/// Element type of one artifact input.
 #[derive(Clone, Debug, PartialEq)]
 pub enum DType {
+    /// 32-bit float
     F32,
+    /// 32-bit signed integer (token ids, lengths, seeds)
     I32,
 }
 
+/// One artifact input: its name, shape, and dtype, in argument order.
 #[derive(Clone, Debug)]
 pub struct InputSpec {
+    /// parameter name as lowered
     pub name: String,
+    /// expected shape
     pub shape: Vec<usize>,
+    /// expected element type
     pub dtype: DType,
 }
 
+/// One AOT-compiled artifact: its HLO file plus I/O contract.
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {
+    /// HLO-text filename inside the artifact directory
     pub file: String,
+    /// inputs in argument order
     pub inputs: Vec<InputSpec>,
+    /// output names in result-tuple order
     pub outputs: Vec<String>,
 }
 
+/// Dimensions of one model config (nano/micro/base/…).
 #[derive(Clone, Debug)]
 pub struct ModelDims {
+    /// residual width
     pub d_model: usize,
+    /// transformer blocks
     pub n_layers: usize,
+    /// attention heads
     pub n_heads: usize,
+    /// MLP hidden width
     pub d_ff: usize,
+    /// context window length T
     pub seq_len: usize,
+    /// vocabulary size
     pub vocab: usize,
+    /// classifier classes (encoder configs; 0 otherwise)
     pub n_cls: usize,
+    /// total parameter count
     pub n_params: usize,
+    /// parameter names in artifact argument order
     pub param_keys: Vec<String>,
+    /// parameter name -> shape
     pub param_shapes: BTreeMap<String, Vec<usize>>,
 }
 
+/// The parsed artifact manifest (the L2→L3 contract).
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// tokenizer vocabulary size
     pub vocab: usize,
+    /// padding token id
     pub pad_id: u32,
+    /// beginning-of-sequence token id
     pub bos_id: u32,
+    /// end-of-sequence token id
     pub eos_id: u32,
+    /// batch dimension of the eval artifacts
     pub batch_eval: usize,
+    /// batch dimension of the generation artifacts
     pub batch_gen: usize,
+    /// batch dimension of the training artifacts
     pub batch_train: usize,
+    /// runtime hardware-scalar names in argument order
     pub hw_fields: Vec<String>,
+    /// model config name -> dimensions
     pub configs: BTreeMap<String, ModelDims>,
+    /// artifact name -> spec
     pub artifacts: BTreeMap<String, ArtifactSpec>,
 }
 
 impl Manifest {
+    /// Load and parse a manifest file.
     pub fn load(path: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(path)?;
         Self::parse(&text)
     }
 
+    /// Parse manifest JSON text.
     pub fn parse(text: &str) -> Result<Manifest> {
         let j = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
         let batch = j.expect("batch");
@@ -128,6 +163,7 @@ impl Manifest {
         })
     }
 
+    /// Dimensions of a model config by name.
     pub fn dims(&self, model: &str) -> Result<&ModelDims> {
         self.configs
             .get(model)

@@ -21,8 +21,10 @@ pub use literal::{lit_scalar_f32, lit_scalar_i32, lit_tensor, lit_tokens, tensor
 pub use manifest::{ArtifactSpec, Manifest, ModelDims};
 pub use params::Params;
 
+/// PJRT-backed artifact runtime: lazy compile + executable cache.
 pub struct Runtime {
     client: xla::PjRtClient,
+    /// the parsed artifact manifest (the L2→L3 contract)
     pub manifest: Manifest,
     dir: PathBuf,
     cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
@@ -46,6 +48,7 @@ impl Runtime {
         })
     }
 
+    /// The manifest spec of an artifact by name.
     pub fn spec(&self, artifact: &str) -> Result<&ArtifactSpec> {
         self.manifest
             .artifacts

@@ -16,10 +16,12 @@ use crate::util::json::Json;
 use crate::util::prng::Pcg64;
 use crate::util::tensor::Tensor;
 
+/// Named parameter tensors in manifest (artifact argument) order.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Params {
     /// manifest ordering (artifact argument order)
     pub keys: Vec<String>,
+    /// parameter name -> tensor
     pub map: BTreeMap<String, Tensor>,
 }
 
@@ -65,14 +67,17 @@ impl Params {
         Params { keys: dims.param_keys.clone(), map }
     }
 
+    /// The tensor named `k` (panics when absent).
     pub fn get(&self, k: &str) -> &Tensor {
         &self.map[k]
     }
 
+    /// Mutable access to the tensor named `k` (panics when absent).
     pub fn get_mut(&mut self, k: &str) -> &mut Tensor {
         self.map.get_mut(k).unwrap()
     }
 
+    /// Total element count across all tensors.
     pub fn n_params(&self) -> usize {
         self.map.values().map(Tensor::len).sum()
     }
@@ -101,6 +106,7 @@ impl Params {
 
     // ------------------------------------------------------- checkpoints
 
+    /// Write a checkpoint: one raw f32 blob per tensor + JSON sidecar.
     pub fn save(&self, dir: &Path) -> Result<()> {
         std::fs::create_dir_all(dir)?;
         let mut meta = Vec::new();
@@ -118,6 +124,7 @@ impl Params {
         Ok(())
     }
 
+    /// Load a checkpoint written by `save` (align with `align_to`).
     pub fn load(dir: &Path) -> Result<Params> {
         let meta_text = std::fs::read_to_string(dir.join("params.json"))
             .with_context(|| format!("no checkpoint at {dir:?}"))?;

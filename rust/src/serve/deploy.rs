@@ -9,14 +9,13 @@
 //! parameter upload — and callers borrow the cached literals for as
 //! many executions as they like.
 
-use std::collections::BTreeMap;
-
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::config::HwConfig;
-use crate::coordinator::drift::{self, DriftModel};
+use crate::coordinator::drift::{self, DriftModel, GdcScales};
 use crate::coordinator::noise::{self, NoiseModel};
 use crate::coordinator::quant;
+use crate::coordinator::tiles::{Floorplan, TileMap, Tiling};
 use crate::runtime::Params;
 use crate::util::{fnv1a, fnv1a_fold, FNV_OFFSET};
 
@@ -42,6 +41,7 @@ pub struct HwScalars {
 }
 
 impl HwScalars {
+    /// Number of runtime hardware scalars every artifact takes.
     pub const N: usize = 7;
 
     /// Flat scalar values in artifact argument order.
@@ -80,12 +80,15 @@ impl From<&HwConfig> for HwScalars {
 }
 
 /// One simulated chip instance ready to serve: noise-programmed
-/// parameters (applied once at provision time) and the typed hardware
-/// operating point. The programmed (pre-drift) tensors are retained so
-/// the chip carries a conductance clock: `age_to` re-derives the
-/// uploaded literals at any deployment age from the pristine
-/// programming, and `gdc_calibrate` folds the per-tile global-drift-
-/// compensation scales back in.
+/// parameters (applied once at provision time, one programming-noise
+/// instance per crossbar tile) and the typed hardware operating point.
+/// The programmed (pre-drift) tensors are retained so the chip carries
+/// a conductance clock: `age_to` re-derives the uploaded literals at
+/// any deployment age from the pristine programming, and
+/// `gdc_calibrate` folds the per-tile global-drift-compensation scales
+/// back in. Every chip also carries a floorplan — the tile
+/// partitioning from its `HwConfig` plus an optional die capacity —
+/// and `provision_floorplanned` refuses models that don't fit.
 pub struct ChipDeployment {
     label: String,
     hw: HwScalars,
@@ -100,21 +103,49 @@ pub struct ChipDeployment {
     drift: DriftModel,
     age_secs: f64,
     /// per-tile GDC output scales from the last field calibration
-    gdc_scales: Option<BTreeMap<String, f32>>,
+    gdc_scales: Option<GdcScales>,
+    /// crossbar partitioning (from the HwConfig at provision time)
+    tiling: Tiling,
+    /// crossbar tiles the programmed model occupies
+    tiles_used: usize,
+    /// tiles available on the die (0 = unbounded)
+    tile_capacity: usize,
 }
 
 impl ChipDeployment {
     /// Program `params` onto a simulated chip: apply `noise` once under
-    /// `seed` (the hardware instance), upload the result, and cache the
-    /// hardware-scalar literals for `hw`. The chip starts at age 0
-    /// (conductances exactly as programmed) with no GDC calibration.
+    /// `seed` (the hardware instance — one independent noise draw per
+    /// crossbar tile of `hw`'s tiling), upload the result, and cache
+    /// the hardware-scalar literals for `hw`. The chip starts at age 0
+    /// (conductances exactly as programmed) with no GDC calibration and
+    /// an unbounded die (no tile-capacity check); use
+    /// `provision_floorplanned` to model a finite chip.
     pub fn provision(
         params: &Params,
         noise: &NoiseModel,
         seed: u64,
         hw: &HwConfig,
     ) -> Result<ChipDeployment> {
-        let programmed = noise::apply(params, noise, seed);
+        Self::provision_floorplanned(params, noise, seed, hw, 0)
+    }
+
+    /// `provision` onto a die with only `capacity_tiles` crossbar
+    /// tiles (0 = unbounded): fails with an actionable error when the
+    /// model's tile map under `hw`'s tiling does not fit. This is how
+    /// a fleet of N finite chips is modelled — and the precondition
+    /// future sharding builds on (a model that fits no single die must
+    /// split).
+    pub fn provision_floorplanned(
+        params: &Params,
+        noise: &NoiseModel,
+        seed: u64,
+        hw: &HwConfig,
+        capacity_tiles: usize,
+    ) -> Result<ChipDeployment> {
+        let tiling = hw.tiling();
+        let tile_map = TileMap::of(params, tiling);
+        Floorplan::new(tiling, capacity_tiles).fits(&tile_map).map_err(|e| anyhow!(e))?;
+        let programmed = noise::apply_tiled(params, noise, seed, &tiling);
         let param_lits = programmed.to_literals()?;
         let fingerprint = fingerprint_params(&programmed);
         let scalars = HwScalars::from(hw);
@@ -135,7 +166,30 @@ impl ChipDeployment {
             drift: DriftModel::default(),
             age_secs: 0.0,
             gdc_scales: None,
+            tiling,
+            tiles_used: tile_map.total_tiles(),
+            tile_capacity: capacity_tiles,
         })
+    }
+
+    /// The crossbar partitioning this chip was provisioned under.
+    pub fn tiling(&self) -> Tiling {
+        self.tiling
+    }
+
+    /// Crossbar tiles the programmed model occupies on this die.
+    pub fn tiles_used(&self) -> usize {
+        self.tiles_used
+    }
+
+    /// Tiles available on the die (0 = unbounded).
+    pub fn tile_capacity(&self) -> usize {
+        self.tile_capacity
+    }
+
+    /// This chip's floorplan: its tiling plus die capacity.
+    pub fn floorplan(&self) -> Floorplan {
+        Floorplan::new(self.tiling, self.tile_capacity)
     }
 
     /// Override the drift law (per-chip ν statistics / t0). Takes
@@ -144,6 +198,7 @@ impl ChipDeployment {
         self.drift = model;
     }
 
+    /// The drift law this chip ages under.
     pub fn drift_model(&self) -> DriftModel {
         self.drift
     }
@@ -195,13 +250,15 @@ impl ChipDeployment {
 
     fn set_age(&mut self, t_secs: f64, recalibrate: bool) -> Result<()> {
         self.age_secs = t_secs;
-        let drifted = drift::apply(&self.programmed, &self.drift, t_secs, self.seed);
+        let drifted =
+            drift::apply_tiled(&self.programmed, &self.drift, t_secs, self.seed, &self.tiling);
         if recalibrate {
             self.gdc_scales = Some(drift::gdc_calibrate(
                 &self.programmed,
                 &drifted,
                 drift::GDC_CALIB_VECS,
                 self.seed,
+                &self.tiling,
             ));
         }
         self.refresh(drifted)
@@ -216,6 +273,8 @@ impl ChipDeployment {
         Ok(())
     }
 
+    /// Human-readable chip identity: operating point, noise model, and
+    /// hardware seed.
     pub fn label(&self) -> &str {
         &self.label
     }
@@ -292,7 +351,7 @@ mod tests {
     use crate::runtime::manifest::ModelDims;
     use std::collections::BTreeMap as Map;
 
-    fn chip(seed: u64) -> ChipDeployment {
+    fn chip_params() -> Params {
         let mut shapes = Map::new();
         shapes.insert("emb".into(), vec![10, 6]);
         shapes.insert("wq".into(), vec![2, 6, 6]);
@@ -308,8 +367,12 @@ mod tests {
             param_keys: vec!["emb".into(), "wq".into()],
             param_shapes: shapes,
         };
-        let p = Params::init(&dims, 1);
-        ChipDeployment::provision(&p, &NoiseModel::Pcm, seed, &HwConfig::afm_train(0.0)).unwrap()
+        Params::init(&dims, 1)
+    }
+
+    fn chip(seed: u64) -> ChipDeployment {
+        ChipDeployment::provision(&chip_params(), &NoiseModel::Pcm, seed, &HwConfig::afm_train(0.0))
+            .unwrap()
     }
 
     #[test]
@@ -327,6 +390,60 @@ mod tests {
         // aging is re-derived from the programmed state, not cumulative
         a.age_to(0.0).unwrap();
         assert_eq!(a.fingerprint(), fresh);
+    }
+
+    #[test]
+    fn tiled_provisioning_reprograms_noise_but_oversized_tiles_match_legacy() {
+        let p = chip_params();
+        let hw = HwConfig::afm_train(0.0);
+        let legacy = ChipDeployment::provision(&p, &NoiseModel::Pcm, 5, &hw).unwrap();
+        // a real grid draws per-tile noise instances: different chip
+        let tiled =
+            ChipDeployment::provision(&p, &NoiseModel::Pcm, 5, &hw.clone().with_tiles(3, 3))
+                .unwrap();
+        assert_ne!(tiled.fingerprint(), legacy.fingerprint());
+        assert_eq!(tiled.tiling(), Tiling::new(3, 3));
+        // wq: 2 stacks x (2x2) tiles; emb: (4x2) tiles
+        assert_eq!(tiled.tiles_used(), 2 * 4 + 4 * 2);
+        // tiles >= every matrix dim degrade to the whole-matrix grid:
+        // byte-identical to the pre-tile path (the regression anchor)
+        let huge =
+            ChipDeployment::provision(&p, &NoiseModel::Pcm, 5, &hw.clone().with_tiles(64, 64))
+                .unwrap();
+        assert_eq!(huge.fingerprint(), legacy.fingerprint());
+        assert_eq!(huge.tiles_used(), legacy.tiles_used());
+    }
+
+    #[test]
+    fn floorplan_capacity_rejects_models_that_do_not_fit() {
+        let p = chip_params();
+        let hw = HwConfig::afm_train(0.0).with_tiles(3, 3);
+        // needs 16 tiles (see above): 16 fits, 15 does not
+        let ok = ChipDeployment::provision_floorplanned(&p, &NoiseModel::Pcm, 5, &hw, 16).unwrap();
+        assert_eq!((ok.tiles_used(), ok.tile_capacity()), (16, 16));
+        assert_eq!(ok.floorplan().capacity_tiles, 16);
+        let err = match ChipDeployment::provision_floorplanned(&p, &NoiseModel::Pcm, 5, &hw, 15) {
+            Ok(_) => panic!("a 15-tile die must reject a 16-tile model"),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains("16 crossbar tiles"), "{err}");
+        // capacity 0 = unbounded die
+        assert!(ChipDeployment::provision_floorplanned(&p, &NoiseModel::Pcm, 5, &hw, 0).is_ok());
+    }
+
+    #[test]
+    fn tiled_aging_and_gdc_run_per_tile_and_stay_reversible() {
+        let p = chip_params();
+        let hw = HwConfig::afm_train(0.0).with_tiles(3, 3);
+        let mut c = ChipDeployment::provision(&p, &NoiseModel::Pcm, 9, &hw).unwrap();
+        let fresh = c.fingerprint();
+        c.age_to(drift::SECS_PER_YEAR).unwrap();
+        assert_ne!(c.fingerprint(), fresh);
+        c.gdc_calibrate().unwrap();
+        assert!(c.gdc_calibrated());
+        c.clear_gdc().unwrap();
+        c.age_to(0.0).unwrap();
+        assert_eq!(c.fingerprint(), fresh, "tiled aging must stay non-cumulative");
     }
 
     #[test]

@@ -18,14 +18,18 @@ use crate::util::fnv1a_fold;
 use crate::util::prng::Pcg64;
 use crate::util::tensor::Tensor;
 
+/// Pure-host [`Decoder`]: deterministic logits from (chip fingerprint,
+/// slot window) via FNV-1a chaining — no PJRT, no artifacts.
 pub struct MockDecoder {
     slots: usize,
     seq_len: usize,
     vocab: usize,
+    /// decode executions performed (the `Decoder::steps` counter)
     pub steps: u64,
 }
 
 impl MockDecoder {
+    /// A mock decoder with the given packed-batch geometry.
     pub fn new(slots: usize, seq_len: usize, vocab: usize) -> MockDecoder {
         assert!(vocab > 3, "vocab must cover PAD/BOS/EOS plus content");
         MockDecoder { slots, seq_len, vocab, steps: 0 }

@@ -6,12 +6,14 @@
 //! * `deploy` — `ChipDeployment`: trained `Params` + a `NoiseModel` +
 //!   a hardware-instance seed + an `HwConfig` operating point, fused
 //!   into one provisioned object. Programming noise is applied once
-//!   (one simulated conductance write), the parameter literals are
-//!   uploaded once and cached, and the seven runtime hardware scalars
-//!   travel as a typed `HwScalars` instead of an anonymous `[f32; 7]`.
-//!   Every chip carries a conductance clock: `age_to(t_secs)` re-derives
-//!   the literals under power-law drift (`coordinator::drift`) and
-//!   `gdc_calibrate()` folds in Global Drift Compensation.
+//!   (one simulated conductance write per crossbar tile), the
+//!   parameter literals are uploaded once and cached, and the seven
+//!   runtime hardware scalars travel as a typed `HwScalars` instead of
+//!   an anonymous `[f32; 7]`. Every chip carries a conductance clock
+//!   (`age_to(t_secs)` re-derives the literals under power-law drift,
+//!   `gdc_calibrate()` folds in per-tile Global Drift Compensation)
+//!   and a floorplan: its crossbar tiling plus die capacity
+//!   (`provision_floorplanned` rejects models that don't fit).
 //! * `server` — `InferenceServer`: a request queue with continuous
 //!   batching over the slot-based decode loop (a freed slot is refilled
 //!   from the queue immediately instead of idling until the whole chunk
@@ -29,6 +31,7 @@ pub mod mock;
 pub mod server;
 pub mod workload;
 
+pub use crate::coordinator::tiles::{Floorplan, TileMap, Tiling};
 pub use deploy::{ChipDeployment, HwScalars};
 pub use server::{
     request_id, static_chunking_steps, Completion, Decoder, DriftSchedule, InferenceServer,

@@ -13,6 +13,11 @@
 //! The decode step itself is abstracted behind `Decoder` so the
 //! scheduler is testable host-side (`serve::mock::MockDecoder`) and so
 //! future backends (sharded fleets, remote chips) can slot in.
+//!
+//! Every chip in the fleet is a floorplanned die (`ChipDeployment`
+//! carries its tiling, tiles-used count, and capacity); `fleet_tiles`
+//! aggregates the fleet's crossbar budget, the accounting a future
+//! multi-chip sharder allocates against.
 
 use std::collections::VecDeque;
 
@@ -35,6 +40,7 @@ pub trait Decoder {
     fn slots(&self) -> usize;
     /// Context window length T.
     fn seq_len(&self) -> usize;
+    /// Vocabulary size V of the logit rows this decoder emits.
     fn vocab(&self) -> usize;
     /// Decode one step on `chip`: `(slots, seq_len)` tokens + per-slot
     /// lens -> `(slots, vocab)` next-token logits.
@@ -80,13 +86,18 @@ impl Decoder for GenEngine<'_> {
 /// One serving request: text in, budgeted completion out.
 #[derive(Clone, Debug)]
 pub struct ServeRequest {
+    /// prompt text (tokenized + BOS-prefixed at slot admission)
     pub prompt: String,
+    /// generation budget in new tokens
     pub max_new: usize,
+    /// retire the slot early when the model emits EOS
     pub stop_at_eos: bool,
+    /// sampling policy (greedy / softmax / datagen strategies)
     pub policy: SamplePolicy,
 }
 
 impl ServeRequest {
+    /// A greedy request that stops at EOS — the benchmark default.
     pub fn greedy(prompt: &str, max_new: usize) -> ServeRequest {
         ServeRequest {
             prompt: prompt.to_string(),
@@ -106,8 +117,11 @@ pub struct Completion {
     pub arrival: usize,
     /// fleet index of the chip that served it
     pub chip: usize,
+    /// the request's prompt, echoed back
     pub prompt: String,
+    /// generated token ids (prompt excluded)
     pub tokens: Vec<u32>,
+    /// generated tokens decoded to text
     pub text: String,
     /// fleet ticks spent queued before a slot freed up
     pub wait_ticks: u64,
@@ -123,23 +137,31 @@ pub struct Completion {
 /// Aggregate serving metrics for one workload run.
 #[derive(Clone, Debug)]
 pub struct ServerStats {
+    /// requests retired
     pub completed: usize,
+    /// tokens generated across all completions
     pub total_tokens: u64,
     /// decode (lm_sample) executions across the whole fleet
     pub lm_steps: u64,
+    /// wall-clock duration of the run
     pub wall_secs: f64,
+    /// generated tokens per wall-clock second
     pub tok_per_sec: f64,
+    /// completed requests per wall-clock second
     pub req_per_sec: f64,
 }
 
 /// Per-request completions (in arrival order) plus aggregate stats.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
+    /// one entry per retired request, sorted by arrival
     pub completions: Vec<Completion>,
+    /// run-level aggregates
     pub stats: ServerStats,
 }
 
 impl ServeReport {
+    /// Per-request wall latencies in arrival order.
     pub fn latencies_ms(&self) -> Vec<f64> {
         self.completions.iter().map(|c| c.latency_ms).collect()
     }
@@ -157,10 +179,12 @@ impl ServeReport {
         (ps[0], ps[1])
     }
 
+    /// Median wall latency.
     pub fn p50_ms(&self) -> f64 {
         stats::percentile(&self.latencies_ms(), 50.0)
     }
 
+    /// 95th-percentile wall latency.
     pub fn p95_ms(&self) -> f64 {
         stats::percentile(&self.latencies_ms(), 95.0)
     }
@@ -225,6 +249,8 @@ pub struct InferenceServer<'d, D: Decoder> {
 }
 
 impl<'d, D: Decoder> InferenceServer<'d, D> {
+    /// A server over `chips` (at least one) sharing `decoder`; `seed`
+    /// drives the sampling RNG.
     pub fn new(decoder: &'d mut D, chips: Vec<ChipDeployment>, seed: u64) -> Result<Self> {
         if chips.is_empty() {
             return Err(anyhow!("inference server needs at least one chip"));
@@ -250,12 +276,25 @@ impl<'d, D: Decoder> InferenceServer<'d, D> {
         Ok(s)
     }
 
+    /// Install (or clear) the conductance clock for subsequent runs.
     pub fn set_drift_schedule(&mut self, schedule: Option<DriftSchedule>) {
         self.drift = schedule;
     }
 
+    /// The provisioned fleet, in chip-index order.
     pub fn chips(&self) -> &[ChipDeployment] {
         &self.chips
+    }
+
+    /// Fleet floorplan totals: (crossbar tiles used, tiles available)
+    /// summed over every chip. Capacity 0 on any chip means that die is
+    /// unbounded and contributes 0 to the second component — a fleet
+    /// of floorplanned chips reports its real headroom, the pre-tile
+    /// "infinite chip" fleet reports (used, 0).
+    pub fn fleet_tiles(&self) -> (usize, usize) {
+        self.chips
+            .iter()
+            .fold((0, 0), |(u, c), chip| (u + chip.tiles_used(), c + chip.tile_capacity()))
     }
 
     /// Advance the conductance clock by one fleet tick. Aging marks and

@@ -8,18 +8,26 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// A parsed JSON value (the usual six kinds; numbers are f64).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// any number (stored as f64)
     Num(f64),
+    /// a string
     Str(String),
+    /// an array
     Arr(Vec<Json>),
+    /// an object (sorted keys)
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
     // ------------------------------------------------------------ access
+    /// Object field lookup (None on non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -27,11 +35,13 @@ impl Json {
         }
     }
 
+    /// Object field lookup that panics when absent (manifest loading).
     pub fn expect(&self, key: &str) -> &Json {
         self.get(key)
             .unwrap_or_else(|| panic!("missing json key '{key}'"))
     }
 
+    /// The number, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -39,14 +49,17 @@ impl Json {
         }
     }
 
+    /// The number truncated to usize, if this is a `Num`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// The number truncated to i64, if this is a `Num`.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|n| n as i64)
     }
 
+    /// The string slice, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -54,6 +67,7 @@ impl Json {
         }
     }
 
+    /// The boolean, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -61,6 +75,7 @@ impl Json {
         }
     }
 
+    /// The element slice, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -68,6 +83,7 @@ impl Json {
         }
     }
 
+    /// The key→value map, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -82,6 +98,7 @@ impl Json {
             .unwrap_or_default()
     }
 
+    /// String vector out of a string array.
     pub fn str_vec(&self) -> Vec<String> {
         self.as_arr()
             .map(|a| a.iter().filter_map(|x| x.as_str().map(str::to_owned)).collect())
@@ -89,27 +106,34 @@ impl Json {
     }
 
     // ------------------------------------------------------------- build
+    /// An object from (key, value) pairs.
     pub fn obj(entries: Vec<(&str, Json)>) -> Json {
         Json::Obj(entries.into_iter().map(|(k, v)| (k.to_owned(), v)).collect())
     }
 
+    /// A number value.
     pub fn num(n: f64) -> Json {
         Json::Num(n)
     }
 
+    /// A string value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// A numeric array from f64s.
     pub fn arr_f64(v: &[f64]) -> Json {
         Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
     }
 
+    /// A numeric array from f32s.
     pub fn arr_f32(v: &[f32]) -> Json {
         Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
     }
 
     // ------------------------------------------------------------- write
+    /// Serialize to compact JSON text.
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);
@@ -174,6 +198,7 @@ impl Json {
     }
 
     // ------------------------------------------------------------- parse
+    /// Parse one complete JSON document (trailing data is an error).
     pub fn parse(text: &str) -> Result<Json, String> {
         let bytes = text.as_bytes();
         let mut p = Parser { b: bytes, i: 0 };

@@ -19,6 +19,7 @@ pub fn set_quiet(q: bool) {
     QUIET.store(q, Ordering::Relaxed);
 }
 
+/// Whether info logging is currently suppressed.
 pub fn quiet() -> bool {
     QUIET.load(Ordering::Relaxed)
 }
@@ -57,14 +58,17 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Timer {
         Timer { start: Instant::now() }
     }
 
+    /// Seconds elapsed since `start`.
     pub fn secs(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
 
+    /// Milliseconds elapsed since `start`.
     pub fn ms(&self) -> f64 {
         self.secs() * 1e3
     }

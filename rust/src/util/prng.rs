@@ -19,6 +19,7 @@ pub struct Pcg64 {
 const PCG_MULT: u128 = 0x2360ed051fc65da44385df649fccf645;
 
 impl Pcg64 {
+    /// A generator on the default stream.
     pub fn new(seed: u64) -> Self {
         Self::with_stream(seed, 0xda3e39cb94b95bdb)
     }
@@ -46,6 +47,7 @@ impl Pcg64 {
         Pcg64::with_stream(z ^ (z >> 31), data.wrapping_add(1))
     }
 
+    /// The next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
@@ -96,6 +98,7 @@ impl Pcg64 {
         }
     }
 
+    /// Standard normal as f32.
     #[inline]
     pub fn normal_f32(&mut self) -> f32 {
         self.normal() as f32

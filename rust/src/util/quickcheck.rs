@@ -12,33 +12,41 @@ use super::prng::Pcg64;
 /// Generator handed to property closures: a seeded PRNG plus sizing
 /// helpers for typical inputs.
 pub struct Gen {
+    /// the case's seeded generator — draw freely from it
     pub rng: Pcg64,
+    /// the case's replay seed (printed on failure)
     pub seed: u64,
 }
 
 impl Gen {
+    /// Rebuild the generator of a failed case from its printed seed.
     pub fn replay(seed: u64) -> Gen {
         Gen { rng: Pcg64::new(seed), seed }
     }
 
+    /// Uniform usize in [lo, hi] (inclusive).
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         lo + self.rng.below(hi - lo + 1)
     }
 
+    /// Uniform f32 in [lo, hi).
     pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
         self.rng.uniform_range(lo, hi)
     }
 
+    /// `len` uniform f32s in [lo, hi).
     pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
         (0..len).map(|_| self.rng.uniform_range(lo, hi)).collect()
     }
 
+    /// `len` standard normals.
     pub fn vec_normal(&mut self, len: usize) -> Vec<f32> {
         let mut v = vec![0.0; len];
         self.rng.fill_normal(&mut v);
         v
     }
 
+    /// Printable-ASCII string of length 0..=max_len.
     pub fn ascii_string(&mut self, max_len: usize) -> String {
         let len = self.rng.below(max_len + 1);
         (0..len)
@@ -46,6 +54,7 @@ impl Gen {
             .collect()
     }
 
+    /// A fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u64() & 1 == 1
     }

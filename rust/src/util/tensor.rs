@@ -7,13 +7,17 @@
 //! injection, RTN) where the per-seed loop makes host application the
 //! right place.
 
+/// Row-major f32 tensor: shape + contiguous data.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
+    /// dimension sizes, outermost first ([] = scalar)
     pub shape: Vec<usize>,
+    /// row-major contiguous values (len = product of shape)
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// A tensor from shape + data (panics on a length mismatch).
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(
             shape.iter().product::<usize>(),
@@ -24,28 +28,34 @@ impl Tensor {
         Tensor { shape, data }
     }
 
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: Vec<usize>) -> Self {
         let n = shape.iter().product();
         Tensor { shape, data: vec![0.0; n] }
     }
 
+    /// Constant tensor of the given shape.
     pub fn full(shape: Vec<usize>, v: f32) -> Self {
         let n = shape.iter().product();
         Tensor { shape, data: vec![v; n] }
     }
 
+    /// Rank-0 scalar.
     pub fn scalar(v: f32) -> Self {
         Tensor { shape: vec![], data: vec![v] }
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Number of dimensions.
     pub fn rank(&self) -> usize {
         self.shape.len()
     }

@@ -7,6 +7,7 @@ use afm::config::HwConfig;
 use afm::coordinator::drift::{self, DriftModel};
 use afm::coordinator::noise::{self, pcm_sigma_frac, NoiseModel};
 use afm::coordinator::quant::rtn_channel;
+use afm::coordinator::tiles::{self, ChannelAxis, TileMap, Tiling};
 use afm::data::corpus::{pack_documents, Shard};
 use afm::data::tasks::{build_task, extract_first_word, extract_hash_answer, Scoring};
 use afm::data::tokenizer::{Tokenizer, BOS, EOS, PAD};
@@ -182,21 +183,23 @@ fn prop_drift_identity_cases_and_determinism() {
 }
 
 #[test]
-fn gdc_restores_per_tile_mean_output_within_tolerance() {
-    // After a year of drift the mean |tile output| collapses to
-    // ~(t/t0)^-ν of the programmed level; the GDC rescale must bring it
-    // back within a few percent (estimated and verified on independent
-    // calibration batches).
+fn gdc_restores_per_tensor_mean_output_within_tolerance() {
+    // After a year of drift the mean |output| of each analog tensor
+    // collapses to ~(t/t0)^-ν of the programmed level; the GDC rescale
+    // must bring it back within a few percent (estimated and verified
+    // on independent calibration batches). This is the degenerate
+    // whole-matrix grid, where one scale covers the whole tensor.
     let dims = tiny_dims(16, 16);
     let p = Params::init(&dims, 42);
+    let full = Tiling::unbounded();
     let aged = drift::apply(&p, &DriftModel::default(), drift::SECS_PER_YEAR, 7);
-    let scales = drift::gdc_calibrate(&p, &aged, 32, 1001);
+    let scales = drift::gdc_calibrate(&p, &aged, 32, 1001, &full);
     let mut corrected = aged.clone();
     drift::apply_scales(&mut corrected, &scales);
-    // per-tile output level relative to the programmed reference,
-    // measured on an independent verification batch (different seed
-    // than calibration): gdc_calibrate(a, b) returns Σ|y_a| / Σ|y_b|
-    let level = |q: &Params, key: &str| drift::gdc_calibrate(q, &p, 32, 2002)[key];
+    // output level relative to the programmed reference, measured on
+    // an independent verification batch (different seed than
+    // calibration): gdc_calibrate(a, b) returns Σ|y_a| / Σ|y_b|
+    let level = |q: &Params, key: &str| drift::gdc_calibrate(q, &p, 32, 2002, &full)[key].scales[0];
     for key in ["wq", "emb"] {
         let drift_level = level(&aged, key);
         let corrected_level = level(&corrected, key);
@@ -213,6 +216,207 @@ fn gdc_restores_per_tile_mean_output_within_tolerance() {
             "{key}: GDC {corrected_level} barely improves on drift {drift_level}"
         );
     }
+}
+
+// ---------------------------------------------------------------- tiles
+
+#[test]
+fn prop_tile_partition_reassemble_is_identity_with_noise_off() {
+    // visiting every tile and writing every channel segment / device
+    // back unchanged must reproduce the tensor byte for byte, for any
+    // grid (including ragged edges) and both channel orientations
+    check("tiles-identity", 80, |g| {
+        let (s, k, n) = (g.usize_in(1, 3), g.usize_in(1, 12), g.usize_in(1, 12));
+        let t = afm::util::tensor::Tensor::new(
+            vec![s, k, n],
+            g.vec_normal(s * k * n),
+        );
+        let grid = Tiling::new(g.usize_in(0, k + 2), g.usize_in(0, n + 2)).grid_for(k, n);
+        for axis in [ChannelAxis::Cols, ChannelAxis::Rows] {
+            let mut u = t.clone();
+            tiles::for_each_tile(&mut u, &grid, |_, _, view| {
+                view.map_channels(axis, |_seg| {});
+            });
+            assert_eq!(u, t, "{axis:?} traversal must not move data");
+            // gather/scatter round-trip with a reversible transform
+            let mut v = t.clone();
+            tiles::for_each_tile(&mut v, &grid, |_, _, view| {
+                view.map_channels(axis, |seg| seg.iter_mut().for_each(|x| *x = -*x));
+            });
+            tiles::for_each_tile(&mut v, &grid, |_, _, view| {
+                view.map_channels(axis, |seg| seg.iter_mut().for_each(|x| *x = -*x));
+            });
+            assert_eq!(v, t, "{axis:?} partition -> transform -> inverse must reassemble");
+        }
+        // noise off: the full tiled engine is the identity on any grid
+        let p = Params::init(&tiny_dims(k.max(4), n.max(4)), g.seed);
+        let tiling = Tiling::new(g.usize_in(1, 8), g.usize_in(1, 8));
+        assert_eq!(noise::apply_tiled(&p, &NoiseModel::None, g.seed, &tiling), p);
+    });
+}
+
+#[test]
+fn prop_oversized_tiles_reproduce_per_tensor_fingerprints_byte_identically() {
+    // the acceptance anchor: tile dims >= every matrix dim (or 0) must
+    // take the legacy per-tensor path exactly — same noise draws, same
+    // drift draws, same GDC scales, same deployment fingerprint
+    check("tiles-degenerate-byte-identity", 15, |g| {
+        let (k, n) = (g.usize_in(4, 10), g.usize_in(4, 10));
+        let p = Params::init(&tiny_dims(k, n), g.seed);
+        let seed = g.rng.next_u64();
+        let nm = NoiseModel::Pcm;
+        let legacy_noise = noise::apply(&p, &nm, seed);
+        // bounds must exceed BOTH dims: tiny_dims gives wq [k, n] but
+        // emb the transposed [n, k], so a per-axis bound like `n + 1`
+        // would split emb's columns and leave the degenerate path
+        let big = k.max(n);
+        for tiling in [
+            Tiling::unbounded(),
+            Tiling::new(big + g.usize_in(0, 64), big + g.usize_in(0, 64)),
+            Tiling::new(0, big + 1),
+        ] {
+            assert_eq!(noise::apply_tiled(&p, &nm, seed, &tiling), legacy_noise, "{tiling:?}");
+            let legacy_drift = drift::apply(&p, &DriftModel::default(), drift::SECS_PER_MONTH, seed);
+            assert_eq!(
+                drift::apply_tiled(&p, &DriftModel::default(), drift::SECS_PER_MONTH, seed, &tiling),
+                legacy_drift,
+                "{tiling:?}"
+            );
+            let legacy_gdc = drift::gdc_calibrate(&p, &legacy_drift, 8, seed, &Tiling::unbounded());
+            let tiled_gdc = drift::gdc_calibrate(&p, &legacy_drift, 8, seed, &tiling);
+            for (key, ts) in &legacy_gdc {
+                assert_eq!(ts.scales, tiled_gdc[key].scales, "{tiling:?} {key}");
+            }
+        }
+        // and at the deployment level: byte-identical fingerprints
+        let hw = HwConfig::afm_train(0.0);
+        let legacy =
+            ChipDeployment::provision(&serve_params(1), &nm, seed, &hw).unwrap();
+        let huge = ChipDeployment::provision(
+            &serve_params(1),
+            &nm,
+            seed,
+            &hw.clone().with_tiles(4096, 4096),
+        )
+        .unwrap();
+        assert_eq!(huge.fingerprint(), legacy.fingerprint());
+    });
+}
+
+#[test]
+fn prop_per_tile_draws_are_deterministic_and_independent_across_tiles() {
+    check("tiles-seed-determinism", 20, |g| {
+        let (k, n) = (g.usize_in(6, 12), g.usize_in(6, 12));
+        let p = Params::init(&tiny_dims(k, n), g.seed);
+        let tiling = Tiling::new(g.usize_in(2, k - 1), g.usize_in(2, n - 1));
+        let seed = g.rng.next_u64();
+        // determinism: same (seed, tiling) -> byte-identical programming
+        let a = noise::apply_tiled(&p, &NoiseModel::Pcm, seed, &tiling);
+        let b = noise::apply_tiled(&p, &NoiseModel::Pcm, seed, &tiling);
+        assert_eq!(a, b);
+        // different seeds decorrelate every tile
+        let c = noise::apply_tiled(&p, &NoiseModel::Pcm, seed ^ 0x77, &tiling);
+        assert_ne!(a.get("wq"), c.get("wq"));
+        // independence: a tile's draws depend only on (seed, tensor,
+        // stack, tile coords, intra-tile index) — never on the rest of
+        // the tensor. Verify via drift on two wq tensors of DIFFERENT
+        // widths that agree on their leading columns: tiles at equal
+        // coordinates must age identically. The legacy single-stream
+        // path fails this (its flat row-major scan interleaves the
+        // extra columns into every device's stream position), so the
+        // property discriminates per-tile keying from the pre-tile
+        // code, which a data-perturbation check cannot.
+        let (tr_, tc_) = (g.usize_in(2, 5), g.usize_in(2, 5));
+        let tiling2 = Tiling::new(tr_, tc_);
+        let rows = tr_ * 2; // two tile rows
+        let (wide_n, narrow_n) = (tc_ * 3, tc_ * 2); // three vs two tile cols
+        let wide = Params::init(&tiny_dims(rows, wide_n), g.seed ^ 0x1234);
+        let mut narrow = Params::init(&tiny_dims(rows, narrow_n), g.seed ^ 0x1234);
+        for i in 0..rows {
+            for j in 0..narrow_n {
+                narrow.get_mut("wq").data[i * narrow_n + j] = wide.get("wq").data[i * wide_n + j];
+            }
+        }
+        let model = DriftModel::default();
+        let aged_wide = drift::apply_tiled(&wide, &model, drift::SECS_PER_YEAR, seed, &tiling2);
+        let aged_narrow = drift::apply_tiled(&narrow, &model, drift::SECS_PER_YEAR, seed, &tiling2);
+        for i in 0..rows {
+            for j in 0..narrow_n {
+                assert_eq!(
+                    aged_wide.get("wq").data[i * wide_n + j],
+                    aged_narrow.get("wq").data[i * narrow_n + j],
+                    "device ({i},{j}): its tile's draws must not depend on the rest of the tensor"
+                );
+            }
+        }
+        // and distinct tiles really do draw distinct instances: the
+        // decay factors of tile (0,0) and tile (0,1) differ somewhere
+        let factor = |i: usize, j: usize| {
+            let w = wide.get("wq").data[i * wide_n + j];
+            if w == 0.0 {
+                1.0
+            } else {
+                aged_wide.get("wq").data[i * wide_n + j] / w
+            }
+        };
+        let tile_factors = |col0: usize| -> Vec<f32> {
+            (0..tr_)
+                .flat_map(|i| (0..tc_).map(move |j| (i, col0 + j)))
+                .map(|(i, j)| factor(i, j))
+                .collect()
+        };
+        assert_ne!(
+            tile_factors(0),
+            tile_factors(tc_),
+            "neighbouring tiles drew identical ν instances"
+        );
+    });
+}
+
+#[test]
+fn prop_tiled_rtn_grids_values_per_tile_and_degenerates_to_per_channel() {
+    check("tiles-rtn", 30, |g| {
+        let (k, n) = (g.usize_in(4, 12), g.usize_in(4, 12));
+        let p = Params::init(&tiny_dims(k, n), g.seed);
+        // degenerate grid == the per-channel host mirror on every tensor
+        let mut whole = p.clone();
+        afm::coordinator::quant::rtn_params_tiled(&mut whole, 4, &Tiling::unbounded());
+        let mut mirror = p.clone();
+        mirror.get_mut("wq").map_columns(|c| rtn_channel(c, 4));
+        mirror.get_mut("emb").map_rows(|r| rtn_channel(r, 4));
+        assert_eq!(whole.get("wq"), mirror.get("wq"));
+        assert_eq!(whole.get("emb"), mirror.get("emb"));
+        assert_eq!(whole.get("ln_f"), p.get("ln_f"), "digital params stay untouched");
+        // a real grid quantizes tile-locally: still idempotent
+        let tiling = Tiling::new(g.usize_in(1, k), g.usize_in(1, n));
+        let mut tiled = p.clone();
+        afm::coordinator::quant::rtn_params_tiled(&mut tiled, 4, &tiling);
+        let mut twice = tiled.clone();
+        afm::coordinator::quant::rtn_params_tiled(&mut twice, 4, &tiling);
+        for key in ["wq", "emb"] {
+            for (a, b) in tiled.get(key).data.iter().zip(&twice.get(key).data) {
+                assert!((a - b).abs() < 1e-5, "tiled RTN must be idempotent");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_tile_map_total_matches_brute_force_count() {
+    check("tiles-map-count", 40, |g| {
+        let (k, n) = (g.usize_in(2, 16), g.usize_in(2, 16));
+        let p = Params::init(&tiny_dims(k, n), g.seed);
+        let tiling = Tiling::new(g.usize_in(1, 20), g.usize_in(1, 20));
+        let map = TileMap::of(&p, tiling);
+        let brute: usize = tiles::analog_keys()
+            .filter_map(|key| p.map.get(key))
+            .map(|t| {
+                let (stack, kk, nn) = t.as_matrix_stack();
+                stack * tiling.grid_for(kk, nn).tiles().count()
+            })
+            .sum();
+        assert_eq!(map.total_tiles(), brute);
+    });
 }
 
 // ---------------------------------------------------------------- tensor
@@ -351,6 +555,8 @@ fn prop_config_hw_label_roundtrips_bits() {
             lambda_adc: g.f32_in(4.0, 16.0),
             out_bits: if g.bool() { 8 } else { 0 },
             qat_bits: if g.bool() { 4 } else { 0 },
+            tile_rows: if g.bool() { g.usize_in(1, 512) } else { 0 },
+            tile_cols: if g.bool() { g.usize_in(1, 512) } else { 0 },
         };
         let s = HwScalars::from(&hw);
         // levels encode 2^(b-1)-1, with the degenerate widths guarded:

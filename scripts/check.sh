@@ -2,8 +2,8 @@
 # CI gate: formatting, lints, and the pure-host + integration test
 # suites. Run from anywhere; operates on the repo root.
 #
-#   scripts/check.sh            # fmt + clippy + tests
-#   scripts/check.sh --fast     # skip clippy (pre-commit loop)
+#   scripts/check.sh            # fmt + clippy + docs + tests
+#   scripts/check.sh --fast     # skip clippy + docs (pre-commit loop)
 #   scripts/check.sh --offline  # no network: cargo must resolve the
 #                               # xla git dependency from a vendored /
 #                               # [patch]-ed local checkout (see
@@ -36,6 +36,11 @@ cargo fmt --check
 if [[ $fast -eq 0 ]]; then
   echo "== cargo clippy -- -D warnings"
   cargo clippy --all-targets -- -D warnings
+
+  # rustdoc gate: broken intra-doc links and missing docs on public
+  # items (the crate carries #![warn(missing_docs)]) fail the check
+  echo "== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings)"
+  RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 fi
 
 echo "== cargo test -q"
