@@ -112,6 +112,35 @@ fn main() -> anyhow::Result<()> {
         rt.exec(&grads_art, &inputs).unwrap()
     }));
 
+    // ---- parallel runtime scaling: the tiled programming write at
+    // 1/2/4/8 workers (per-tile draws are independent, so this is the
+    // pool's best case; output is byte-identical at every width)
+    let scale_tiling = afm::coordinator::tiles::Tiling::new(64, 64);
+    let mut scale_threads: Vec<f64> = Vec::new();
+    let mut scale_ms: Vec<f64> = Vec::new();
+    let mut thread_fps: Vec<u64> = Vec::new();
+    for tn in [1usize, 2, 4, 8] {
+        afm::util::parallel::with_threads(tn, || {
+            let r = bs::bench(
+                &format!("noise::apply_tiled PCM (64x64 tiles, {tn} thr)"),
+                1,
+                8,
+                Some((n_params, "params/s")),
+                || noise::apply_tiled(&zoo.teacher, &NoiseModel::Pcm, 1, &scale_tiling),
+            );
+            scale_threads.push(tn as f64);
+            scale_ms.push(r.mean_ms);
+            results.push(r);
+            let q = noise::apply_tiled(&zoo.teacher, &NoiseModel::Pcm, 1, &scale_tiling);
+            thread_fps.push(q.fingerprint());
+        });
+    }
+    // the determinism contract, spot-checked on the bench path too
+    assert!(
+        thread_fps.windows(2).all(|w| w[0] == w[1]),
+        "parallel output diverged: {thread_fps:?}"
+    );
+
     // ---- serving throughput (continuous batching over a 2-chip fleet)
     let hw = HwConfig::afm_train(0.0);
     let fleet = vec![
@@ -159,6 +188,27 @@ fn main() -> anyhow::Result<()> {
             ("p95_ms", Json::num(p95)),
             ("lm_steps", Json::num(s.lm_steps as f64)),
         ]),
+    );
+    // parallel-runtime scaling row: threads vs noise-programming
+    // latency on 64x64 tiles (byte-identical output asserted above)
+    let speedup = if *scale_ms.last().unwrap_or(&0.0) > 0.0 {
+        scale_ms[0] / scale_ms[scale_ms.len() - 1]
+    } else {
+        0.0
+    };
+    let _ = afm::util::append_jsonl(
+        &bs::reports_dir().join("bench.jsonl"),
+        &Json::obj(vec![
+            ("bench", Json::str("parallel_scaling")),
+            ("op", Json::str("noise_apply_tiled_pcm_64x64")),
+            ("threads", Json::arr_f64(&scale_threads)),
+            ("mean_ms", Json::arr_f64(&scale_ms)),
+            ("speedup_max_threads", Json::num(speedup)),
+        ]),
+    );
+    println!(
+        "parallel scaling (noise 64x64 tiles): {:?} threads -> {:?} ms (x{speedup:.2})",
+        scale_threads, scale_ms
     );
     Ok(())
 }

@@ -98,6 +98,31 @@ impl Args {
     }
 }
 
+/// One `RxC` tile-size entry: "full" or "0" means whole-matrix tiles;
+/// a bare number is a square tile; either axis of `RxC` may be "full".
+/// Shared by the `--tile-rows/-cols` defaults and the `--tile-sweep`
+/// list parser.
+pub fn parse_tile(s: &str) -> Result<(usize, usize), String> {
+    let s = s.trim();
+    if s.is_empty() || s == "full" || s == "0" {
+        return Ok((0, 0));
+    }
+    let parse_dim = |d: &str| -> Result<usize, String> {
+        if d.trim() == "full" {
+            Ok(0)
+        } else {
+            d.trim().parse().map_err(|_| format!("bad tile size '{s}' (want RxC or full)"))
+        }
+    };
+    match s.split_once('x') {
+        Some((r, c)) => Ok((parse_dim(r)?, parse_dim(c)?)),
+        None => {
+            let d = parse_dim(s)?;
+            Ok((d, d))
+        }
+    }
+}
+
 /// Render the `afm help` text from the command and flag tables.
 pub fn render_help(cmds: &[(&str, &str)], specs: &[FlagSpec]) -> String {
     let mut s = String::from("afm — Analog Foundation Models coordinator\n\nCOMMANDS\n");
@@ -121,6 +146,11 @@ mod tests {
         vec![
             FlagSpec { name: "config", takes_value: true, help: "" },
             FlagSpec { name: "quiet", takes_value: false, help: "" },
+            FlagSpec { name: "threads", takes_value: true, help: "" },
+            FlagSpec { name: "tile-rows", takes_value: true, help: "" },
+            FlagSpec { name: "tile-cols", takes_value: true, help: "" },
+            FlagSpec { name: "gamma", takes_value: true, help: "" },
+            FlagSpec { name: "age", takes_value: true, help: "" },
         ]
     }
 
@@ -159,5 +189,79 @@ mod tests {
     #[test]
     fn missing_value_is_error() {
         assert!(Args::parse(&sv(&["x", "--config"]), &specs()).is_err());
+        assert!(Args::parse(&sv(&["x", "--set"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn stray_positional_is_error() {
+        assert!(Args::parse(&sv(&["eval", "oops"]), &specs()).is_err());
+        // ...but flags after the subcommand parse fine
+        assert!(Args::parse(&sv(&["eval", "--quiet"]), &specs()).is_ok());
+    }
+
+    #[test]
+    fn float_helpers_parse_values_and_reject_garbage() {
+        let a = Args::parse(&sv(&["eval", "--gamma", "0.0625"]), &specs()).unwrap();
+        assert_eq!(a.f32_or("gamma", 1.0), 0.0625);
+        assert_eq!(a.f64_or("gamma", 1.0), 0.0625);
+        let bad = Args::parse(&sv(&["eval", "--gamma", "tiny"]), &specs()).unwrap();
+        assert_eq!(bad.f32_or("gamma", 1.0), 1.0);
+        assert_eq!(bad.f64_or("gamma", 2.5), 2.5);
+        assert_eq!(bad.get_or("gamma", "x"), "tiny"); // raw value still readable
+        assert_eq!(bad.get_or("missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn threads_flag_round_trips_and_bad_input_is_detectable() {
+        let a = Args::parse(&sv(&["serve", "--threads", "8"]), &specs()).unwrap();
+        assert_eq!(a.usize_or("threads", 0), 8);
+        // absent -> no value (main treats it as 0 = auto)
+        let none = Args::parse(&sv(&["serve"]), &specs()).unwrap();
+        assert_eq!(none.get("threads"), None);
+        // garbage is preserved verbatim so main can reject it loudly
+        // (a mistyped `--threads 1O` must not silently un-pin a run)
+        let bad = Args::parse(&sv(&["serve", "--threads", "1O"]), &specs()).unwrap();
+        assert_eq!(bad.get("threads"), Some("1O"));
+        assert!(bad.get("threads").unwrap().trim().parse::<usize>().is_err());
+    }
+
+    #[test]
+    fn tile_flags_round_trip_through_parse_tile() {
+        let a = Args::parse(
+            &sv(&["eval", "--tile-rows", "256", "--tile-cols", "64"]),
+            &specs(),
+        )
+        .unwrap();
+        assert_eq!(a.usize_or("tile-rows", 0), 256);
+        assert_eq!(a.usize_or("tile-cols", 0), 64);
+        // the sweep-entry grammar
+        assert_eq!(parse_tile("full").unwrap(), (0, 0));
+        assert_eq!(parse_tile("0").unwrap(), (0, 0));
+        assert_eq!(parse_tile("").unwrap(), (0, 0));
+        assert_eq!(parse_tile("32").unwrap(), (32, 32));
+        assert_eq!(parse_tile("256x64").unwrap(), (256, 64));
+        assert_eq!(parse_tile(" 8 x 16 ").unwrap(), (8, 16));
+        assert_eq!(parse_tile("fullx8").unwrap(), (0, 8));
+        assert_eq!(parse_tile("8xfull").unwrap(), (8, 0));
+        assert!(parse_tile("big").is_err());
+        assert!(parse_tile("8xwide").is_err());
+        assert!(parse_tile("-2").is_err());
+    }
+
+    #[test]
+    fn age_flag_round_trips_through_parse_age() {
+        use crate::coordinator::drift::{parse_age, SECS_PER_HOUR};
+        let a = Args::parse(&sv(&["drift", "--age", "2h"]), &specs()).unwrap();
+        assert_eq!(parse_age(a.get("age").unwrap()).unwrap(), 2.0 * SECS_PER_HOUR);
+        assert!(parse_age("soon").is_err());
+        assert!(parse_age("-1d").is_err());
+    }
+
+    #[test]
+    fn render_help_lists_commands_and_flags() {
+        let text = render_help(&[("serve", "serve things")], &specs());
+        assert!(text.contains("serve things"));
+        assert!(text.contains("--threads"));
+        assert!(text.contains("--set k=v"));
     }
 }

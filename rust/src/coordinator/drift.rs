@@ -29,10 +29,11 @@
 
 use std::collections::BTreeMap;
 
-use super::tiles::{self, TileGrid, Tiling};
+use super::tiles::{self, TileGrid, TileRef, Tiling};
 use crate::runtime::params::Params;
-use crate::util::fnv1a;
 use crate::util::prng::Pcg64;
+use crate::util::tensor::Tensor;
+use crate::util::{fnv1a, parallel};
 
 /// One minute in seconds.
 pub const SECS_PER_MINUTE: f64 = 60.0;
@@ -119,8 +120,16 @@ pub fn apply_tiled(
         // g *= (t/t0)^(-ν); exact zeros stay zero (multiplicative)
         *g *= (-(nu as f64) * log_ratio).exp() as f32;
     };
-    for key in tiles::analog_keys() {
-        if let Some(tensor) = out.map.get_mut(key) {
+    // every ν stream is keyed by (seed, tensor) or (seed, tile), never
+    // by visit order, so the pool cannot change the draws. Degenerate
+    // (whole-matrix) tensors fan out per tensor — each is one
+    // sequential stream; real grids run one tensor at a time with
+    // their tiles fanned out at full pool width. (Drift is per device,
+    // so the channel axis in the shared work list goes unused.)
+    parallel::for_each_split(
+        tiles::analog_work(&mut out),
+        |(_, _, t)| super::noise::has_tile_axis(t, tiling),
+        |(key, _, tensor)| {
             let (_, k, n) = tensor.as_matrix_stack();
             let grid = tiling.grid_for(k, n);
             if grid.is_single() {
@@ -129,13 +138,13 @@ pub fn apply_tiled(
                     decay(g, &mut dev_rng);
                 }
             } else {
-                tiles::for_each_tile(tensor, &grid, |s, tile, view| {
+                tiles::par_for_each_tile(tensor, &grid, |s, tile, view| {
                     let mut dev_rng = rng.fold_in(tiles::tile_key(key, s, tile.tr, tile.tc));
                     view.map_devices(|g| decay(g, &mut dev_rng));
                 });
             }
-        }
-    }
+        },
+    );
     out
 }
 
@@ -179,62 +188,86 @@ pub fn gdc_calibrate(
     seed: u64,
     tiling: &Tiling,
 ) -> GdcScales {
-    let mut out = GdcScales::new();
-    for key in tiles::analog_keys() {
-        let (Some(r), Some(d)) = (reference.map.get(key), drifted.map.get(key)) else {
-            continue;
-        };
+    // calibration parallelism (byte-identical at any thread count):
+    // per-tensor RNG streams are key-derived, and every tile cell
+    // accumulates its partial sums over the calibration vectors in the
+    // fixed serial (vec, col) order. Degenerate (one-cell) tensors fan
+    // out across tensors; tensors with real grids run one at a time
+    // with their cells fanned out at full pool width.
+    let keys: Vec<&str> = tiles::analog_keys()
+        .filter(|k| reference.map.contains_key(*k) && drifted.map.contains_key(*k))
+        .collect();
+    let calibrate = |key: &str| -> (String, TileScales) {
+        let (r, d) = (&reference.map[key], &drifted.map[key]);
         debug_assert_eq!(r.shape, d.shape);
         let (stack, k, n) = r.as_matrix_stack();
         let grid = tiling.grid_for(k, n);
         let per_tile = !grid.is_single();
         let (gr, gc) = (grid.n_tile_rows(), grid.n_tile_cols());
-        let cells = if per_tile { stack * gr * gc } else { 1 };
+        let nv = n_vecs.max(1);
+        // draw every calibration vector up front, in the serial path's
+        // (vec, stack) order, so the streams match the pre-parallel code
         let mut rng = Pcg64::with_stream(seed, 0x6dc0).fold_in(fnv1a(key.as_bytes()));
-        let mut x = vec![0.0f32; k];
-        let mut sum_r = vec![0.0f64; cells];
-        let mut sum_d = vec![0.0f64; cells];
-        for _ in 0..n_vecs.max(1) {
-            for s in 0..stack {
-                rng.fill_normal(&mut x);
+        let mut xs = vec![0.0f32; nv * stack * k];
+        for chunk in xs.chunks_mut(k) {
+            rng.fill_normal(chunk);
+        }
+        let x_at = |v: usize, s: usize| &xs[(v * stack + s) * k..(v * stack + s + 1) * k];
+        let scale_of = |sr: f64, sd: f64| if sd > 0.0 { (sr / sd) as f32 } else { 1.0 };
+        let scales: Vec<f32> = if per_tile {
+            let tile_list: Vec<TileRef> = grid.tiles().collect();
+            // one job per cell = (stack, tile), in cell-index order
+            parallel::map_indexed(stack * gr * gc, |cell| {
+                let (s, ti) = (cell / (gr * gc), cell % (gr * gc));
+                let tile = tile_list[ti];
                 let base = s * k * n;
-                if per_tile {
-                    for (ti, tile) in grid.tiles().enumerate() {
-                        let cell = s * gr * gc + ti;
-                        for j in tile.col_start..tile.col_end {
-                            let (mut yr, mut yd) = (0.0f32, 0.0f32);
-                            for i in tile.row_start..tile.row_end {
-                                yr += x[i] * r.data[base + i * n + j];
-                                yd += x[i] * d.data[base + i * n + j];
-                            }
-                            sum_r[cell] += yr.abs() as f64;
-                            sum_d[cell] += yd.abs() as f64;
+                let (mut sum_r, mut sum_d) = (0.0f64, 0.0f64);
+                for v in 0..nv {
+                    let x = x_at(v, s);
+                    for j in tile.col_start..tile.col_end {
+                        let (mut yr, mut yd) = (0.0f32, 0.0f32);
+                        for i in tile.row_start..tile.row_end {
+                            yr += x[i] * r.data[base + i * n + j];
+                            yd += x[i] * d.data[base + i * n + j];
                         }
+                        sum_r += yr.abs() as f64;
+                        sum_d += yd.abs() as f64;
                     }
-                } else {
+                }
+                scale_of(sum_r, sum_d)
+            })
+        } else {
+            // degenerate grid: one scale over the whole stacked tensor,
+            // accumulated in the serial (vec, stack, col) order
+            let (mut sum_r, mut sum_d) = (0.0f64, 0.0f64);
+            for v in 0..nv {
+                for s in 0..stack {
+                    let x = x_at(v, s);
+                    let base = s * k * n;
                     for j in 0..n {
                         let (mut yr, mut yd) = (0.0f32, 0.0f32);
                         for (i, &xi) in x.iter().enumerate() {
                             yr += xi * r.data[base + i * n + j];
                             yd += xi * d.data[base + i * n + j];
                         }
-                        sum_r[0] += yr.abs() as f64;
-                        sum_d[0] += yd.abs() as f64;
+                        sum_r += yr.abs() as f64;
+                        sum_d += yd.abs() as f64;
                     }
                 }
             }
-        }
-        let scales: Vec<f32> = sum_r
-            .iter()
-            .zip(&sum_d)
-            .map(|(&sr, &sd)| if sd > 0.0 { (sr / sd) as f32 } else { 1.0 })
-            .collect();
-        out.insert(
-            key.to_string(),
-            TileScales { grid, stack: if per_tile { stack } else { 1 }, scales },
-        );
+            vec![scale_of(sum_r, sum_d)]
+        };
+        (key.to_string(), TileScales { grid, stack: if per_tile { stack } else { 1 }, scales })
+    };
+    let (tiled_keys, single_keys): (Vec<&str>, Vec<&str>) = keys
+        .into_iter()
+        .partition(|k| super::noise::has_tile_axis(&reference.map[*k], tiling));
+    let mut per_key: Vec<(String, TileScales)> =
+        parallel::map_indexed(single_keys.len(), |i| calibrate(single_keys[i]));
+    for key in tiled_keys {
+        per_key.push(calibrate(key));
     }
-    out
+    per_key.into_iter().collect()
 }
 
 /// Fold GDC scales into `params` (the simulated equivalent of the
@@ -242,8 +275,19 @@ pub fn gdc_calibrate(
 /// multiplies its whole tensor — the degenerate-grid (pre-tile)
 /// behavior; per-tile entries multiply each tile by its own scale.
 pub fn apply_scales(params: &mut Params, scales: &GdcScales) {
-    for (key, ts) in scales {
-        if let Some(t) = params.map.get_mut(key) {
+    // per-element multiplies against precomputed scales: trivially
+    // order-independent. Single-scale tensors fan out per tensor;
+    // per-tile entries run one tensor at a time with tiles fanned out
+    // at full pool width.
+    let work: Vec<(&TileScales, &mut Tensor)> = params
+        .map
+        .iter_mut()
+        .filter_map(|(key, t)| scales.get(key).map(|ts| (ts, t)))
+        .collect();
+    parallel::for_each_split(
+        work,
+        |(ts, _)| ts.scales.len() > 1,
+        |(ts, t)| {
             if ts.scales.len() == 1 {
                 let s = ts.scales[0];
                 for v in t.data.iter_mut() {
@@ -251,13 +295,13 @@ pub fn apply_scales(params: &mut Params, scales: &GdcScales) {
                 }
             } else {
                 let (gr, gc) = (ts.grid.n_tile_rows(), ts.grid.n_tile_cols());
-                tiles::for_each_tile(t, &ts.grid, |s, tile, view| {
+                tiles::par_for_each_tile(t, &ts.grid, |s, tile, view| {
                     let scale = ts.scales[s * gr * gc + tile.tr * gc + tile.tc];
                     view.map_devices(|v| *v *= scale);
                 });
             }
-        }
-    }
+        },
+    );
 }
 
 /// Parse a human deployment age: a number with an optional unit suffix

@@ -109,39 +109,68 @@ impl<'a> Evaluator<'a> {
         let stochastic = !nm.is_none() || matches!(drift, Some(d) if !d.model.is_none());
         let seeds = if stochastic { seeds.max(1) } else { 1 };
         let mut report: EvalReport = BTreeMap::new();
-        for seed in 0..seeds {
-            // one chip instance per seed: noise + upload happen once
-            let mut chip =
-                ChipDeployment::provision(&m.params, nm, base_seed + seed as u64, &m.hw)?;
-            if let Some(d) = drift {
-                chip.set_drift_model(d.model);
-                chip.age_to(d.age_secs)?;
-                if d.gdc {
-                    chip.gdc_calibrate()?;
-                }
+        // the per-seed hardware instances are independent, so their
+        // programming-noise derivations run concurrently on the worker
+        // pool (byte-identical to one-by-one provisioning); scoring
+        // stays serial per seed — artifact executions share one PJRT
+        // client. Aging + GDC below fan out per tile inside each call.
+        // Seeds are provisioned in pool-width chunks and dropped after
+        // scoring, so peak memory stays at O(threads) chips instead of
+        // O(seeds) — a 10-seed sweep never holds 10 literal sets.
+        let seed_list: Vec<u64> = (0..seeds as u64).map(|s| base_seed + s).collect();
+        let width = crate::util::parallel::threads().max(1);
+        for (ci, chunk) in seed_list.chunks(width).enumerate() {
+            let mut chips = ChipDeployment::provision_fleet(&m.params, nm, chunk, &m.hw, 0)?;
+            for (cj, chip) in chips.iter_mut().enumerate() {
+                let seed = ci * width + cj;
+                self.score_seed(m, nm, tasks, base_seed, drift, seed, chip, &mut report)?;
             }
-            for task in tasks {
-                let metrics = self.score_task(&chip, m.rot, task, base_seed + seed as u64)?;
-                let entry = report.entry(task.name.to_string()).or_default();
-                for (k, v) in metrics {
-                    entry.entry(k).or_default().push(v);
-                }
-            }
-            crate::info!(
-                "eval {} [{} {}{}] seed {seed}: done",
-                m.label,
-                m.hw.label(),
-                nm.label(),
-                drift
-                    .map(|d| format!(
-                        " age {}{}",
-                        super::drift::fmt_age(d.age_secs),
-                        if d.gdc { " +GDC" } else { "" }
-                    ))
-                    .unwrap_or_default()
-            );
         }
         Ok(report)
+    }
+
+    /// Score one provisioned per-seed chip on every task, accumulating
+    /// into `report` (the per-seed body of `evaluate_with_drift`).
+    #[allow(clippy::too_many_arguments)]
+    fn score_seed(
+        &self,
+        m: &ModelUnderTest,
+        nm: &NoiseModel,
+        tasks: &[Task],
+        base_seed: u64,
+        drift: Option<&DriftSpec>,
+        seed: usize,
+        chip: &mut ChipDeployment,
+        report: &mut EvalReport,
+    ) -> Result<()> {
+        if let Some(d) = drift {
+            chip.set_drift_model(d.model);
+            chip.age_to(d.age_secs)?;
+            if d.gdc {
+                chip.gdc_calibrate()?;
+            }
+        }
+        for task in tasks {
+            let metrics = self.score_task(chip, m.rot, task, base_seed + seed as u64)?;
+            let entry = report.entry(task.name.to_string()).or_default();
+            for (k, v) in metrics {
+                entry.entry(k).or_default().push(v);
+            }
+        }
+        crate::info!(
+            "eval {} [{} {}{}] seed {seed}: done",
+            m.label,
+            m.hw.label(),
+            nm.label(),
+            drift
+                .map(|d| format!(
+                    " age {}{}",
+                    super::drift::fmt_age(d.age_secs),
+                    if d.gdc { " +GDC" } else { "" }
+                ))
+                .unwrap_or_default()
+        );
+        Ok(())
     }
 
     /// Sweep the crossbar-tile-size axis: re-evaluate `m` under each

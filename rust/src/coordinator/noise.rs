@@ -18,9 +18,9 @@
 //! per-tensor streams byte for byte (see `tiles` module docs).
 
 use super::tiles::{self, ChannelAxis, Tiling};
-use crate::runtime::params::{Params, ANALOG_WEIGHT_KEYS};
-use crate::util::fnv1a;
+use crate::runtime::params::Params;
 use crate::util::prng::Pcg64;
+use crate::util::{fnv1a, parallel};
 
 /// Which noise to apply at evaluation time.
 #[derive(Clone, Debug, PartialEq)]
@@ -79,22 +79,33 @@ pub fn apply(params: &Params, model: &NoiseModel, seed: u64) -> Params {
 /// (seed, tile): the per-tile streams derive from
 /// `tiles::tile_key(tensor, stack, tile row, tile col)`, so draws are
 /// independent across tiles and reproducible for a fixed seed.
+///
+/// Parallelism (byte-identical at any thread count): tensors whose
+/// grid is a single whole-matrix tile have one sequential RNG stream
+/// each, so they fan out across the pool *per tensor*; tensors with a
+/// real grid are processed one at a time with their tiles fanned out
+/// at full pool width (tiles per tensor usually dwarf both the core
+/// and tensor counts, so this is where the parallelism is).
 pub fn apply_tiled(params: &Params, model: &NoiseModel, seed: u64, tiling: &Tiling) -> Params {
     if model.is_none() {
         return params.clone();
     }
     let mut out = params.clone();
     let rng = Pcg64::with_stream(seed, 0xa1a1);
-    for key in ANALOG_WEIGHT_KEYS {
-        if let Some(t) = out.map.get_mut(*key) {
-            perturb_tensor(t, key, model, &rng, tiling, ChannelAxis::Cols);
-        }
-    }
-    // tied embedding/head matrix: channels are vocab rows
-    if let Some(emb) = out.map.get_mut("emb") {
-        perturb_tensor(emb, "emb", model, &rng, tiling, ChannelAxis::Rows);
-    }
+    parallel::for_each_split(
+        tiles::analog_work(&mut out),
+        |(_, _, t)| has_tile_axis(t, tiling),
+        |(key, axis, t)| perturb_tensor(t, key, model, &rng, tiling, axis),
+    );
     out
+}
+
+/// Whether `tiling` induces a real (multi-tile) grid on this tensor —
+/// the engines' shared `for_each_split` predicate: real grids carry
+/// the parallelism inside the tensor, degenerate ones across tensors.
+pub(crate) fn has_tile_axis(t: &crate::util::tensor::Tensor, tiling: &Tiling) -> bool {
+    let (_, k, n) = t.as_matrix_stack();
+    !tiling.grid_for(k, n).is_single()
 }
 
 /// One tensor's programming write. The degenerate whole-matrix grid
@@ -116,7 +127,7 @@ fn perturb_tensor(
         let mut chan_rng = rng.fold_in(fnv1a(key.as_bytes()));
         tiles::map_tensor_channels(t, axis, |chan| perturb_channel(chan, model, &mut chan_rng));
     } else {
-        tiles::for_each_tile(t, &grid, |s, tile, view| {
+        tiles::par_for_each_tile(t, &grid, |s, tile, view| {
             let mut trng = rng.fold_in(tiles::tile_key(key, s, tile.tr, tile.tc));
             view.map_channels(axis, |seg| perturb_channel(seg, model, &mut trng));
         });

@@ -8,8 +8,8 @@
 use anyhow::Result;
 
 use super::tiles::{self, ChannelAxis, Tiling};
-use crate::runtime::params::ANALOG_WEIGHT_KEYS;
 use crate::runtime::{lit_scalar_f32, Params, Runtime};
+use crate::util::parallel;
 use crate::util::tensor::Tensor;
 
 /// Signed symmetric quantization levels for a bit width: 2^(bits-1)-1,
@@ -89,7 +89,9 @@ pub fn rtn_tensor_tiled(t: &mut Tensor, bits: u32, tiling: &Tiling, axis: Channe
     if grid.is_single() {
         tiles::map_tensor_channels(t, axis, |chan| rtn_channel(chan, bits));
     } else {
-        tiles::for_each_tile(t, &grid, |_, _, view| {
+        // tile-local quantization is a pure per-segment function, so
+        // tiles fan out on the worker pool byte-identically
+        tiles::par_for_each_tile(t, &grid, |_, _, view| {
             view.map_channels(axis, |seg| rtn_channel(seg, bits));
         });
     }
@@ -98,16 +100,16 @@ pub fn rtn_tensor_tiled(t: &mut Tensor, bits: u32, tiling: &Tiling, axis: Channe
 /// Per-tile RTN over every analog tensor of `params` in place (block
 /// linears quantize column segments, the tied embedding/head row
 /// segments) — the host mirror of deploying a quantized model onto a
-/// tiled chip. Digital parameters are untouched.
+/// tiled chip. Digital parameters are untouched. Degenerate-grid
+/// tensors quantize concurrently on the worker pool; real grids run
+/// one tensor at a time with their tiles fanned out at full width
+/// (inside `rtn_tensor_tiled`).
 pub fn rtn_params_tiled(params: &mut Params, bits: u32, tiling: &Tiling) {
-    for key in ANALOG_WEIGHT_KEYS {
-        if let Some(t) = params.map.get_mut(*key) {
-            rtn_tensor_tiled(t, bits, tiling, ChannelAxis::Cols);
-        }
-    }
-    if let Some(emb) = params.map.get_mut("emb") {
-        rtn_tensor_tiled(emb, bits, tiling, ChannelAxis::Rows);
-    }
+    parallel::for_each_split(
+        tiles::analog_work(params),
+        |(_, _, t)| super::noise::has_tile_axis(t, tiling),
+        |(_, axis, t)| rtn_tensor_tiled(t, bits, tiling, axis),
+    );
 }
 
 #[cfg(test)]

@@ -56,6 +56,27 @@ pub fn analog_keys() -> impl Iterator<Item = &'static str> {
     ANALOG_WEIGHT_KEYS.iter().copied().chain(std::iter::once("emb"))
 }
 
+/// The analog tensors of `params` as disjoint mutable work items, in
+/// map order: (key, channel orientation, tensor). The single home for
+/// the block-linear→columns / tied-emb→rows mapping, shared by the
+/// noise and RTN engines so they can never silently diverge on which
+/// tensors are analog or which axis carries their channels.
+pub fn analog_work(params: &mut Params) -> Vec<(&'static str, ChannelAxis, &mut Tensor)> {
+    params
+        .map
+        .iter_mut()
+        .filter_map(|(key, t)| {
+            if let Some(k) = ANALOG_WEIGHT_KEYS.iter().find(|k| **k == key.as_str()) {
+                Some((*k, ChannelAxis::Cols, t))
+            } else if key == "emb" {
+                Some(("emb", ChannelAxis::Rows, t))
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
 /// Which axis of a (K, N) matrix carries the analog channels — output
 /// columns for the block linears, vocabulary rows for the tied
 /// embedding/head matrix. Tile-local channel *segments* follow the same
@@ -306,6 +327,69 @@ pub fn for_each_tile(
     }
 }
 
+/// [`for_each_tile`], fanned out across the worker pool: each
+/// (stack, tile) job is gathered into a tile-local buffer, transformed
+/// by `f` through a [`TileView`] over that buffer, and scattered back
+/// to its (disjoint) index set. Byte-for-byte identical to the serial
+/// traversal at any thread count: a gathered tile presents exactly the
+/// same channel segments in exactly the same order as the in-place
+/// view, and every per-tile RNG stream is keyed by [`tile_key`] rather
+/// than by visit order. `f` receives the tile's *original* [`TileRef`]
+/// (grid coordinates + matrix ranges) even though the view indexes the
+/// local buffer, so RNG keying is unchanged. Requires `f: Fn + Sync`
+/// (called concurrently); falls back to the in-place serial walk when
+/// the pool is sized 1, there is one tile, or the caller is already a
+/// pool worker. Memory note: the gathered buffers transiently hold one
+/// extra copy of the tensor's data (collected before the scatter) —
+/// the same order as the `Params` clone every engine already makes per
+/// call, accepted for the simple two-phase borrow structure.
+pub fn par_for_each_tile(
+    t: &mut Tensor,
+    grid: &TileGrid,
+    f: impl Fn(usize, &TileRef, &mut TileView) + Sync,
+) {
+    let (stack, k, n) = t.as_matrix_stack();
+    debug_assert_eq!((k, n), (grid.k, grid.n), "grid built for a different matrix shape");
+    let jobs: Vec<(usize, TileRef)> =
+        (0..stack).flat_map(|s| grid.tiles().map(move |tile| (s, tile))).collect();
+    if crate::util::parallel::threads() <= 1
+        || jobs.len() <= 1
+        || crate::util::parallel::in_worker()
+    {
+        return for_each_tile(t, grid, f);
+    }
+    let data = &t.data;
+    let results: Vec<Vec<f32>> = crate::util::parallel::map_indexed(jobs.len(), |ji| {
+        let (s, tile) = jobs[ji];
+        let (rows, cols) = (tile.rows(), tile.cols());
+        let base = s * k * n;
+        let mut buf = vec![0.0f32; rows * cols];
+        for (bi, i) in (tile.row_start..tile.row_end).enumerate() {
+            buf[bi * cols..(bi + 1) * cols]
+                .copy_from_slice(&data[base + i * n + tile.col_start..base + i * n + tile.col_end]);
+        }
+        let local = TileRef {
+            tr: tile.tr,
+            tc: tile.tc,
+            row_start: 0,
+            row_end: rows,
+            col_start: 0,
+            col_end: cols,
+        };
+        let mut view = TileView { data: &mut buf, n: cols, tile: local };
+        f(s, &tile, &mut view);
+        buf
+    });
+    for ((s, tile), buf) in jobs.into_iter().zip(results) {
+        let cols = tile.cols();
+        let base = s * k * n;
+        for (bi, i) in (tile.row_start..tile.row_end).enumerate() {
+            t.data[base + i * n + tile.col_start..base + i * n + tile.col_end]
+                .copy_from_slice(&buf[bi * cols..(bi + 1) * cols]);
+        }
+    }
+}
+
 /// Apply `f` to every whole-tensor channel along `axis` — the legacy
 /// (degenerate-grid) traversal shared by the noise and quantization
 /// engines, kept here so both orientations live next to their tiled
@@ -483,6 +567,33 @@ mod tests {
             view.map_devices(|v| *v += 100.0);
         });
         assert!(u.data.iter().zip(&t.data).all(|(a, b)| *a == b + 100.0));
+    }
+
+    #[test]
+    fn par_for_each_tile_matches_serial_traversal_byte_for_byte() {
+        use crate::util::prng::Pcg64;
+        // a per-tile seeded transform (the engines' shape): the parallel
+        // gather/scatter walk must reproduce the in-place serial walk
+        let t0 = Tensor::new(vec![2, 7, 10], (0..140).map(|x| x as f32 * 0.37 - 3.0).collect());
+        let grid = Tiling::new(3, 4).grid_for(7, 10);
+        let rng = Pcg64::new(11);
+        let transform = |s: usize, tile: &TileRef, view: &mut TileView| {
+            let mut trng = rng.fold_in(tile_key("wq", s, tile.tr, tile.tc));
+            view.map_channels(ChannelAxis::Cols, |seg| {
+                for v in seg.iter_mut() {
+                    *v += trng.normal_f32();
+                }
+            });
+        };
+        let mut serial = t0.clone();
+        for_each_tile(&mut serial, &grid, |s, tile, view| transform(s, tile, view));
+        for threads in [1usize, 2, 4, 8] {
+            crate::util::parallel::with_threads(threads, || {
+                let mut par = t0.clone();
+                par_for_each_tile(&mut par, &grid, transform);
+                assert_eq!(par.data, serial.data, "threads={threads}");
+            });
+        }
     }
 
     #[test]

@@ -97,6 +97,11 @@ fn flag_specs() -> Vec<FlagSpec> {
             takes_value: true,
             help: "serve: GDC recalibration cadence in ticks (0 = never)",
         },
+        FlagSpec {
+            name: "threads",
+            takes_value: true,
+            help: "worker threads for eval/drift/serve/quantize (0 = auto; AFM_THREADS env)",
+        },
         FlagSpec { name: "quiet", takes_value: false, help: "suppress progress logging" },
     ]
 }
@@ -118,29 +123,6 @@ fn parse_noise(s: &str) -> Result<NoiseModel> {
         Ok(NoiseModel::Gaussian { gamma: g.parse().map_err(|_| anyhow!("bad gamma '{g}'"))? })
     } else {
         Err(anyhow!("unknown noise model '{s}' (none | pcm | gauss:<g>)"))
-    }
-}
-
-/// One `RxC` tile-size entry: "full" or "0" means whole-matrix tiles;
-/// a bare number is a square tile.
-fn parse_tile(s: &str) -> Result<(usize, usize)> {
-    let s = s.trim();
-    if s.is_empty() || s == "full" || s == "0" {
-        return Ok((0, 0));
-    }
-    let parse_dim = |d: &str| -> Result<usize> {
-        if d == "full" {
-            Ok(0)
-        } else {
-            d.trim().parse().map_err(|_| anyhow!("bad tile size '{s}' (want RxC or full)"))
-        }
-    };
-    match s.split_once('x') {
-        Some((r, c)) => Ok((parse_dim(r)?, parse_dim(c)?)),
-        None => {
-            let d = parse_dim(s)?;
-            Ok((d, d))
-        }
     }
 }
 
@@ -187,6 +169,20 @@ fn run(argv: &[String]) -> Result<()> {
     }
     if args.has("quiet") {
         afm::util::set_quiet(true);
+    }
+    // worker pool size for the parallel runtime: --threads beats
+    // AFM_THREADS beats available_parallelism (0 = auto). Output is
+    // byte-identical at any setting — see docs/ARCHITECTURE.md.
+    // Garbage values error out rather than silently running on the
+    // full pool (a mistyped `--threads 1O` must not un-pin a run).
+    if let Some(v) = args.get("threads") {
+        let threads: usize = v
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("bad --threads '{v}' (want a thread count, 0 = auto)"))?;
+        if threads > 0 {
+            afm::util::parallel::set_threads(threads);
+        }
     }
     let cfg = Config::load_with_overrides(args.get("config"), &args.set).map_err(|e| anyhow!(e))?;
     let rt = Runtime::load(&cfg.artifacts_dir)?;
@@ -261,8 +257,10 @@ fn run(argv: &[String]) -> Result<()> {
             let m = ModelUnderTest { label: label.clone(), params, hw, rot: false };
             if let Some(sweep) = args.get("tile-sweep") {
                 // accuracy vs crossbar tile size, everything else fixed
-                let sizes: Vec<(usize, usize)> =
-                    sweep.split(',').map(parse_tile).collect::<Result<_>>()?;
+                let sizes: Vec<(usize, usize)> = sweep
+                    .split(',')
+                    .map(|s| afm::cli::parse_tile(s).map_err(|e| anyhow!(e)))
+                    .collect::<Result<_>>()?;
                 let runs = ev.tile_size_sweep(&m, &nm, &tasks, seeds, cfg.seed + 900, &sizes)?;
                 let mut table = Table::new(
                     &format!("eval: {label} {} — avg acc vs tile size", nm.label()),
@@ -376,17 +374,10 @@ fn run(argv: &[String]) -> Result<()> {
             let mut hw = HwConfig::afm_train(0.0);
             tile_overrides(&mut hw, &cfg, &args);
             let capacity = args.usize_or("tile-capacity", 0);
-            let chips: Vec<ChipDeployment> = (0..n_chips)
-                .map(|i| {
-                    ChipDeployment::provision_floorplanned(
-                        &afm_p,
-                        &nm,
-                        base_seed + i as u64,
-                        &hw,
-                        capacity,
-                    )
-                })
-                .collect::<Result<_>>()?;
+            // the fleet programs concurrently on the worker pool
+            // (byte-identical to one-by-one provisioning)
+            let chip_seeds: Vec<u64> = (0..n_chips as u64).map(|i| base_seed + i).collect();
+            let chips = ChipDeployment::provision_fleet(&afm_p, &nm, &chip_seeds, &hw, capacity)?;
             let requests = match args.get("prompts") {
                 Some(path) => serve::prompt_file_workload(path, max_new)?,
                 None => serve::mixed_workload(args.usize_or("requests", 24), cfg.seed),

@@ -82,6 +82,23 @@ impl Params {
         self.map.values().map(Tensor::len).sum()
     }
 
+    /// FNV-1a digest over every tensor's exact f32 bit pattern, in
+    /// manifest key order — the byte-identity witness used by chip
+    /// deployments and the golden conformance suite
+    /// (`rust/tests/conformance.rs`): two parameter sets share a
+    /// fingerprint iff they are bit-for-bit equal.
+    pub fn fingerprint(&self) -> u64 {
+        use crate::util::{fnv1a, fnv1a_fold, FNV_OFFSET};
+        let mut h = FNV_OFFSET;
+        for key in &self.keys {
+            h = fnv1a_fold(h, fnv1a(key.as_bytes()));
+            for v in &self.map[key].data {
+                h = fnv1a_fold(h, v.to_bits() as u64);
+            }
+        }
+        h
+    }
+
     /// Literals in artifact argument order.
     pub fn to_literals(&self) -> Result<Vec<xla::Literal>> {
         self.keys

@@ -17,7 +17,6 @@ use crate::coordinator::noise::{self, NoiseModel};
 use crate::coordinator::quant;
 use crate::coordinator::tiles::{Floorplan, TileMap, Tiling};
 use crate::runtime::Params;
-use crate::util::{fnv1a, fnv1a_fold, FNV_OFFSET};
 
 /// The seven runtime hardware scalars every artifact takes, in
 /// model.HW_FIELDS order: the typed replacement for the anonymous
@@ -146,8 +145,51 @@ impl ChipDeployment {
         let tile_map = TileMap::of(params, tiling);
         Floorplan::new(tiling, capacity_tiles).fits(&tile_map).map_err(|e| anyhow!(e))?;
         let programmed = noise::apply_tiled(params, noise, seed, &tiling);
+        Self::from_programmed(programmed, noise, seed, hw, &tile_map, capacity_tiles)
+    }
+
+    /// Provision one chip per hardware seed in `seeds`, sharing one
+    /// floorplan check. The expensive host-side work — the per-seed
+    /// programming-noise derivation — fans out across the worker pool
+    /// (each seed's write is an independent pure function, so the fleet
+    /// is byte-identical to provisioning the seeds one by one); the
+    /// PJRT literal uploads stay serial on the client. This is the
+    /// multi-chip serving and repeated-seed eval provisioning path.
+    pub fn provision_fleet(
+        params: &Params,
+        noise: &NoiseModel,
+        seeds: &[u64],
+        hw: &HwConfig,
+        capacity_tiles: usize,
+    ) -> Result<Vec<ChipDeployment>> {
+        let tiling = hw.tiling();
+        let tile_map = TileMap::of(params, tiling);
+        Floorplan::new(tiling, capacity_tiles).fits(&tile_map).map_err(|e| anyhow!(e))?;
+        let programmed: Vec<Params> = crate::util::parallel::map_indexed(seeds.len(), |i| {
+            noise::apply_tiled(params, noise, seeds[i], &tiling)
+        });
+        programmed
+            .into_iter()
+            .zip(seeds)
+            .map(|(prog, &seed)| {
+                Self::from_programmed(prog, noise, seed, hw, &tile_map, capacity_tiles)
+            })
+            .collect()
+    }
+
+    /// Assemble a deployment around an already-programmed parameter
+    /// set (the single- and fleet-provisioning paths share this): one
+    /// literal upload, fingerprint, fresh conductance clock.
+    fn from_programmed(
+        programmed: Params,
+        noise: &NoiseModel,
+        seed: u64,
+        hw: &HwConfig,
+        tile_map: &TileMap,
+        capacity_tiles: usize,
+    ) -> Result<ChipDeployment> {
         let param_lits = programmed.to_literals()?;
-        let fingerprint = fingerprint_params(&programmed);
+        let fingerprint = programmed.fingerprint();
         let scalars = HwScalars::from(hw);
         let hw_lits = scalars.to_literals();
         let label = if noise.is_none() {
@@ -166,7 +208,7 @@ impl ChipDeployment {
             drift: DriftModel::default(),
             age_secs: 0.0,
             gdc_scales: None,
-            tiling,
+            tiling: hw.tiling(),
             tiles_used: tile_map.total_tiles(),
             tile_capacity: capacity_tiles,
         })
@@ -269,7 +311,7 @@ impl ChipDeployment {
             drift::apply_scales(&mut params, scales);
         }
         self.param_lits = params.to_literals()?;
-        self.fingerprint = fingerprint_params(&params);
+        self.fingerprint = params.fingerprint();
         Ok(())
     }
 
@@ -309,17 +351,6 @@ impl ChipDeployment {
     pub fn fingerprint(&self) -> u64 {
         self.fingerprint
     }
-}
-
-fn fingerprint_params(params: &Params) -> u64 {
-    let mut h = FNV_OFFSET;
-    for key in &params.keys {
-        h = fnv1a_fold(h, fnv1a(key.as_bytes()));
-        for v in &params.map[key].data {
-            h = fnv1a_fold(h, v.to_bits() as u64);
-        }
-    }
-    h
 }
 
 #[cfg(test)]
@@ -444,6 +475,24 @@ mod tests {
         c.clear_gdc().unwrap();
         c.age_to(0.0).unwrap();
         assert_eq!(c.fingerprint(), fresh, "tiled aging must stay non-cumulative");
+    }
+
+    #[test]
+    fn provision_fleet_matches_one_by_one_provisioning() {
+        let p = chip_params();
+        let hw = HwConfig::afm_train(0.0).with_tiles(3, 3);
+        let seeds = [5u64, 6, 7, 8];
+        let fleet = ChipDeployment::provision_fleet(&p, &NoiseModel::Pcm, &seeds, &hw, 16).unwrap();
+        assert_eq!(fleet.len(), seeds.len());
+        for (chip, &seed) in fleet.iter().zip(&seeds) {
+            let solo = ChipDeployment::provision_floorplanned(&p, &NoiseModel::Pcm, seed, &hw, 16)
+                .unwrap();
+            assert_eq!(chip.fingerprint(), solo.fingerprint(), "seed {seed}");
+            assert_eq!(chip.label(), solo.label());
+            assert_eq!(chip.tiles_used(), solo.tiles_used());
+        }
+        // the fleet path runs the same floorplan check
+        assert!(ChipDeployment::provision_fleet(&p, &NoiseModel::Pcm, &seeds, &hw, 15).is_err());
     }
 
     #[test]

@@ -13,10 +13,10 @@
 use anyhow::Result;
 
 use super::deploy::ChipDeployment;
-use super::server::Decoder;
-use crate::util::fnv1a_fold;
+use super::server::{Decoder, FleetBatch};
 use crate::util::prng::Pcg64;
 use crate::util::tensor::Tensor;
+use crate::util::{fnv1a_fold, parallel};
 
 /// Pure-host [`Decoder`]: deterministic logits from (chip fingerprint,
 /// slot window) via FNV-1a chaining — no PJRT, no artifacts.
@@ -59,26 +59,56 @@ impl Decoder for MockDecoder {
         let (b, t, v) = (self.slots, self.seq_len, self.vocab);
         assert_eq!(tokens.len(), b * t);
         assert_eq!(lens.len(), b);
-        let fp = chip.fingerprint();
-        let mut data = vec![0.0f32; b * v];
-        for s in 0..b {
-            // FNV-chain the slot's own window (never its neighbours)
-            let mut h = fp;
-            for j in 0..(lens[s] as usize).min(t) {
-                h = fnv1a_fold(h, tokens[s * t + j] as u64);
-            }
-            for (c, out) in data[s * v..(s + 1) * v].iter_mut().enumerate() {
-                let hv = fnv1a_fold(h, (c as u64).wrapping_mul(0x9e3779b97f4a7c15));
-                *out = (hv % 4096) as f32 / 4096.0;
-            }
-        }
         self.steps += 1;
-        Ok(Tensor::new(vec![b, v], data))
+        Ok(mock_logits(chip.fingerprint(), tokens, lens, b, t, v))
+    }
+
+    /// The parallel tick path: the mock step is a pure function of
+    /// (chip fingerprint, batch), so each chip's batch decodes on its
+    /// own pool worker — byte-identical to the serial default at any
+    /// thread count (the parallel-runtime invariant the scheduler
+    /// property tests pin down). Fan-out here is deliberately
+    /// unconditional even though a tiny mock batch can cost less than
+    /// a thread spawn: this decoder exists to *exercise* the parallel
+    /// fleet path in tests, not to be fast.
+    fn decode_fleet(
+        &mut self,
+        chips: &[ChipDeployment],
+        batches: &[FleetBatch],
+        _rng: &mut Pcg64,
+    ) -> Result<Vec<Tensor>> {
+        let (b, t, v) = (self.slots, self.seq_len, self.vocab);
+        // fingerprints pulled out first: only plain numbers cross threads
+        let fps: Vec<u64> = batches.iter().map(|fb| chips[fb.chip].fingerprint()).collect();
+        let logits = parallel::map_indexed(batches.len(), |i| {
+            assert_eq!(batches[i].tokens.len(), b * t);
+            assert_eq!(batches[i].lens.len(), b);
+            mock_logits(fps[i], &batches[i].tokens, &batches[i].lens, b, t, v)
+        });
+        self.steps += batches.len() as u64;
+        Ok(logits)
     }
 
     fn steps(&self) -> u64 {
         self.steps
     }
+}
+
+/// Deterministic logits for one packed batch: FNV-chain each slot's own
+/// window (never its neighbours) on top of the chip fingerprint.
+fn mock_logits(fp: u64, tokens: &[i32], lens: &[i32], b: usize, t: usize, v: usize) -> Tensor {
+    let mut data = vec![0.0f32; b * v];
+    for s in 0..b {
+        let mut h = fp;
+        for j in 0..(lens[s] as usize).min(t) {
+            h = fnv1a_fold(h, tokens[s * t + j] as u64);
+        }
+        for (c, out) in data[s * v..(s + 1) * v].iter_mut().enumerate() {
+            let hv = fnv1a_fold(h, (c as u64).wrapping_mul(0x9e3779b97f4a7c15));
+            *out = (hv % 4096) as f32 / 4096.0;
+        }
+    }
+    Tensor::new(vec![b, v], data)
 }
 
 #[cfg(test)]

@@ -34,7 +34,7 @@ pub mod workload;
 pub use crate::coordinator::tiles::{Floorplan, TileMap, Tiling};
 pub use deploy::{ChipDeployment, HwScalars};
 pub use server::{
-    request_id, static_chunking_steps, Completion, Decoder, DriftSchedule, InferenceServer,
-    ServeReport, ServeRequest, ServerStats,
+    request_id, static_chunking_steps, Completion, Decoder, DriftSchedule, FleetBatch,
+    InferenceServer, ServeReport, ServeRequest, ServerStats,
 };
 pub use workload::{mixed_workload, prompt_file_workload, sustained_workload};

@@ -33,6 +33,17 @@ use crate::util::stats;
 use crate::util::tensor::Tensor;
 use crate::util::{fnv1a, Timer};
 
+/// One chip's packed decode input for a fleet tick: the unit of
+/// per-chip parallelism in [`Decoder::decode_fleet`].
+pub struct FleetBatch {
+    /// fleet index of the chip this batch runs on
+    pub chip: usize,
+    /// `(slots, seq_len)` packed token rows (PAD-filled free slots)
+    pub tokens: Vec<i32>,
+    /// per-slot window lengths
+    pub lens: Vec<i32>,
+}
+
 /// One packed decode step: the slot-level contract between the
 /// scheduler and whatever executes the model.
 pub trait Decoder {
@@ -51,6 +62,26 @@ pub trait Decoder {
         lens: &[i32],
         rng: &mut Pcg64,
     ) -> Result<Tensor>;
+    /// Decode one fleet tick: every batch runs against its chip, logits
+    /// returned in batch order. The default implementation loops
+    /// `decode_step` serially in fleet order — one `rng` consumption
+    /// per batch in a fixed order, so results never depend on the
+    /// worker-pool width. Pure-host decoders whose step is a function
+    /// of (chip fingerprint, batch) alone — [`super::mock::MockDecoder`]
+    /// — override this to fan the chips out across the worker pool with
+    /// byte-identical logits; PJRT-backed decoders keep the serial
+    /// default (executions share one client).
+    fn decode_fleet(
+        &mut self,
+        chips: &[ChipDeployment],
+        batches: &[FleetBatch],
+        rng: &mut Pcg64,
+    ) -> Result<Vec<Tensor>> {
+        batches
+            .iter()
+            .map(|b| self.decode_step(&chips[b.chip], &b.tokens, &b.lens, rng))
+            .collect()
+    }
     /// Decode executions performed over this decoder's lifetime.
     fn steps(&self) -> u64;
 }
@@ -347,8 +378,13 @@ impl<'d, D: Decoder> InferenceServer<'d, D> {
         let mut tick = 0u64;
         let mut rr = 0usize; // round-robin chip cursor for refills
 
-        let mut tokens = vec![PAD as i32; b * t];
-        let mut lens = vec![1i32; b];
+        // per-chip decode buffers, allocated once and recycled every
+        // tick (parallel decode needs one buffer per chip, but the hot
+        // loop must not allocate b*t tokens per chip per tick)
+        let mut buf_pool: Vec<FleetBatch> = (0..n_chips)
+            .map(|_| FleetBatch { chip: 0, tokens: vec![PAD as i32; b * t], lens: vec![1i32; b] })
+            .collect();
+        let mut batches: Vec<FleetBatch> = Vec::with_capacity(n_chips);
 
         loop {
             // ---- refill: pop the queue into free slots, round-robin
@@ -379,25 +415,49 @@ impl<'d, D: Decoder> InferenceServer<'d, D> {
             // (global ticks, so aging continues across `run` calls)
             self.tick_drift(self.clock_ticks + tick)?;
 
-            // ---- one decode step per chip with work
-            for c in 0..n_chips {
-                if slots[c].iter().all(Option::is_none) {
+            // ---- pack one batch per chip with work (fleet order),
+            // reusing the recycled buffers
+            for (c, chip_slots) in slots.iter().enumerate() {
+                if chip_slots.iter().all(Option::is_none) {
                     continue;
                 }
-                for v in tokens.iter_mut() {
+                let mut fb = buf_pool.pop().expect("one buffer per chip");
+                fb.chip = c;
+                for v in fb.tokens.iter_mut() {
                     *v = PAD as i32;
                 }
-                for (s, slot) in slots[c].iter().enumerate() {
-                    match slot {
-                        Some(sl) => pack_slot(&mut tokens, &mut lens, s, t, &sl.window),
-                        None => lens[s] = 1,
+                for l in fb.lens.iter_mut() {
+                    *l = 1;
+                }
+                for (s, slot) in chip_slots.iter().enumerate() {
+                    if let Some(sl) = slot {
+                        pack_slot(&mut fb.tokens, &mut fb.lens, s, t, &sl.window);
                     }
                 }
-                let logits =
-                    self.decoder.decode_step(&self.chips[c], &tokens, &lens, &mut self.rng)?;
-                chip_steps[c] += 1;
+                batches.push(fb);
+            }
 
-                // ---- emit one token per active slot; retire finishers
+            // ---- decode every chip's batch for this tick: each batch
+            // runs on its own worker when the decoder supports it
+            // (slots are disjoint across chips, so packing order and
+            // decode order cannot interact)
+            let fleet_logits = self.decoder.decode_fleet(&self.chips, &batches, &mut self.rng)?;
+            if fleet_logits.len() != batches.len() {
+                return Err(anyhow!(
+                    "decode_fleet returned {} logit batches for {} inputs — a Decoder \
+                     must answer every batch (a short vec would stall its chips forever)",
+                    fleet_logits.len(),
+                    batches.len()
+                ));
+            }
+
+            // ---- emit one token per active slot; retire finishers.
+            // Sampling stays serial in fleet order, so the rng stream —
+            // and therefore every completion — is identical at any
+            // thread count.
+            for (batch, logits) in batches.iter().zip(&fleet_logits) {
+                let c = batch.chip;
+                chip_steps[c] += 1;
                 for s in 0..b {
                     let Some(sl) = slots[c][s].as_mut() else { continue };
                     let next = pick_token(
@@ -434,6 +494,7 @@ impl<'d, D: Decoder> InferenceServer<'d, D> {
                     }
                 }
             }
+            buf_pool.extend(batches.drain(..)); // recycle for the next tick
             tick += 1;
         }
 

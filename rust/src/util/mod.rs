@@ -3,6 +3,7 @@
 //! general-purpose crates); see DESIGN.md §1 for the substitution table.
 
 pub mod json;
+pub mod parallel;
 pub mod prng;
 pub mod quickcheck;
 pub mod stats;

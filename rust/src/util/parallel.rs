@@ -1,0 +1,282 @@
+//! Deterministic scoped-thread worker pool — the parallel execution
+//! runtime behind the tile engines, the serving fleet, and the eval
+//! seed sweeps.
+//!
+//! Zero new dependencies: fan-out is `std::thread::scope` over
+//! contiguous index chunks, one worker per chunk, results stitched back
+//! in index order. Every job the pool runs is a pure function of its
+//! inputs (per-tile RNG streams are keyed by `tiles::tile_key`, never
+//! by execution order), so **output is byte-for-byte identical at any
+//! thread count** — the determinism contract in
+//! docs/ARCHITECTURE.md, enforced by `rust/tests/conformance.rs`.
+//!
+//! Thread count resolution, highest priority first:
+//!
+//! 1. [`set_threads`] (the CLI's `--threads` flag on
+//!    eval/drift/serve/quantize);
+//! 2. the `AFM_THREADS` environment variable;
+//! 3. `std::thread::available_parallelism()`.
+//!
+//! Nested fan-out (e.g. per-tensor workers calling the per-tile
+//! traversal) degrades gracefully: a job already running on a worker
+//! executes nested pool calls inline instead of spawning
+//! threads-of-threads.
+//!
+//! Threads are spawned per call (scoped), not kept in a persistent
+//! pool: spawn/join costs tens of µs, which is noise against the
+//! engine workloads this pool exists for (noise/drift/GDC/RTN over
+//! whole tensors, per-seed provisioning). Callers whose per-call work
+//! can be *smaller* than that — per-tick mock fleet decode is the one
+//! known case, and it is test-only; the PJRT decoder keeps the serial
+//! default — accept the churn deliberately. If a hot path ever needs
+//! sub-spawn-latency fan-out, that is the cue for a persistent pool,
+//! not for sprinkling ad-hoc thresholds.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// CLI override; 0 = unset (fall through to env / hardware).
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// serializes [`with_threads`] scopes so concurrent callers (the
+/// determinism test suite sweeps thread counts) cannot interleave
+/// overrides
+static KNOB_LOCK: Mutex<()> = Mutex::new(());
+
+thread_local! {
+    /// set on pool workers so nested fan-out runs inline
+    static IN_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Install a process-wide thread-count override (the `--threads` CLI
+/// knob). `0` clears the override, falling back to `AFM_THREADS` and
+/// then to the machine's available parallelism.
+pub fn set_threads(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// The worker count the pool will use: the [`set_threads`] override,
+/// else `AFM_THREADS`, else `available_parallelism()` (min 1).
+///
+/// Panics on a non-empty, unparseable `AFM_THREADS` (e.g. `1O`): a
+/// typo must not silently un-pin a serial-reference run — the same
+/// fail-loudly rule the `--threads` flag follows. Empty or `0` means
+/// auto.
+pub fn threads() -> usize {
+    let o = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if o > 0 {
+        return o;
+    }
+    if let Ok(v) = std::env::var("AFM_THREADS") {
+        let v = v.trim();
+        if !v.is_empty() {
+            match v.parse::<usize>() {
+                Ok(0) => {} // explicit auto
+                Ok(n) => return n,
+                Err(_) => panic!("bad AFM_THREADS '{v}' (want a thread count, 0 = auto)"),
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Whether the current thread is a pool worker (nested pool calls run
+/// inline — no threads-of-threads).
+pub fn in_worker() -> bool {
+    IN_WORKER.with(|w| w.get())
+}
+
+/// Run `f` with the pool pinned to `n` threads (0 = auto), restoring
+/// the previous override afterwards — even on panic. Scopes are
+/// serialized process-wide, so concurrent thread-count sweeps (the
+/// determinism tests) cannot interleave overrides. Do not nest: a
+/// `with_threads` call inside `f` self-deadlocks.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    let _g = KNOB_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            THREAD_OVERRIDE.store(self.0, Ordering::Relaxed);
+        }
+    }
+    let _restore = Restore(THREAD_OVERRIDE.swap(n, Ordering::Relaxed));
+    f()
+}
+
+/// Run `f(0..n_jobs)` on the pool and return the results in index
+/// order. Chunked fan-out: workers take contiguous index ranges, so
+/// output order never depends on scheduling. Runs inline when the pool
+/// is sized 1, when there is at most one job, or when already on a
+/// worker. A panicking job propagates (poisons the whole call).
+pub fn map_indexed<R: Send>(n_jobs: usize, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
+    let t = threads().min(n_jobs);
+    if t <= 1 || in_worker() {
+        return (0..n_jobs).map(f).collect();
+    }
+    let chunk = n_jobs.div_ceil(t);
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = (0..t)
+            .map(|w| {
+                s.spawn(move || {
+                    IN_WORKER.with(|g| g.set(true));
+                    let lo = w * chunk;
+                    let hi = ((w + 1) * chunk).min(n_jobs);
+                    (lo..hi).map(f).collect::<Vec<R>>()
+                })
+            })
+            .collect();
+        let mut out = Vec::with_capacity(n_jobs);
+        for h in handles {
+            // re-raise with the original payload so assertion messages
+            // from inside jobs survive the thread boundary
+            out.extend(h.join().unwrap_or_else(|e| std::panic::resume_unwind(e)));
+        }
+        out
+    })
+}
+
+/// Consume `items` on the pool, calling `f` once per item. Intended
+/// for jobs that own disjoint mutable state (e.g. `&mut Tensor` per
+/// analog weight): order of side effects across items must not matter
+/// — and never does for the engines, whose per-item RNG streams are
+/// independently keyed. Runs inline under the same conditions as
+/// [`map_indexed`].
+pub fn for_each<T: Send>(items: Vec<T>, f: impl Fn(T) + Sync) {
+    let n = items.len();
+    let t = threads().min(n);
+    if t <= 1 || in_worker() {
+        for item in items {
+            f(item);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(t);
+    let mut chunks: Vec<Vec<T>> = Vec::with_capacity(t);
+    let mut it = items.into_iter();
+    loop {
+        let c: Vec<T> = it.by_ref().take(chunk).collect();
+        if c.is_empty() {
+            break;
+        }
+        chunks.push(c);
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .map(|c| {
+                s.spawn(move || {
+                    IN_WORKER.with(|g| g.set(true));
+                    for item in c {
+                        f(item);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            if let Err(e) = h.join() {
+                std::panic::resume_unwind(e);
+            }
+        }
+    });
+}
+
+/// The engines' shared fan-out policy: items with an *inner* parallel
+/// axis (`has_inner` — e.g. a tensor whose tile grid is non-degenerate)
+/// run serially here so that axis gets the full pool width inside `f`;
+/// items without one (e.g. degenerate-grid tensors, each a single
+/// sequential RNG stream) fan out across the pool per item. One home
+/// for the policy, so changing it (or adding an engine) happens once.
+/// Determinism is unaffected either way: `f` must be a pure function
+/// of each item, which every engine's per-item RNG keying guarantees.
+pub fn for_each_split<T: Send>(
+    items: Vec<T>,
+    has_inner: impl Fn(&T) -> bool,
+    f: impl Fn(T) + Sync,
+) {
+    let (inner, flat): (Vec<T>, Vec<T>) = items.into_iter().partition(|it| has_inner(it));
+    for_each(flat, &f);
+    for item in inner {
+        f(item);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn map_indexed_preserves_index_order_at_any_width() {
+        for t in [1, 2, 3, 8, 64] {
+            with_threads(t, || {
+                let got = map_indexed(37, |i| i * i);
+                let want: Vec<usize> = (0..37).map(|i| i * i).collect();
+                assert_eq!(got, want, "threads={t}");
+            });
+        }
+        with_threads(4, || assert!(map_indexed(0, |i| i).is_empty()));
+    }
+
+    #[test]
+    fn for_each_visits_every_item_exactly_once() {
+        for t in [1, 3, 8] {
+            with_threads(t, || {
+                let hits: Vec<AtomicU64> = (0..25).map(|_| AtomicU64::new(0)).collect();
+                let items: Vec<usize> = (0..25).collect();
+                for_each(items, |i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+                assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "threads={t}");
+            });
+        }
+    }
+
+    #[test]
+    fn nested_calls_run_inline_on_workers() {
+        with_threads(4, || {
+            let nested_parallel = map_indexed(8, |_| {
+                assert!(in_worker());
+                // the nested pool must not spawn (in_worker on entry)
+                let inner = map_indexed(4, |j| (in_worker(), j));
+                inner.iter().all(|&(w, _)| w)
+            });
+            assert!(nested_parallel.iter().all(|&b| b));
+        });
+        assert!(!in_worker());
+    }
+
+    #[test]
+    fn for_each_split_covers_both_partitions_exactly_once() {
+        with_threads(4, || {
+            let hits: Vec<AtomicU64> = (0..20).map(|_| AtomicU64::new(0)).collect();
+            let items: Vec<usize> = (0..20).collect();
+            // evens "have an inner axis" (run serial, not on a worker);
+            // odds fan out across the pool
+            for_each_split(
+                items,
+                |i| i % 2 == 0,
+                |i| {
+                    if i % 2 == 0 {
+                        assert!(!in_worker(), "inner-axis items must keep the pool free");
+                    }
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                },
+            );
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        });
+    }
+
+    #[test]
+    fn with_threads_pins_and_restores_the_override() {
+        with_threads(3, || {
+            assert_eq!(threads(), 3);
+            set_threads(7); // a raw set inside the scope is visible...
+            assert_eq!(threads(), 7);
+        });
+        // ...but the scope restores its entry state on exit
+        assert!(threads() >= 1);
+    }
+}

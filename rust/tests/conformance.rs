@@ -1,0 +1,391 @@
+//! Golden conformance suite + parallel-runtime determinism contract.
+//!
+//! Two jobs, one file:
+//!
+//! 1. **Golden fingerprints** — a fixed matrix of (noise model ×
+//!    tiling × drift age ± GDC × RTN × serving) configurations, each
+//!    reduced to an FNV-1a fingerprint of its exact output bits and
+//!    compared against `rust/tests/golden/conformance.json`. Any
+//!    refactor that silently changes a single mantissa bit anywhere in
+//!    the noise/drift/GDC/RTN/serve pipeline fails loudly here.
+//!    Bootstrapping: when the golden file is missing (first run on a
+//!    fresh platform) or `AFM_BLESS=1`, the suite writes the file and
+//!    passes — commit the result. `scripts/check.sh` runs the suite
+//!    under `AFM_THREADS=1` first and the default pool second, so a
+//!    freshly-blessed file is always the *serial* reference and the
+//!    parallel run must reproduce it byte-for-byte.
+//!
+//! 2. **Determinism properties** — parallel output equals serial
+//!    output for thread counts {1, 2, 4, 8} across every engine and
+//!    the serving scheduler, plus run-to-run stability under
+//!    scheduling jitter (same config twice → identical fingerprints
+//!    and reports). These are the invariants that make the golden file
+//!    meaningful at any pool width.
+//!
+//! Fingerprints cover f32/f64 arithmetic including `ln`/`exp`
+//! (drift) and Box–Muller normals, so they are stable per
+//! platform/libm; CI compares runs on one platform.
+
+use afm::config::HwConfig;
+use afm::coordinator::drift::{self, DriftModel};
+use afm::coordinator::noise::{self, NoiseModel};
+use afm::coordinator::quant;
+use afm::coordinator::tiles::Tiling;
+use afm::data::tokenizer::Tokenizer;
+use afm::runtime::manifest::ModelDims;
+use afm::runtime::Params;
+use afm::serve::{
+    mock::MockDecoder, ChipDeployment, DriftSchedule, InferenceServer, ServeReport, ServeRequest,
+};
+use afm::util::json::Json;
+use afm::util::parallel::with_threads;
+use afm::util::{fnv1a_fold, FNV_OFFSET};
+use std::collections::BTreeMap;
+
+/// Hardware seed every golden configuration uses.
+const SEED: u64 = 0xAF_2026;
+
+/// Tile grids the suite pins: the unbounded (pre-tile) fiction, the
+/// Hermes-like 256×256 die, and a 100×100 grid that lands ragged edge
+/// tiles on every tensor below.
+fn tilings() -> [Tiling; 3] {
+    [Tiling::unbounded(), Tiling::new(256, 256), Tiling::new(100, 100)]
+}
+
+/// Golden model: large enough that 256×256 and 100×100 grids are
+/// non-degenerate on every analog tensor (wq: 2 stacked 300×130
+/// matrices, emb: 310×130 with vocab-row channels), plus a digital
+/// parameter that must never be touched.
+fn golden_params() -> Params {
+    let mut shapes = BTreeMap::new();
+    shapes.insert("wq".to_string(), vec![2, 300, 130]);
+    shapes.insert("emb".to_string(), vec![310, 130]);
+    shapes.insert("ln_f".to_string(), vec![130]);
+    let dims = ModelDims {
+        d_model: 130,
+        n_layers: 2,
+        n_heads: 1,
+        d_ff: 260,
+        seq_len: 16,
+        vocab: 310,
+        n_cls: 0,
+        n_params: 0,
+        param_keys: vec!["wq".into(), "emb".into(), "ln_f".into()],
+        param_shapes: shapes,
+    };
+    Params::init(&dims, 7)
+}
+
+fn noise_models() -> [(&'static str, NoiseModel); 4] {
+    [
+        ("none", NoiseModel::None),
+        ("gauss0.05", NoiseModel::Gaussian { gamma: 0.05 }),
+        ("affine0.05-0.02", NoiseModel::Affine { gamma: 0.05, beta: 0.02 }),
+        ("pcm", NoiseModel::Pcm),
+    ]
+}
+
+/// Drift ages the suite pins: fresh, one hour, one year.
+fn ages() -> [(&'static str, f64); 3] {
+    [("0s", 0.0), ("1h", drift::SECS_PER_HOUR), ("1y", drift::SECS_PER_YEAR)]
+}
+
+/// Fingerprint a ServeReport's deterministic content (tokens, routing,
+/// queueing, ages — everything except wall-clock latencies).
+fn fp_report(report: &ServeReport) -> u64 {
+    let mut h = FNV_OFFSET;
+    for c in &report.completions {
+        h = fnv1a_fold(h, c.id);
+        h = fnv1a_fold(h, c.arrival as u64);
+        h = fnv1a_fold(h, c.chip as u64);
+        h = fnv1a_fold(h, c.wait_ticks);
+        h = fnv1a_fold(h, c.decode_steps);
+        h = fnv1a_fold(h, c.chip_age_secs.to_bits());
+        for &tok in &c.tokens {
+            h = fnv1a_fold(h, tok as u64);
+        }
+    }
+    h = fnv1a_fold(h, report.stats.completed as u64);
+    h = fnv1a_fold(h, report.stats.total_tokens);
+    fnv1a_fold(h, report.stats.lm_steps)
+}
+
+/// The serving workload every serve configuration replays: mixed
+/// budgets over more requests than slots, EOS stopping on half.
+fn conformance_workload() -> Vec<ServeRequest> {
+    (0..10)
+        .map(|i| {
+            let mut r = ServeRequest::greedy(
+                &format!("Q: conformance {i}?"),
+                if i % 2 == 0 { 5 } else { 17 },
+            );
+            r.stop_at_eos = i % 3 == 0;
+            r
+        })
+        .collect()
+}
+
+/// Serve the conformance workload on a 3-chip fleet with an aging
+/// schedule under `tiling`; returns the report fingerprint.
+fn serve_fp(tiling: Tiling) -> u64 {
+    let p = golden_params();
+    let hw = HwConfig::afm_train(0.0).with_tiles(tiling.rows, tiling.cols);
+    let seeds = [SEED, SEED + 1, SEED + 2];
+    let chips = ChipDeployment::provision_fleet(&p, &NoiseModel::Pcm, &seeds, &hw, 0).unwrap();
+    let mut d = MockDecoder::new(2, 16, Tokenizer::vocab());
+    let schedule = DriftSchedule {
+        secs_per_tick: 3.0 * drift::SECS_PER_DAY,
+        age_every_ticks: 2,
+        recalibrate_every_ticks: Some(5),
+    };
+    let mut srv = InferenceServer::with_drift(&mut d, chips, 9, schedule).unwrap();
+    fp_report(&srv.run(conformance_workload()).unwrap())
+}
+
+/// The full golden matrix: config name → output fingerprint.
+fn compute_goldens() -> Vec<(String, u64)> {
+    let p = golden_params();
+    let mut out = Vec::new();
+    // programming noise: every model × every tiling
+    for (nm_name, nm) in noise_models() {
+        for tiling in tilings() {
+            let q = noise::apply_tiled(&p, &nm, SEED, &tiling);
+            out.push((format!("noise/{nm_name}/t{}", tiling.label()), q.fingerprint()));
+        }
+    }
+    // drift aging ± GDC: every age × every tiling
+    for tiling in tilings() {
+        for (age_name, age) in ages() {
+            let aged = drift::apply_tiled(&p, &DriftModel::default(), age, SEED, &tiling);
+            out.push((format!("drift/{age_name}/t{}", tiling.label()), aged.fingerprint()));
+            let scales = drift::gdc_calibrate(&p, &aged, drift::GDC_CALIB_VECS, SEED, &tiling);
+            let mut gdc = aged.clone();
+            drift::apply_scales(&mut gdc, &scales);
+            out.push((format!("drift/{age_name}+gdc/t{}", tiling.label()), gdc.fingerprint()));
+        }
+    }
+    // post-training RTN host mirror per tiling
+    for tiling in tilings() {
+        let mut q = p.clone();
+        quant::rtn_params_tiled(&mut q, 4, &tiling);
+        out.push((format!("rtn4/t{}", tiling.label()), q.fingerprint()));
+    }
+    // end-to-end serving (provision → drift schedule → scheduler)
+    for tiling in tilings() {
+        out.push((format!("serve/t{}", tiling.label()), serve_fp(tiling)));
+    }
+    out
+}
+
+fn golden_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/golden/conformance.json")
+}
+
+#[test]
+fn golden_fingerprints_match_committed_reference() {
+    let path = golden_path();
+    let bless = std::env::var("AFM_BLESS").map(|v| v == "1").unwrap_or(false) || !path.exists();
+    // blessing computes under a pinned 1-thread pool (with_threads also
+    // holds the knob lock, so a concurrently-running thread-sweep test
+    // cannot widen the pool mid-bless): the golden file is always the
+    // serial reference. Comparison runs compute under the ambient pool
+    // — that asymmetry is exactly the parallel==serial gate.
+    let got = if bless { with_threads(1, compute_goldens) } else { compute_goldens() };
+    if bless {
+        let obj = Json::obj(
+            got.iter().map(|(k, v)| (k.as_str(), Json::str(format!("{v:016x}")))).collect(),
+        );
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, format!("{}\n", obj.to_string())).unwrap();
+        eprintln!(
+            "conformance: blessed {} golden fingerprints into {} — commit this file; \
+             future runs (any thread count) must reproduce it byte-for-byte",
+            got.len(),
+            path.display()
+        );
+        return;
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    let doc = Json::parse(&text).unwrap_or_else(|e| panic!("bad golden file: {e}"));
+    let want = doc.as_obj().expect("golden file must be a JSON object");
+    let mut failures = Vec::new();
+    for (name, fp) in &got {
+        match want.get(name).and_then(Json::as_str) {
+            None => failures.push(format!("{name}: missing from golden file (re-bless?)")),
+            Some(w) if w != format!("{fp:016x}") => {
+                failures.push(format!("{name}: got {fp:016x}, golden {w}"))
+            }
+            Some(_) => {}
+        }
+    }
+    for name in want.keys() {
+        if !got.iter().any(|(n, _)| n == name) {
+            failures.push(format!("{name}: in golden file but no longer computed (re-bless?)"));
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "golden conformance mismatches (numeric drift or a stale golden file — \
+         AFM_BLESS=1 re-blesses deliberately):\n  {}",
+        failures.join("\n  ")
+    );
+}
+
+// ------------------------------------------------------ determinism
+
+/// Thread counts every determinism property sweeps.
+const SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+#[test]
+fn noise_is_byte_identical_across_thread_counts() {
+    let p = golden_params();
+    for (nm_name, nm) in noise_models() {
+        for tiling in tilings() {
+            let serial = with_threads(1, || noise::apply_tiled(&p, &nm, SEED, &tiling));
+            for t in SWEEP {
+                let par = with_threads(t, || noise::apply_tiled(&p, &nm, SEED, &tiling));
+                assert_eq!(par, serial, "noise/{nm_name}/t{} threads={t}", tiling.label());
+            }
+        }
+    }
+}
+
+#[test]
+fn drift_and_gdc_are_byte_identical_across_thread_counts() {
+    let p = golden_params();
+    for tiling in tilings() {
+        let month = drift::SECS_PER_MONTH;
+        let (serial_aged, serial_scales) = with_threads(1, || {
+            let aged = drift::apply_tiled(&p, &DriftModel::default(), month, SEED, &tiling);
+            let scales = drift::gdc_calibrate(&p, &aged, drift::GDC_CALIB_VECS, SEED, &tiling);
+            (aged, scales)
+        });
+        let mut serial_gdc = serial_aged.clone();
+        drift::apply_scales(&mut serial_gdc, &serial_scales);
+        for t in SWEEP {
+            with_threads(t, || {
+                let aged = drift::apply_tiled(&p, &DriftModel::default(), month, SEED, &tiling);
+                assert_eq!(aged, serial_aged, "drift t{} threads={t}", tiling.label());
+                let scales = drift::gdc_calibrate(&p, &aged, drift::GDC_CALIB_VECS, SEED, &tiling);
+                assert_eq!(scales, serial_scales, "gdc t{} threads={t}", tiling.label());
+                let mut gdc = aged;
+                drift::apply_scales(&mut gdc, &scales);
+                assert_eq!(gdc, serial_gdc, "gdc-applied t{} threads={t}", tiling.label());
+            });
+        }
+    }
+}
+
+#[test]
+fn rtn_is_byte_identical_across_thread_counts() {
+    let p = golden_params();
+    for tiling in tilings() {
+        for bits in [1u32, 4, 8] {
+            let serial = with_threads(1, || {
+                let mut q = p.clone();
+                quant::rtn_params_tiled(&mut q, bits, &tiling);
+                q
+            });
+            for t in SWEEP {
+                let par = with_threads(t, || {
+                    let mut q = p.clone();
+                    quant::rtn_params_tiled(&mut q, bits, &tiling);
+                    q
+                });
+                assert_eq!(par, serial, "rtn{bits}/t{} threads={t}", tiling.label());
+            }
+        }
+    }
+}
+
+#[test]
+fn fleet_provisioning_and_serving_are_byte_identical_across_thread_counts() {
+    for tiling in [Tiling::new(100, 100), Tiling::unbounded()] {
+        let serial_fleet = with_threads(1, || {
+            let p = golden_params();
+            let hw = HwConfig::afm_train(0.0).with_tiles(tiling.rows, tiling.cols);
+            let fleet = ChipDeployment::provision_fleet(
+                &p,
+                &NoiseModel::Pcm,
+                &[SEED, SEED + 1, SEED + 2],
+                &hw,
+                0,
+            )
+            .unwrap();
+            fleet.iter().map(ChipDeployment::fingerprint).collect::<Vec<u64>>()
+        });
+        let serial_serve = with_threads(1, || serve_fp(tiling));
+        for t in SWEEP {
+            with_threads(t, || {
+                let p = golden_params();
+                let hw = HwConfig::afm_train(0.0).with_tiles(tiling.rows, tiling.cols);
+                let fleet = ChipDeployment::provision_fleet(
+                    &p,
+                    &NoiseModel::Pcm,
+                    &[SEED, SEED + 1, SEED + 2],
+                    &hw,
+                    0,
+                )
+                .unwrap();
+                let fps: Vec<u64> = fleet.iter().map(ChipDeployment::fingerprint).collect();
+                assert_eq!(fps, serial_fleet, "fleet t{} threads={t}", tiling.label());
+                assert_eq!(serve_fp(tiling), serial_serve, "serve t{} threads={t}", tiling.label());
+            });
+        }
+    }
+}
+
+#[test]
+fn serve_reports_are_identical_field_by_field_not_just_by_fingerprint() {
+    // fingerprints compress; this one diff'd field-wise so a failure
+    // names the divergent completion instead of a hash pair
+    let run = |threads: usize| {
+        with_threads(threads, || {
+            let p = golden_params();
+            let hw = HwConfig::afm_train(0.0).with_tiles(100, 100);
+            let chips =
+                ChipDeployment::provision_fleet(&p, &NoiseModel::Pcm, &[3, 4], &hw, 0).unwrap();
+            let mut d = MockDecoder::new(2, 16, Tokenizer::vocab());
+            let mut srv = InferenceServer::new(&mut d, chips, 5).unwrap();
+            srv.run(conformance_workload()).unwrap()
+        })
+    };
+    let serial = run(1);
+    for t in [2usize, 8] {
+        let par = run(t);
+        assert_eq!(par.completions.len(), serial.completions.len());
+        for (a, b) in par.completions.iter().zip(&serial.completions) {
+            assert_eq!(a.tokens, b.tokens, "tokens diverged (threads={t}, req {})", a.arrival);
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.chip, b.chip, "routing diverged (threads={t}, req {})", a.arrival);
+            assert_eq!(a.wait_ticks, b.wait_ticks);
+            assert_eq!(a.decode_steps, b.decode_steps);
+            assert_eq!(a.chip_age_secs, b.chip_age_secs);
+            assert_eq!(a.text, b.text);
+        }
+        assert_eq!(par.stats.completed, serial.stats.completed);
+        assert_eq!(par.stats.total_tokens, serial.stats.total_tokens);
+        assert_eq!(par.stats.lm_steps, serial.stats.lm_steps);
+    }
+}
+
+#[test]
+fn run_to_run_stability_under_scheduling_jitter() {
+    // same config, same pool width, two runs: OS scheduling must never
+    // leak into results — fingerprints and reports repeat exactly
+    let p = golden_params();
+    let tiling = Tiling::new(100, 100);
+    with_threads(8, || {
+        for _ in 0..2 {
+            let a = noise::apply_tiled(&p, &NoiseModel::Pcm, SEED, &tiling);
+            let b = noise::apply_tiled(&p, &NoiseModel::Pcm, SEED, &tiling);
+            assert_eq!(a.fingerprint(), b.fingerprint());
+            let month = drift::SECS_PER_MONTH;
+            let d1 = drift::apply_tiled(&a, &DriftModel::default(), month, 1, &tiling);
+            let d2 = drift::apply_tiled(&a, &DriftModel::default(), month, 1, &tiling);
+            assert_eq!(d1, d2);
+            assert_eq!(serve_fp(tiling), serve_fp(tiling));
+        }
+    });
+}

@@ -41,9 +41,31 @@ if [[ $fast -eq 0 ]]; then
   # items (the crate carries #![warn(missing_docs)]) fail the check
   echo "== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings)"
   RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+  # bench rot gate: every bench target must still compile (they are
+  # harness=false binaries, so plain `cargo test` never builds them)
+  echo "== cargo bench --no-run"
+  cargo bench --no-run
 fi
 
-echo "== cargo test -q"
+# The determinism gate: the suite runs twice — serial first, then the
+# default worker pool — and must pass identically. The serial pass is
+# the reference (it blesses rust/tests/golden/conformance.json when the
+# file is missing); the parallel pass must reproduce every golden
+# fingerprint byte-for-byte, which is exactly the parallel-runtime
+# invariant (docs/ARCHITECTURE.md, "Parallel runtime & determinism").
+echo "== cargo test -q (AFM_THREADS=1 — serial reference)"
+AFM_THREADS=1 cargo test -q
+
+echo "== cargo test -q (default worker pool — must match the serial goldens)"
 cargo test -q
+
+# the golden gate only protects future commits once the blessed file is
+# tracked — a fresh checkout would otherwise re-bless and pass trivially
+if ! git ls-files --error-unmatch rust/tests/golden/conformance.json >/dev/null 2>&1; then
+  echo "WARNING: rust/tests/golden/conformance.json is not committed —" >&2
+  echo "         the conformance suite blessed it this run; commit it so" >&2
+  echo "         numeric drift is gated across commits (see rust/tests/golden/README.md)" >&2
+fi
 
 echo "check.sh: all green"
