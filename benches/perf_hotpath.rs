@@ -141,6 +141,124 @@ fn main() -> anyhow::Result<()> {
         "parallel output diverged: {thread_fps:?}"
     );
 
+    // ---- device-physics pass pipeline: a drift tick as ONE fused
+    // traversal + one literal refresh (ChipDeployment::set_age) vs the
+    // legacy sequential engine composition (one full traversal and one
+    // buffer per engine). Cross-path fingerprint asserts pin the
+    // fused == sequential invariant on the bench path too.
+    use afm::coordinator::drift::{self, DriftModel};
+    let pp_tiling = afm::coordinator::tiles::Tiling::new(64, 64);
+    let pp_hw = HwConfig::afm_train(0.0).with_tiles(64, 64);
+    let pp_model = DriftModel::default();
+    let month = drift::SECS_PER_MONTH;
+    let r_prov = bs::bench(
+        "provision fused (PCM write, 64x64 tiles)",
+        1,
+        6,
+        Some((n_params, "params/s")),
+        || ChipDeployment::provision(&zoo.teacher, &NoiseModel::Pcm, 7, &pp_hw).unwrap(),
+    );
+    let provision_ms = r_prov.mean_ms;
+    results.push(r_prov);
+    let mut pp_chip = ChipDeployment::provision(&zoo.teacher, &NoiseModel::Pcm, 7, &pp_hw)?;
+    let pp_prog = noise::apply_tiled(&zoo.teacher, &NoiseModel::Pcm, 7, &pp_tiling);
+    assert_eq!(pp_chip.fingerprint(), pp_prog.fingerprint(), "provision != standalone write");
+    // store a field calibration so the fused aging path carries GDC,
+    // and pin the one-refresh-per-tick contract before timing
+    pp_chip.age_and_recalibrate(month)?;
+    let pp_scales = {
+        let aged = drift::apply_tiled(&pp_prog, &pp_model, month, 7, &pp_tiling);
+        drift::gdc_calibrate(&pp_prog, &aged, drift::GDC_CALIB_VECS, 7, &pp_tiling)
+    };
+    let r_before = pp_chip.refreshes();
+    pp_chip.age_to(2.0 * month)?;
+    pp_chip.age_and_recalibrate(month)?;
+    let refreshes_per_tick = (pp_chip.refreshes() - r_before) as f64 / 2.0;
+    assert_eq!(
+        refreshes_per_tick, 1.0,
+        "a drift tick must be exactly one parameter-buffer write + one literal refresh"
+    );
+    // fused vs legacy aging with stored (stale) scales; ages alternate
+    // so the no-op fast path never hides the work being measured
+    let mut flip = false;
+    let r_fused = bs::bench("age_to fused (drift→GDC, 64x64 tiles)", 1, 6, Some((n_params, "params/s")), || {
+        flip = !flip;
+        pp_chip.age_to(if flip { 2.0 * month } else { 3.0 * month }).unwrap()
+    });
+    let mut flip2 = false;
+    let r_seq = bs::bench("age legacy sequential (drift, apply_scales, upload)", 1, 6, Some((n_params, "params/s")), || {
+        flip2 = !flip2;
+        let age = if flip2 { 2.0 * month } else { 3.0 * month };
+        let mut aged = drift::apply_tiled(&pp_prog, &pp_model, age, 7, &pp_tiling);
+        drift::apply_scales(&mut aged, &pp_scales, &pp_tiling);
+        let fp = aged.fingerprint();
+        (fp, aged.to_literals().unwrap())
+    });
+    // cross-path fingerprint assert: same tick, both derivations
+    pp_chip.age_to(3.0 * month)?;
+    let want_fp = {
+        let mut aged = drift::apply_tiled(&pp_prog, &pp_model, 3.0 * month, 7, &pp_tiling);
+        drift::apply_scales(&mut aged, &pp_scales, &pp_tiling);
+        aged.fingerprint()
+    };
+    assert_eq!(pp_chip.fingerprint(), want_fp, "fused aging diverged from sequential engines");
+    // fused vs legacy age+recalibrate (drift → fresh GDC in one pass)
+    let mut flip3 = false;
+    let r_fused_recal = bs::bench("age_and_recalibrate fused (64x64 tiles)", 1, 6, Some((n_params, "params/s")), || {
+        flip3 = !flip3;
+        pp_chip.age_and_recalibrate(if flip3 { 2.0 * month } else { 3.0 * month }).unwrap()
+    });
+    let mut flip4 = false;
+    let r_seq_recal = bs::bench("recalibrate legacy sequential (drift, calibrate, apply, upload)", 1, 6, Some((n_params, "params/s")), || {
+        flip4 = !flip4;
+        let age = if flip4 { 2.0 * month } else { 3.0 * month };
+        let mut aged = drift::apply_tiled(&pp_prog, &pp_model, age, 7, &pp_tiling);
+        let scales = drift::gdc_calibrate(&pp_prog, &aged, drift::GDC_CALIB_VECS, 7, &pp_tiling);
+        drift::apply_scales(&mut aged, &scales, &pp_tiling);
+        let fp = aged.fingerprint();
+        (fp, aged.to_literals().unwrap())
+    });
+    pp_chip.age_and_recalibrate(month)?;
+    let want_recal_fp = {
+        let mut aged = drift::apply_tiled(&pp_prog, &pp_model, month, 7, &pp_tiling);
+        let scales = drift::gdc_calibrate(&pp_prog, &aged, drift::GDC_CALIB_VECS, 7, &pp_tiling);
+        drift::apply_scales(&mut aged, &scales, &pp_tiling);
+        aged.fingerprint()
+    };
+    assert_eq!(
+        pp_chip.fingerprint(),
+        want_recal_fp,
+        "fused recalibration diverged from sequential engines"
+    );
+    let (age_fused_ms, age_seq_ms) = (r_fused.mean_ms, r_seq.mean_ms);
+    let (recal_fused_ms, recal_seq_ms) = (r_fused_recal.mean_ms, r_seq_recal.mean_ms);
+    results.push(r_fused);
+    results.push(r_seq);
+    results.push(r_fused_recal);
+    results.push(r_seq_recal);
+    let speedup_of = |seq: f64, fused: f64| if fused > 0.0 { seq / fused } else { 0.0 };
+    let _ = afm::util::append_jsonl(
+        &bs::reports_dir().join("bench.jsonl"),
+        &Json::obj(vec![
+            ("bench", Json::str("pass_pipeline")),
+            ("op", Json::str("provision/age/recalibrate, 64x64 tiles, fused vs sequential")),
+            ("provision_ms", Json::num(provision_ms)),
+            ("age_fused_ms", Json::num(age_fused_ms)),
+            ("age_seq_ms", Json::num(age_seq_ms)),
+            ("age_speedup", Json::num(speedup_of(age_seq_ms, age_fused_ms))),
+            ("recal_fused_ms", Json::num(recal_fused_ms)),
+            ("recal_seq_ms", Json::num(recal_seq_ms)),
+            ("recal_speedup", Json::num(speedup_of(recal_seq_ms, recal_fused_ms))),
+            ("refreshes_per_tick", Json::num(refreshes_per_tick)),
+        ]),
+    );
+    println!(
+        "pass pipeline (64x64 tiles): age {age_seq_ms:.1} -> {age_fused_ms:.1} ms (x{:.2}), \
+         recal {recal_seq_ms:.1} -> {recal_fused_ms:.1} ms (x{:.2})",
+        speedup_of(age_seq_ms, age_fused_ms),
+        speedup_of(recal_seq_ms, recal_fused_ms)
+    );
+
     // ---- serving throughput (continuous batching over a 2-chip fleet)
     let hw = HwConfig::afm_train(0.0);
     let fleet = vec![

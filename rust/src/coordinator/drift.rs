@@ -26,10 +26,25 @@
 //! scale per tensor, the pre-tile fiction this module used to (wrongly)
 //! call a "tile". The analog tensor set matches `noise`: the seven
 //! block linears plus the tied embedding/head matrix.
+//!
+//! Aging and compensation are [`DevicePass`]es in the device-physics
+//! pass pipeline (`tiles::PassPlan` owns the traversal): [`DriftPass`]
+//! decays conductances, [`GdcCalibratePass`] estimates *and* applies
+//! fresh per-tile scales against the plan input (the programmed
+//! reference) inside the same tile visit, and [`GdcApplyPass`] folds
+//! previously-stored (possibly stale) scales in. `apply_tiled` /
+//! `apply_scales` are the standalone single-pass wrappers;
+//! `ChipDeployment::set_age` stacks the passes so a drift tick is one
+//! fused traversal. The standalone `gdc_calibrate` estimator remains
+//! for comparing two arbitrary parameter sets (verification batches,
+//! the golden conformance matrix).
 
 use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 
-use super::tiles::{self, TileGrid, TileRef, Tiling};
+use super::tiles::{
+    self, DevicePass, PassCtx, PassPlan, TileGrid, TileRef, TileSlice, TileView, Tiling,
+};
 use crate::runtime::params::Params;
 use crate::util::prng::Pcg64;
 use crate::util::tensor::Tensor;
@@ -100,7 +115,8 @@ pub fn apply(params: &Params, model: &DriftModel, t_secs: f64, seed: u64) -> Par
 /// same exponents — the result is a pure function of its arguments,
 /// not of aging history. The degenerate whole-matrix grid keeps the
 /// legacy per-tensor stream (keyed by the tensor name, crossing the
-/// layer stack) so pre-tile fingerprints are preserved.
+/// layer stack) so pre-tile fingerprints are preserved. Implemented
+/// as a single-[`DriftPass`] plan.
 pub fn apply_tiled(
     params: &Params,
     model: &DriftModel,
@@ -108,44 +124,74 @@ pub fn apply_tiled(
     seed: u64,
     tiling: &Tiling,
 ) -> Params {
-    let t = t_secs.max(model.t0_secs);
-    if model.is_none() || t <= model.t0_secs {
-        return params.clone();
-    }
-    let log_ratio = (t / model.t0_secs).ln();
     let mut out = params.clone();
-    let rng = Pcg64::with_stream(seed, DRIFT_STREAM);
-    let decay = |g: &mut f32, dev_rng: &mut Pcg64| {
-        let nu = (model.nu_mean + model.nu_std * dev_rng.normal_f32()).max(0.0);
-        // g *= (t/t0)^(-ν); exact zeros stay zero (multiplicative)
-        *g *= (-(nu as f64) * log_ratio).exp() as f32;
-    };
-    // every ν stream is keyed by (seed, tensor) or (seed, tile), never
-    // by visit order, so the pool cannot change the draws. Degenerate
-    // (whole-matrix) tensors fan out per tensor — each is one
-    // sequential stream; real grids run one tensor at a time with
-    // their tiles fanned out at full pool width. (Drift is per device,
-    // so the channel axis in the shared work list goes unused.)
-    parallel::for_each_split(
-        tiles::analog_work(&mut out),
-        |(_, _, t)| super::noise::has_tile_axis(t, tiling),
-        |(key, _, tensor)| {
-            let (_, k, n) = tensor.as_matrix_stack();
-            let grid = tiling.grid_for(k, n);
-            if grid.is_single() {
-                let mut dev_rng = rng.fold_in(fnv1a(key.as_bytes()));
-                for g in tensor.data.iter_mut() {
-                    decay(g, &mut dev_rng);
-                }
-            } else {
-                tiles::par_for_each_tile(tensor, &grid, |s, tile, view| {
-                    let mut dev_rng = rng.fold_in(tiles::tile_key(key, s, tile.tr, tile.tc));
-                    view.map_devices(|g| decay(g, &mut dev_rng));
-                });
-            }
-        },
-    );
+    let aging = DriftPass::new(*model, t_secs, seed);
+    PassPlan::new(*tiling).then(&aging).run_in_place(&mut out);
     out
+}
+
+/// Conductance aging as a [`DevicePass`]: every device decays by
+/// `(t/t0)^(-ν)` with its own ν draw. Every ν stream is keyed by
+/// (seed, tensor) on the degenerate grid or (seed, tile) on real
+/// grids — never by visit order — on stream tag 0xd21f, so the pool
+/// cannot change the draws and fusing with other passes cannot
+/// either. Identity (dropped from plans) when ν ≡ 0 or `t <= t0`.
+pub struct DriftPass {
+    model: DriftModel,
+    t_secs: f64,
+    log_ratio: f64,
+    rng: Pcg64,
+}
+
+impl DriftPass {
+    /// A pass aging to `t_secs` under `model` and hardware-instance
+    /// `seed`.
+    pub fn new(model: DriftModel, t_secs: f64, seed: u64) -> DriftPass {
+        let t = t_secs.max(model.t0_secs);
+        DriftPass {
+            model,
+            t_secs,
+            log_ratio: (t / model.t0_secs).ln(),
+            rng: Pcg64::with_stream(seed, DRIFT_STREAM),
+        }
+    }
+
+    fn decay(&self, g: &mut f32, dev_rng: &mut Pcg64) {
+        let nu = (self.model.nu_mean + self.model.nu_std * dev_rng.normal_f32()).max(0.0);
+        // g *= (t/t0)^(-ν); exact zeros stay zero (multiplicative)
+        *g *= (-(nu as f64) * self.log_ratio).exp() as f32;
+    }
+}
+
+impl DevicePass for DriftPass {
+    fn name(&self) -> &'static str {
+        "drift"
+    }
+
+    fn is_identity(&self) -> bool {
+        self.model.is_none() || self.t_secs <= self.model.t0_secs
+    }
+
+    fn run_tensor(&self, cx: &PassCtx, cur: &mut Tensor, _reference: Option<&Tensor>) {
+        // drift is per device, so the channel axis goes unused; the
+        // legacy stream scans the stacked tensor flat, in data order
+        let mut dev_rng = self.rng.fold_in(fnv1a(cx.key.as_bytes()));
+        for g in cur.data.iter_mut() {
+            self.decay(g, &mut dev_rng);
+        }
+    }
+
+    fn run_tile(
+        &self,
+        cx: &PassCtx,
+        s: usize,
+        tile: &TileRef,
+        cur: &mut TileView,
+        _reference: Option<&TileSlice>,
+    ) {
+        let mut dev_rng = self.rng.fold_in(tiles::tile_key(cx.key, s, tile.tr, tile.tc));
+        cur.map_devices(|g| self.decay(g, &mut dev_rng));
+    }
 }
 
 /// Calibration vectors per tensor for GDC estimation (a "small
@@ -205,63 +251,44 @@ pub fn gdc_calibrate(
         let per_tile = !grid.is_single();
         let (gr, gc) = (grid.n_tile_rows(), grid.n_tile_cols());
         let nv = n_vecs.max(1);
-        // draw every calibration vector up front, in the serial path's
-        // (vec, stack) order, so the streams match the pre-parallel code
-        let mut rng = Pcg64::with_stream(seed, 0x6dc0).fold_in(fnv1a(key.as_bytes()));
-        let mut xs = vec![0.0f32; nv * stack * k];
-        for chunk in xs.chunks_mut(k) {
-            rng.fill_normal(chunk);
-        }
-        let x_at = |v: usize, s: usize| &xs[(v * stack + s) * k..(v * stack + s + 1) * k];
-        let scale_of = |sr: f64, sd: f64| if sd > 0.0 { (sr / sd) as f32 } else { 1.0 };
+        let xs = draw_calib_vecs(key, stack, k, nv, seed);
         let scales: Vec<f32> = if per_tile {
             let tile_list: Vec<TileRef> = grid.tiles().collect();
             // one job per cell = (stack, tile), in cell-index order
             parallel::map_indexed(stack * gr * gc, |cell| {
                 let (s, ti) = (cell / (gr * gc), cell % (gr * gc));
                 let tile = tile_list[ti];
-                let base = s * k * n;
-                let (mut sum_r, mut sum_d) = (0.0f64, 0.0f64);
-                for v in 0..nv {
-                    let x = x_at(v, s);
-                    for j in tile.col_start..tile.col_end {
-                        let (mut yr, mut yd) = (0.0f32, 0.0f32);
-                        for i in tile.row_start..tile.row_end {
-                            yr += x[i] * r.data[base + i * n + j];
-                            yd += x[i] * d.data[base + i * n + j];
-                        }
-                        sum_r += yr.abs() as f64;
-                        sum_d += yd.abs() as f64;
-                    }
-                }
-                scale_of(sum_r, sum_d)
+                calib_scale(
+                    &xs,
+                    k,
+                    stack,
+                    nv,
+                    s..s + 1,
+                    tile.row_start..tile.row_end,
+                    tile.col_start..tile.col_end,
+                    |sa, i, j| r.data[sa * k * n + i * n + j],
+                    |sa, i, j| d.data[sa * k * n + i * n + j],
+                )
             })
         } else {
-            // degenerate grid: one scale over the whole stacked tensor,
-            // accumulated in the serial (vec, stack, col) order
-            let (mut sum_r, mut sum_d) = (0.0f64, 0.0f64);
-            for v in 0..nv {
-                for s in 0..stack {
-                    let x = x_at(v, s);
-                    let base = s * k * n;
-                    for j in 0..n {
-                        let (mut yr, mut yd) = (0.0f32, 0.0f32);
-                        for (i, &xi) in x.iter().enumerate() {
-                            yr += xi * r.data[base + i * n + j];
-                            yd += xi * d.data[base + i * n + j];
-                        }
-                        sum_r += yr.abs() as f64;
-                        sum_d += yd.abs() as f64;
-                    }
-                }
-            }
-            vec![scale_of(sum_r, sum_d)]
+            // degenerate grid: one scale over the whole stacked tensor
+            vec![calib_scale(
+                &xs,
+                k,
+                stack,
+                nv,
+                0..stack,
+                0..k,
+                0..n,
+                |sa, i, j| r.data[sa * k * n + i * n + j],
+                |sa, i, j| d.data[sa * k * n + i * n + j],
+            )]
         };
         (key.to_string(), TileScales { grid, stack: if per_tile { stack } else { 1 }, scales })
     };
     let (tiled_keys, single_keys): (Vec<&str>, Vec<&str>) = keys
         .into_iter()
-        .partition(|k| super::noise::has_tile_axis(&reference.map[*k], tiling));
+        .partition(|k| tiles::has_tile_axis(&reference.map[*k], tiling));
     let mut per_key: Vec<(String, TileScales)> =
         parallel::map_indexed(single_keys.len(), |i| calibrate(single_keys[i]));
     for key in tiled_keys {
@@ -274,34 +301,296 @@ pub fn gdc_calibrate(
 /// field-side per-tile digital output rescale). A single-scale entry
 /// multiplies its whole tensor — the degenerate-grid (pre-tile)
 /// behavior; per-tile entries multiply each tile by its own scale.
-pub fn apply_scales(params: &mut Params, scales: &GdcScales) {
-    // per-element multiplies against precomputed scales: trivially
-    // order-independent. Single-scale tensors fan out per tensor;
-    // per-tile entries run one tensor at a time with tiles fanned out
-    // at full pool width.
-    let work: Vec<(&TileScales, &mut Tensor)> = params
-        .map
-        .iter_mut()
-        .filter_map(|(key, t)| scales.get(key).map(|ts| (ts, t)))
-        .collect();
-    parallel::for_each_split(
-        work,
-        |(ts, _)| ts.scales.len() > 1,
-        |(ts, t)| {
-            if ts.scales.len() == 1 {
-                let s = ts.scales[0];
-                for v in t.data.iter_mut() {
-                    *v *= s;
-                }
-            } else {
-                let (gr, gc) = (ts.grid.n_tile_rows(), ts.grid.n_tile_cols());
-                tiles::par_for_each_tile(t, &ts.grid, |s, tile, view| {
-                    let scale = ts.scales[s * gr * gc + tile.tr * gc + tile.tc];
-                    view.map_devices(|v| *v *= scale);
-                });
+/// `tiling` must be the partitioning the scales were calibrated under
+/// (a per-tile entry whose stored grid disagrees with the plan's
+/// fails loudly rather than rescaling the wrong tiles). Implemented
+/// as a single-[`GdcApplyPass`] plan.
+pub fn apply_scales(params: &mut Params, scales: &GdcScales, tiling: &Tiling) {
+    let rescale = GdcApplyPass::new(scales);
+    PassPlan::new(*tiling).then(&rescale).run_in_place(params);
+}
+
+/// Stored GDC output scales as a [`DevicePass`]: per-element
+/// multiplies against precomputed (possibly field-stale) scales —
+/// trivially order-independent, so fusing it after [`DriftPass`] in
+/// one tile visit is byte-identical to a separate `apply_scales`
+/// traversal. Scales only ever cover analog tensors (that is all
+/// `gdc_calibrate` and [`GdcCalibratePass`] calibrate), which is
+/// exactly the set a `PassPlan` traverses.
+pub struct GdcApplyPass<'a> {
+    scales: &'a GdcScales,
+}
+
+impl<'a> GdcApplyPass<'a> {
+    /// A pass folding `scales` into every covered tensor.
+    pub fn new(scales: &'a GdcScales) -> GdcApplyPass<'a> {
+        GdcApplyPass { scales }
+    }
+}
+
+impl DevicePass for GdcApplyPass<'_> {
+    fn name(&self) -> &'static str {
+        "gdc-apply"
+    }
+
+    fn is_identity(&self) -> bool {
+        self.scales.is_empty()
+    }
+
+    fn run_tensor(&self, cx: &PassCtx, cur: &mut Tensor, _reference: Option<&Tensor>) {
+        let Some(ts) = self.scales.get(cx.key) else { return };
+        if ts.scales.len() == 1 {
+            let s = ts.scales[0];
+            for v in cur.data.iter_mut() {
+                *v *= s;
             }
-        },
-    );
+        } else {
+            // per-tile scales on a tensor the plan's tiling does not
+            // split (a caller mixing partitionings): honor the grid
+            // the scales were calibrated on
+            let (gr, gc) = (ts.grid.n_tile_rows(), ts.grid.n_tile_cols());
+            tiles::for_each_tile(cur, &ts.grid, |s, tile, view| {
+                let scale = ts.scales[s * gr * gc + tile.tr * gc + tile.tc];
+                view.map_devices(|v| *v *= scale);
+            });
+        }
+    }
+
+    fn run_tile(
+        &self,
+        cx: &PassCtx,
+        s: usize,
+        tile: &TileRef,
+        cur: &mut TileView,
+        _reference: Option<&TileSlice>,
+    ) {
+        let Some(ts) = self.scales.get(cx.key) else { return };
+        let scale = if ts.scales.len() == 1 {
+            ts.scales[0]
+        } else {
+            // hard assert (release builds too): a grid mismatch here
+            // would silently rescale the wrong tiles — fail loudly
+            // instead. Callers keep scales and plan on one tiling; the
+            // degenerate-grid `run_tensor` path is the only one that
+            // can honor foreign grids (it owns the whole tensor).
+            assert_eq!(
+                ts.grid, cx.grid,
+                "GDC scales for {} were calibrated on a different grid",
+                cx.key
+            );
+            let (gr, gc) = (ts.grid.n_tile_rows(), ts.grid.n_tile_cols());
+            ts.scales[s * gr * gc + tile.tr * gc + tile.tc]
+        };
+        cur.map_devices(|v| *v *= scale);
+    }
+}
+
+/// Field GDC calibration as a [`DevicePass`]: estimates every tile's
+/// `Σ|y_ref| / Σ|y_drift|` output rescale against the **plan input**
+/// (the programmed, pre-drift reference — `needs_reference`) and
+/// applies it immediately, fused into the same tile visit that just
+/// drifted the weights. Byte-identical to the standalone
+/// `gdc_calibrate` → `apply_scales` composition: the calibration
+/// vectors come from the same per-tensor stream (tag 0x6dc0, keyed by
+/// the tensor name), each cell's partial-MVM sums accumulate in the
+/// same (vec, col, row) order, and a tile's scale depends only on
+/// that tile's reference and drifted bytes. Collect the estimated
+/// scales with [`GdcCalibratePass::into_scales`] after the plan runs.
+pub struct GdcCalibratePass {
+    n_vecs: usize,
+    seed: u64,
+    /// scales collected so far (degenerate tensors insert whole
+    /// entries; real-grid tensors assemble theirs in `cur` first)
+    out: Mutex<GdcScales>,
+    /// working state for the real-grid tensor currently being
+    /// traversed: `begin_tensor` draws the shared calibration vectors
+    /// and sizes the per-cell scale slots, tile visits fill them, and
+    /// `end_tensor` moves the finished entry into `out`. Sound
+    /// because the executor runs real-grid tensors one at a time.
+    cur: Mutex<CalibTensor>,
+}
+
+#[derive(Default)]
+struct CalibTensor {
+    /// calibration vectors, (vec, stack) × K layout (shared read-only
+    /// by every tile visit via a cheap `Arc` clone)
+    xs: Arc<Vec<f32>>,
+    /// matrix rows K (for indexing `xs`)
+    k: usize,
+    stack: usize,
+    /// per-cell scales in (stack, tile-row, tile-col) order
+    scales: Vec<f32>,
+}
+
+impl GdcCalibratePass {
+    /// A pass calibrating on `n_vecs` seeded vectors under
+    /// hardware-instance `seed` (`GDC_CALIB_VECS` in deployments).
+    pub fn new(n_vecs: usize, seed: u64) -> GdcCalibratePass {
+        GdcCalibratePass {
+            n_vecs,
+            seed,
+            out: Mutex::new(GdcScales::new()),
+            cur: Mutex::new(CalibTensor::default()),
+        }
+    }
+
+    /// The scales estimated by the plan run this pass participated in.
+    pub fn into_scales(self) -> GdcScales {
+        self.out.into_inner().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn draw_xs(&self, key: &str, stack: usize, k: usize) -> Vec<f32> {
+        draw_calib_vecs(key, stack, k, self.n_vecs.max(1), self.seed)
+    }
+}
+
+/// Draw one tensor's GDC calibration vectors — the single definition
+/// of the (seed, stream 0x6dc0, tensor-key) RNG derivation and the
+/// (vec, stack) × K layout, shared by the standalone `gdc_calibrate`
+/// estimator and the fused [`GdcCalibratePass`] so their streams can
+/// never desynchronize.
+fn draw_calib_vecs(key: &str, stack: usize, k: usize, nv: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::with_stream(seed, 0x6dc0).fold_in(fnv1a(key.as_bytes()));
+    let mut xs = vec![0.0f32; nv * stack * k];
+    for chunk in xs.chunks_mut(k) {
+        rng.fill_normal(chunk);
+    }
+    xs
+}
+
+fn scale_of(sum_ref: f64, sum_drift: f64) -> f32 {
+    if sum_drift > 0.0 {
+        (sum_ref / sum_drift) as f32
+    } else {
+        1.0
+    }
+}
+
+/// The one calibration accumulator every GDC path shares — standalone
+/// `gdc_calibrate` (per-tile and degenerate) and the fused
+/// [`GdcCalibratePass`] (per-tile and degenerate) all call this, so
+/// the byte-identity between them is structural, not hand-synchronized
+/// across copies of the loop. Sums `Σ|y_ref|` / `Σ|y_drift|` of the
+/// partial MVM over (`stacks` × `rows` × `cols`) in the fixed
+/// (vec, stack, col, row) f32/f64 accumulation order; `xs` is the
+/// (vec, stack) × K calibration-vector layout of
+/// `GdcCalibratePass::draw_xs`, indexed by *global* matrix
+/// coordinates, as are the `(s, i, j)` value accessors.
+#[allow(clippy::too_many_arguments)]
+fn calib_scale(
+    xs: &[f32],
+    k: usize,
+    stack: usize,
+    nv: usize,
+    stacks: std::ops::Range<usize>,
+    rows: std::ops::Range<usize>,
+    cols: std::ops::Range<usize>,
+    ref_at: impl Fn(usize, usize, usize) -> f32,
+    cur_at: impl Fn(usize, usize, usize) -> f32,
+) -> f32 {
+    let (mut sum_r, mut sum_d) = (0.0f64, 0.0f64);
+    for v in 0..nv {
+        for s in stacks.clone() {
+            let x = &xs[(v * stack + s) * k..(v * stack + s + 1) * k];
+            for j in cols.clone() {
+                let (mut yr, mut yd) = (0.0f32, 0.0f32);
+                for i in rows.clone() {
+                    yr += x[i] * ref_at(s, i, j);
+                    yd += x[i] * cur_at(s, i, j);
+                }
+                sum_r += yr.abs() as f64;
+                sum_d += yd.abs() as f64;
+            }
+        }
+    }
+    scale_of(sum_r, sum_d)
+}
+
+impl DevicePass for GdcCalibratePass {
+    fn name(&self) -> &'static str {
+        "gdc-calibrate"
+    }
+
+    fn needs_reference(&self) -> bool {
+        true
+    }
+
+    fn begin_tensor(&self, cx: &PassCtx) {
+        let (gr, gc) = (cx.grid.n_tile_rows(), cx.grid.n_tile_cols());
+        let mut cur = self.cur.lock().unwrap_or_else(|e| e.into_inner());
+        cur.xs = Arc::new(self.draw_xs(cx.key, cx.stack, cx.grid.k));
+        cur.k = cx.grid.k;
+        cur.stack = cx.stack;
+        cur.scales = vec![1.0; cx.stack * gr * gc];
+    }
+
+    fn run_tensor(&self, cx: &PassCtx, cur: &mut Tensor, reference: Option<&Tensor>) {
+        // degenerate grid: one scale over the whole stacked tensor,
+        // accumulated in the standalone (vec, stack, col) order
+        let r = reference.expect("GDC calibration needs the plan input as its reference");
+        let (stack, k, n) = cur.as_matrix_stack();
+        let xs = self.draw_xs(cx.key, stack, k);
+        let scale = calib_scale(
+            &xs,
+            k,
+            stack,
+            self.n_vecs.max(1),
+            0..stack,
+            0..k,
+            0..n,
+            |sa, i, j| r.data[sa * k * n + i * n + j],
+            |sa, i, j| cur.data[sa * k * n + i * n + j],
+        );
+        for v in cur.data.iter_mut() {
+            *v *= scale;
+        }
+        let entry = TileScales { grid: cx.grid, stack: 1, scales: vec![scale] };
+        self.out.lock().unwrap_or_else(|e| e.into_inner()).insert(cx.key.to_string(), entry);
+    }
+
+    fn run_tile(
+        &self,
+        cx: &PassCtx,
+        s: usize,
+        tile: &TileRef,
+        cur: &mut TileView,
+        reference: Option<&TileSlice>,
+    ) {
+        let r = reference.expect("GDC calibration needs the plan input as its reference");
+        let (xs, k) = {
+            let st = self.cur.lock().unwrap_or_else(|e| e.into_inner());
+            (st.xs.clone(), st.k)
+        };
+        // the accessors translate the helper's global coordinates to
+        // the views' tile-local indexing
+        let scale = calib_scale(
+            &xs,
+            k,
+            cx.stack,
+            self.n_vecs.max(1),
+            s..s + 1,
+            tile.row_start..tile.row_end,
+            tile.col_start..tile.col_end,
+            |_, i, j| r.at(i - tile.row_start, j - tile.col_start),
+            |_, i, j| cur.at(i - tile.row_start, j - tile.col_start),
+        );
+        cur.map_devices(|v| *v *= scale);
+        let (gr, gc) = (cx.grid.n_tile_rows(), cx.grid.n_tile_cols());
+        let mut st = self.cur.lock().unwrap_or_else(|e| e.into_inner());
+        st.scales[s * gr * gc + tile.tr * gc + tile.tc] = scale;
+    }
+
+    fn end_tensor(&self, cx: &PassCtx) {
+        let mut st = self.cur.lock().unwrap_or_else(|e| e.into_inner());
+        let entry = TileScales {
+            grid: cx.grid,
+            stack: st.stack,
+            scales: std::mem::take(&mut st.scales),
+        };
+        st.xs = Arc::new(Vec::new());
+        drop(st);
+        self.out.lock().unwrap_or_else(|e| e.into_inner()).insert(cx.key.to_string(), entry);
+    }
 }
 
 /// Parse a human deployment age: a number with an optional unit suffix
@@ -416,7 +705,7 @@ mod tests {
         assert!(scales.len() >= 2);
         assert!(scales.values().all(|ts| ts.scales.iter().all(|&s| s > 1.0)), "{scales:?}");
         let mut corrected = aged.clone();
-        apply_scales(&mut corrected, &scales);
+        apply_scales(&mut corrected, &scales, &full);
         assert_ne!(corrected.get("wq"), aged.get("wq"));
     }
 
@@ -436,7 +725,7 @@ mod tests {
         assert!(wq.scales.windows(2).any(|w| w[0] != w[1]), "{wq:?}");
         // applying the per-tile scales changes every tile of the tensor
         let mut corrected = aged.clone();
-        apply_scales(&mut corrected, &scales);
+        apply_scales(&mut corrected, &scales, &tiling);
         assert_ne!(corrected.get("wq"), aged.get("wq"));
         // an undrifted chip calibrates to exactly 1 on every tile
         let unity = gdc_calibrate(&p, &p, GDC_CALIB_VECS, 9, &tiling);

@@ -54,12 +54,22 @@ pub struct DriftSpec {
     pub age_secs: f64,
     /// run a GDC field calibration at that age before scoring
     pub gdc: bool,
+    /// host-side RTN mirror folded into the aged literals (0 = off):
+    /// the digital-deployment axis, riding the same fused pass plan
+    /// as drift + GDC (`ChipDeployment::set_rtn_mirror`)
+    pub rtn_bits: u32,
 }
 
 impl DriftSpec {
-    /// The default drift model at `age_secs`, ± GDC.
+    /// The default drift model at `age_secs`, ± GDC, no RTN mirror.
     pub fn at(age_secs: f64, gdc: bool) -> DriftSpec {
-        DriftSpec { model: DriftModel::default(), age_secs, gdc }
+        DriftSpec { model: DriftModel::default(), age_secs, gdc, rtn_bits: 0 }
+    }
+
+    /// `self`, with an RTN host mirror quantizing the aged weights.
+    pub fn with_rtn(mut self, bits: u32) -> DriftSpec {
+        self.rtn_bits = bits;
+        self
     }
 }
 
@@ -144,10 +154,16 @@ impl<'a> Evaluator<'a> {
         report: &mut EvalReport,
     ) -> Result<()> {
         if let Some(d) = drift {
+            // one fused derivation (drift → GDC → optional RTN mirror)
+            // + one literal upload per chip, instead of separate age /
+            // calibrate refreshes; at age 0 with default physics the
+            // chip's fast path skips the derivation entirely
             chip.set_drift_model(d.model);
-            chip.age_to(d.age_secs)?;
+            chip.set_rtn_mirror(d.rtn_bits);
             if d.gdc {
-                chip.gdc_calibrate()?;
+                chip.age_and_recalibrate(d.age_secs)?;
+            } else {
+                chip.age_to(d.age_secs)?;
             }
         }
         for task in tasks {

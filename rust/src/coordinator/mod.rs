@@ -8,9 +8,10 @@
 //!   gaussian, affine), one instance per crossbar tile
 //! * `drift` — conductance decay g(t) = g0·(t/t0)^(-ν) + global drift
 //!   compensation (the temporal axis of every deployment)
-//! * `tiles` — crossbar tile partitioning: the R×C geometry, per-tile
-//!   RNG identities, and floorplan accounting every per-tile engine
-//!   (noise, drift, quant, GDC) is built on
+//! * `tiles` — crossbar tile partitioning (R×C geometry, per-tile RNG
+//!   identities, floorplan accounting) and the fused device-physics
+//!   pass pipeline (`DevicePass` / `PassPlan`) every per-tile engine
+//!   (noise, drift, quant, GDC) runs on
 //! * `quant` — PTQ paths (RTN, SpinQuant-lite) through AOT artifacts
 //! * `evaluate` — repeated-seed benchmark harness with mean±std
 //! * `tts` — test-time compute scaling with the synthetic PRM

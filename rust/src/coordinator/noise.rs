@@ -16,11 +16,20 @@
 //! four 512-row tiles carries four independent draws with four local
 //! ranges. The degenerate whole-matrix grid reproduces the pre-tile
 //! per-tensor streams byte for byte (see `tiles` module docs).
+//!
+//! The engine is a [`NoisePass`] in the device-physics pass pipeline
+//! (`tiles::PassPlan` owns the traversal and the parallel policy);
+//! `apply_tiled` is the standalone single-pass wrapper, and
+//! `ChipDeployment::provision` fuses the same pass into its
+//! provisioning plan.
 
-use super::tiles::{self, ChannelAxis, Tiling};
+use super::tiles::{
+    self, DevicePass, PassCtx, PassPlan, TileRef, TileSlice, TileView, Tiling,
+};
 use crate::runtime::params::Params;
+use crate::util::fnv1a;
 use crate::util::prng::Pcg64;
-use crate::util::{fnv1a, parallel};
+use crate::util::tensor::Tensor;
 
 /// Which noise to apply at evaluation time.
 #[derive(Clone, Debug, PartialEq)]
@@ -79,58 +88,62 @@ pub fn apply(params: &Params, model: &NoiseModel, seed: u64) -> Params {
 /// (seed, tile): the per-tile streams derive from
 /// `tiles::tile_key(tensor, stack, tile row, tile col)`, so draws are
 /// independent across tiles and reproducible for a fixed seed.
-///
-/// Parallelism (byte-identical at any thread count): tensors whose
-/// grid is a single whole-matrix tile have one sequential RNG stream
-/// each, so they fan out across the pool *per tensor*; tensors with a
-/// real grid are processed one at a time with their tiles fanned out
-/// at full pool width (tiles per tensor usually dwarf both the core
-/// and tensor counts, so this is where the parallelism is).
+/// Implemented as a single-[`NoisePass`] plan — parallelism and
+/// byte-identity at any thread count come from `PassPlan`'s shared
+/// traversal policy.
 pub fn apply_tiled(params: &Params, model: &NoiseModel, seed: u64, tiling: &Tiling) -> Params {
-    if model.is_none() {
-        return params.clone();
-    }
     let mut out = params.clone();
-    let rng = Pcg64::with_stream(seed, 0xa1a1);
-    parallel::for_each_split(
-        tiles::analog_work(&mut out),
-        |(_, _, t)| has_tile_axis(t, tiling),
-        |(key, axis, t)| perturb_tensor(t, key, model, &rng, tiling, axis),
-    );
+    let write = NoisePass::new(model, seed);
+    PassPlan::new(*tiling).then(&write).run_in_place(&mut out);
     out
 }
 
-/// Whether `tiling` induces a real (multi-tile) grid on this tensor —
-/// the engines' shared `for_each_split` predicate: real grids carry
-/// the parallelism inside the tensor, degenerate ones across tensors.
-pub(crate) fn has_tile_axis(t: &crate::util::tensor::Tensor, tiling: &Tiling) -> bool {
-    let (_, k, n) = t.as_matrix_stack();
-    !tiling.grid_for(k, n).is_single()
+/// The programming write as a [`DevicePass`]: the write-time σ(W)
+/// draw of paper §3.2, one independent instance per crossbar tile —
+/// or per tensor on the degenerate whole-matrix grid, which keeps the
+/// legacy stream (one RNG per tensor, keyed by the tensor name,
+/// crossing the layer stack) so pre-tile fingerprints are preserved.
+/// Streams derive from the hardware-instance seed on stream tag
+/// 0xa1a1 (decorrelated from the drift and GDC streams at equal
+/// seeds).
+pub struct NoisePass<'a> {
+    model: &'a NoiseModel,
+    rng: Pcg64,
 }
 
-/// One tensor's programming write. The degenerate whole-matrix grid
-/// keeps the legacy stream (one RNG per tensor, keyed by the tensor
-/// name, crossing the layer stack) so pre-tile fingerprints are
-/// preserved; real grids draw per (stack, tile) streams over
-/// tile-local channel segments.
-fn perturb_tensor(
-    t: &mut crate::util::tensor::Tensor,
-    key: &str,
-    model: &NoiseModel,
-    rng: &Pcg64,
-    tiling: &Tiling,
-    axis: ChannelAxis,
-) {
-    let (_, k, n) = t.as_matrix_stack();
-    let grid = tiling.grid_for(k, n);
-    if grid.is_single() {
-        let mut chan_rng = rng.fold_in(fnv1a(key.as_bytes()));
-        tiles::map_tensor_channels(t, axis, |chan| perturb_channel(chan, model, &mut chan_rng));
-    } else {
-        tiles::par_for_each_tile(t, &grid, |s, tile, view| {
-            let mut trng = rng.fold_in(tiles::tile_key(key, s, tile.tr, tile.tc));
-            view.map_channels(axis, |seg| perturb_channel(seg, model, &mut trng));
+impl<'a> NoisePass<'a> {
+    /// A pass applying `model` under hardware-instance `seed`.
+    pub fn new(model: &'a NoiseModel, seed: u64) -> NoisePass<'a> {
+        NoisePass { model, rng: Pcg64::with_stream(seed, 0xa1a1) }
+    }
+}
+
+impl DevicePass for NoisePass<'_> {
+    fn name(&self) -> &'static str {
+        "noise"
+    }
+
+    fn is_identity(&self) -> bool {
+        self.model.is_none()
+    }
+
+    fn run_tensor(&self, cx: &PassCtx, cur: &mut Tensor, _reference: Option<&Tensor>) {
+        let mut chan_rng = self.rng.fold_in(fnv1a(cx.key.as_bytes()));
+        tiles::map_tensor_channels(cur, cx.axis, |chan| {
+            perturb_channel(chan, self.model, &mut chan_rng)
         });
+    }
+
+    fn run_tile(
+        &self,
+        cx: &PassCtx,
+        s: usize,
+        tile: &TileRef,
+        cur: &mut TileView,
+        _reference: Option<&TileSlice>,
+    ) {
+        let mut trng = self.rng.fold_in(tiles::tile_key(cx.key, s, tile.tr, tile.tc));
+        cur.map_channels(cx.axis, |seg| perturb_channel(seg, self.model, &mut trng));
     }
 }
 

@@ -7,9 +7,10 @@
 
 use anyhow::Result;
 
-use super::tiles::{self, ChannelAxis, Tiling};
+use super::tiles::{
+    self, ChannelAxis, DevicePass, PassCtx, PassPlan, TileRef, TileSlice, TileView, Tiling,
+};
 use crate::runtime::{lit_scalar_f32, Params, Runtime};
-use crate::util::parallel;
 use crate::util::tensor::Tensor;
 
 /// Signed symmetric quantization levels for a bit width: 2^(bits-1)-1,
@@ -100,16 +101,54 @@ pub fn rtn_tensor_tiled(t: &mut Tensor, bits: u32, tiling: &Tiling, axis: Channe
 /// Per-tile RTN over every analog tensor of `params` in place (block
 /// linears quantize column segments, the tied embedding/head row
 /// segments) — the host mirror of deploying a quantized model onto a
-/// tiled chip. Digital parameters are untouched. Degenerate-grid
-/// tensors quantize concurrently on the worker pool; real grids run
-/// one tensor at a time with their tiles fanned out at full width
-/// (inside `rtn_tensor_tiled`).
+/// tiled chip. Digital parameters are untouched. Implemented as a
+/// single-[`RtnPass`] plan; `ChipDeployment::set_rtn_mirror` fuses
+/// the same pass after drift + GDC in the aging plan.
 pub fn rtn_params_tiled(params: &mut Params, bits: u32, tiling: &Tiling) {
-    parallel::for_each_split(
-        tiles::analog_work(params),
-        |(_, _, t)| super::noise::has_tile_axis(t, tiling),
-        |(_, axis, t)| rtn_tensor_tiled(t, bits, tiling, axis),
-    );
+    let quantize = RtnPass::new(bits);
+    PassPlan::new(*tiling).then(&quantize).run_in_place(params);
+}
+
+/// The per-tile ADC/output quantizer as a [`DevicePass`]: each
+/// crossbar tile snaps its channel *segments* onto a tile-local RTN
+/// grid (whole-tensor channels on the degenerate grid — the legacy
+/// `rtn_channel` path). Purely deterministic per segment, so fusing
+/// it after noise/drift/GDC in one tile visit is byte-identical to a
+/// separate traversal. Identity (dropped from plans) at 0 bits.
+pub struct RtnPass {
+    bits: u32,
+}
+
+impl RtnPass {
+    /// A pass quantizing to `bits` (0 = off).
+    pub fn new(bits: u32) -> RtnPass {
+        RtnPass { bits }
+    }
+}
+
+impl DevicePass for RtnPass {
+    fn name(&self) -> &'static str {
+        "rtn"
+    }
+
+    fn is_identity(&self) -> bool {
+        levels(self.bits) <= 0.0
+    }
+
+    fn run_tensor(&self, cx: &PassCtx, cur: &mut Tensor, _reference: Option<&Tensor>) {
+        tiles::map_tensor_channels(cur, cx.axis, |chan| rtn_channel(chan, self.bits));
+    }
+
+    fn run_tile(
+        &self,
+        cx: &PassCtx,
+        _s: usize,
+        _tile: &TileRef,
+        cur: &mut TileView,
+        _reference: Option<&TileSlice>,
+    ) {
+        cur.map_channels(cx.axis, |seg| rtn_channel(seg, self.bits));
+    }
 }
 
 #[cfg(test)]

@@ -23,6 +23,12 @@
 //! * [`for_each_tile`] / [`TileView`] — in-place traversal of a
 //!   tensor's tiles, with channel-segment (column/row) and per-device
 //!   access used by the noise, drift, and quantization engines.
+//! * [`DevicePass`] / [`PassPlan`] — the **device-physics pass
+//!   pipeline**: every per-tile engine (noise, drift, GDC, RTN) is a
+//!   `DevicePass`, and a `PassPlan` runs an ordered stack of them in a
+//!   *single* gather → transform → scatter traversal per tensor/tile,
+//!   writing into a recycled output buffer instead of cloning the
+//!   parameter set once per engine.
 //! * [`TileMap`] / [`Floorplan`] — tiles-used accounting for a model
 //!   and the capacity check a `ChipDeployment` runs at provision time.
 //!
@@ -305,6 +311,34 @@ impl TileView<'_> {
             }
         }
     }
+
+    /// The device value at tile-local (row, col) — random access for
+    /// passes that pair the current tile against a reference tile
+    /// (e.g. the fused GDC calibration's partial-MVM sums). Works for
+    /// both view layouts: the in-place serial view (global matrix,
+    /// tile offsets) and the gathered parallel buffer (tile-local
+    /// matrix, zero offsets).
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[(self.tile.row_start + i) * self.n + self.tile.col_start + j]
+    }
+}
+
+/// Read-only view of one tile of one matrix — the pass pipeline's
+/// window onto the *plan input* (e.g. the programmed, pre-drift
+/// reference a GDC calibration compares against). Indexing is
+/// tile-local, mirroring [`TileView::at`].
+pub struct TileSlice<'a> {
+    /// the full (K, N) matrix slice this tile lives in
+    data: &'a [f32],
+    n: usize,
+    tile: TileRef,
+}
+
+impl TileSlice<'_> {
+    /// The reference value at tile-local (row, col).
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[(self.tile.row_start + i) * self.n + self.tile.col_start + j]
+    }
 }
 
 /// Visit every tile of every (K, N) matrix in `t`'s stack: `f` is
@@ -340,46 +374,90 @@ pub fn for_each_tile(
 /// (called concurrently); falls back to the in-place serial walk when
 /// the pool is sized 1, there is one tile, or the caller is already a
 /// pool worker. Memory note: the gathered buffers transiently hold one
-/// extra copy of the tensor's data (collected before the scatter) —
-/// the same order as the `Params` clone every engine already makes per
-/// call, accepted for the simple two-phase borrow structure.
+/// extra copy of the tensor's data (collected before the scatter),
+/// accepted for the simple two-phase borrow structure. This is
+/// [`pass_tiles`] without a source tensor.
 pub fn par_for_each_tile(
     t: &mut Tensor,
     grid: &TileGrid,
     f: impl Fn(usize, &TileRef, &mut TileView) + Sync,
 ) {
+    pass_tiles(t, None, grid, |s, tile, view, _| f(s, tile, view));
+}
+
+/// The pass pipeline's tile walker: visit every (stack, tile) of `t`
+/// under `grid`, calling `f` with a mutable [`TileView`] of the tile
+/// in `t` plus — when `src` is given — a read-only [`TileSlice`] of
+/// the same tile in `src`. With a source, `t`'s contents are
+/// *replaced* by `src`'s before `f` sees them; the parallel path
+/// gathers each tile's local buffer straight from `src`, so the copy
+/// and the transforms are one traversal (this is how
+/// [`PassPlan::run`] turns "clone per engine" into "one recycled
+/// write pass"). `f` always receives the tile's original [`TileRef`]
+/// (grid coordinates + matrix ranges) even when the view indexes a
+/// gathered local buffer, so RNG keying and reference indexing never
+/// depend on the execution mode. Byte-for-byte identical at any
+/// thread count, for the same reasons as [`par_for_each_tile`].
+pub fn pass_tiles(
+    t: &mut Tensor,
+    src: Option<&Tensor>,
+    grid: &TileGrid,
+    f: impl Fn(usize, &TileRef, &mut TileView, Option<&TileSlice>) + Sync,
+) {
     let (stack, k, n) = t.as_matrix_stack();
     debug_assert_eq!((k, n), (grid.k, grid.n), "grid built for a different matrix shape");
+    if let Some(srct) = src {
+        debug_assert_eq!(srct.shape, t.shape, "pass source shape mismatch");
+    }
     let jobs: Vec<(usize, TileRef)> =
         (0..stack).flat_map(|s| grid.tiles().map(move |tile| (s, tile))).collect();
     if crate::util::parallel::threads() <= 1
         || jobs.len() <= 1
         || crate::util::parallel::in_worker()
     {
-        return for_each_tile(t, grid, f);
-    }
-    let data = &t.data;
-    let results: Vec<Vec<f32>> = crate::util::parallel::map_indexed(jobs.len(), |ji| {
-        let (s, tile) = jobs[ji];
-        let (rows, cols) = (tile.rows(), tile.cols());
-        let base = s * k * n;
-        let mut buf = vec![0.0f32; rows * cols];
-        for (bi, i) in (tile.row_start..tile.row_end).enumerate() {
-            buf[bi * cols..(bi + 1) * cols]
-                .copy_from_slice(&data[base + i * n + tile.col_start..base + i * n + tile.col_end]);
+        if let Some(srct) = src {
+            t.data.copy_from_slice(&srct.data);
         }
-        let local = TileRef {
-            tr: tile.tr,
-            tc: tile.tc,
-            row_start: 0,
-            row_end: rows,
-            col_start: 0,
-            col_end: cols,
+        for (s, tile) in jobs {
+            let base = s * k * n;
+            let slice =
+                src.map(|srct| TileSlice { data: &srct.data[base..base + k * n], n, tile });
+            let mat = &mut t.data[base..base + k * n];
+            let mut view = TileView { data: mat, n, tile };
+            f(s, &tile, &mut view, slice.as_ref());
+        }
+        return;
+    }
+    let results: Vec<Vec<f32>> = {
+        let gather_src: &[f32] = match src {
+            Some(srct) => &srct.data,
+            None => &t.data,
         };
-        let mut view = TileView { data: &mut buf, n: cols, tile: local };
-        f(s, &tile, &mut view);
-        buf
-    });
+        crate::util::parallel::map_indexed(jobs.len(), |ji| {
+            let (s, tile) = jobs[ji];
+            let (rows, cols) = (tile.rows(), tile.cols());
+            let base = s * k * n;
+            let mut buf = vec![0.0f32; rows * cols];
+            for (bi, i) in (tile.row_start..tile.row_end).enumerate() {
+                buf[bi * cols..(bi + 1) * cols].copy_from_slice(
+                    &gather_src[base + i * n + tile.col_start..base + i * n + tile.col_end],
+                );
+            }
+            let local = TileRef {
+                tr: tile.tr,
+                tc: tile.tc,
+                row_start: 0,
+                row_end: rows,
+                col_start: 0,
+                col_end: cols,
+            };
+            let slice =
+                src.map(|srct| TileSlice { data: &srct.data[base..base + k * n], n, tile });
+            let mut view = TileView { data: &mut buf, n: cols, tile: local };
+            f(s, &tile, &mut view, slice.as_ref());
+            buf
+        })
+    };
     for ((s, tile), buf) in jobs.into_iter().zip(results) {
         let cols = tile.cols();
         let base = s * k * n;
@@ -398,6 +476,254 @@ pub fn map_tensor_channels(t: &mut Tensor, axis: ChannelAxis, f: impl FnMut(&mut
     match axis {
         ChannelAxis::Cols => t.map_columns(f),
         ChannelAxis::Rows => t.map_rows(f),
+    }
+}
+
+/// Whether `key` names an analog tensor — one the device-physics
+/// passes act on: the seven block linears or the tied embedding/head
+/// matrix. Digital parameters (norms, input ranges, biases) never
+/// live on crossbar tiles and are never touched by a [`PassPlan`].
+pub fn is_analog(key: &str) -> bool {
+    key == "emb" || ANALOG_WEIGHT_KEYS.iter().any(|k| *k == key)
+}
+
+/// Whether `tiling` induces a real (multi-tile) grid on this tensor —
+/// the `for_each_split` predicate shared by the pass executor and the
+/// standalone GDC estimator: real grids carry the parallelism inside
+/// the tensor (tiles at full pool width, tensors one at a time),
+/// degenerate ones across tensors.
+pub fn has_tile_axis(t: &Tensor, tiling: &Tiling) -> bool {
+    let (_, k, n) = t.as_matrix_stack();
+    !tiling.grid_for(k, n).is_single()
+}
+
+// ------------------------------------------------- device-physics passes
+
+/// Per-tensor context handed to every [`DevicePass`] hook: which
+/// analog tensor is being traversed, its channel orientation, and the
+/// tile grid the plan's [`Tiling`] induces on it.
+pub struct PassCtx {
+    /// tensor key ("wq", …, "emb")
+    pub key: &'static str,
+    /// channel orientation (output columns for the block linears,
+    /// vocabulary rows for the tied embedding/head)
+    pub axis: ChannelAxis,
+    /// the grid induced on each (K, N) matrix of the stack
+    pub grid: TileGrid,
+    /// leading stack size (layers for the block linears, 1 for emb)
+    pub stack: usize,
+}
+
+/// One device-physics effect as a composable per-tile transform —
+/// programming noise, conductance drift, GDC, RTN, and any future
+/// effect each implement this instead of hand-rolling a traversal.
+///
+/// ## RNG contract
+///
+/// A pass that draws randomness must key every stream on *what* it
+/// simulates, never on visit order: `tile_key(tensor, stack, tile
+/// row, tile col)` per tile on a real grid, `fnv1a(tensor key)` per
+/// tensor on the degenerate grid, folded into a stream seeded by the
+/// hardware instance. That keying is exactly why a fused [`PassPlan`]
+/// is byte-for-byte identical to running each pass as its own full
+/// traversal, at any thread count: no pass can observe another
+/// tensor's or tile's state, and each (seed, tile) stream is a pure
+/// function of its identity.
+///
+/// ## Hooks
+///
+/// * [`run_tensor`](DevicePass::run_tensor) — the degenerate
+///   (whole-matrix-tile) path: transform the whole stacked tensor,
+///   preserving the legacy per-tensor streams byte for byte. May run
+///   on a pool worker (degenerate tensors fan out per tensor), so it
+///   must derive everything it needs inline.
+/// * [`run_tile`](DevicePass::run_tile) — the real-grid path:
+///   transform one (stack, tile). Called concurrently across tiles.
+/// * [`begin_tensor`](DevicePass::begin_tensor) /
+///   [`end_tensor`](DevicePass::end_tensor) — serial bookends around
+///   one real-grid tensor's tile fan-out, on the coordinating thread
+///   (real-grid tensors run one at a time under
+///   `parallel::for_each_split`): derive tensor-wide state shared by
+///   the tile visits (e.g. GDC calibration vectors) and fold per-tile
+///   results back. Not called on the degenerate path.
+pub trait DevicePass: Sync {
+    /// Short pass name for plan labels and diagnostics.
+    fn name(&self) -> &'static str;
+
+    /// Whether this pass is an exact no-op for its configuration
+    /// (noise model `None`, drift at `t <= t0`, RTN at 0 bits).
+    /// Identity passes are dropped by [`PassPlan::then`] — they draw
+    /// no RNG and touch no data, so skipping them is exact.
+    fn is_identity(&self) -> bool {
+        false
+    }
+
+    /// Whether this pass reads the plan *input* as a reference (the
+    /// fused GDC calibration does). Such passes require
+    /// [`PassPlan::run`]; [`PassPlan::run_in_place`] has no separate
+    /// input and rejects them.
+    fn needs_reference(&self) -> bool {
+        false
+    }
+
+    /// Serial per-tensor preamble before a real-grid tensor's tiles
+    /// fan out (see trait docs). Default: nothing.
+    fn begin_tensor(&self, _cx: &PassCtx) {}
+
+    /// Transform the whole stacked tensor (degenerate grid).
+    /// `reference` is this tensor in the plan input (`None` under
+    /// [`PassPlan::run_in_place`]).
+    fn run_tensor(&self, cx: &PassCtx, cur: &mut Tensor, reference: Option<&Tensor>);
+
+    /// Transform one (stack, tile) of a real grid. `cur` indexes the
+    /// tile being written; `reference` the same tile in the plan
+    /// input. `tile` always carries the original grid coordinates and
+    /// matrix ranges (RNG keying never depends on the execution mode).
+    fn run_tile(
+        &self,
+        cx: &PassCtx,
+        s: usize,
+        tile: &TileRef,
+        cur: &mut TileView,
+        reference: Option<&TileSlice>,
+    );
+
+    /// Serial per-tensor epilogue after a real-grid tensor's tiles
+    /// completed (see trait docs). Default: nothing.
+    fn end_tensor(&self, _cx: &PassCtx) {}
+}
+
+/// An ordered stack of [`DevicePass`]es executed in a **single**
+/// traversal of the analog tensors: per tensor (degenerate grids) or
+/// per tile (real grids), every pass transforms the same resident
+/// data before it is written out — one memory-bound sweep instead of
+/// one per engine, under the same `parallel::for_each_split` policy
+/// the engines always used (degenerate tensors fan out per tensor;
+/// real grids run one tensor at a time with tiles at full pool
+/// width).
+///
+/// Hard invariant (enforced by `rust/tests/pass_pipeline.rs` and the
+/// golden conformance suite): a fused plan's output is byte-for-byte
+/// identical to running its passes as separate sequential engine
+/// traversals, at any thread count. See the [`DevicePass`] RNG
+/// contract for why.
+pub struct PassPlan<'p> {
+    tiling: Tiling,
+    passes: Vec<&'p dyn DevicePass>,
+}
+
+impl<'p> PassPlan<'p> {
+    /// An empty plan over `tiling` (the chip's crossbar partitioning).
+    pub fn new(tiling: Tiling) -> PassPlan<'p> {
+        PassPlan { tiling, passes: Vec::new() }
+    }
+
+    /// Append `pass` to the stack. Identity passes are dropped — an
+    /// exact skip, since they draw no RNG and touch no data.
+    pub fn then(mut self, pass: &'p dyn DevicePass) -> PassPlan<'p> {
+        if !pass.is_identity() {
+            self.passes.push(pass);
+        }
+        self
+    }
+
+    /// Whether every pass was dropped as an identity: running the
+    /// plan only copies the input.
+    pub fn is_empty(&self) -> bool {
+        self.passes.is_empty()
+    }
+
+    /// Human label of the pass stack ("noise→drift→gdc-calibrate").
+    pub fn label(&self) -> String {
+        if self.passes.is_empty() {
+            "identity".into()
+        } else {
+            self.passes.iter().map(|p| p.name()).collect::<Vec<_>>().join("→")
+        }
+    }
+
+    /// Run the stack: overwrite `out` with `input` transformed by
+    /// every pass in order, in one traversal. `out` is a *recycled*
+    /// buffer — existing allocations are reused when its layout
+    /// matches `input` (the steady-state aging-tick path); on a
+    /// layout mismatch (first use) it is re-allocated from `input`.
+    /// Analog tensors are gathered straight from `input`, so the copy
+    /// and the transforms are a single write pass over `out`; digital
+    /// tensors are copied verbatim. `input` is also the reference
+    /// handed to passes with [`DevicePass::needs_reference`] (the
+    /// fused GDC calibration compares against it), so deployment
+    /// plans pass the *programmed* state here.
+    pub fn run(&self, input: &Params, out: &mut Params) {
+        let layout_matches = out.keys == input.keys
+            && input.map.iter().all(|(k, t)| out.map.get(k).is_some_and(|o| o.shape == t.shape));
+        if !layout_matches {
+            *out = input.clone();
+        } else {
+            // analog tensors are rewritten wholesale by the fused
+            // traversal below; only the digital remainder needs an
+            // explicit copy here
+            for (key, t) in out.map.iter_mut() {
+                if !is_analog(key) {
+                    t.data.copy_from_slice(&input.map[key].data);
+                }
+            }
+        }
+        self.execute(Some(input), out);
+    }
+
+    /// Run the stack in place over `params` (no separate input, no
+    /// reference). Used by the standalone engine wrappers
+    /// (`noise::apply_tiled`, `quant::rtn_params_tiled`, …), which own
+    /// their output buffer. Passes that need the plan input as a
+    /// reference are rejected (debug builds panic).
+    pub fn run_in_place(&self, params: &mut Params) {
+        debug_assert!(
+            self.passes.iter().all(|p| !p.needs_reference()),
+            "pass stack [{}] needs the plan input as a reference: use PassPlan::run",
+            self.label()
+        );
+        self.execute(None, params);
+    }
+
+    fn execute(&self, input: Option<&Params>, out: &mut Params) {
+        if self.passes.is_empty() && input.is_none() {
+            return;
+        }
+        let tiling = self.tiling;
+        let passes: &[&dyn DevicePass] = &self.passes;
+        crate::util::parallel::for_each_split(
+            analog_work(out),
+            |(_, _, t)| {
+                let (_, k, n) = t.as_matrix_stack();
+                !tiling.grid_for(k, n).is_single()
+            },
+            |(key, axis, t)| {
+                let (stack, k, n) = t.as_matrix_stack();
+                let grid = tiling.grid_for(k, n);
+                let cx = PassCtx { key, axis, grid, stack };
+                let reference = input.map(|p| &p.map[key]);
+                if grid.is_single() {
+                    if let Some(r) = reference {
+                        t.data.copy_from_slice(&r.data);
+                    }
+                    for pass in passes {
+                        pass.run_tensor(&cx, t, reference);
+                    }
+                } else {
+                    for pass in passes {
+                        pass.begin_tensor(&cx);
+                    }
+                    pass_tiles(t, reference, &grid, |s, tile, view, slice| {
+                        for pass in passes {
+                            pass.run_tile(&cx, s, tile, view, slice);
+                        }
+                    });
+                    for pass in passes {
+                        pass.end_tensor(&cx);
+                    }
+                }
+            },
+        );
     }
 }
 
@@ -591,6 +917,176 @@ mod tests {
             crate::util::parallel::with_threads(threads, || {
                 let mut par = t0.clone();
                 par_for_each_tile(&mut par, &grid, transform);
+                assert_eq!(par.data, serial.data, "threads={threads}");
+            });
+        }
+    }
+
+    fn pass_params() -> Params {
+        use crate::runtime::manifest::ModelDims;
+        use std::collections::BTreeMap;
+        let mut shapes = BTreeMap::new();
+        shapes.insert("emb".into(), vec![11, 9]);
+        shapes.insert("wq".into(), vec![2, 7, 9]);
+        shapes.insert("ln_f".into(), vec![9]);
+        let dims = ModelDims {
+            d_model: 9,
+            n_layers: 2,
+            n_heads: 1,
+            d_ff: 18,
+            seq_len: 8,
+            vocab: 11,
+            n_cls: 0,
+            n_params: 0,
+            param_keys: vec!["emb".into(), "wq".into(), "ln_f".into()],
+            param_shapes: shapes,
+        };
+        Params::init(&dims, 13)
+    }
+
+    /// toy seeded pass: per-channel additive draws, keyed exactly like
+    /// the real engines (per tensor on the degenerate grid, per tile
+    /// on real grids)
+    struct AddDraw {
+        rng: crate::util::prng::Pcg64,
+    }
+
+    impl DevicePass for AddDraw {
+        fn name(&self) -> &'static str {
+            "add-draw"
+        }
+        fn run_tensor(&self, cx: &PassCtx, cur: &mut Tensor, _r: Option<&Tensor>) {
+            let mut rng = self.rng.fold_in(fnv1a(cx.key.as_bytes()));
+            map_tensor_channels(cur, cx.axis, |c| {
+                for v in c.iter_mut() {
+                    *v += rng.normal_f32();
+                }
+            });
+        }
+        fn run_tile(
+            &self,
+            cx: &PassCtx,
+            s: usize,
+            tile: &TileRef,
+            cur: &mut TileView,
+            _r: Option<&TileSlice>,
+        ) {
+            let mut rng = self.rng.fold_in(tile_key(cx.key, s, tile.tr, tile.tc));
+            cur.map_channels(cx.axis, |seg| {
+                for v in seg.iter_mut() {
+                    *v += rng.normal_f32();
+                }
+            });
+        }
+    }
+
+    /// toy deterministic pass: per-device multiply
+    struct Scale(f32);
+
+    impl DevicePass for Scale {
+        fn name(&self) -> &'static str {
+            "scale"
+        }
+        fn is_identity(&self) -> bool {
+            self.0 == 1.0
+        }
+        fn run_tensor(&self, _cx: &PassCtx, cur: &mut Tensor, _r: Option<&Tensor>) {
+            for v in cur.data.iter_mut() {
+                *v *= self.0;
+            }
+        }
+        fn run_tile(
+            &self,
+            _cx: &PassCtx,
+            _s: usize,
+            _tile: &TileRef,
+            cur: &mut TileView,
+            _r: Option<&TileSlice>,
+        ) {
+            cur.map_devices(|v| *v *= self.0);
+        }
+    }
+
+    #[test]
+    fn fused_plan_matches_sequential_single_pass_plans_at_any_width() {
+        let p = pass_params();
+        for tiling in [Tiling::unbounded(), Tiling::new(4, 4), Tiling::new(3, 5)] {
+            let add = AddDraw { rng: crate::util::prng::Pcg64::with_stream(7, 0xbeef) };
+            let scale = Scale(0.25);
+            // sequential: one full traversal (and one buffer) per pass
+            let mut seq = p.clone();
+            PassPlan::new(tiling).then(&add).run_in_place(&mut seq);
+            PassPlan::new(tiling).then(&scale).run_in_place(&mut seq);
+            // fused: both passes in one traversal
+            let fused_plan = PassPlan::new(tiling).then(&add).then(&scale);
+            assert_eq!(fused_plan.label(), "add-draw→scale");
+            for threads in [1usize, 2, 4, 8] {
+                crate::util::parallel::with_threads(threads, || {
+                    let mut fused = p.clone();
+                    fused_plan.run_in_place(&mut fused);
+                    assert_eq!(fused, seq, "{tiling:?} threads={threads}");
+                    // run() into a recycled buffer agrees too
+                    let mut out = p.clone();
+                    fused_plan.run(&p, &mut out);
+                    assert_eq!(out, seq, "{tiling:?} threads={threads} (run)");
+                });
+            }
+            // digital params are never touched
+            assert_eq!(seq.get("ln_f"), p.get("ln_f"));
+        }
+    }
+
+    #[test]
+    fn empty_plans_copy_the_input_exactly_and_identity_passes_are_dropped() {
+        let p = pass_params();
+        let unity = Scale(1.0);
+        let plan = PassPlan::new(Tiling::new(4, 4)).then(&unity);
+        assert!(plan.is_empty());
+        assert_eq!(plan.label(), "identity");
+        // layout mismatch: the buffer is rebuilt from the input
+        let mut out = Params { keys: Vec::new(), map: std::collections::BTreeMap::new() };
+        plan.run(&p, &mut out);
+        assert_eq!(out, p);
+        // layout match: allocations are recycled, contents still exact
+        for v in out.get_mut("wq").data.iter_mut() {
+            *v = f32::NAN;
+        }
+        plan.run(&p, &mut out);
+        assert_eq!(out, p);
+        // in place: exact no-op
+        let mut q = p.clone();
+        plan.run_in_place(&mut q);
+        assert_eq!(q, p);
+    }
+
+    #[test]
+    fn pass_tiles_gathers_from_the_source_and_exposes_reference_tiles() {
+        use crate::util::prng::Pcg64;
+        let src = Tensor::new(vec![2, 7, 10], (0..140).map(|x| x as f32 * 0.31 - 2.0).collect());
+        let grid = Tiling::new(3, 4).grid_for(7, 10);
+        let rng = Pcg64::new(5);
+        let transform = |s: usize, tile: &TileRef, view: &mut TileView, slice: Option<&TileSlice>| {
+            // the reference must expose the source tile's bytes at
+            // tile-local coordinates, in both execution modes
+            let r = slice.expect("source given");
+            for i in 0..tile.rows() {
+                for j in 0..tile.cols() {
+                    assert_eq!(view.at(i, j), r.at(i, j));
+                }
+            }
+            let mut trng = rng.fold_in(tile_key("t", s, tile.tr, tile.tc));
+            view.map_devices(|v| *v += trng.normal_f32());
+        };
+        let mut serial = Tensor::zeros(vec![2, 7, 10]);
+        crate::util::parallel::with_threads(1, || {
+            pass_tiles(&mut serial, Some(&src), &grid, transform);
+        });
+        assert_ne!(serial.data, src.data);
+        for threads in [2usize, 4, 8] {
+            crate::util::parallel::with_threads(threads, || {
+                // start from garbage: the walk must fully overwrite from src
+                let mut par = Tensor::full(vec![2, 7, 10], f32::NAN);
+                pass_tiles(&mut par, Some(&src), &grid, transform);
                 assert_eq!(par.data, serial.data, "threads={threads}");
             });
         }

@@ -63,6 +63,11 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "max-new", takes_value: true, help: "serve: default generation budget" },
         FlagSpec { name: "ages", takes_value: true, help: "drift: comma list (1s,1h,1d,1mo,1y)" },
         FlagSpec {
+            name: "rtn-bits",
+            takes_value: true,
+            help: "drift: host RTN mirror folded into aged literals (0 = off)",
+        },
+        FlagSpec {
             name: "tile-rows",
             takes_value: true,
             help: "crossbar tile rows R (0 = whole-matrix tiles)",
@@ -308,10 +313,11 @@ fn run(argv: &[String]) -> Result<()> {
                 &format!("drift: {label} {} — avg acc vs deployment age", nm.label()),
                 &["age", "no GDC", "GDC"],
             );
+            let rtn_bits = args.usize_or("rtn-bits", 0) as u32;
             for &age in &ages {
                 let mut cells = vec![fmt_age(age)];
                 for gdc in [false, true] {
-                    let spec = DriftSpec::at(age, gdc);
+                    let spec = DriftSpec::at(age, gdc).with_rtn(rtn_bits);
                     let rep = ev.evaluate_with_drift(
                         &m,
                         &nm,

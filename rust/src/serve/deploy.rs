@@ -9,13 +9,17 @@
 //! parameter upload — and callers borrow the cached literals for as
 //! many executions as they like.
 
+use std::collections::BTreeMap;
+
 use anyhow::{anyhow, Result};
 
 use crate::config::HwConfig;
-use crate::coordinator::drift::{self, DriftModel, GdcScales};
-use crate::coordinator::noise::{self, NoiseModel};
-use crate::coordinator::quant;
-use crate::coordinator::tiles::{Floorplan, TileMap, Tiling};
+use crate::coordinator::drift::{
+    self, DriftModel, DriftPass, GdcApplyPass, GdcCalibratePass, GdcScales,
+};
+use crate::coordinator::noise::{NoiseModel, NoisePass};
+use crate::coordinator::quant::{self, RtnPass};
+use crate::coordinator::tiles::{Floorplan, PassPlan, TileMap, Tiling};
 use crate::runtime::Params;
 
 /// The seven runtime hardware scalars every artifact takes, in
@@ -109,6 +113,18 @@ pub struct ChipDeployment {
     tiles_used: usize,
     /// tiles available on the die (0 = unbounded)
     tile_capacity: usize,
+    /// recycled output buffer for the fused aging plan: allocated on
+    /// the first re-derivation, reused (no per-tick `Params` clones)
+    /// across every later tick
+    scratch: Option<Params>,
+    /// host-side RTN mirror folded into the uploaded literals (0 = off)
+    rtn_bits: u32,
+    /// uploaded literals no longer reflect the configured physics
+    /// (drift model / RTN mirror changed); the next `age_to` re-derives
+    /// even at the current age
+    dirty: bool,
+    /// literal re-derivations performed since provisioning
+    refreshes: u64,
 }
 
 impl ChipDeployment {
@@ -144,8 +160,18 @@ impl ChipDeployment {
         let tiling = hw.tiling();
         let tile_map = TileMap::of(params, tiling);
         Floorplan::new(tiling, capacity_tiles).fits(&tile_map).map_err(|e| anyhow!(e))?;
-        let programmed = noise::apply_tiled(params, noise, seed, &tiling);
+        let programmed = Self::program(params, noise, seed, &tiling);
         Self::from_programmed(programmed, noise, seed, hw, &tile_map, capacity_tiles)
+    }
+
+    /// The provisioning pass plan: one fused programming-noise
+    /// traversal writing the chip's owned parameter buffer (which the
+    /// chip then retains as the pre-drift reference).
+    fn program(params: &Params, noise: &NoiseModel, seed: u64, tiling: &Tiling) -> Params {
+        let mut programmed = params.clone();
+        let write = NoisePass::new(noise, seed);
+        PassPlan::new(*tiling).then(&write).run_in_place(&mut programmed);
+        programmed
     }
 
     /// Provision one chip per hardware seed in `seeds`, sharing one
@@ -166,7 +192,7 @@ impl ChipDeployment {
         let tile_map = TileMap::of(params, tiling);
         Floorplan::new(tiling, capacity_tiles).fits(&tile_map).map_err(|e| anyhow!(e))?;
         let programmed: Vec<Params> = crate::util::parallel::map_indexed(seeds.len(), |i| {
-            noise::apply_tiled(params, noise, seeds[i], &tiling)
+            Self::program(params, noise, seeds[i], &tiling)
         });
         programmed
             .into_iter()
@@ -211,6 +237,10 @@ impl ChipDeployment {
             tiling: hw.tiling(),
             tiles_used: tile_map.total_tiles(),
             tile_capacity: capacity_tiles,
+            scratch: None,
+            rtn_bits: 0,
+            dirty: false,
+            refreshes: 0,
         })
     }
 
@@ -235,9 +265,44 @@ impl ChipDeployment {
     }
 
     /// Override the drift law (per-chip ν statistics / t0). Takes
-    /// effect on the next `age_to`.
+    /// effect at the next re-derivation: a later `age_to` re-derives
+    /// even if the age is unchanged. Setting the model the chip
+    /// already ages under is a no-op (the `age_to` fast path stays
+    /// available).
     pub fn set_drift_model(&mut self, model: DriftModel) {
-        self.drift = model;
+        if self.drift != model {
+            self.drift = model;
+            self.dirty = true;
+        }
+    }
+
+    /// Enable (`bits > 0`) or disable (`0`) the host-side RTN mirror
+    /// folded into every literal derivation: after drift + GDC, the
+    /// deployed weights are round-to-nearest quantized per crossbar
+    /// tile — the digital-deployment axis of paper §4.3 riding the
+    /// same fused pass plan as aging. Like `set_drift_model`, takes
+    /// effect at the next re-derivation (`age_to`, `gdc_calibrate`,
+    /// `age_and_recalibrate`).
+    pub fn set_rtn_mirror(&mut self, bits: u32) {
+        if self.rtn_bits != bits {
+            self.rtn_bits = bits;
+            self.dirty = true;
+        }
+    }
+
+    /// Host-mirror RTN bit width folded into the uploaded literals
+    /// (0 = off).
+    pub fn rtn_mirror(&self) -> u32 {
+        self.rtn_bits
+    }
+
+    /// Literal re-derivations since provisioning: exactly one per
+    /// aging / recalibration tick (a drift tick is one fused pass plan
+    /// plus one upload), and untouched by the no-op fast paths
+    /// (`age_to` to the current age, `clear_gdc` with no calibration
+    /// stored).
+    pub fn refreshes(&self) -> u64 {
+        self.refreshes
     }
 
     /// The drift law this chip ages under.
@@ -264,7 +329,15 @@ impl ChipDeployment {
     /// digital output scales persist until the next recalibration — so
     /// `age_to(0.0)` restores the exact programmed state only once no
     /// calibration is active (`clear_gdc` first, or never calibrated).
+    ///
+    /// Fast path: aging to the age the literals already describe is a
+    /// no-op (no traversal, no upload, fingerprint untouched) unless
+    /// the configured physics changed since (`set_drift_model` /
+    /// `set_rtn_mirror`).
     pub fn age_to(&mut self, t_secs: f64) -> Result<()> {
+        if t_secs == self.age_secs && !self.dirty {
+            return Ok(());
+        }
         self.set_age(t_secs, false)
     }
 
@@ -284,34 +357,70 @@ impl ChipDeployment {
     }
 
     /// Drop the stored GDC calibration and re-derive literals at the
-    /// current age without it.
+    /// current age without it. Fast path: a chip that was never
+    /// calibrated (or already cleared) has nothing to drop — no-op,
+    /// fingerprint untouched. On a failed re-derivation the stored
+    /// scales are restored, so chip state stays consistent with the
+    /// uploaded literals.
     pub fn clear_gdc(&mut self) -> Result<()> {
-        self.gdc_scales = None;
-        self.set_age(self.age_secs, false)
+        let Some(stored) = self.gdc_scales.take() else {
+            return Ok(());
+        };
+        if let Err(e) = self.set_age(self.age_secs, false) {
+            self.gdc_scales = Some(stored);
+            return Err(e);
+        }
+        Ok(())
     }
 
+    /// One conductance-clock tick: build the fused device-physics
+    /// plan — drift → GDC (fresh calibration or stored scales) →
+    /// optional RTN mirror — and run it in a **single** traversal from
+    /// the retained programmed reference into the recycled scratch
+    /// buffer, then upload. One parameter-buffer write pass and one
+    /// `to_literals` per call; no intermediate `Params` clones.
     fn set_age(&mut self, t_secs: f64, recalibrate: bool) -> Result<()> {
+        let aging = DriftPass::new(self.drift, t_secs, self.seed);
+        let calibrate =
+            recalibrate.then(|| GdcCalibratePass::new(drift::GDC_CALIB_VECS, self.seed));
+        // identity passes (0-bit RTN, drift at t <= t0, …) are dropped
+        // by `then` itself — no duplicated predicates here
+        let quantize = RtnPass::new(self.rtn_bits);
+        {
+            // a fresh calibration replaces stored (stale) scales, so
+            // the apply pass only joins the plan when not recalibrating
+            let stale = if recalibrate { None } else { self.gdc_scales.as_ref() };
+            let rescale = stale.map(GdcApplyPass::new);
+            let mut plan = PassPlan::new(self.tiling).then(&aging);
+            if let Some(c) = calibrate.as_ref() {
+                plan = plan.then(c);
+            }
+            if let Some(a) = rescale.as_ref() {
+                plan = plan.then(a);
+            }
+            plan = plan.then(&quantize);
+            let programmed = &self.programmed;
+            // the buffer starts empty; `run` fills it from the
+            // programmed reference (allocating once) and later ticks
+            // recycle the allocations
+            let scratch = self
+                .scratch
+                .get_or_insert_with(|| Params { keys: Vec::new(), map: BTreeMap::new() });
+            plan.run(programmed, scratch);
+        }
+        // commit chip state only after the fallible upload: a failed
+        // to_literals leaves age/dirty/scales untouched, so a retry
+        // never hits the no-op fast path while stale literals are live
+        let new_scales = calibrate.map(GdcCalibratePass::into_scales);
+        let derived = self.scratch.as_ref().expect("scratch initialised above");
+        self.param_lits = derived.to_literals()?;
+        self.fingerprint = derived.fingerprint();
+        if let Some(scales) = new_scales {
+            self.gdc_scales = Some(scales);
+        }
         self.age_secs = t_secs;
-        let drifted =
-            drift::apply_tiled(&self.programmed, &self.drift, t_secs, self.seed, &self.tiling);
-        if recalibrate {
-            self.gdc_scales = Some(drift::gdc_calibrate(
-                &self.programmed,
-                &drifted,
-                drift::GDC_CALIB_VECS,
-                self.seed,
-                &self.tiling,
-            ));
-        }
-        self.refresh(drifted)
-    }
-
-    fn refresh(&mut self, mut params: Params) -> Result<()> {
-        if let Some(scales) = &self.gdc_scales {
-            drift::apply_scales(&mut params, scales);
-        }
-        self.param_lits = params.to_literals()?;
-        self.fingerprint = params.fingerprint();
+        self.dirty = false;
+        self.refreshes += 1;
         Ok(())
     }
 
@@ -493,6 +602,72 @@ mod tests {
         }
         // the fleet path runs the same floorplan check
         assert!(ChipDeployment::provision_fleet(&p, &NoiseModel::Pcm, &seeds, &hw, 15).is_err());
+    }
+
+    #[test]
+    fn noop_fast_paths_leave_literals_and_refresh_counter_untouched() {
+        let mut c = chip(11);
+        assert_eq!(c.refreshes(), 0);
+        let fresh = c.fingerprint();
+        // aging to the current age (0) and clearing a never-stored GDC
+        // calibration derive nothing
+        c.age_to(0.0).unwrap();
+        c.clear_gdc().unwrap();
+        assert_eq!(c.refreshes(), 0);
+        assert_eq!(c.fingerprint(), fresh);
+        // after a real tick, repeating the same age is still free
+        c.age_to(drift::SECS_PER_MONTH).unwrap();
+        assert_eq!(c.refreshes(), 1);
+        let aged = c.fingerprint();
+        c.age_to(drift::SECS_PER_MONTH).unwrap();
+        assert_eq!(c.refreshes(), 1);
+        assert_eq!(c.fingerprint(), aged);
+        // a changed drift law re-derives even at the same age…
+        c.set_drift_model(DriftModel { nu_mean: 0.08, ..DriftModel::default() });
+        c.age_to(drift::SECS_PER_MONTH).unwrap();
+        assert_eq!(c.refreshes(), 2);
+        assert_ne!(c.fingerprint(), aged);
+        // …but re-setting the model it already ages under keeps the
+        // fast path open
+        c.set_drift_model(DriftModel { nu_mean: 0.08, ..DriftModel::default() });
+        c.age_to(drift::SECS_PER_MONTH).unwrap();
+        assert_eq!(c.refreshes(), 2);
+    }
+
+    #[test]
+    fn aging_cycle_is_one_fused_refresh_matching_the_sequential_composition() {
+        use crate::coordinator::{noise, quant};
+        let p = chip_params();
+        let hw = HwConfig::afm_train(0.0).with_tiles(3, 3);
+        let mut c = ChipDeployment::provision(&p, &NoiseModel::Pcm, 21, &hw).unwrap();
+        let tiling = c.tiling();
+        // the chip's programmed reference equals the standalone write
+        let programmed = noise::apply_tiled(&p, &NoiseModel::Pcm, 21, &tiling);
+        assert_eq!(c.fingerprint(), programmed.fingerprint());
+        // age + recalibrate: ONE refresh, byte-identical to the
+        // sequential engine composition drift → calibrate → apply
+        c.age_and_recalibrate(drift::SECS_PER_MONTH).unwrap();
+        assert_eq!(c.refreshes(), 1);
+        let aged = drift::apply_tiled(
+            &programmed,
+            &DriftModel::default(),
+            drift::SECS_PER_MONTH,
+            21,
+            &tiling,
+        );
+        let scales = drift::gdc_calibrate(&programmed, &aged, drift::GDC_CALIB_VECS, 21, &tiling);
+        let mut want = aged.clone();
+        drift::apply_scales(&mut want, &scales, &tiling);
+        assert_eq!(c.fingerprint(), want.fingerprint());
+        // the RTN mirror joins the same fused plan at the next
+        // derivation (same age + dirty physics -> re-derives once)
+        c.set_rtn_mirror(4);
+        assert_eq!(c.rtn_mirror(), 4);
+        c.age_to(drift::SECS_PER_MONTH).unwrap();
+        assert_eq!(c.refreshes(), 2);
+        let mut quantized = want.clone();
+        quant::rtn_params_tiled(&mut quantized, 4, &tiling);
+        assert_eq!(c.fingerprint(), quantized.fingerprint());
     }
 
     #[test]

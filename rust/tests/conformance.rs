@@ -160,7 +160,7 @@ fn compute_goldens() -> Vec<(String, u64)> {
             out.push((format!("drift/{age_name}/t{}", tiling.label()), aged.fingerprint()));
             let scales = drift::gdc_calibrate(&p, &aged, drift::GDC_CALIB_VECS, SEED, &tiling);
             let mut gdc = aged.clone();
-            drift::apply_scales(&mut gdc, &scales);
+            drift::apply_scales(&mut gdc, &scales, &tiling);
             out.push((format!("drift/{age_name}+gdc/t{}", tiling.label()), gdc.fingerprint()));
         }
     }
@@ -262,7 +262,7 @@ fn drift_and_gdc_are_byte_identical_across_thread_counts() {
             (aged, scales)
         });
         let mut serial_gdc = serial_aged.clone();
-        drift::apply_scales(&mut serial_gdc, &serial_scales);
+        drift::apply_scales(&mut serial_gdc, &serial_scales, &tiling);
         for t in SWEEP {
             with_threads(t, || {
                 let aged = drift::apply_tiled(&p, &DriftModel::default(), month, SEED, &tiling);
@@ -270,7 +270,7 @@ fn drift_and_gdc_are_byte_identical_across_thread_counts() {
                 let scales = drift::gdc_calibrate(&p, &aged, drift::GDC_CALIB_VECS, SEED, &tiling);
                 assert_eq!(scales, serial_scales, "gdc t{} threads={t}", tiling.label());
                 let mut gdc = aged;
-                drift::apply_scales(&mut gdc, &scales);
+                drift::apply_scales(&mut gdc, &scales, &tiling);
                 assert_eq!(gdc, serial_gdc, "gdc-applied t{} threads={t}", tiling.label());
             });
         }

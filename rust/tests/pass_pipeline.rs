@@ -1,0 +1,192 @@
+//! Fused device-physics pass-pipeline conformance.
+//!
+//! The hard invariant of the pass pipeline (`coordinator::tiles`,
+//! "Device-physics pass pipeline" in docs/ARCHITECTURE.md): a
+//! [`PassPlan`] running noise → drift → GDC → RTN in **one** tile
+//! traversal is byte-for-byte identical to the sequential engine
+//! composition (`noise::apply_tiled` → `drift::apply_tiled` →
+//! `drift::apply_scales` → `quant::rtn_params_tiled`, each its own
+//! full traversal and buffer), for every noise model × tiling × drift
+//! age, at any thread count. The model is sized so the 256×256 and
+//! ragged 100×100 grids are non-degenerate on every analog tensor —
+//! the same shapes the golden conformance suite pins.
+
+use afm::coordinator::drift::{self, DriftModel, DriftPass, GdcApplyPass, GdcCalibratePass};
+use afm::coordinator::noise::{self, NoiseModel, NoisePass};
+use afm::coordinator::quant::{self, RtnPass};
+use afm::coordinator::tiles::{PassPlan, Tiling};
+use afm::runtime::manifest::ModelDims;
+use afm::runtime::Params;
+use afm::util::parallel::with_threads;
+use std::collections::BTreeMap;
+
+const SEED: u64 = 0x5eed_2026;
+const BITS: u32 = 4;
+
+/// Same shape family as the golden conformance model: wq is 2 stacked
+/// 300×130 matrices, emb 310×130 with vocab-row channels, plus a
+/// digital parameter that must never be touched.
+fn params() -> Params {
+    let mut shapes = BTreeMap::new();
+    shapes.insert("wq".to_string(), vec![2, 300, 130]);
+    shapes.insert("emb".to_string(), vec![310, 130]);
+    shapes.insert("ln_f".to_string(), vec![130]);
+    let dims = ModelDims {
+        d_model: 130,
+        n_layers: 2,
+        n_heads: 1,
+        d_ff: 260,
+        seq_len: 16,
+        vocab: 310,
+        n_cls: 0,
+        n_params: 0,
+        param_keys: vec!["wq".into(), "emb".into(), "ln_f".into()],
+        param_shapes: shapes,
+    };
+    Params::init(&dims, 7)
+}
+
+fn tilings() -> [Tiling; 3] {
+    [Tiling::unbounded(), Tiling::new(256, 256), Tiling::new(100, 100)]
+}
+
+fn ages() -> [f64; 3] {
+    [0.0, drift::SECS_PER_HOUR, drift::SECS_PER_YEAR]
+}
+
+fn noise_models() -> [NoiseModel; 4] {
+    [
+        NoiseModel::None,
+        NoiseModel::Gaussian { gamma: 0.05 },
+        NoiseModel::Affine { gamma: 0.05, beta: 0.02 },
+        NoiseModel::Pcm,
+    ]
+}
+
+/// The sequential engine composition: one full traversal (and one
+/// output buffer) per engine, exactly how a drift tick ran before the
+/// pass pipeline. Returns the final params and the GDC scales so the
+/// fused plan can replay the same compensation.
+fn sequential(
+    p: &Params,
+    nm: &NoiseModel,
+    age: f64,
+    tiling: &Tiling,
+) -> (Params, drift::GdcScales) {
+    let programmed = noise::apply_tiled(p, nm, SEED, tiling);
+    let drifted = drift::apply_tiled(&programmed, &DriftModel::default(), age, SEED, tiling);
+    let scales = drift::gdc_calibrate(&programmed, &drifted, drift::GDC_CALIB_VECS, SEED, tiling);
+    let mut out = drifted;
+    drift::apply_scales(&mut out, &scales, tiling);
+    quant::rtn_params_tiled(&mut out, BITS, tiling);
+    (out, scales)
+}
+
+#[test]
+fn fused_plan_matches_sequential_engine_composition_byte_for_byte() {
+    let p = params();
+    for nm in noise_models() {
+        for tiling in tilings() {
+            for age in ages() {
+                let (want, scales) = sequential(&p, &nm, age, &tiling);
+                let write = NoisePass::new(&nm, SEED);
+                let aging = DriftPass::new(DriftModel::default(), age, SEED);
+                let rescale = GdcApplyPass::new(&scales);
+                let quantize = RtnPass::new(BITS);
+                let plan = PassPlan::new(tiling)
+                    .then(&write)
+                    .then(&aging)
+                    .then(&rescale)
+                    .then(&quantize);
+                let mut fused = p.clone();
+                plan.run_in_place(&mut fused);
+                assert_eq!(
+                    fused,
+                    want,
+                    "fused != sequential for {} / t{} / age {}",
+                    nm.label(),
+                    tiling.label(),
+                    drift::fmt_age(age)
+                );
+                assert_eq!(fused.get("ln_f"), p.get("ln_f"), "digital params must stay exact");
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_calibration_matches_standalone_calibrate_then_apply() {
+    let p = params();
+    for tiling in tilings() {
+        for age in [drift::SECS_PER_HOUR, drift::SECS_PER_YEAR] {
+            // the deployment contract: the plan input is the
+            // programmed (pre-drift) reference calibration compares to
+            let programmed = noise::apply_tiled(&p, &NoiseModel::Pcm, SEED, &tiling);
+            let drifted =
+                drift::apply_tiled(&programmed, &DriftModel::default(), age, SEED, &tiling);
+            let want_scales =
+                drift::gdc_calibrate(&programmed, &drifted, drift::GDC_CALIB_VECS, SEED, &tiling);
+            let mut want = drifted;
+            drift::apply_scales(&mut want, &want_scales, &tiling);
+
+            let aging = DriftPass::new(DriftModel::default(), age, SEED);
+            let calibrate = GdcCalibratePass::new(drift::GDC_CALIB_VECS, SEED);
+            let plan = PassPlan::new(tiling).then(&aging).then(&calibrate);
+            let mut fused = p.clone(); // recycled buffer: stale contents overwritten
+            plan.run(&programmed, &mut fused);
+            assert_eq!(fused, want, "t{} age {}", tiling.label(), drift::fmt_age(age));
+            assert_eq!(
+                calibrate.into_scales(),
+                want_scales,
+                "fused calibration drew different scales (t{})",
+                tiling.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_executor_is_byte_identical_across_thread_counts() {
+    let p = params();
+    for tiling in tilings() {
+        let programmed = noise::apply_tiled(&p, &NoiseModel::Pcm, SEED, &tiling);
+        let run = |threads: usize| {
+            with_threads(threads, || {
+                let aging = DriftPass::new(DriftModel::default(), drift::SECS_PER_MONTH, SEED);
+                let calibrate = GdcCalibratePass::new(drift::GDC_CALIB_VECS, SEED);
+                let quantize = RtnPass::new(BITS);
+                let plan = PassPlan::new(tiling).then(&aging).then(&calibrate).then(&quantize);
+                let mut out = Params { keys: Vec::new(), map: BTreeMap::new() };
+                plan.run(&programmed, &mut out);
+                (out, calibrate.into_scales())
+            })
+        };
+        let (serial, serial_scales) = run(1);
+        for threads in [2usize, 4, 8] {
+            let (par, par_scales) = run(threads);
+            assert_eq!(par, serial, "t{} threads={threads}", tiling.label());
+            assert_eq!(par_scales, serial_scales, "t{} threads={threads}", tiling.label());
+        }
+    }
+}
+
+#[test]
+fn identity_passes_are_dropped_and_empty_plans_copy_exactly() {
+    let p = params();
+    for tiling in tilings() {
+        let nm = NoiseModel::None;
+        let write = NoisePass::new(&nm, SEED);
+        let nu_zero = DriftPass::new(DriftModel::none(), drift::SECS_PER_YEAR, SEED);
+        let fresh = DriftPass::new(DriftModel::default(), 0.0, SEED); // t <= t0 clamps
+        let rtn_off = RtnPass::new(0);
+        let plan = PassPlan::new(tiling).then(&write).then(&nu_zero).then(&fresh).then(&rtn_off);
+        assert!(plan.is_empty(), "all four passes are identities");
+        let mut out = Params { keys: Vec::new(), map: BTreeMap::new() };
+        plan.run(&p, &mut out);
+        assert_eq!(out, p);
+        assert_eq!(out.fingerprint(), p.fingerprint());
+        let mut in_place = p.clone();
+        plan.run_in_place(&mut in_place);
+        assert_eq!(in_place, p);
+    }
+}

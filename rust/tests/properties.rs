@@ -195,7 +195,7 @@ fn gdc_restores_per_tensor_mean_output_within_tolerance() {
     let aged = drift::apply(&p, &DriftModel::default(), drift::SECS_PER_YEAR, 7);
     let scales = drift::gdc_calibrate(&p, &aged, 32, 1001, &full);
     let mut corrected = aged.clone();
-    drift::apply_scales(&mut corrected, &scales);
+    drift::apply_scales(&mut corrected, &scales, &full);
     // output level relative to the programmed reference, measured on
     // an independent verification batch (different seed than
     // calibration): gdc_calibrate(a, b) returns Σ|y_a| / Σ|y_b|

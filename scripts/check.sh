@@ -34,7 +34,10 @@ echo "== cargo fmt --check"
 cargo fmt --check
 
 if [[ $fast -eq 0 ]]; then
-  echo "== cargo clippy -- -D warnings"
+  # lint gate: all targets (lib, bin, tests, benches, examples) must be
+  # clippy-clean so refactors — the pass pipeline included — land and
+  # stay warning-free
+  echo "== cargo clippy --all-targets -- -D warnings"
   cargo clippy --all-targets -- -D warnings
 
   # rustdoc gate: broken intra-doc links and missing docs on public
