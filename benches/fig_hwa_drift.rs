@@ -1,0 +1,166 @@
+//! HWA-training drift figure: the headline claim of the hardware-aware
+//! training recipe (Rasch et al., arXiv:2302.08469) — a student trained
+//! with the noise ramp + drop-connect + weight remapping holds its
+//! accuracy through simulated conductance drift better than the same
+//! student trained without the schedule.
+//!
+//! Both arms share the teacher, the synthetic shard, and every
+//! hyperparameter except the `train.hwa_ramp` / `train.drop_connect` /
+//! `train.remap` knobs, and both are swept through deployment ages
+//! 1s..1y with and without Global Drift Compensation. The 1-year cells
+//! (and the HWA − baseline gain) are appended to the BENCH json
+//! trajectory (`runs/reports/bench.jsonl`, row `hwa_drift`) so the
+//! recipe's drift robustness is tracked across PRs. The HWA checkpoint
+//! is also provisioned straight from its remapped on-disk form via
+//! `hwa::provision_checkpoint`, asserting the checkpoint →
+//! `ChipDeployment` path agrees with in-memory provisioning.
+
+use afm::bench_support as bs;
+use afm::config::HwConfig;
+use afm::coordinator::evaluate::{avg_acc_per_seed, DriftSpec, Evaluator, ModelUnderTest};
+use afm::coordinator::noise::NoiseModel;
+use afm::coordinator::pipeline::Pipeline;
+use afm::coordinator::report::{ascii_chart, Table};
+use afm::coordinator::{drift, hwa};
+use afm::serve::ChipDeployment;
+use afm::util::json::Json;
+use afm::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    bs::banner("fig_hwa_drift", "HWA vs non-HWA students under drift (Rasch et al. 2023)");
+    afm::util::set_quiet(true);
+    let zoo = bs::bench_zoo()?;
+    let pipe = Pipeline::new(&zoo.rt, zoo.cfg.clone());
+    // the HWA arm: same steps/data as zoo.afm, full schedule on
+    let shard = pipe.ensure_shard(&zoo.teacher, &zoo.cfg.datagen.strategy, zoo.cfg.datagen.tokens)?;
+    let afm_hwa = pipe.ensure_afm_hwa(&zoo.teacher, shard)?;
+
+    // the remapped checkpoint provisions to the same chip as the
+    // in-memory (unremapped) weights — the checkpoint → ChipDeployment
+    // contract of the remap-aware provisioning path
+    let ckpt_dir = pipe.run_dir().join("afm_hwa");
+    let from_ckpt = hwa::provision_checkpoint(
+        &zoo.rt,
+        &zoo.cfg.model,
+        &ckpt_dir,
+        &NoiseModel::Pcm,
+        zoo.cfg.seed + 42,
+        &HwConfig::afm_train(0.0),
+    )?;
+    let from_params = ChipDeployment::provision(
+        &afm_hwa,
+        &NoiseModel::Pcm,
+        zoo.cfg.seed + 42,
+        &HwConfig::afm_train(0.0),
+    )?;
+    let ckpt_delta = if from_ckpt.fingerprint() == from_params.fingerprint() {
+        "byte-identical"
+    } else {
+        // remap scales round-trip through f32 division/multiplication,
+        // so the two provisionings may differ in the last ulp
+        "within float round-trip"
+    };
+    println!("remapped checkpoint -> ChipDeployment: {ckpt_delta}");
+
+    let tasks = bs::suite(&pipe.world, 24, zoo.cfg.seed + 520);
+    let seeds = 3; // mean ± std over >= 3 simulated hardware instances
+    let ages = [
+        1.0,
+        drift::SECS_PER_HOUR,
+        drift::SECS_PER_DAY,
+        drift::SECS_PER_MONTH,
+        drift::SECS_PER_YEAR,
+    ];
+    let ev = Evaluator::new(&zoo.rt, &zoo.cfg.model);
+    let arms = [
+        ("baseline", &zoo.afm),
+        ("HWA", &afm_hwa),
+    ];
+
+    let mut table = Table::new(
+        "HWA drift — avg accuracy vs deployment age (hw noise)",
+        &["age", "base no GDC", "base GDC", "HWA no GDC", "HWA GDC"],
+    );
+    let mut series: Vec<(&str, Vec<(f64, f64)>)> = vec![
+        ("base no GDC", Vec::new()),
+        ("base GDC", Vec::new()),
+        ("HWA no GDC", Vec::new()),
+        ("HWA GDC", Vec::new()),
+    ];
+    // cells[age][arm*2 + gdc] = per-seed Avg. vector, kept for the jsonl row
+    let mut cells: Vec<[Vec<f64>; 4]> = Vec::new();
+    for (i, &age) in ages.iter().enumerate() {
+        let mut row = vec![drift::fmt_age(age)];
+        let mut quad: [Vec<f64>; 4] = [Vec::new(), Vec::new(), Vec::new(), Vec::new()];
+        for (a, (arm_label, params)) in arms.iter().enumerate() {
+            let m = ModelUnderTest {
+                label: format!("{arm_label} (SI8-W16-O8)"),
+                params: (*params).clone(),
+                hw: HwConfig::afm_train(0.0),
+                rot: false,
+            };
+            for (g, gdc) in [false, true].into_iter().enumerate() {
+                let spec = DriftSpec::at(age, gdc);
+                let rep = ev.evaluate_with_drift(
+                    &m,
+                    &NoiseModel::Pcm,
+                    &tasks,
+                    seeds,
+                    zoo.cfg.seed + 901,
+                    Some(&spec),
+                )?;
+                let per_seed = avg_acc_per_seed(&rep);
+                row.push(stats::mean_std_str(&per_seed));
+                series[a * 2 + g].1.push((i as f64, stats::mean(&per_seed)));
+                eprintln!(
+                    "  [{arm_label:>8} {}] age {}: avg {}",
+                    if gdc { "GDC   " } else { "no GDC" },
+                    drift::fmt_age(age),
+                    stats::mean_std_str(&per_seed)
+                );
+                quad[a * 2 + g] = per_seed;
+            }
+        }
+        table.row(row);
+        cells.push(quad);
+    }
+    table.emit(&bs::reports_dir(), "fig_hwa_drift");
+    let chart = ascii_chart("HWA drift (x = 1s, 1h, 1d, 1mo, 1y)", &series, 14);
+    println!("{chart}");
+    let _ = std::fs::write(bs::reports_dir().join("fig_hwa_drift_chart.txt"), &chart);
+
+    // BENCH json trajectory: the 1-year cells plus the HWA gain — the
+    // iso-accuracy-after-a-year headline reduced to one number per arm
+    let year = &cells[ages.len() - 1];
+    let (base_raw, base_gdc) = (stats::mean(&year[0]), stats::mean(&year[1]));
+    let (hwa_raw, hwa_gdc) = (stats::mean(&year[2]), stats::mean(&year[3]));
+    let fresh_base = stats::mean(&cells[0][1]);
+    let fresh_hwa = stats::mean(&cells[0][3]);
+    println!(
+        "1y: baseline {base_raw:.2}/{base_gdc:.2} (no GDC/GDC), HWA {hwa_raw:.2}/{hwa_gdc:.2} \
+         — HWA gain {:+.2} (no GDC) {:+.2} (GDC)",
+        hwa_raw - base_raw,
+        hwa_gdc - base_gdc
+    );
+    let _ = afm::util::append_jsonl(
+        &bs::reports_dir().join("bench.jsonl"),
+        &Json::obj(vec![
+            ("bench", Json::str("hwa_drift")),
+            ("age_secs", Json::num(drift::SECS_PER_YEAR)),
+            ("seeds", Json::num(seeds as f64)),
+            ("acc_fresh_base", Json::num(fresh_base)),
+            ("acc_fresh_hwa", Json::num(fresh_hwa)),
+            ("acc_1y_base_no_gdc", Json::num(base_raw)),
+            ("acc_1y_base_no_gdc_std", Json::num(stats::std(&year[0]))),
+            ("acc_1y_base_gdc", Json::num(base_gdc)),
+            ("acc_1y_base_gdc_std", Json::num(stats::std(&year[1]))),
+            ("acc_1y_hwa_no_gdc", Json::num(hwa_raw)),
+            ("acc_1y_hwa_no_gdc_std", Json::num(stats::std(&year[2]))),
+            ("acc_1y_hwa_gdc", Json::num(hwa_gdc)),
+            ("acc_1y_hwa_gdc_std", Json::num(stats::std(&year[3]))),
+            ("hwa_gain_1y_no_gdc", Json::num(hwa_raw - base_raw)),
+            ("hwa_gain_1y_gdc", Json::num(hwa_gdc - base_gdc)),
+        ]),
+    );
+    Ok(())
+}

@@ -119,6 +119,15 @@ pub struct TrainConfig {
     pub init_steps: f32,
     /// input-range decay after the init phase
     pub beta_decay: f32,
+    /// hardware-aware noise ramp: scale the injected weight noise
+    /// 0→3× over the first quarter of training (coordinator::hwa)
+    pub hwa_ramp: bool,
+    /// hardware-aware drop-connect: probability each analog weight is
+    /// zeroed in the grads upload (stuck-cell simulation); 0 = off
+    pub drop_connect: f32,
+    /// write remapped checkpoints: analog channels rescaled to the full
+    /// conductance range with per-channel scales in remap.json
+    pub remap: bool,
     /// hardware operating point trained under
     pub hw: HwConfig,
 }
@@ -134,6 +143,11 @@ impl Default for TrainConfig {
             kappa: 15.0,
             init_steps: 30.0,
             beta_decay: 0.002,
+            // every HWA knob defaults off: the trainer stays
+            // byte-identical to the pre-HWA loop (golden conformance)
+            hwa_ramp: false,
+            drop_connect: 0.0,
+            remap: false,
             hw: HwConfig::afm_train(0.02),
         }
     }
@@ -235,6 +249,9 @@ impl Config {
                 kappa: doc.f32_or("train.kappa", t.kappa),
                 init_steps: doc.f32_or("train.init_steps", t.init_steps),
                 beta_decay: doc.f32_or("train.beta_decay", t.beta_decay),
+                hwa_ramp: doc.bool_or("train.hwa_ramp", t.hwa_ramp),
+                drop_connect: doc.f32_or("train.drop_connect", t.drop_connect),
+                remap: doc.bool_or("train.remap", t.remap),
                 hw: HwConfig {
                     in_bits: doc.usize_or("hw.in_bits", 8) as u32,
                     dyn_input: doc.bool_or("hw.dyn_input", false),
@@ -354,6 +371,26 @@ mod tests {
             .unwrap();
         assert_eq!(c.train.steps, 42);
         assert!((c.train.hw.gamma_add - 0.05).abs() < 1e-7);
+    }
+
+    #[test]
+    fn hwa_keys_default_off_and_load_from_overrides() {
+        // all knobs off by default — the byte-identity witness for the
+        // legacy trainer path
+        let d = TrainConfig::default();
+        assert!(!d.hwa_ramp && !d.remap);
+        assert_eq!(d.drop_connect, 0.0);
+        let c = Config::load_with_overrides(
+            None,
+            &[
+                "train.hwa_ramp=true".into(),
+                "train.drop_connect=0.01".into(),
+                "train.remap=true".into(),
+            ],
+        )
+        .unwrap();
+        assert!(c.train.hwa_ramp && c.train.remap);
+        assert!((c.train.drop_connect - 0.01).abs() < 1e-7);
     }
 
     #[test]

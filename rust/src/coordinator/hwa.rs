@@ -1,0 +1,413 @@
+//! Hardware-aware training (HWA) schedule: the host-side layer between
+//! the training loop and the serving stack.
+//!
+//! The source recipe (Rasch et al., arXiv:2302.08469) trains networks
+//! that stay accurate after a year of conductance drift by making
+//! training itself hardware-shaped. Three knobs, each a `TrainConfig`
+//! field and all off by default (the trainer is byte-identical to the
+//! pre-HWA loop until one is switched on):
+//!
+//! * **Noise ramp** (`train.hwa_ramp`) — the injected weight-noise
+//!   scales (`gamma_add`, `beta_mul`) are no longer constant for the
+//!   run: they ramp 0 → [`RAMP_MAX`]× the configured value over the
+//!   first [`RAMP_FRAC`] of the optimizer steps, then hold. The trainer
+//!   re-derives the `HwScalars` literals each step from
+//!   [`HwaSchedule::scalars_at`].
+//! * **Drop-connect** (`train.drop_connect`) — each analog weight is
+//!   zeroed with probability p in the *uploaded* student of the grads
+//!   pass (stuck-cell simulation); the optimizer keeps updating the
+//!   clean master weights, straight-through style. Masks are a pure
+//!   function of (seed, step, tensor) — stream [`STREAM_DROP_CONNECT`],
+//!   folded like every other engine stream (see
+//!   docs/ARCHITECTURE.md, "RNG stream keying") — so they never depend
+//!   on visit order and reproduce exactly on resume.
+//! * **Weight remapping** (`train.remap`) — checkpoints are written
+//!   with every analog channel rescaled toward the full [-1, 1]
+//!   conductance range, with the per-channel digital scales recorded in
+//!   `remap.json` beside the tensors ([`remap_params`] /
+//!   [`RemapScales`]). The scale floor is the CAWS bound
+//!   α = √(3/fan_in) ([`caws_alpha`]), so near-init channels share the
+//!   crossbar-aware scale instead of amplifying their own noise-level
+//!   maxima. `trainer::load_ckpt` folds the scales back automatically,
+//!   and [`provision_checkpoint`] /
+//!   [`ChipDeployment::provision_remapped`] carry a remapped checkpoint
+//!   straight onto a chip — training ends as a deployable chip, not a
+//!   loose `Params`.
+//!
+//! Note on simulator semantics: every per-channel engine in this
+//! codebase (noise, RTN, GDC, drift) normalizes against the channel's
+//! own range, so remapping is output-equivalent once the recorded
+//! scales are folded back — exactly like real hardware, where the
+//! remapped conductances and the digital output scales compose to the
+//! same layer. The checkpoint-side benefit is representational: stored
+//! weights occupy the programmable range and carry explicit scales.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{HwConfig, TrainConfig};
+use crate::coordinator::noise::NoiseModel;
+use crate::coordinator::tiles;
+use crate::runtime::{Params, Runtime};
+use crate::serve::{ChipDeployment, HwScalars};
+use crate::util::json::Json;
+use crate::util::prng::Pcg64;
+
+/// Peak noise-ramp multiplier: injected noise ends at 3× the configured
+/// scale (Rasch et al.: "gradually increase noise from 0→3×").
+pub const RAMP_MAX: f32 = 3.0;
+
+/// Fraction of the optimizer steps the ramp spans before holding at
+/// [`RAMP_MAX`] (the recipe ramps over the first ~eighth-to-quarter of
+/// training; our short runs use a quarter).
+pub const RAMP_FRAC: f32 = 0.25;
+
+/// PRNG stream tag for drop-connect masks. Keyed per
+/// (seed, tensor, step) via `fold_in`, like the other engine streams
+/// (`0xa1a1` noise, `0xd21f` drift ν, `0x6dc0` GDC vectors).
+pub const STREAM_DROP_CONNECT: u64 = 0xdc11;
+
+/// The noise-ramp multiplier at `step` of a `steps`-step run: 0 at
+/// step 0, linear up to [`RAMP_MAX`] over the first [`RAMP_FRAC`] of
+/// the run, then held. Monotone nondecreasing in `step`.
+pub fn ramp_value(step: usize, steps: usize) -> f32 {
+    let ramp_steps = (steps.max(1) as f32 * RAMP_FRAC).max(1.0);
+    (RAMP_MAX * step as f32 / ramp_steps).min(RAMP_MAX)
+}
+
+/// The CAWS (Crossbar-Aware Weight Scaling) bound α = √(3/fan_in) — the
+/// Kaiming-uniform amplitude a fan_in-wide analog channel is expected
+/// to occupy, used as the remap scale floor.
+pub fn caws_alpha(fan_in: usize) -> f32 {
+    (3.0 / fan_in.max(1) as f32).sqrt()
+}
+
+/// Per-step hardware-aware training schedule consulted by
+/// `Trainer::train` each optimizer step. Built from the `train.*` HWA
+/// keys; with every knob off ([`HwaSchedule::is_active`] == false) the
+/// trainer takes the legacy constant-scalars path byte for byte.
+#[derive(Clone, Debug)]
+pub struct HwaSchedule {
+    /// ramp the injected noise scales 0→[`RAMP_MAX`]× over the run
+    pub ramp: bool,
+    /// per-weight zeroing probability in the grads upload (0 = off)
+    pub drop_connect: f32,
+    /// write remapped (full conductance range) checkpoints + scales
+    pub remap: bool,
+    /// total optimizer steps (the ramp denominator)
+    pub steps: usize,
+    /// base seed for the drop-connect mask streams
+    pub seed: u64,
+}
+
+impl HwaSchedule {
+    /// The schedule a training config implies; `seed` keys the
+    /// drop-connect mask streams (the pipeline passes the run seed).
+    pub fn from_train(cfg: &TrainConfig, seed: u64) -> HwaSchedule {
+        HwaSchedule {
+            ramp: cfg.hwa_ramp,
+            drop_connect: cfg.drop_connect.max(0.0),
+            remap: cfg.remap,
+            steps: cfg.steps,
+            seed,
+        }
+    }
+
+    /// Whether any HWA knob is on (off → the trainer's legacy path).
+    pub fn is_active(&self) -> bool {
+        self.ramp || self.drop_connect > 0.0 || self.remap
+    }
+
+    /// Whether the per-step `HwScalars` re-derivation is needed.
+    pub fn ramp_active(&self) -> bool {
+        self.ramp
+    }
+
+    /// The noise-ramp multiplier at `step` (1.0 when the ramp is off).
+    pub fn ramp_multiplier(&self, step: usize) -> f32 {
+        if self.ramp {
+            ramp_value(step, self.steps)
+        } else {
+            1.0
+        }
+    }
+
+    /// The hardware scalars to upload at `step`: `base` with its noise
+    /// scales (`gamma_add`, `beta_mul`) multiplied by the ramp. All
+    /// other fields pass through untouched.
+    pub fn scalars_at(&self, base: &HwScalars, step: usize) -> HwScalars {
+        let m = self.ramp_multiplier(step);
+        HwScalars { gamma_add: base.gamma_add * m, beta_mul: base.beta_mul * m, ..*base }
+    }
+
+    /// The drop-connect view of the student for `step`'s grads pass, or
+    /// `None` when drop-connect is off (upload the clean student). Each
+    /// analog weight is zeroed with probability `drop_connect` under a
+    /// stream keyed by (seed, tensor identity, step) — deterministic
+    /// per (seed, step, tensor), independent of visit order.
+    pub fn masked_student(&self, student: &Params, step: usize) -> Option<Params> {
+        if self.drop_connect <= 0.0 {
+            return None;
+        }
+        let p = self.drop_connect as f64;
+        let mut masked = student.clone();
+        for (key, _axis, t) in tiles::analog_work(&mut masked) {
+            let mut rng = Pcg64::with_stream(self.seed, STREAM_DROP_CONNECT)
+                .fold_in(crate::util::fnv1a(key.as_bytes()))
+                .fold_in(step as u64);
+            for v in t.data.iter_mut() {
+                if rng.uniform() < p {
+                    *v = 0.0;
+                }
+            }
+        }
+        Some(masked)
+    }
+}
+
+// ----------------------------------------------------------------- remap
+
+/// Per-channel digital scales recorded by [`remap_params`]: tensor key
+/// → one scale per analog channel, in the channel traversal order of
+/// `tiles::map_tensor_channels` (stack-major; columns for the block
+/// linears, vocabulary rows for the tied embedding). `unremap_params`
+/// folds them back; checkpoints persist them as `remap.json`.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct RemapScales {
+    /// tensor key → per-channel scales
+    pub scales: BTreeMap<String, Vec<f32>>,
+}
+
+impl RemapScales {
+    /// Whether no tensor was remapped.
+    pub fn is_empty(&self) -> bool {
+        self.scales.is_empty()
+    }
+
+    /// Write the scales beside a checkpoint (`<dir>/remap.json`).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let entries: Vec<(&str, Json)> =
+            self.scales.iter().map(|(k, v)| (k.as_str(), Json::arr_f32(v))).collect();
+        std::fs::write(dir.join("remap.json"), Json::obj(entries).to_string())?;
+        Ok(())
+    }
+
+    /// Load scales written by `save`; `Ok(None)` when the checkpoint
+    /// has no `remap.json` (an unremapped checkpoint).
+    pub fn load(dir: &Path) -> Result<Option<RemapScales>> {
+        let path = dir.join("remap.json");
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e.into()),
+        };
+        let doc = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let obj = doc.as_obj().ok_or_else(|| anyhow!("bad remap.json"))?;
+        let mut scales = BTreeMap::new();
+        for (k, v) in obj {
+            let arr = v.as_arr().ok_or_else(|| anyhow!("bad remap.json entry {k}"))?;
+            let row: Option<Vec<f32>> = arr.iter().map(|x| x.as_f64().map(|f| f as f32)).collect();
+            scales.insert(k.clone(), row.ok_or_else(|| anyhow!("bad remap.json entry {k}"))?);
+        }
+        Ok(Some(RemapScales { scales }))
+    }
+}
+
+/// Rescale every analog channel of `params` toward the full [-1, 1]
+/// conductance range in place and return the per-channel digital
+/// scales that undo it. A channel's scale is max(|w|) floored at the
+/// CAWS bound [`caws_alpha`] of its fan-in, so near-init channels share
+/// the crossbar-aware scale instead of each amplifying its own maximum
+/// (and all-zero channels stay finite). Non-analog tensors are
+/// untouched.
+pub fn remap_params(params: &mut Params) -> RemapScales {
+    let mut out = RemapScales::default();
+    for (key, axis, t) in tiles::analog_work(params) {
+        let mut scales = Vec::new();
+        tiles::map_tensor_channels(t, axis, |chan| {
+            let cmax = chan.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let s = cmax.max(caws_alpha(chan.len()));
+            for v in chan.iter_mut() {
+                *v /= s;
+            }
+            scales.push(s);
+        });
+        out.scales.insert(key.to_string(), scales);
+    }
+    out
+}
+
+/// Fold recorded remap scales back into `params` in place (the inverse
+/// of [`remap_params`], up to float rounding). Tensors without a
+/// recorded entry are left untouched; a channel-count mismatch panics —
+/// the scales belong to a different model.
+pub fn unremap_params(params: &mut Params, scales: &RemapScales) {
+    for (key, axis, t) in tiles::analog_work(params) {
+        let Some(row) = scales.scales.get(key) else {
+            continue;
+        };
+        let mut i = 0usize;
+        tiles::map_tensor_channels(t, axis, |chan| {
+            let s = row[i];
+            i += 1;
+            for v in chan.iter_mut() {
+                *v *= s;
+            }
+        });
+        assert_eq!(i, row.len(), "remap scales for {key}: {} channels, got {i}", row.len());
+    }
+}
+
+/// Provision a chip straight from a trained checkpoint directory: load
+/// the tensors, align them to `model`'s manifest order, fold any
+/// recorded remap scales back in, and program the chip — the
+/// checkpoint → `ChipDeployment` path an HWA run ends on.
+pub fn provision_checkpoint(
+    rt: &Runtime,
+    model: &str,
+    dir: &Path,
+    noise: &NoiseModel,
+    seed: u64,
+    hw: &HwConfig,
+) -> Result<ChipDeployment> {
+    let mut p = Params::load(dir)?;
+    p.align_to(rt.manifest.dims(model)?);
+    match RemapScales::load(dir)? {
+        Some(scales) => ChipDeployment::provision_remapped(&p, &scales, noise, seed, hw),
+        None => ChipDeployment::provision(&p, noise, seed, hw),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ModelDims;
+    use std::collections::BTreeMap as Map;
+
+    fn dims(k: usize, n: usize) -> ModelDims {
+        let mut shapes = Map::new();
+        shapes.insert("wq".into(), vec![2, k, n]);
+        shapes.insert("emb".into(), vec![n, k]);
+        shapes.insert("ln_f".into(), vec![k]);
+        ModelDims {
+            d_model: k,
+            n_layers: 2,
+            n_heads: 1,
+            d_ff: n,
+            seq_len: 8,
+            vocab: n,
+            n_cls: 0,
+            n_params: 0,
+            param_keys: vec!["wq".into(), "emb".into(), "ln_f".into()],
+            param_shapes: shapes,
+        }
+    }
+
+    fn cfg() -> TrainConfig {
+        TrainConfig { steps: 100, ..TrainConfig::default() }
+    }
+
+    #[test]
+    fn default_schedule_is_inactive_and_identity() {
+        let sched = HwaSchedule::from_train(&cfg(), 3);
+        assert!(!sched.is_active());
+        assert!(!sched.ramp_active());
+        let base = HwScalars::from(&HwConfig::afm_train(0.02));
+        for step in [0, 17, 99] {
+            assert_eq!(sched.ramp_multiplier(step), 1.0);
+            assert_eq!(sched.scalars_at(&base, step), base);
+        }
+        let p = Params::init(&dims(6, 8), 1);
+        assert!(sched.masked_student(&p, 0).is_none());
+    }
+
+    #[test]
+    fn ramp_is_monotone_hits_zero_and_peak() {
+        let sched = HwaSchedule::from_train(&TrainConfig { hwa_ramp: true, ..cfg() }, 0);
+        assert!(sched.is_active() && sched.ramp_active());
+        assert_eq!(sched.ramp_multiplier(0), 0.0, "first step trains noise-free");
+        let mut prev = 0.0;
+        for step in 0..100 {
+            let m = sched.ramp_multiplier(step);
+            assert!(m >= prev, "ramp must be monotone at step {step}");
+            assert!(m <= RAMP_MAX);
+            prev = m;
+        }
+        assert_eq!(sched.ramp_multiplier(99), RAMP_MAX);
+        // the ramp scales gamma/beta and nothing else
+        let base = HwScalars::from(&HwConfig::afm_train(0.02));
+        let mid = sched.scalars_at(&base, 13);
+        assert_eq!(mid.gamma_add, base.gamma_add * sched.ramp_multiplier(13));
+        assert_eq!((mid.in_levels, mid.out_levels), (base.in_levels, base.out_levels));
+    }
+
+    #[test]
+    fn drop_connect_masks_are_deterministic_and_keyed() {
+        let p = Params::init(&dims(8, 10), 5);
+        let sched =
+            HwaSchedule::from_train(&TrainConfig { drop_connect: 0.25, ..cfg() }, 11);
+        let a = sched.masked_student(&p, 4).unwrap();
+        let b = sched.masked_student(&p, 4).unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint(), "same (seed, step) -> same mask");
+        let c = sched.masked_student(&p, 5).unwrap();
+        assert_ne!(a.fingerprint(), c.fingerprint(), "step keys the mask");
+        let other =
+            HwaSchedule::from_train(&TrainConfig { drop_connect: 0.25, ..cfg() }, 12);
+        assert_ne!(
+            a.fingerprint(),
+            other.masked_student(&p, 4).unwrap().fingerprint(),
+            "seed keys the mask"
+        );
+        // non-analog tensors pass through; the master copy is untouched
+        assert_eq!(a.get("ln_f"), p.get("ln_f"));
+        assert!(p.get("wq").data.iter().all(|&v| v != 0.0));
+        // zeroing rate tracks p on the analog tensors
+        let n = a.get("wq").len() + a.get("emb").len();
+        let zeros =
+            a.get("wq").data.iter().chain(&a.get("emb").data).filter(|v| **v == 0.0).count();
+        let rate = zeros as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.15, "drop rate {rate}");
+    }
+
+    #[test]
+    fn remap_roundtrips_within_tolerance_and_respects_the_range() {
+        let p = Params::init(&dims(6, 9), 7);
+        let mut r = p.clone();
+        let scales = remap_params(&mut r);
+        assert_eq!(scales.scales.len(), 2, "wq + emb");
+        assert!(r.get("wq").abs_max() <= 1.0 + 1e-6);
+        assert!(r.get("emb").abs_max() <= 1.0 + 1e-6);
+        assert_eq!(r.get("ln_f"), p.get("ln_f"), "non-analog tensors pass through");
+        assert!(scales.scales.values().flatten().all(|&s| s > 0.0));
+        unremap_params(&mut r, &scales);
+        for key in ["wq", "emb"] {
+            for (a, b) in p.get(key).data.iter().zip(&r.get(key).data) {
+                assert!((a - b).abs() <= 1e-6 * a.abs().max(1.0), "{key}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn remap_scales_persist_beside_the_checkpoint() {
+        let dir = std::env::temp_dir().join("afm_test_remap");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut p = Params::init(&dims(5, 7), 9);
+        let scales = remap_params(&mut p);
+        scales.save(&dir).unwrap();
+        let back = RemapScales::load(&dir).unwrap().expect("remap.json written");
+        // f32 -> json f64 -> f32 is exact
+        assert_eq!(back, scales);
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(RemapScales::load(&dir).unwrap(), None);
+    }
+
+    #[test]
+    fn caws_alpha_matches_the_formula() {
+        assert!((caws_alpha(3) - 1.0).abs() < 1e-6);
+        assert!((caws_alpha(12) - 0.5).abs() < 1e-6);
+        assert!(caws_alpha(0) >= 1.0, "guarded fan-in");
+    }
+}

@@ -4,6 +4,10 @@
 //!   distillation / QAT / no-distill ablation)
 //! * `generate` — batched autoregressive engine (datagen + benchmark
 //!   generation + test-time scaling)
+//! * `hwa` — hardware-aware training schedule (noise ramp,
+//!   drop-connect masks, weight remapping / CAWS) consulted by the
+//!   trainer each optimizer step, plus the remapped-checkpoint →
+//!   `ChipDeployment` provisioning path
 //! * `noise` — host-side hardware-noise injection (PCM polynomial,
 //!   gaussian, affine), one instance per crossbar tile
 //! * `drift` — conductance decay g(t) = g0·(t/t0)^(-ν) + global drift
@@ -22,6 +26,7 @@
 pub mod drift;
 pub mod encoder;
 pub mod evaluate;
+pub mod hwa;
 pub mod metrics;
 pub mod generate;
 pub mod noise;

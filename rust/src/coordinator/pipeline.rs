@@ -5,6 +5,8 @@
 //!
 //!   teacher      — FP "off-the-shelf" model pre-trained on the world
 //!   afm          — analog foundation model: HWA distillation (fig. 2)
+//!   afm_hwa      — afm + the full hardware-aware schedule (noise ramp,
+//!                  drop-connect, remapped checkpoint — coordinator::hwa)
 //!   qat          — LLM-QAT baseline: SI8-W4 STE distillation
 //!   ce           — table-10 ablation: HWA training without distillation
 //!   afm_rtn      — afm + 4-bit RTN (digital deployment, table 3)
@@ -81,6 +83,11 @@ impl<'a> Pipeline<'a> {
             hw: HwConfig::off(),
             init_steps: 0.0,
             beta_decay: 0.0,
+            // the digital teacher never trains hardware-aware, whatever
+            // the run config asks of the students
+            hwa_ramp: false,
+            drop_connect: 0.0,
+            remap: false,
             ..self.cfg.train.clone()
         };
         let mut trainer = Trainer::new(self.rt, &self.cfg.model, tc);
@@ -146,7 +153,9 @@ impl<'a> Pipeline<'a> {
     // ------------------------------------------------------------ training
 
     /// Train a student (initialised from the teacher) with the given
-    /// mode/hw; checkpoints under `name`.
+    /// mode/hw; checkpoints under `name`. A complete checkpoint loads;
+    /// a partial one (its `train_state.json` step counter short of
+    /// `tc.steps` — an interrupted run) resumes from the saved step.
     pub fn ensure_student(
         &self,
         name: &str,
@@ -155,15 +164,23 @@ impl<'a> Pipeline<'a> {
         mode: TrainMode,
         tc: TrainConfig,
     ) -> Result<Params> {
-        if self.have(name) {
+        let dir = self.ckpt_dir(name);
+        let partial = self.have(name)
+            && matches!(super::trainer::saved_step(&dir), Some(s) if s < tc.steps);
+        if self.have(name) && !partial {
             return self.load(name);
         }
         crate::info!("training {name} ({} steps, hw {})...", tc.steps, tc.hw.label());
         let mut trainer = Trainer::new(self.rt, &self.cfg.model, tc);
         trainer.metrics_path = Some(self.run_dir().join(format!("{name}_metrics.jsonl")));
-        trainer.ckpt_dir = Some(self.ckpt_dir(name));
+        trainer.ckpt_dir = Some(dir);
+        trainer.hwa_seed = self.cfg.seed;
         let mut src: Box<dyn BatchSource> = Box::new(ShardSource::new(shard, self.cfg.seed + 7));
-        let out = trainer.train(mode, teacher.clone(), Some(teacher), src.as_mut())?;
+        let out = if partial {
+            trainer.resume(mode, Some(teacher), src.as_mut())?
+        } else {
+            trainer.train(mode, teacher.clone(), Some(teacher), src.as_mut())?
+        };
         crate::info!(
             "{name} done: loss {:.4} -> {:.4} in {:.1}s",
             out.losses.first().unwrap_or(&0.0),
@@ -178,11 +195,29 @@ impl<'a> Pipeline<'a> {
         self.ensure_student("afm", teacher, shard, TrainMode::Distill, self.cfg.train.clone())
     }
 
-    /// LLM-QAT baseline (SI8-W4 STE, no noise injection, no clipping).
+    /// The analog FM trained under the full hardware-aware schedule:
+    /// noise ramp on, 1% drop-connect, remapped checkpoint (Rasch et
+    /// al.'s recipe) — same steps/data as `ensure_afm`, so the pair is
+    /// the `fig_hwa_drift` comparison.
+    pub fn ensure_afm_hwa(&self, teacher: &Params, shard: Shard) -> Result<Params> {
+        let tc = TrainConfig {
+            hwa_ramp: true,
+            drop_connect: 0.01,
+            remap: true,
+            ..self.cfg.train.clone()
+        };
+        self.ensure_student("afm_hwa", teacher, shard, TrainMode::Distill, tc)
+    }
+
+    /// LLM-QAT baseline (SI8-W4 STE, no noise injection, no clipping,
+    /// no hardware-aware schedule).
     pub fn ensure_qat(&self, teacher: &Params, shard: Shard) -> Result<Params> {
         let tc = TrainConfig {
             hw: HwConfig::qat_train(),
             alpha_clip: -1.0,
+            hwa_ramp: false,
+            drop_connect: 0.0,
+            remap: false,
             ..self.cfg.train.clone()
         };
         self.ensure_student("qat", teacher, shard, TrainMode::Distill, tc)

@@ -1,5 +1,6 @@
 //! Training-loop orchestrator: microbatch gradient accumulation, LR
-//! schedule, metric streaming, checkpoint/resume.
+//! schedule, hardware-aware scheduling, metric streaming,
+//! checkpoint/resume.
 //!
 //! One optimizer step = `accum` executions of a grads artifact
 //! (`{model}_ce_grads` or `{model}_hwa_grads`) whose gradients are
@@ -8,6 +9,21 @@
 //! schedule, all inside the artifact). This is the paper's training
 //! pipeline (fig. 2b) with DeepSpeed-style accumulation simulated by the
 //! coordinator.
+//!
+//! Each step also consults an [`hwa::HwaSchedule`] (built from the
+//! `train.hwa_ramp` / `train.drop_connect` / `train.remap` config
+//! keys): the noise ramp re-derives the uploaded `HwScalars` per step,
+//! drop-connect uploads a masked view of the student to the grads pass
+//! while the optimizer keeps updating the clean master weights, and
+//! remap makes checkpoints carry full-conductance-range tensors plus a
+//! `remap.json` scale sidecar. With every knob off (the default) the
+//! loop is byte-identical to the pre-HWA trainer.
+//!
+//! Checkpoints written by `ckpt_every` (and the final save) carry the
+//! full training state — student, AdamW moments under `opt_m`/`opt_v`,
+//! and a `train_state.json` step counter — so [`Trainer::resume`]
+//! continues the LR schedule, the HWA noise ramp, and the optimizer
+//! from the saved step.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -15,6 +31,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, Result};
 
 use crate::config::TrainConfig;
+use crate::coordinator::hwa;
 use crate::runtime::{
     lit_scalar_f32, lit_scalar_i32, lit_tokens, tensor_from_lit, Params, Runtime,
 };
@@ -85,11 +102,13 @@ pub enum TrainMode {
 
 /// What a training run produced.
 pub struct TrainOutcome {
-    /// the trained parameters
+    /// the trained parameters (always the clean master weights — a
+    /// remapped view only ever lives in the checkpoint files)
     pub params: Params,
-    /// per-step losses
+    /// per-step losses (for the steps this call executed)
     pub losses: Vec<f32>,
-    /// optimizer steps executed
+    /// optimizer steps executed by this call (a resume that finds a
+    /// completed run executes 0)
     pub steps: usize,
     /// wall-clock duration
     pub secs: f64,
@@ -113,6 +132,9 @@ pub struct Trainer<'a> {
     pub ckpt_every: usize,
     /// checkpoint directory (None = no checkpoints)
     pub ckpt_dir: Option<PathBuf>,
+    /// base seed for the HWA drop-connect mask streams (the pipeline
+    /// passes the run seed; irrelevant while drop-connect is off)
+    pub hwa_seed: u64,
 }
 
 impl<'a> Trainer<'a> {
@@ -127,6 +149,7 @@ impl<'a> Trainer<'a> {
             metrics_path: None,
             ckpt_every: 0,
             ckpt_dir: None,
+            hwa_seed: 0,
         }
     }
 
@@ -134,14 +157,74 @@ impl<'a> Trainer<'a> {
         lr_schedule(self.cfg.lr, self.cfg.steps, self.warmup_ratio, step)
     }
 
-    /// Run the training loop. `teacher` is required for distillation.
+    /// Run the training loop from scratch. `teacher` is required for
+    /// distillation.
     pub fn train(
+        &self,
+        mode: TrainMode,
+        student: Params,
+        teacher: Option<&Params>,
+        data: &mut dyn BatchSource,
+    ) -> Result<TrainOutcome> {
+        let dims = self.rt.manifest.dims(&self.model)?;
+        let moments = (Params::zeros(dims), Params::zeros(dims));
+        self.run_loop(mode, student, teacher, data, 0, moments)
+    }
+
+    /// Continue an interrupted run from the checkpoint in `ckpt_dir`:
+    /// reload the student (remap scales folded back), the AdamW
+    /// moments, and the step counter, then run the remaining steps —
+    /// the LR schedule and the HWA noise ramp pick up exactly where the
+    /// saved step left them. The batch source restarts from its own
+    /// initial state (source order is not checkpointed), so a resumed
+    /// run is deterministic but not byte-identical to the uninterrupted
+    /// one. A checkpoint at or past `cfg.steps` returns immediately
+    /// with 0 executed steps.
+    pub fn resume(
+        &self,
+        mode: TrainMode,
+        teacher: Option<&Params>,
+        data: &mut dyn BatchSource,
+    ) -> Result<TrainOutcome> {
+        let dir = self
+            .ckpt_dir
+            .as_ref()
+            .ok_or_else(|| anyhow!("resume needs a checkpoint directory"))?;
+        let dims = self.rt.manifest.dims(&self.model)?;
+        let student = load_ckpt(self.rt, &self.model, dir)?;
+        let start = saved_step(dir).unwrap_or(0);
+        let load_opt = |sub: &str| -> Result<Params> {
+            let d = dir.join(sub);
+            if d.join("params.json").exists() {
+                let mut p = Params::load(&d)?;
+                p.align_to(dims);
+                Ok(p)
+            } else {
+                // pre-upgrade checkpoint without moment state: resume
+                // with fresh moments rather than refusing
+                Ok(Params::zeros(dims))
+            }
+        };
+        let moments = (load_opt("opt_m")?, load_opt("opt_v")?);
+        if start >= self.cfg.steps {
+            return Ok(TrainOutcome { params: student, losses: Vec::new(), steps: 0, secs: 0.0 });
+        }
+        crate::info!("{}: resuming from step {start}/{}", self.model, self.cfg.steps);
+        self.run_loop(mode, student, teacher, data, start, moments)
+    }
+
+    /// The shared step loop behind `train` and `resume`; `moments` are
+    /// the AdamW (m, v) state entering `start_step`.
+    fn run_loop(
         &self,
         mode: TrainMode,
         mut student: Params,
         teacher: Option<&Params>,
         data: &mut dyn BatchSource,
+        start_step: usize,
+        moments: (Params, Params),
     ) -> Result<TrainOutcome> {
+        let (mut m, mut v) = moments;
         let timer = crate::util::Timer::start();
         let dims = self.rt.manifest.dims(&self.model)?;
         let (b, t) = (self.rt.manifest.batch_train, dims.seq_len);
@@ -157,33 +240,50 @@ impl<'a> Trainer<'a> {
             (TrainMode::Distill, Some(tp)) => Some(tp.to_literals()?),
             _ => None,
         };
-        // hardware scalars are constant for the whole run: upload once
-        let hw_lits = crate::serve::HwScalars::from(&self.cfg.hw).to_literals();
+        let sched = hwa::HwaSchedule::from_train(&self.cfg, self.hwa_seed);
+        // hardware scalars are constant for the whole run — upload once
+        // — unless the HWA noise ramp modulates them, in which case the
+        // per-step literals are re-derived from this base
+        let base_hw = crate::serve::HwScalars::from(&self.cfg.hw);
+        let static_hw_lits = base_hw.to_literals();
         let keys = student.keys.clone();
         let nk = keys.len();
 
-        let mut m = Params::zeros(dims);
-        let mut v = Params::zeros(dims);
-        let mut losses = Vec::with_capacity(self.cfg.steps);
+        let mut losses = Vec::with_capacity(self.cfg.steps.saturating_sub(start_step));
+        let mut metrics_warned = false;
 
-        for step in 0..self.cfg.steps {
+        for step in start_step..self.cfg.steps {
             // ---- accumulate grads over microbatches
             let mut acc: Option<BTreeMap<String, Tensor>> = None;
             let mut std_betas: Option<Tensor> = None;
             let mut std_head: Option<Tensor> = None;
             let mut loss_sum = 0.0f32;
-            let student_lits = student.to_literals()?;
+            // one upload per step, shared by the grads microbatches and
+            // (clean) the optimizer update below
+            let clean_lits = student.to_literals()?;
+            // drop-connect: the grads pass sees the masked view, the
+            // optimizer below still updates the clean master weights
+            let masked_lits =
+                sched.masked_student(&student, step).map(|mp| mp.to_literals()).transpose()?;
+            let grads_upload = masked_lits.as_ref().unwrap_or(&clean_lits);
+            let ramped_hw_lits;
+            let hw_lits = if sched.ramp_active() {
+                ramped_hw_lits = sched.scalars_at(&base_hw, step).to_literals();
+                &ramped_hw_lits
+            } else {
+                &static_hw_lits
+            };
             for micro in 0..self.cfg.accum {
                 let tokens = data.next_batch(b, t);
                 let tok_lit = lit_tokens(&tokens, &[b, t])?;
                 let seed = (step * self.cfg.accum + micro) as i32;
 
-                let mut inputs: Vec<&xla::Literal> = student_lits.iter().collect();
+                let mut inputs: Vec<&xla::Literal> = grads_upload.iter().collect();
                 if let Some(tl) = &teacher_lits {
                     inputs.extend(tl.iter());
                 }
                 inputs.push(&tok_lit);
-                for l in &hw_lits {
+                for l in hw_lits {
                     inputs.push(l);
                 }
                 let seed_lit = lit_scalar_i32(seed);
@@ -228,10 +328,10 @@ impl<'a> Trainer<'a> {
             let loss = loss_sum * inv;
             losses.push(loss);
 
-            // ---- optimizer update
+            // ---- optimizer update (reuses the step's clean upload)
             let lr = self.lr_at(step);
             let mut inputs: Vec<xla::Literal> = Vec::with_capacity(4 * nk + 8);
-            inputs.extend(student.to_literals()?);
+            inputs.extend(clean_lits);
             inputs.extend(m.to_literals()?);
             inputs.extend(v.to_literals()?);
             for k in &keys {
@@ -252,16 +352,23 @@ impl<'a> Trainer<'a> {
             let gnorm = crate::runtime::literal::f32_from_lit(&outs[3 * nk])?;
 
             if let Some(path) = &self.metrics_path {
-                let _ = crate::util::append_jsonl(
-                    path,
-                    &Json::obj(vec![
-                        ("step", Json::num(step as f64)),
-                        ("loss", Json::num(loss as f64)),
-                        ("gnorm", Json::num(gnorm as f64)),
-                        ("lr", Json::num(lr as f64)),
-                        ("secs", Json::num(timer.secs())),
-                    ]),
-                );
+                let row = Json::obj(vec![
+                    ("step", Json::num(step as f64)),
+                    ("loss", Json::num(loss as f64)),
+                    ("gnorm", Json::num(gnorm as f64)),
+                    ("lr", Json::num(lr as f64)),
+                    ("secs", Json::num(timer.secs())),
+                ]);
+                if let Err(e) = crate::util::append_jsonl(path, &row) {
+                    if !metrics_warned {
+                        eprintln!(
+                            "warning: cannot append training metrics to {}: {e} \
+                             (training continues; further metric errors suppressed)",
+                            path.display()
+                        );
+                        metrics_warned = true;
+                    }
+                }
             }
             if step % 50 == 0 || step + 1 == self.cfg.steps {
                 crate::info!(
@@ -272,14 +379,56 @@ impl<'a> Trainer<'a> {
             }
             if self.ckpt_every > 0 && step > 0 && step % self.ckpt_every == 0 {
                 if let Some(dir) = &self.ckpt_dir {
-                    student.save(dir)?;
+                    self.save_ckpt(dir, &student, &m, &v, step + 1)?;
                 }
             }
         }
         if let Some(dir) = &self.ckpt_dir {
-            student.save(dir)?;
+            self.save_ckpt(dir, &student, &m, &v, self.cfg.steps)?;
         }
-        Ok(TrainOutcome { params: student, losses, steps: self.cfg.steps, secs: timer.secs() })
+        Ok(TrainOutcome {
+            params: student,
+            losses,
+            steps: self.cfg.steps - start_step,
+            secs: timer.secs(),
+        })
+    }
+
+    /// Write a full resumable checkpoint into `dir`: the student (a
+    /// remapped clone + `remap.json` scales under `train.remap`, the
+    /// clean tensors otherwise), the AdamW moments under
+    /// `opt_m`/`opt_v`, and the `train_state.json` step counter
+    /// (`next_step` = the first step a resume should execute).
+    fn save_ckpt(
+        &self,
+        dir: &Path,
+        student: &Params,
+        m: &Params,
+        v: &Params,
+        next_step: usize,
+    ) -> Result<()> {
+        if self.cfg.remap {
+            let mut remapped = student.clone();
+            let scales = hwa::remap_params(&mut remapped);
+            remapped.save(dir)?;
+            scales.save(dir)?;
+        } else {
+            student.save(dir)?;
+            // a re-run with remap switched off must not leave stale
+            // scales beside freshly clean tensors
+            std::fs::remove_file(dir.join("remap.json")).ok();
+        }
+        m.save(&dir.join("opt_m"))?;
+        v.save(&dir.join("opt_v"))?;
+        std::fs::write(
+            dir.join("train_state.json"),
+            Json::obj(vec![
+                ("step", Json::num(next_step as f64)),
+                ("steps", Json::num(self.cfg.steps as f64)),
+            ])
+            .to_string(),
+        )?;
+        Ok(())
     }
 }
 
@@ -294,11 +443,25 @@ pub fn lr_schedule(lr: f32, steps: usize, warmup_ratio: f32, step: usize) -> f32
     lr * warm.min(1.0) * decay
 }
 
-/// Load a checkpoint aligned to a model's manifest ordering.
+/// Load a checkpoint aligned to a model's manifest ordering. A
+/// remapped checkpoint (one carrying `remap.json`) comes back with the
+/// recorded per-channel scales folded in — callers always see the
+/// original-scale weights, whatever representation is on disk.
 pub fn load_ckpt(rt: &Runtime, model: &str, dir: &Path) -> Result<Params> {
     let mut p = Params::load(dir)?;
+    if let Some(scales) = hwa::RemapScales::load(dir)? {
+        hwa::unremap_params(&mut p, &scales);
+    }
     p.align_to(rt.manifest.dims(model)?);
     Ok(p)
+}
+
+/// The first step a resume of the checkpoint in `dir` would execute
+/// (from `train_state.json`), or `None` for a checkpoint without
+/// training state (pre-upgrade, or never trained with checkpointing).
+pub fn saved_step(dir: &Path) -> Option<usize> {
+    let text = std::fs::read_to_string(dir.join("train_state.json")).ok()?;
+    Json::parse(&text).ok()?.get("step")?.as_usize()
 }
 
 #[cfg(test)]
@@ -307,19 +470,27 @@ mod tests {
     use crate::data::Shard;
 
     #[test]
-    fn shard_source_cycles_all_chunks_per_epoch() {
+    fn shard_source_cycles_all_chunks_exactly_once_per_epoch() {
         let shard = Shard { tokens: (0..64 * 10).map(|x| (x % 90) as u32).collect(), chunk_len: 64 };
+        // chunk i's first token is (64*i) % 90 — distinct across the 10
+        // chunks, so it identifies the chunk
+        let mut ids: Vec<i32> = (0..10).map(|i| (64 * i % 90) as i32).collect();
+        ids.sort_unstable();
         let mut src = ShardSource::new(shard, 1);
-        // one epoch = 10 chunks; draw 2 epochs worth in batches of 4
-        let mut seen = std::collections::HashSet::new();
+        // 5 batches of 4 = 20 draws = exactly 2 epochs of 10 chunks
+        let mut drawn = Vec::new();
         for _ in 0..5 {
             let b = src.next_batch(4, 64);
             assert_eq!(b.len(), 4 * 64);
             for row in 0..4 {
-                seen.insert(b[row * 64]); // first token identifies chunk
+                drawn.push(b[row * 64]);
             }
         }
-        assert!(!seen.is_empty());
+        for epoch in drawn.chunks(10) {
+            let mut e = epoch.to_vec();
+            e.sort_unstable();
+            assert_eq!(e, ids, "every chunk must appear exactly once per epoch");
+        }
     }
 
     #[test]
@@ -327,5 +498,16 @@ mod tests {
         assert!(lr_schedule(1.0, 100, 0.1, 0) < lr_schedule(1.0, 100, 0.1, 9));
         assert!(lr_schedule(1.0, 100, 0.1, 10) > lr_schedule(1.0, 100, 0.1, 99));
         assert!(lr_schedule(1.0, 100, 0.1, 99) > 0.05);
+    }
+
+    #[test]
+    fn saved_step_reads_the_train_state_sidecar() {
+        let dir = std::env::temp_dir().join("afm_test_train_state");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        assert_eq!(saved_step(&dir), None, "no sidecar -> no resume point");
+        std::fs::write(dir.join("train_state.json"), "{\"step\": 7, \"steps\": 30}").unwrap();
+        assert_eq!(saved_step(&dir), Some(7));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -38,7 +38,7 @@ const COMMANDS: &[(&str, &str)] = &[
     ("pipeline", "teacher -> datagen -> afm/qat training -> RTN (model zoo)"),
     ("pretrain", "pre-train the FP teacher on the synthetic world"),
     ("datagen", "sample synthetic training tokens from the teacher"),
-    ("train", "HWA-distill a student (--kind afm|qat)"),
+    ("train", "HWA-distill a student (--kind afm|afm_hwa|qat)"),
     ("quantize", "post-training quantization (--method rtn|spinquant)"),
     ("eval", "benchmark a checkpoint (--who teacher|afm|qat) under noise"),
     ("drift", "accuracy vs deployment age (conductance drift, ± GDC)"),
@@ -51,7 +51,22 @@ fn flag_specs() -> Vec<FlagSpec> {
     vec![
         FlagSpec { name: "config", takes_value: true, help: "TOML config file" },
         FlagSpec { name: "who", takes_value: true, help: "checkpoint to evaluate" },
-        FlagSpec { name: "kind", takes_value: true, help: "student kind: afm | qat" },
+        FlagSpec { name: "kind", takes_value: true, help: "student kind: afm | afm_hwa | qat" },
+        FlagSpec {
+            name: "hwa-ramp",
+            takes_value: false,
+            help: "train: ramp injected noise 0->3x over the run (train.hwa_ramp)",
+        },
+        FlagSpec {
+            name: "drop-connect",
+            takes_value: true,
+            help: "train: per-weight zeroing probability in the grads pass (train.drop_connect)",
+        },
+        FlagSpec {
+            name: "remap",
+            takes_value: false,
+            help: "train: write full-range remapped checkpoints + remap.json (train.remap)",
+        },
         FlagSpec { name: "method", takes_value: true, help: "quant method: rtn | spinquant" },
         FlagSpec { name: "noise", takes_value: true, help: "none | pcm | gauss:<gamma>" },
         FlagSpec { name: "seeds", takes_value: true, help: "noisy-eval repetitions" },
@@ -189,7 +204,22 @@ fn run(argv: &[String]) -> Result<()> {
             afm::util::parallel::set_threads(threads);
         }
     }
-    let cfg = Config::load_with_overrides(args.get("config"), &args.set).map_err(|e| anyhow!(e))?;
+    let mut cfg =
+        Config::load_with_overrides(args.get("config"), &args.set).map_err(|e| anyhow!(e))?;
+    // hardware-aware training flags mirror the train.* config keys
+    // (flags win so a preset can be HWA-ified from the command line)
+    if args.has("hwa-ramp") {
+        cfg.train.hwa_ramp = true;
+    }
+    if let Some(p) = args.get("drop-connect") {
+        cfg.train.drop_connect = p
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("bad --drop-connect '{p}' (want a probability in [0,1])"))?;
+    }
+    if args.has("remap") {
+        cfg.train.remap = true;
+    }
     let rt = Runtime::load(&cfg.artifacts_dir)?;
     let pipe = Pipeline::new(&rt, cfg.clone());
 
@@ -207,6 +237,9 @@ fn run(argv: &[String]) -> Result<()> {
             match args.get_or("kind", "afm").as_str() {
                 "afm" => {
                     pipe.ensure_afm(&teacher, shard)?;
+                }
+                "afm_hwa" => {
+                    pipe.ensure_afm_hwa(&teacher, shard)?;
                 }
                 "qat" => {
                     pipe.ensure_qat(&teacher, shard)?;

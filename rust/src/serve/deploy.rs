@@ -144,6 +144,25 @@ impl ChipDeployment {
         Self::provision_floorplanned(params, noise, seed, hw, 0)
     }
 
+    /// `provision` a *remapped* checkpoint: fold the recorded
+    /// per-channel digital scales back into the stored tensors
+    /// (`hwa::unremap_params`) before programming, mirroring real
+    /// hardware where the remapped conductances and the digital output
+    /// scales compose to the original layer. This is how checkpoints
+    /// written under `train.remap` (carrying a `remap.json`) become
+    /// chips — `hwa::provision_checkpoint` routes here automatically.
+    pub fn provision_remapped(
+        params: &Params,
+        scales: &crate::coordinator::hwa::RemapScales,
+        noise: &NoiseModel,
+        seed: u64,
+        hw: &HwConfig,
+    ) -> Result<ChipDeployment> {
+        let mut unmapped = params.clone();
+        crate::coordinator::hwa::unremap_params(&mut unmapped, scales);
+        Self::provision(&unmapped, noise, seed, hw)
+    }
+
     /// `provision` onto a die with only `capacity_tiles` crossbar
     /// tiles (0 = unbounded): fails with an actionable error when the
     /// model's tile map under `hw`'s tiling does not fit. This is how

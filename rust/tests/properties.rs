@@ -3,8 +3,9 @@
 //! report a replay seed). No PJRT needed — these are pure-host
 //! invariants, so they run fast and first.
 
-use afm::config::HwConfig;
+use afm::config::{HwConfig, TrainConfig};
 use afm::coordinator::drift::{self, DriftModel};
+use afm::coordinator::hwa;
 use afm::coordinator::noise::{self, pcm_sigma_frac, NoiseModel};
 use afm::coordinator::quant::rtn_channel;
 use afm::coordinator::tiles::{self, ChannelAxis, TileMap, Tiling};
@@ -779,4 +780,98 @@ fn round_robin_spreads_requests_across_the_fleet() {
     let served: std::collections::BTreeSet<usize> =
         report.completions.iter().map(|c| c.chip).collect();
     assert_eq!(served.len(), 3, "every chip instance must take load: {served:?}");
+}
+
+// ---------------------------------------------------------------- hwa
+
+#[test]
+fn prop_hwa_ramp_is_monotone_from_zero_to_peak() {
+    check("hwa-ramp", 100, |g| {
+        let steps = g.usize_in(2, 400);
+        assert_eq!(hwa::ramp_value(0, steps), 0.0, "training starts noise-free");
+        let mut prev = 0.0;
+        for step in 0..steps {
+            let m = hwa::ramp_value(step, steps);
+            assert!((0.0..=hwa::RAMP_MAX).contains(&m), "ramp out of range at {step}: {m}");
+            assert!(m >= prev, "ramp must be monotone at {step}");
+            prev = m;
+        }
+        assert_eq!(hwa::ramp_value(steps - 1, steps), hwa::RAMP_MAX, "ramp must reach 3x");
+    });
+}
+
+#[test]
+fn prop_drop_connect_masks_are_deterministic_per_seed_step_tensor() {
+    check("hwa-dropconnect", 15, |g| {
+        let dims = tiny_dims(g.usize_in(8, 12), g.usize_in(8, 12));
+        let p = Params::init(&dims, g.seed);
+        let cfg = TrainConfig {
+            drop_connect: g.f32_in(0.2, 0.5),
+            steps: 50,
+            ..TrainConfig::default()
+        };
+        let seed = g.seed ^ 0xdc;
+        let sched = hwa::HwaSchedule::from_train(&cfg, seed);
+        let step = g.usize_in(0, 48);
+        let a = sched.masked_student(&p, step).unwrap();
+        // a pure function of (seed, step, tensor): replays bit-for-bit
+        assert_eq!(a.fingerprint(), sched.masked_student(&p, step).unwrap().fingerprint());
+        // ...and both step and seed key the stream
+        let c = sched.masked_student(&p, step + 1).unwrap();
+        assert_ne!(a.fingerprint(), c.fingerprint(), "step must key the mask");
+        let other = hwa::HwaSchedule::from_train(&cfg, seed + 1);
+        assert_ne!(
+            a.fingerprint(),
+            other.masked_student(&p, step).unwrap().fingerprint(),
+            "seed must key the mask"
+        );
+        // masking only ever zeroes analog weights; everything else
+        // (and the master copy) passes through untouched
+        for key in ["wq", "emb"] {
+            let mut zeros = 0usize;
+            for (orig, masked) in p.get(key).data.iter().zip(&a.get(key).data) {
+                assert!(*masked == 0.0 || masked == orig);
+                zeros += (*masked == 0.0) as usize;
+            }
+            let rate = zeros as f64 / p.get(key).len() as f64;
+            assert!(
+                (rate - cfg.drop_connect as f64).abs() < 0.25,
+                "{key} drop rate {rate} vs p {}",
+                cfg.drop_connect
+            );
+        }
+        assert_eq!(a.get("ln_f"), p.get("ln_f"));
+    });
+}
+
+#[test]
+fn prop_remap_roundtrips_and_respects_the_conductance_range() {
+    check("hwa-remap", 25, |g| {
+        let dims = tiny_dims(g.usize_in(4, 12), g.usize_in(4, 12));
+        let p = Params::init(&dims, g.seed);
+        let mut r = p.clone();
+        let scales = hwa::remap_params(&mut r);
+        // analog tensors land inside the programmable [-1, 1] range;
+        // digital tensors stay untouched
+        assert!(r.get("wq").abs_max() <= 1.0 + 1e-6);
+        assert!(r.get("emb").abs_max() <= 1.0 + 1e-6);
+        assert_eq!(r.get("ln_f"), p.get("ln_f"));
+        // every channel scale is floored at the CAWS bound of its fan-in
+        for (key, row) in &scales.scales {
+            let fan_in = match key.as_str() {
+                "emb" => dims.param_shapes["emb"][1],
+                _ => dims.param_shapes["wq"][0],
+            };
+            for &s in row {
+                assert!(s >= hwa::caws_alpha(fan_in) - 1e-6, "{key}: scale {s} under floor");
+            }
+        }
+        // unremap is the inverse up to float rounding
+        hwa::unremap_params(&mut r, &scales);
+        for key in ["wq", "emb"] {
+            for (a, b) in p.get(key).data.iter().zip(&r.get(key).data) {
+                assert!((a - b).abs() <= 1e-5 * a.abs().max(1.0), "{key}: {a} vs {b}");
+            }
+        }
+    });
 }

@@ -63,6 +63,25 @@ AFM_THREADS=1 cargo test -q
 echo "== cargo test -q (default worker pool — must match the serial goldens)"
 cargo test -q
 
+# HWA training smoke: a tiny-steps `afm train --kind afm` end to end
+# with every hardware-aware knob on (ramp, drop-connect, remap) — the
+# cheapest proof that the per-step schedule, the remapped checkpoint,
+# and the resume sidecars survive a real run. Needs the AOT-lowered
+# artifacts (`make artifacts`), so it is skipped on pure-host checkouts.
+if [[ $fast -eq 0 ]]; then
+  if [[ -f artifacts/manifest.json ]]; then
+    echo "== afm train smoke (tiny steps, all HWA knobs on)"
+    smoke_runs="$(mktemp -d)"
+    cargo run --release --bin afm -- train --kind afm \
+      --hwa-ramp --drop-connect 0.01 --remap \
+      --set pretrain.steps=2 --set train.steps=4 --set train.accum=1 \
+      --set datagen.tokens=2048 --set "paths.runs=\"$smoke_runs\""
+    rm -rf "$smoke_runs"
+  else
+    echo "== afm train smoke skipped (no artifacts/manifest.json — run 'make artifacts')"
+  fi
+fi
+
 # the golden gate only protects future commits once the blessed file is
 # tracked — a fresh checkout would otherwise re-bless and pass trivially
 if ! git ls-files --error-unmatch rust/tests/golden/conformance.json >/dev/null 2>&1; then
