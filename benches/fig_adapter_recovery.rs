@@ -1,0 +1,139 @@
+//! Adapter-recovery figure: the hybrid analog+digital execution claim —
+//! a rank-r digital adapter sidecar fitted against the clean checkpoint
+//! (hwa::fit_deployment_adapters, subspace iteration on the residual)
+//! recovers accuracy a drifted analog chip has lost, on top of what
+//! Global Drift Compensation alone recovers.
+//!
+//! Three arms share the zoo's AFM student, the PCM noise model, and the
+//! eval suite; only the recovery machinery differs: GDC-only (the PR 2
+//! baseline), adapter-only (digital correction, no analog rescale), and
+//! GDC+adapter (both — GDC folds per-tile scales into the analog
+//! literals, then the sidecar corrects the remaining residual
+//! digitally). Each arm sweeps deployment ages 1s..1y over >= 3
+//! simulated hardware instances. The 1-year cells and the adapter gains
+//! land in the BENCH json trajectory (`runs/reports/bench.jsonl`, row
+//! `adapter_recovery`) so the recovery margin is tracked across PRs.
+
+use afm::bench_support as bs;
+use afm::config::HwConfig;
+use afm::coordinator::drift;
+use afm::coordinator::evaluate::{avg_acc_per_seed, DriftSpec, Evaluator, ModelUnderTest};
+use afm::coordinator::noise::NoiseModel;
+use afm::coordinator::pipeline::Pipeline;
+use afm::coordinator::report::{ascii_chart, Table};
+use afm::util::json::Json;
+use afm::util::stats;
+
+/// Sidecar rank under test — small enough to be a plausibly "free"
+/// digital budget next to the analog tiles, large enough to matter.
+const RANK: usize = 4;
+
+fn main() -> anyhow::Result<()> {
+    bs::banner("fig_adapter_recovery", "digital adapter sidecars vs GDC under drift");
+    afm::util::set_quiet(true);
+    let zoo = bs::bench_zoo()?;
+    let pipe = Pipeline::new(&zoo.rt, zoo.cfg.clone());
+
+    let tasks = bs::suite(&pipe.world, 24, zoo.cfg.seed + 520);
+    let seeds = 3; // mean ± std over >= 3 simulated hardware instances
+    let ages = [
+        1.0,
+        drift::SECS_PER_HOUR,
+        drift::SECS_PER_DAY,
+        drift::SECS_PER_MONTH,
+        drift::SECS_PER_YEAR,
+    ];
+    let ev = Evaluator::new(&zoo.rt, &zoo.cfg.model);
+    let m = ModelUnderTest {
+        label: "analog FM (SI8-W16-O8)".to_string(),
+        params: zoo.afm.clone(),
+        hw: HwConfig::afm_train(0.0),
+        rot: false,
+    };
+    // non-capturing fn pointers so the arm table stays a plain array
+    let arms: [(&str, fn(f64) -> DriftSpec); 3] = [
+        ("GDC only", |age| DriftSpec::at(age, true)),
+        ("adapter only", |age| DriftSpec::at(age, false).with_adapters(RANK)),
+        ("GDC+adapter", |age| DriftSpec::at(age, true).with_adapters(RANK)),
+    ];
+
+    let mut table = Table::new(
+        &format!("adapter recovery (rank {RANK}) — avg accuracy vs deployment age (hw noise)"),
+        &["age", "GDC only", "adapter only", "GDC+adapter"],
+    );
+    let mut series: Vec<(&str, Vec<(f64, f64)>)> =
+        arms.iter().map(|(label, _)| (*label, Vec::new())).collect();
+    // cells[age][arm] = per-seed Avg. vector, kept for the jsonl row
+    let mut cells: Vec<[Vec<f64>; 3]> = Vec::new();
+    for (i, &age) in ages.iter().enumerate() {
+        let mut row = vec![drift::fmt_age(age)];
+        let mut tri: [Vec<f64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for (a, (arm_label, spec_at)) in arms.iter().enumerate() {
+            let spec = spec_at(age);
+            let rep = ev.evaluate_with_drift(
+                &m,
+                &NoiseModel::Pcm,
+                &tasks,
+                seeds,
+                zoo.cfg.seed + 901,
+                Some(&spec),
+            )?;
+            let per_seed = avg_acc_per_seed(&rep);
+            row.push(stats::mean_std_str(&per_seed));
+            series[a].1.push((i as f64, stats::mean(&per_seed)));
+            eprintln!(
+                "  [{arm_label:>12}] age {}: avg {}",
+                drift::fmt_age(age),
+                stats::mean_std_str(&per_seed)
+            );
+            tri[a] = per_seed;
+        }
+        table.row(row);
+        cells.push(tri);
+    }
+    table.emit(&bs::reports_dir(), "fig_adapter_recovery");
+    let chart = ascii_chart("adapter recovery (x = 1s, 1h, 1d, 1mo, 1y)", &series, 14);
+    println!("{chart}");
+    let _ = std::fs::write(bs::reports_dir().join("fig_adapter_recovery_chart.txt"), &chart);
+
+    // BENCH json trajectory: 1-year cells + adapter gains over the
+    // GDC-only baseline, and how many ages the hybrid path wins at
+    let year = &cells[ages.len() - 1];
+    let (gdc_1y, ada_1y, both_1y) =
+        (stats::mean(&year[0]), stats::mean(&year[1]), stats::mean(&year[2]));
+    let ages_adapter_beats_gdc = cells
+        .iter()
+        .filter(|tri| stats::mean(&tri[2]) > stats::mean(&tri[0]))
+        .count();
+    let best_gain_vs_gdc = cells
+        .iter()
+        .map(|tri| stats::mean(&tri[2]) - stats::mean(&tri[0]))
+        .fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "1y: GDC {gdc_1y:.2}, adapter {ada_1y:.2}, GDC+adapter {both_1y:.2} — \
+         hybrid gain {:+.2}, beats GDC at {ages_adapter_beats_gdc}/{} ages (best {:+.2})",
+        both_1y - gdc_1y,
+        ages.len(),
+        best_gain_vs_gdc
+    );
+    let _ = afm::util::append_jsonl(
+        &bs::reports_dir().join("bench.jsonl"),
+        &Json::obj(vec![
+            ("bench", Json::str("adapter_recovery")),
+            ("rank", Json::num(RANK as f64)),
+            ("age_secs", Json::num(drift::SECS_PER_YEAR)),
+            ("seeds", Json::num(seeds as f64)),
+            ("acc_1y_gdc", Json::num(gdc_1y)),
+            ("acc_1y_gdc_std", Json::num(stats::std(&year[0]))),
+            ("acc_1y_adapter", Json::num(ada_1y)),
+            ("acc_1y_adapter_std", Json::num(stats::std(&year[1]))),
+            ("acc_1y_gdc_adapter", Json::num(both_1y)),
+            ("acc_1y_gdc_adapter_std", Json::num(stats::std(&year[2]))),
+            ("adapter_gain_1y", Json::num(ada_1y - gdc_1y)),
+            ("gdc_adapter_gain_1y", Json::num(both_1y - gdc_1y)),
+            ("ages_adapter_beats_gdc", Json::num(ages_adapter_beats_gdc as f64)),
+            ("best_gain_vs_gdc", Json::num(best_gain_vs_gdc)),
+        ]),
+    );
+    Ok(())
+}

@@ -37,6 +37,13 @@ pub struct HwConfig {
     pub tile_rows: usize,
     /// crossbar tile columns C (0 = one tile spans all matrix columns)
     pub tile_cols: usize,
+    /// digital low-rank adapter sidecar rank r (0 = pure analog path);
+    /// drift/serve fit rank-r corrections against the clean checkpoint
+    /// and compose them digitally after the analog passes
+    pub adapter_rank: usize,
+    /// subspace-iteration rounds used when fitting adapter sidecars
+    /// (`hwa::fit_adapters`); more rounds = tighter rank-r projection
+    pub adapter_iters: usize,
 }
 
 impl HwConfig {
@@ -53,6 +60,8 @@ impl HwConfig {
             qat_bits: 0,
             tile_rows: 0,
             tile_cols: 0,
+            adapter_rank: 0,
+            adapter_iters: 8,
         }
     }
 
@@ -262,6 +271,8 @@ impl Config {
                     qat_bits: doc.usize_or("hw.qat_bits", 0) as u32,
                     tile_rows: doc.usize_or("hw.tile_rows", 0),
                     tile_cols: doc.usize_or("hw.tile_cols", 0),
+                    adapter_rank: doc.usize_or("hw.adapter_rank", 0),
+                    adapter_iters: doc.usize_or("hw.adapter_iters", 8),
                 },
             },
             datagen: DatagenConfig {
@@ -391,6 +402,25 @@ mod tests {
         .unwrap();
         assert!(c.train.hwa_ramp && c.train.remap);
         assert!((c.train.drop_connect - 0.01).abs() < 1e-7);
+    }
+
+    #[test]
+    fn adapter_keys_default_off_and_load_from_overrides() {
+        // pure analog path by default — adapter sidecars are opt-in
+        let d = HwConfig::off();
+        assert_eq!(d.adapter_rank, 0);
+        assert_eq!(d.adapter_iters, 8);
+        assert_eq!(HwConfig::afm_train(0.02).adapter_rank, 0);
+        let c = Config::load_with_overrides(
+            None,
+            &["hw.adapter_rank=4".into(), "hw.adapter_iters=12".into()],
+        )
+        .unwrap();
+        assert_eq!(c.train.hw.adapter_rank, 4);
+        assert_eq!(c.train.hw.adapter_iters, 12);
+        // the paper-notation label covers the analog operating point
+        // only; digital sidecars don't change it
+        assert_eq!(c.train.hw.label(), "SI8-W16-O8");
     }
 
     #[test]

@@ -58,17 +58,30 @@ pub struct DriftSpec {
     /// the digital-deployment axis, riding the same fused pass plan
     /// as drift + GDC (`ChipDeployment::set_rtn_mirror`)
     pub rtn_bits: u32,
+    /// digital adapter sidecar rank (0 = off): per-chip rank-r
+    /// corrections fitted against the clean checkpoint at `age_secs`
+    /// (`hwa::fit_deployment_adapters`) and composed with the analog
+    /// output — the digital accuracy-recovery axis
+    pub adapter_rank: usize,
 }
 
 impl DriftSpec {
-    /// The default drift model at `age_secs`, ± GDC, no RTN mirror.
+    /// The default drift model at `age_secs`, ± GDC, no digital
+    /// sidecars (no RTN mirror, no adapters).
     pub fn at(age_secs: f64, gdc: bool) -> DriftSpec {
-        DriftSpec { model: DriftModel::default(), age_secs, gdc, rtn_bits: 0 }
+        DriftSpec { model: DriftModel::default(), age_secs, gdc, rtn_bits: 0, adapter_rank: 0 }
     }
 
     /// `self`, with an RTN host mirror quantizing the aged weights.
     pub fn with_rtn(mut self, bits: u32) -> DriftSpec {
         self.rtn_bits = bits;
+        self
+    }
+
+    /// `self`, with a rank-`rank` digital adapter sidecar fitted per
+    /// chip at the evaluation age (0 = none).
+    pub fn with_adapters(mut self, rank: usize) -> DriftSpec {
+        self.adapter_rank = rank;
         self
     }
 }
@@ -160,6 +173,23 @@ impl<'a> Evaluator<'a> {
             // chip's fast path skips the derivation entirely
             chip.set_drift_model(d.model);
             chip.set_rtn_mirror(d.rtn_bits);
+            if d.adapter_rank > 0 {
+                // the digital recovery sidecar: rank-r corrections
+                // fitted against the clean checkpoint at the exact
+                // analog state this chip serves (drift ± the fresh GDC
+                // below), composed into the literals by the set_age
+                let set = super::hwa::fit_deployment_adapters(
+                    chip,
+                    &m.params,
+                    d.age_secs,
+                    d.gdc,
+                    d.adapter_rank,
+                    m.hw.adapter_iters.max(1),
+                );
+                chip.set_adapters(Some(set));
+            } else {
+                chip.set_adapters(None);
+            }
             if d.gdc {
                 chip.age_and_recalibrate(d.age_secs)?;
             } else {
@@ -180,9 +210,14 @@ impl<'a> Evaluator<'a> {
             nm.label(),
             drift
                 .map(|d| format!(
-                    " age {}{}",
+                    " age {}{}{}",
                     super::drift::fmt_age(d.age_secs),
-                    if d.gdc { " +GDC" } else { "" }
+                    if d.gdc { " +GDC" } else { "" },
+                    if d.adapter_rank > 0 {
+                        format!(" +A{}", d.adapter_rank)
+                    } else {
+                        String::new()
+                    }
                 ))
                 .unwrap_or_default()
         );
@@ -279,13 +314,7 @@ impl<'a> Evaluator<'a> {
                             .iter()
                             .map(|&c| Tokenizer::encode_char(c).unwrap() as usize)
                             .collect();
-                        let best = ids
-                            .iter()
-                            .enumerate()
-                            .max_by(|a, b| row[*a.1].partial_cmp(&row[*b.1]).unwrap())
-                            .map(|(i, _)| i)
-                            .unwrap();
-                        best == *correct_idx
+                        best_option(row, &ids) == *correct_idx
                     }
                     Scoring::YesNo { truth } => {
                         let y = row[Tokenizer::encode_char('y').unwrap() as usize];
@@ -420,6 +449,20 @@ fn verify(c: &InstrCheck, text: &str) -> bool {
     c.verify(text)
 }
 
+/// NaN-safe argmax over the option token ids of one logit row — the
+/// selection core of `score_logit_task`. `f32::total_cmp` gives a
+/// total order in which NaN ranks above every number, so a NaN logit
+/// (a saturated analog forward) deterministically picks that option
+/// instead of panicking inside `partial_cmp().unwrap()`. Returns the
+/// index *into `ids`*; 0 for an empty option list.
+fn best_option(row: &[f32], ids: &[usize]) -> usize {
+    ids.iter()
+        .enumerate()
+        .max_by(|a, b| row[*a.1].total_cmp(&row[*b.1]))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
 /// mean over the seeds of a metric, paper-style "mean ±std" formatting.
 pub fn fmt_metric(values: &[f64]) -> String {
     crate::util::stats::mean_std_str(values)
@@ -447,4 +490,31 @@ pub fn avg_acc_per_seed(report: &EvalReport) -> Vec<f64> {
             crate::util::stats::mean(&per_task)
         })
         .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drift_spec_builders_compose_and_default_off() {
+        let plain = DriftSpec::at(0.0, false);
+        assert_eq!((plain.rtn_bits, plain.adapter_rank), (0, 0));
+        let d = DriftSpec::at(3600.0, true).with_rtn(4).with_adapters(2);
+        assert_eq!(d.age_secs, 3600.0);
+        assert!(d.gdc);
+        assert_eq!((d.rtn_bits, d.adapter_rank), (4, 2));
+    }
+
+    #[test]
+    fn best_option_survives_nan_logits() {
+        let row = [0.1f32, f32::NAN, 0.7, 0.3];
+        // clean options: the true argmax (index into ids, not vocab)
+        assert_eq!(best_option(&row, &[0, 2, 3]), 1);
+        // a NaN logit must not panic; total_cmp ranks NaN above all,
+        // so the saturated option wins deterministically
+        assert_eq!(best_option(&row, &[0, 1, 2]), 1);
+        // degenerate option list falls back to 0
+        assert_eq!(best_option(&row, &[]), 0);
+    }
 }

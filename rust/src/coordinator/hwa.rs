@@ -34,6 +34,15 @@
 //!   straight onto a chip — training ends as a deployable chip, not a
 //!   loose `Params`.
 //!
+//! This module is also home to the **digital adapter sidecar** of the
+//! hybrid execution path (`serve::DigitalSidecar`): [`fit_adapters`] /
+//! [`fit_deployment_adapters`] fit per-layer rank-r corrections
+//! U·Vᵀ against a drifted deployment's residual (Li/Ferro et al.,
+//! arXiv:2411.17367 — LoRA-style adapters kept in exact digital
+//! precision recover AIMC accuracy), [`AdapterSet`] persists them as
+//! `adapters.json` beside a checkpoint exactly like `remap.json`, and
+//! [`provision_checkpoint`] installs a persisted set automatically.
+//!
 //! Note on simulator semantics: every per-channel engine in this
 //! codebase (noise, RTN, GDC, drift) normalizes against the channel's
 //! own range, so remapping is output-equivalent once the recorded
@@ -48,12 +57,14 @@ use std::path::Path;
 use anyhow::{anyhow, Result};
 
 use crate::config::{HwConfig, TrainConfig};
+use crate::coordinator::drift;
 use crate::coordinator::noise::NoiseModel;
 use crate::coordinator::tiles;
 use crate::runtime::{Params, Runtime};
 use crate::serve::{ChipDeployment, HwScalars};
 use crate::util::json::Json;
 use crate::util::prng::Pcg64;
+use crate::util::tensor::Tensor;
 
 /// Peak noise-ramp multiplier: injected noise ends at 3× the configured
 /// scale (Rasch et al.: "gradually increase noise from 0→3×").
@@ -261,9 +272,314 @@ pub fn unremap_params(params: &mut Params, scales: &RemapScales) {
     }
 }
 
+// -------------------------------------------------------------- adapters
+
+/// PRNG stream tag for low-rank adapter fitting: keys the randomized
+/// subspace-iteration init per (hardware seed, tensor, stack matrix)
+/// via `fold_in`, like the other engine streams (see
+/// docs/ARCHITECTURE.md, "RNG stream keying").
+pub const STREAM_ADAPTER_FIT: u64 = 0xada7;
+
+/// Default subspace-iteration rounds [`fit_adapters`] runs per stack
+/// matrix — the `hw.adapter_iters` config default. Eight rounds are
+/// plenty for the drift residuals these adapters chase (the iteration
+/// converges geometrically in the singular-value gaps).
+pub const ADAPTER_FIT_ITERS: usize = 8;
+
+/// One analog tensor's rank-r digital correction: per stack matrix a
+/// factor pair (U: k×r, V: n×r) whose product U·Vᵀ is added to the
+/// drifted analog tensor at every literal derivation. The factors live
+/// on the host in exact digital precision — never noised, never
+/// drifted.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerAdapter {
+    /// (stack, k, n) of the tensor this adapter was fitted for
+    pub shape: (usize, usize, usize),
+    /// correction rank r (clamped to min(k, n) at fit time)
+    pub rank: usize,
+    /// left factors: `stack` row-major k×r blocks
+    pub u: Vec<f32>,
+    /// right factors: `stack` row-major n×r blocks
+    pub v: Vec<f32>,
+}
+
+impl LayerAdapter {
+    /// Add this adapter's correction U·Vᵀ to `t` in place.
+    pub fn add_to(&self, t: &mut Tensor) {
+        let (stack, k, n) = t.as_matrix_stack();
+        assert_eq!((stack, k, n), self.shape, "adapter fitted for a different tensor shape");
+        let r = self.rank;
+        for s in 0..stack {
+            let u = &self.u[s * k * r..(s + 1) * k * r];
+            let v = &self.v[s * n * r..(s + 1) * n * r];
+            let block = &mut t.data[s * k * n..(s + 1) * k * n];
+            for i in 0..k {
+                let urow = &u[i * r..(i + 1) * r];
+                for j in 0..n {
+                    let vrow = &v[j * r..(j + 1) * r];
+                    let mut acc = 0.0f64;
+                    for c in 0..r {
+                        acc += urow[c] as f64 * vrow[c] as f64;
+                    }
+                    block[i * n + j] += acc as f32;
+                }
+            }
+        }
+    }
+}
+
+/// The digital adapter sidecar: tensor key → [`LayerAdapter`], fitted
+/// by [`fit_adapters`] and persisted as `adapters.json` beside a
+/// checkpoint (mirroring [`RemapScales`] / `remap.json`).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct AdapterSet {
+    /// tensor key → its low-rank correction
+    pub layers: BTreeMap<String, LayerAdapter>,
+}
+
+impl AdapterSet {
+    /// Whether no layer carries a correction.
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// The largest per-layer rank (0 for an empty set).
+    pub fn rank(&self) -> usize {
+        self.layers.values().map(|l| l.rank).max().unwrap_or(0)
+    }
+
+    /// Add every layer's correction to the matching tensors of
+    /// `params` in place; tensors without an adapter pass through.
+    pub fn apply(&self, params: &mut Params) {
+        for (key, adapter) in &self.layers {
+            if let Some(t) = params.map.get_mut(key) {
+                adapter.add_to(t);
+            }
+        }
+    }
+
+    /// Write the factors beside a checkpoint (`<dir>/adapters.json`).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let encoded: Vec<(&str, Json)> = self
+            .layers
+            .iter()
+            .map(|(k, a)| {
+                let (stack, rows, cols) = a.shape;
+                (
+                    k.as_str(),
+                    Json::obj(vec![
+                        ("stack", Json::num(stack as f64)),
+                        ("k", Json::num(rows as f64)),
+                        ("n", Json::num(cols as f64)),
+                        ("rank", Json::num(a.rank as f64)),
+                        ("u", Json::arr_f32(&a.u)),
+                        ("v", Json::arr_f32(&a.v)),
+                    ]),
+                )
+            })
+            .collect();
+        std::fs::write(dir.join("adapters.json"), Json::obj(encoded).to_string())?;
+        Ok(())
+    }
+
+    /// Load factors written by `save`; `Ok(None)` when the checkpoint
+    /// carries no `adapters.json` (no digital sidecar persisted).
+    pub fn load(dir: &Path) -> Result<Option<AdapterSet>> {
+        let path = dir.join("adapters.json");
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e.into()),
+        };
+        let doc = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let obj = doc.as_obj().ok_or_else(|| anyhow!("bad adapters.json"))?;
+        let mut layers = BTreeMap::new();
+        for (k, v) in obj {
+            let num = |field: &str| -> Result<f64> {
+                v.get(field)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("bad adapters.json entry {k}: {field}"))
+            };
+            let arr = |field: &str| -> Result<Vec<f32>> {
+                let a = v
+                    .get(field)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("bad adapters.json entry {k}: {field}"))?;
+                a.iter()
+                    .map(|x| x.as_f64().map(|f| f as f32))
+                    .collect::<Option<Vec<f32>>>()
+                    .ok_or_else(|| anyhow!("bad adapters.json entry {k}: {field}"))
+            };
+            layers.insert(
+                k.clone(),
+                LayerAdapter {
+                    shape: (num("stack")? as usize, num("k")? as usize, num("n")? as usize),
+                    rank: num("rank")? as usize,
+                    u: arr("u")?,
+                    v: arr("v")?,
+                },
+            );
+        }
+        Ok(Some(AdapterSet { layers }))
+    }
+}
+
+/// C = A·B for row-major A (k×n) and B (n×r), written into C (k×r);
+/// f64 accumulation, like every other numeric reduction in the engines.
+fn mat_ab(a: &[f32], b: &[f32], c: &mut [f32], k: usize, n: usize, r: usize) {
+    for i in 0..k {
+        let arow = &a[i * n..(i + 1) * n];
+        let crow = &mut c[i * r..(i + 1) * r];
+        for (col, out) in crow.iter_mut().enumerate() {
+            let mut acc = 0.0f64;
+            for (j, &av) in arow.iter().enumerate() {
+                acc += av as f64 * b[j * r + col] as f64;
+            }
+            *out = acc as f32;
+        }
+    }
+}
+
+/// C = Aᵀ·B for row-major A (k×n) and B (k×r), written into C (n×r).
+fn mat_atb(a: &[f32], b: &[f32], c: &mut [f32], k: usize, n: usize, r: usize) {
+    for j in 0..n {
+        let crow = &mut c[j * r..(j + 1) * r];
+        for (col, out) in crow.iter_mut().enumerate() {
+            let mut acc = 0.0f64;
+            for i in 0..k {
+                acc += a[i * n + j] as f64 * b[i * r + col] as f64;
+            }
+            *out = acc as f32;
+        }
+    }
+}
+
+/// Modified Gram–Schmidt over the `r` columns of a row-major
+/// (`rows`×`r`) matrix, f64 accumulators. A numerically zero column —
+/// a residual with fewer than `r` independent directions — is zeroed
+/// instead of divided by ~0, so degenerate fits stay finite.
+fn orthonormalize_columns(m: &mut [f32], rows: usize, r: usize) {
+    for col in 0..r {
+        for prev in 0..col {
+            let mut dot = 0.0f64;
+            for i in 0..rows {
+                dot += m[i * r + col] as f64 * m[i * r + prev] as f64;
+            }
+            for i in 0..rows {
+                m[i * r + col] -= (dot * m[i * r + prev] as f64) as f32;
+            }
+        }
+        let mut norm2 = 0.0f64;
+        for i in 0..rows {
+            norm2 += (m[i * r + col] as f64).powi(2);
+        }
+        let norm = norm2.sqrt();
+        for i in 0..rows {
+            m[i * r + col] =
+                if norm > 1e-12 { (m[i * r + col] as f64 / norm) as f32 } else { 0.0 };
+        }
+    }
+}
+
+/// Fit a rank-`rank` digital correction per analog tensor so that
+/// `analog + correction ≈ target`: per stack matrix, `iters` rounds of
+/// randomized subspace iteration (init seeded from
+/// [`STREAM_ADAPTER_FIT`], folded per tensor key and stack index)
+/// project the residual `target − analog` onto its top-`rank`
+/// singular subspace — U ends orthonormal, V carries the scale, and
+/// U·Vᵀ is the best rank-r approximation the iteration found. A pure
+/// function of its arguments: the per-matrix loops are serial and
+/// visit-order free, so the fit is byte-deterministic at any thread
+/// count. Rank 0 returns an empty set (a no-op sidecar); tensors
+/// missing from either side are skipped.
+pub fn fit_adapters(
+    target: &Params,
+    analog: &Params,
+    rank: usize,
+    iters: usize,
+    seed: u64,
+) -> AdapterSet {
+    let mut out = AdapterSet::default();
+    if rank == 0 {
+        return out;
+    }
+    for key in tiles::analog_keys() {
+        let (Some(t_ref), Some(t_an)) = (target.map.get(key), analog.map.get(key)) else {
+            continue;
+        };
+        assert_eq!(t_ref.shape, t_an.shape, "adapter fit: {key} shapes differ");
+        let (stack, k, n) = t_ref.as_matrix_stack();
+        let r = rank.min(k).min(n);
+        let rounds = iters.max(1);
+        let mut u = vec![0.0f32; stack * k * r];
+        let mut v = vec![0.0f32; stack * n * r];
+        for s in 0..stack {
+            let ref_m = &t_ref.data[s * k * n..(s + 1) * k * n];
+            let an_m = &t_an.data[s * k * n..(s + 1) * k * n];
+            let residual: Vec<f32> = ref_m.iter().zip(an_m).map(|(a, b)| a - b).collect();
+            let us = &mut u[s * k * r..(s + 1) * k * r];
+            let vs = &mut v[s * n * r..(s + 1) * n * r];
+            let mut rng = Pcg64::with_stream(seed, STREAM_ADAPTER_FIT)
+                .fold_in(crate::util::fnv1a(key.as_bytes()))
+                .fold_in(s as u64);
+            rng.fill_normal(vs);
+            orthonormalize_columns(vs, n, r);
+            for round in 0..rounds {
+                // U ← orth(R·V): the evolving left singular subspace
+                mat_ab(&residual, vs, us, k, n, r);
+                orthonormalize_columns(us, k, r);
+                // V ← Rᵀ·U: right factors carrying the singular values
+                mat_atb(&residual, us, vs, k, n, r);
+                if round + 1 < rounds {
+                    orthonormalize_columns(vs, n, r);
+                }
+            }
+        }
+        out.layers.insert(key.to_string(), LayerAdapter { shape: (stack, k, n), rank: r, u, v });
+    }
+    out
+}
+
+/// Fit adapters against the analog state a deployment actually serves
+/// at `age_secs`: the chip's programmed (post-noise) tensors drifted
+/// under its own drift model and hardware seed, with a fresh GDC field
+/// calibration folded in when `gdc` — byte-identical to the chip's own
+/// derivation at that age (the fused-plan conformance tests pin this),
+/// so the fitted correction recovers both the programming noise and
+/// whatever drift residual GDC leaves behind, without
+/// double-compensating what GDC already rescales. The chip's hardware
+/// seed keys the fit streams: every chip of a fleet gets its own
+/// adapters.
+pub fn fit_deployment_adapters(
+    chip: &ChipDeployment,
+    target: &Params,
+    age_secs: f64,
+    gdc: bool,
+    rank: usize,
+    iters: usize,
+) -> AdapterSet {
+    let tiling = chip.tiling();
+    let seed = chip.hw_seed();
+    let mut analog =
+        drift::apply_tiled(chip.programmed(), &chip.drift_model(), age_secs, seed, &tiling);
+    if gdc {
+        let scales = drift::gdc_calibrate(
+            chip.programmed(),
+            &analog,
+            drift::GDC_CALIB_VECS,
+            seed,
+            &tiling,
+        );
+        drift::apply_scales(&mut analog, &scales, &tiling);
+    }
+    fit_adapters(target, &analog, rank, iters, seed)
+}
+
 /// Provision a chip straight from a trained checkpoint directory: load
 /// the tensors, align them to `model`'s manifest order, fold any
-/// recorded remap scales back in, and program the chip — the
+/// recorded remap scales back in, program the chip, and install any
+/// persisted digital adapter sidecar (`adapters.json`) — the
 /// checkpoint → `ChipDeployment` path an HWA run ends on.
 pub fn provision_checkpoint(
     rt: &Runtime,
@@ -275,10 +591,15 @@ pub fn provision_checkpoint(
 ) -> Result<ChipDeployment> {
     let mut p = Params::load(dir)?;
     p.align_to(rt.manifest.dims(model)?);
-    match RemapScales::load(dir)? {
-        Some(scales) => ChipDeployment::provision_remapped(&p, &scales, noise, seed, hw),
-        None => ChipDeployment::provision(&p, noise, seed, hw),
+    let mut chip = match RemapScales::load(dir)? {
+        Some(scales) => ChipDeployment::provision_remapped(&p, &scales, noise, seed, hw)?,
+        None => ChipDeployment::provision(&p, noise, seed, hw)?,
+    };
+    if let Some(adapters) = AdapterSet::load(dir)? {
+        chip.set_adapters(Some(adapters));
+        chip.refresh()?;
     }
+    Ok(chip)
 }
 
 #[cfg(test)]
@@ -409,5 +730,115 @@ mod tests {
         assert!((caws_alpha(3) - 1.0).abs() < 1e-6);
         assert!((caws_alpha(12) - 0.5).abs() < 1e-6);
         assert!(caws_alpha(0) >= 1.0, "guarded fan-in");
+    }
+
+    /// A (target, analog) pair with a drift-shaped gap: the analog copy
+    /// carries a deterministic per-weight decay the fit must chase.
+    fn drifted_pair(seed: u64) -> (Params, Params) {
+        let target = Params::init(&dims(8, 10), 3);
+        let mut analog = target.clone();
+        let mut rng = Pcg64::with_stream(seed, 0x7e57);
+        for key in ["wq", "emb"] {
+            for v in analog.get_mut(key).data.iter_mut() {
+                *v *= 0.9 + 0.05 * rng.normal_f32();
+            }
+        }
+        (target, analog)
+    }
+
+    #[test]
+    fn adapter_fit_is_deterministic_and_keyed() {
+        let (target, analog) = drifted_pair(1);
+        let a = fit_adapters(&target, &analog, 2, 8, 11);
+        assert_eq!(a, fit_adapters(&target, &analog, 2, 8, 11), "pure function of its inputs");
+        assert_ne!(a, fit_adapters(&target, &analog, 2, 8, 12), "seed keys the fit");
+        assert_eq!(a.layers.len(), 2, "wq + emb, never ln_f");
+        assert_eq!((a.rank(), a.layers["wq"].rank), (2, 2));
+        // rank clamps to the matrix dims (wq is 8x10, emb 10x8)
+        let full = fit_adapters(&target, &analog, 64, 8, 11);
+        assert_eq!((full.layers["wq"].rank, full.layers["emb"].rank), (8, 8));
+        // rank 0 is the no-op sidecar
+        assert!(fit_adapters(&target, &analog, 0, 8, 11).is_empty());
+        assert_eq!(fit_adapters(&target, &analog, 0, 8, 11).rank(), 0);
+    }
+
+    #[test]
+    fn adapter_correction_reduces_the_residual_and_full_rank_recovers() {
+        let (target, analog) = drifted_pair(2);
+        let sq_err = |p: &Params, key: &str| -> f64 {
+            p.get(key)
+                .data
+                .iter()
+                .zip(&target.get(key).data)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum()
+        };
+        let set = fit_adapters(&target, &analog, 4, ADAPTER_FIT_ITERS, 7);
+        let mut corrected = analog.clone();
+        set.apply(&mut corrected);
+        for key in ["wq", "emb"] {
+            assert!(
+                sq_err(&corrected, key) < sq_err(&analog, key) * 0.9,
+                "{key}: a rank-4 adapter must capture residual structure"
+            );
+        }
+        // full rank (clamped) recovers the target to float precision
+        let full = fit_adapters(&target, &analog, 64, 12, 7);
+        let mut exact = analog.clone();
+        full.apply(&mut exact);
+        for key in ["wq", "emb"] {
+            for (a, b) in exact.get(key).data.iter().zip(&target.get(key).data) {
+                assert!((a - b).abs() < 1e-3, "{key}: full-rank must recover ({a} vs {b})");
+            }
+        }
+        // non-analog tensors are never touched
+        assert_eq!(corrected.get("ln_f"), target.get("ln_f"));
+    }
+
+    #[test]
+    fn adapters_persist_beside_the_checkpoint() {
+        let dir = std::env::temp_dir().join("afm_test_adapters");
+        std::fs::remove_dir_all(&dir).ok();
+        let (target, analog) = drifted_pair(3);
+        let set = fit_adapters(&target, &analog, 2, 8, 5);
+        set.save(&dir).unwrap();
+        let back = AdapterSet::load(&dir).unwrap().expect("adapters.json written");
+        // f32 -> json f64 -> f32 is exact
+        assert_eq!(back, set);
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(AdapterSet::load(&dir).unwrap(), None);
+    }
+
+    #[test]
+    fn deployment_fit_shrinks_the_residual_of_the_served_state() {
+        let p = Params::init(&dims(6, 9), 4);
+        let hw = HwConfig::afm_train(0.0).with_tiles(3, 3);
+        let chip = ChipDeployment::provision(&p, &NoiseModel::Pcm, 23, &hw).unwrap();
+        let set =
+            fit_deployment_adapters(&chip, &p, drift::SECS_PER_MONTH, false, 4, ADAPTER_FIT_ITERS);
+        // reproduce the analog state the fit targeted
+        let drifted = drift::apply_tiled(
+            chip.programmed(),
+            &chip.drift_model(),
+            drift::SECS_PER_MONTH,
+            23,
+            &chip.tiling(),
+        );
+        let mut corrected = drifted.clone();
+        set.apply(&mut corrected);
+        let sq_err = |a: &Params, key: &str| -> f64 {
+            a.get(key)
+                .data
+                .iter()
+                .zip(&p.get(key).data)
+                .map(|(x, y)| ((x - y) as f64).powi(2))
+                .sum()
+        };
+        for key in ["wq", "emb"] {
+            assert!(
+                sq_err(&corrected, key) < sq_err(&drifted, key),
+                "{key}: the adapter must shrink the served residual"
+            );
+        }
     }
 }

@@ -76,20 +76,23 @@ pub fn smooth(losses: &[f64], window: usize) -> Vec<f64> {
         .collect()
 }
 
-/// Summarise a loss curve (None for an empty stream).
+/// Summarise a loss curve. `None` for an empty stream — the sentinel
+/// callers branch on. A single-record stream (or one whose wall clock
+/// never advances, or with NaN timestamps from a partial line)
+/// summarises with `steps_per_sec = 0.0` instead of dividing by a
+/// zero/negative/NaN span: degenerate metric files produce a safe
+/// sentinel summary, never a panic.
 pub fn summarize(records: &[StepRecord]) -> Option<CurveSummary> {
-    if records.is_empty() {
-        return None;
-    }
+    let (first, last) = (records.first()?, records.last()?);
     let losses: Vec<f64> = records.iter().map(|r| r.loss).collect();
     let sm = smooth(&losses, 10);
-    let wall = records.last().unwrap().secs - records.first().unwrap().secs;
+    let wall = last.secs - first.secs;
     Some(CurveSummary {
         steps: records.len(),
         first_loss: sm[0],
-        last_loss: *sm.last().unwrap(),
+        last_loss: *sm.last()?,
         best_loss: sm.iter().cloned().fold(f64::INFINITY, f64::min),
-        steps_per_sec: if wall > 0.0 {
+        steps_per_sec: if wall > 0.0 && records.len() > 1 {
             (records.len() as f64 - 1.0) / wall
         } else {
             0.0
@@ -160,5 +163,24 @@ mod tests {
         assert!(summarize(&[]).is_none());
         assert!(smooth(&[], 4).is_empty());
         assert!(!converged(&[], 0.1));
+    }
+
+    #[test]
+    fn single_record_summary_is_a_safe_sentinel() {
+        // a metrics file with one line (a run killed after step 0) must
+        // summarise, not panic or divide by a zero wall span
+        let s = summarize(&[rec(7, 2.5)]).unwrap();
+        assert_eq!(s.steps, 1);
+        assert_eq!((s.first_loss, s.last_loss, s.best_loss), (2.5, 2.5, 2.5));
+        assert_eq!(s.steps_per_sec, 0.0);
+        assert!(!converged(&[rec(7, 2.5)], 0.1), "one record never converged");
+        // a clock that never advances is also a zero-rate sentinel
+        let stuck = vec![rec(0, 3.0), rec(0, 2.0)];
+        assert_eq!(summarize(&stuck).unwrap().steps_per_sec, 0.0);
+        // NaN timestamps (partial trailing lines) stay finite too
+        let nan_secs: Vec<StepRecord> = (0..2)
+            .map(|i| StepRecord { step: i, loss: 1.0, gnorm: 1.0, lr: 1e-3, secs: f64::NAN })
+            .collect();
+        assert_eq!(summarize(&nan_secs).unwrap().steps_per_sec, 0.0);
     }
 }

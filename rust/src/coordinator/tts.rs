@@ -145,10 +145,9 @@ pub fn tts_curve(
 }
 
 fn best_by_reward(subset: &[&Scored]) -> Option<i64> {
-    subset
-        .iter()
-        .max_by(|a, b| a.reward.partial_cmp(&b.reward).unwrap())
-        .and_then(|s| s.answer)
+    // total_cmp: a NaN reward (a degenerate PRM draw) ranks above every
+    // finite reward — a deterministic winner instead of a panic
+    subset.iter().max_by(|a, b| a.reward.total_cmp(&b.reward)).and_then(|s| s.answer)
 }
 
 fn weighted_vote(subset: &[&Scored]) -> Option<i64> {
@@ -158,10 +157,7 @@ fn weighted_vote(subset: &[&Scored]) -> Option<i64> {
             *scores.entry(a).or_default() += s.reward as f64;
         }
     }
-    scores
-        .into_iter()
-        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-        .map(|(a, _)| a)
+    scores.into_iter().max_by(|a, b| a.1.total_cmp(&b.1)).map(|(a, _)| a)
 }
 
 fn majority_vote(subset: &[&Scored]) -> Option<i64> {
@@ -202,6 +198,19 @@ mod tests {
         let pool = scored(&[(Some(5), 0.1), (Some(5), 0.1), (Some(9), 0.99), (None, 0.9)]);
         let refs: Vec<&Scored> = pool.iter().collect();
         assert_eq!(majority_vote(&refs), Some(5));
+    }
+
+    #[test]
+    fn selectors_survive_nan_rewards() {
+        // a NaN reward must pick a defined winner, not panic the sweep:
+        // under f32/f64 total_cmp, NaN ranks above every number
+        let pool = scored(&[(Some(1), 0.2), (Some(2), f32::NAN), (Some(3), 0.5)]);
+        let refs: Vec<&Scored> = pool.iter().collect();
+        assert_eq!(best_by_reward(&refs), Some(2));
+        assert_eq!(weighted_vote(&refs), Some(2));
+        // counts ignore rewards entirely; the 3-way count tie breaks to
+        // the last maximal entry in answer order
+        assert_eq!(majority_vote(&refs), Some(3));
     }
 
     #[test]

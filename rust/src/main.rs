@@ -25,6 +25,7 @@ use afm::coordinator::evaluate::{
 };
 use afm::coordinator::generate::GenEngine;
 use afm::coordinator::noise::NoiseModel;
+use afm::coordinator::hwa;
 use afm::coordinator::pipeline::Pipeline;
 use afm::coordinator::report::Table;
 use afm::coordinator::{quant, tts};
@@ -81,6 +82,11 @@ fn flag_specs() -> Vec<FlagSpec> {
             name: "rtn-bits",
             takes_value: true,
             help: "drift: host RTN mirror folded into aged literals (0 = off)",
+        },
+        FlagSpec {
+            name: "adapter-rank",
+            takes_value: true,
+            help: "drift/serve: digital low-rank adapter sidecar rank (0 = off; hw.adapter_rank)",
         },
         FlagSpec {
             name: "tile-rows",
@@ -146,14 +152,17 @@ fn parse_noise(s: &str) -> Result<NoiseModel> {
     }
 }
 
-/// Resolve the crossbar tiling for a command's hardware config: the
-/// config file's `hw.tile_rows` / `hw.tile_cols` (landed in
-/// `cfg.train.hw`) set the default, `--tile-rows` / `--tile-cols`
-/// flags override it. The presets that `resolve_who` and serve start
-/// from never carry tiling of their own.
-fn tile_overrides(hw: &mut HwConfig, cfg: &Config, args: &Args) {
+/// Resolve the runtime hardware knobs for a command's config: the
+/// config file's `hw.tile_rows` / `hw.tile_cols` / `hw.adapter_rank`
+/// (landed in `cfg.train.hw`) set the defaults, the `--tile-rows` /
+/// `--tile-cols` / `--adapter-rank` flags override them. The presets
+/// that `resolve_who` and serve start from never carry tiling or
+/// adapter sidecars of their own.
+fn hw_overrides(hw: &mut HwConfig, cfg: &Config, args: &Args) {
     hw.tile_rows = args.usize_or("tile-rows", cfg.train.hw.tile_rows);
     hw.tile_cols = args.usize_or("tile-cols", cfg.train.hw.tile_cols);
+    hw.adapter_rank = args.usize_or("adapter-rank", cfg.train.hw.adapter_rank);
+    hw.adapter_iters = cfg.train.hw.adapter_iters;
 }
 
 /// Resolve `--who` into (checkpoint, hardware config, label) — the
@@ -284,7 +293,7 @@ fn run(argv: &[String]) -> Result<()> {
             let teacher = pipe.ensure_teacher()?;
             let (params, mut hw, label) =
                 resolve_who(&args.get_or("who", "teacher"), &pipe, &cfg, &teacher)?;
-            tile_overrides(&mut hw, &cfg, &args);
+            hw_overrides(&mut hw, &cfg, &args);
             let nm = parse_noise(&args.get_or("noise", "none"))?;
             let seeds = args.usize_or("seeds", cfg.eval.seeds);
             let ev = Evaluator::new(&rt, &cfg.model);
@@ -328,7 +337,7 @@ fn run(argv: &[String]) -> Result<()> {
             let teacher = pipe.ensure_teacher()?;
             let (params, mut hw, label) =
                 resolve_who(&args.get_or("who", "afm"), &pipe, &cfg, &teacher)?;
-            tile_overrides(&mut hw, &cfg, &args);
+            hw_overrides(&mut hw, &cfg, &args);
             let nm = parse_noise(&args.get_or("noise", "pcm"))?;
             let seeds = args.usize_or("seeds", 3);
             let ages: Vec<f64> = args
@@ -341,16 +350,20 @@ fn run(argv: &[String]) -> Result<()> {
                 .iter()
                 .map(|n| build_task(n, &pipe.world, cfg.eval.samples_per_task, cfg.seed + 500))
                 .collect();
+            let adapter_rank = hw.adapter_rank;
             let m = ModelUnderTest { label: label.clone(), params, hw, rot: false };
+            let adapter_tag =
+                if adapter_rank > 0 { format!(" +A{adapter_rank}") } else { String::new() };
             let mut table = Table::new(
-                &format!("drift: {label} {} — avg acc vs deployment age", nm.label()),
+                &format!("drift: {label} {}{adapter_tag} — avg acc vs deployment age", nm.label()),
                 &["age", "no GDC", "GDC"],
             );
             let rtn_bits = args.usize_or("rtn-bits", 0) as u32;
             for &age in &ages {
                 let mut cells = vec![fmt_age(age)];
                 for gdc in [false, true] {
-                    let spec = DriftSpec::at(age, gdc).with_rtn(rtn_bits);
+                    let spec =
+                        DriftSpec::at(age, gdc).with_rtn(rtn_bits).with_adapters(adapter_rank);
                     let rep = ev.evaluate_with_drift(
                         &m,
                         &nm,
@@ -411,12 +424,33 @@ fn run(argv: &[String]) -> Result<()> {
             let base_seed = args.u64_or("chip-seed", cfg.seed + 2026);
             let max_new = args.usize_or("max-new", 32);
             let mut hw = HwConfig::afm_train(0.0);
-            tile_overrides(&mut hw, &cfg, &args);
+            hw_overrides(&mut hw, &cfg, &args);
             let capacity = args.usize_or("tile-capacity", 0);
             // the fleet programs concurrently on the worker pool
             // (byte-identical to one-by-one provisioning)
             let chip_seeds: Vec<u64> = (0..n_chips as u64).map(|i| base_seed + i).collect();
-            let chips = ChipDeployment::provision_fleet(&afm_p, &nm, &chip_seeds, &hw, capacity)?;
+            let mut chips = ChipDeployment::provision_fleet(&afm_p, &nm, &chip_seeds, &hw, capacity)?;
+            if hw.adapter_rank > 0 {
+                // digital sidecars: rank-r corrections fitted per chip
+                // against the clean checkpoint, composed after the
+                // analog passes on every literal derivation
+                for chip in &mut chips {
+                    let set = hwa::fit_deployment_adapters(
+                        chip,
+                        &afm_p,
+                        0.0,
+                        false,
+                        hw.adapter_rank,
+                        hw.adapter_iters.max(1),
+                    );
+                    chip.set_adapters(Some(set));
+                    chip.refresh()?;
+                }
+                info!(
+                    "installed rank-{} adapter sidecars on {n_chips} chip(s)",
+                    hw.adapter_rank
+                );
+            }
             let requests = match args.get("prompts") {
                 Some(path) => serve::prompt_file_workload(path, max_new)?,
                 None => serve::mixed_workload(args.usize_or("requests", 24), cfg.seed),

@@ -8,6 +8,15 @@
 //! exactly once — one simulated conductance write (paper §3.2), one
 //! parameter upload — and callers borrow the cached literals for as
 //! many executions as they like.
+//!
+//! Deployments execute a **hybrid analog+digital model**: the analog
+//! path (programming noise → conductance drift → GDC, fused by the
+//! [`PassPlan`] pipeline) is composed with [`DigitalSidecar`]s — exact
+//! host-side state (an RTN readout mirror, low-rank adapter
+//! corrections) that never sees noise or drift and is re-applied at
+//! every literal derivation. `age_to` ages only the analog tensors;
+//! sidecars stay exact, which is what makes digital recovery
+//! (`hwa::fit_deployment_adapters`) hold up under a year of drift.
 
 use std::collections::BTreeMap;
 
@@ -17,6 +26,7 @@ use crate::config::HwConfig;
 use crate::coordinator::drift::{
     self, DriftModel, DriftPass, GdcApplyPass, GdcCalibratePass, GdcScales,
 };
+use crate::coordinator::hwa::AdapterSet;
 use crate::coordinator::noise::{NoiseModel, NoisePass};
 use crate::coordinator::quant::{self, RtnPass};
 use crate::coordinator::tiles::{Floorplan, PassPlan, TileMap, Tiling};
@@ -82,6 +92,28 @@ impl From<&HwConfig> for HwScalars {
     }
 }
 
+/// Exact digital state riding beside a chip's analog tensors — the
+/// digital half of the hybrid execution path. A sidecar lives on the
+/// host in full precision: it is never noised, never drifts, and is
+/// re-composed into the uploaded literals at every derivation
+/// (`age_to` / `age_and_recalibrate`), *after* the analog pass plan.
+/// A chip carries at most one sidecar of each kind.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DigitalSidecar {
+    /// Host-side RTN readout quantizer: after drift + GDC the deployed
+    /// weights are round-to-nearest quantized per crossbar tile inside
+    /// the fused pass plan — the digital-deployment axis of paper §4.3.
+    RtnMirror {
+        /// quantizer bit width (>= 1; `set_rtn_mirror(0)` removes the
+        /// sidecar instead of installing an identity quantizer)
+        bits: u32,
+    },
+    /// Per-layer low-rank corrections (`hwa::fit_adapters`) added to
+    /// the drifted analog tensors after the plan runs — LoRA-style
+    /// digital accuracy recovery (Li/Ferro et al., arXiv:2411.17367).
+    Adapters(AdapterSet),
+}
+
 /// One simulated chip instance ready to serve: noise-programmed
 /// parameters (applied once at provision time, one programming-noise
 /// instance per crossbar tile) and the typed hardware operating point.
@@ -117,10 +149,11 @@ pub struct ChipDeployment {
     /// the first re-derivation, reused (no per-tick `Params` clones)
     /// across every later tick
     scratch: Option<Params>,
-    /// host-side RTN mirror folded into the uploaded literals (0 = off)
-    rtn_bits: u32,
+    /// exact digital corrections composed into every literal
+    /// derivation, at most one per kind (empty = pure analog path)
+    sidecars: Vec<DigitalSidecar>,
     /// uploaded literals no longer reflect the configured physics
-    /// (drift model / RTN mirror changed); the next `age_to` re-derives
+    /// (drift model / sidecars changed); the next `age_to` re-derives
     /// even at the current age
     dirty: bool,
     /// literal re-derivations performed since provisioning
@@ -257,7 +290,7 @@ impl ChipDeployment {
             tiles_used: tile_map.total_tiles(),
             tile_capacity: capacity_tiles,
             scratch: None,
-            rtn_bits: 0,
+            sidecars: Vec::new(),
             dirty: false,
             refreshes: 0,
         })
@@ -295,24 +328,106 @@ impl ChipDeployment {
         }
     }
 
-    /// Enable (`bits > 0`) or disable (`0`) the host-side RTN mirror
-    /// folded into every literal derivation: after drift + GDC, the
-    /// deployed weights are round-to-nearest quantized per crossbar
-    /// tile — the digital-deployment axis of paper §4.3 riding the
-    /// same fused pass plan as aging. Like `set_drift_model`, takes
-    /// effect at the next re-derivation (`age_to`, `gdc_calibrate`,
-    /// `age_and_recalibrate`).
+    /// Install `sidecar`, replacing any sidecar of the same kind (a
+    /// chip carries at most one RTN mirror and one adapter set). Like
+    /// `set_drift_model`, takes effect at the next re-derivation
+    /// (`age_to`, `age_and_recalibrate`, [`ChipDeployment::refresh`]);
+    /// re-installing a sidecar the chip already carries is a no-op
+    /// that keeps the `age_to` fast path open.
+    pub fn set_sidecar(&mut self, sidecar: DigitalSidecar) {
+        if self.sidecars.contains(&sidecar) {
+            return;
+        }
+        let kind = std::mem::discriminant(&sidecar);
+        self.sidecars.retain(|s| std::mem::discriminant(s) != kind);
+        self.sidecars.push(sidecar);
+        self.dirty = true;
+    }
+
+    /// The digital sidecars riding this deployment (empty = pure
+    /// analog path).
+    pub fn sidecars(&self) -> &[DigitalSidecar] {
+        &self.sidecars
+    }
+
+    /// Enable (`bits > 0`) or remove (`0`) the host-side RTN mirror
+    /// sidecar: after drift + GDC, the deployed weights are
+    /// round-to-nearest quantized per crossbar tile — the
+    /// digital-deployment axis of paper §4.3 riding the same fused
+    /// pass plan as aging. Convenience wrapper over
+    /// [`ChipDeployment::set_sidecar`] with its change-detection and
+    /// deferred-derivation semantics.
     pub fn set_rtn_mirror(&mut self, bits: u32) {
-        if self.rtn_bits != bits {
-            self.rtn_bits = bits;
+        if bits == self.rtn_mirror() {
+            return;
+        }
+        if bits > 0 {
+            self.set_sidecar(DigitalSidecar::RtnMirror { bits });
+        } else {
+            self.sidecars.retain(|s| !matches!(s, DigitalSidecar::RtnMirror { .. }));
             self.dirty = true;
         }
     }
 
     /// Host-mirror RTN bit width folded into the uploaded literals
-    /// (0 = off).
+    /// (0 = no RTN sidecar installed).
     pub fn rtn_mirror(&self) -> u32 {
-        self.rtn_bits
+        self.sidecars
+            .iter()
+            .find_map(|s| match s {
+                DigitalSidecar::RtnMirror { bits } => Some(*bits),
+                _ => None,
+            })
+            .unwrap_or(0)
+    }
+
+    /// Install (`Some`) or remove (`None`) the digital adapter
+    /// sidecar: exact per-layer low-rank corrections added to the
+    /// drifted analog tensors at every literal derivation
+    /// (`hwa::fit_adapters` / `hwa::fit_deployment_adapters`). An
+    /// empty set removes like `None`. Takes effect at the next
+    /// re-derivation ([`ChipDeployment::refresh`]).
+    pub fn set_adapters(&mut self, set: Option<AdapterSet>) {
+        match set {
+            Some(s) if !s.is_empty() => self.set_sidecar(DigitalSidecar::Adapters(s)),
+            _ => {
+                let before = self.sidecars.len();
+                self.sidecars.retain(|s| !matches!(s, DigitalSidecar::Adapters(_)));
+                if self.sidecars.len() != before {
+                    self.dirty = true;
+                }
+            }
+        }
+    }
+
+    /// The adapter sidecar currently installed, if any.
+    pub fn adapters(&self) -> Option<&AdapterSet> {
+        self.sidecars.iter().find_map(|s| match s {
+            DigitalSidecar::Adapters(set) => Some(set),
+            _ => None,
+        })
+    }
+
+    /// The programmed (post-noise, pre-drift) reference tensors — the
+    /// state aging re-derives from, and what adapter fitting drifts
+    /// forward to reproduce the chip's analog output
+    /// (`hwa::fit_deployment_adapters`).
+    pub fn programmed(&self) -> &Params {
+        &self.programmed
+    }
+
+    /// The hardware-instance seed: keys this chip's programming noise,
+    /// per-device drift ν, GDC calibration, and adapter-fit streams.
+    pub fn hw_seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Re-derive the uploaded literals at the current age if the
+    /// configured physics or sidecars changed since the last
+    /// derivation; a clean chip is a no-op (fingerprint and refresh
+    /// counter untouched).
+    pub fn refresh(&mut self) -> Result<()> {
+        self.age_to(self.age_secs)
     }
 
     /// Literal re-derivations since provisioning: exactly one per
@@ -394,17 +509,18 @@ impl ChipDeployment {
 
     /// One conductance-clock tick: build the fused device-physics
     /// plan — drift → GDC (fresh calibration or stored scales) →
-    /// optional RTN mirror — and run it in a **single** traversal from
-    /// the retained programmed reference into the recycled scratch
-    /// buffer, then upload. One parameter-buffer write pass and one
-    /// `to_literals` per call; no intermediate `Params` clones.
+    /// optional RTN mirror — run it in a **single** traversal from the
+    /// retained programmed reference into the recycled scratch buffer,
+    /// compose the digital sidecars on top, then upload. One
+    /// parameter-buffer write pass and one `to_literals` per call; no
+    /// intermediate `Params` clones.
     fn set_age(&mut self, t_secs: f64, recalibrate: bool) -> Result<()> {
         let aging = DriftPass::new(self.drift, t_secs, self.seed);
         let calibrate =
             recalibrate.then(|| GdcCalibratePass::new(drift::GDC_CALIB_VECS, self.seed));
         // identity passes (0-bit RTN, drift at t <= t0, …) are dropped
         // by `then` itself — no duplicated predicates here
-        let quantize = RtnPass::new(self.rtn_bits);
+        let quantize = RtnPass::new(self.rtn_mirror());
         {
             // a fresh calibration replaces stored (stale) scales, so
             // the apply pass only joins the plan when not recalibrating
@@ -426,6 +542,15 @@ impl ChipDeployment {
                 .scratch
                 .get_or_insert_with(|| Params { keys: Vec::new(), map: BTreeMap::new() });
             plan.run(programmed, scratch);
+            // digital sidecar composition: the adapter set's exact
+            // corrections join *after* the analog passes, from factors
+            // that never see noise or drift — the literals uploaded
+            // below carry the hybrid analog+digital weights
+            for sidecar in &self.sidecars {
+                if let DigitalSidecar::Adapters(set) = sidecar {
+                    set.apply(scratch);
+                }
+            }
         }
         // commit chip state only after the fallible upload: a failed
         // to_literals leaves age/dirty/scales untouched, so a retry
@@ -705,5 +830,103 @@ mod tests {
         c.clear_gdc().unwrap();
         assert!(!c.gdc_calibrated());
         assert_ne!(c.fingerprint(), stale);
+    }
+
+    #[test]
+    fn rtn_sidecar_matches_the_legacy_mirror_byte_for_byte() {
+        use crate::coordinator::{noise, quant};
+        let p = chip_params();
+        for tiles in [(0usize, 0usize), (3, 3)] {
+            let hw = HwConfig::afm_train(0.0).with_tiles(tiles.0, tiles.1);
+            let mut legacy = ChipDeployment::provision(&p, &NoiseModel::Pcm, 13, &hw).unwrap();
+            legacy.set_rtn_mirror(4);
+            legacy.age_and_recalibrate(drift::SECS_PER_MONTH).unwrap();
+            // the same mirror installed as an explicit sidecar
+            let mut sidecar = ChipDeployment::provision(&p, &NoiseModel::Pcm, 13, &hw).unwrap();
+            sidecar.set_sidecar(DigitalSidecar::RtnMirror { bits: 4 });
+            sidecar.age_and_recalibrate(drift::SECS_PER_MONTH).unwrap();
+            assert_eq!(sidecar.fingerprint(), legacy.fingerprint(), "tiles {tiles:?}");
+            assert_eq!(sidecar.rtn_mirror(), 4);
+            // …and both equal the standalone engine composition
+            let tiling = legacy.tiling();
+            let programmed = noise::apply_tiled(&p, &NoiseModel::Pcm, 13, &tiling);
+            let mut want = drift::apply_tiled(
+                &programmed,
+                &DriftModel::default(),
+                drift::SECS_PER_MONTH,
+                13,
+                &tiling,
+            );
+            let scales =
+                drift::gdc_calibrate(&programmed, &want, drift::GDC_CALIB_VECS, 13, &tiling);
+            drift::apply_scales(&mut want, &scales, &tiling);
+            quant::rtn_params_tiled(&mut want, 4, &tiling);
+            assert_eq!(legacy.fingerprint(), want.fingerprint(), "tiles {tiles:?}");
+            // disabling removes the sidecar entirely
+            legacy.set_rtn_mirror(0);
+            assert_eq!(legacy.rtn_mirror(), 0);
+            assert!(legacy.sidecars().is_empty());
+        }
+    }
+
+    #[test]
+    fn sidecar_installation_keeps_the_fast_paths_and_replaces_per_kind() {
+        let mut c = chip(19);
+        c.age_to(drift::SECS_PER_MONTH).unwrap();
+        assert_eq!(c.refreshes(), 1);
+        // re-installing the sidecar the chip already carries is free
+        c.set_sidecar(DigitalSidecar::RtnMirror { bits: 4 });
+        c.refresh().unwrap();
+        assert_eq!(c.refreshes(), 2);
+        c.set_sidecar(DigitalSidecar::RtnMirror { bits: 4 });
+        c.set_rtn_mirror(4);
+        c.refresh().unwrap();
+        assert_eq!(c.refreshes(), 2, "unchanged sidecars must not re-derive");
+        // a same-kind sidecar replaces instead of stacking
+        c.set_sidecar(DigitalSidecar::RtnMirror { bits: 2 });
+        assert_eq!(c.sidecars().len(), 1);
+        assert_eq!(c.rtn_mirror(), 2);
+        // removing an adapter set that was never installed is free
+        c.set_adapters(None);
+        c.refresh().unwrap();
+        assert_eq!(c.refreshes(), 3);
+    }
+
+    #[test]
+    fn adapter_sidecar_composes_after_the_analog_passes_and_stays_exact() {
+        use crate::coordinator::hwa;
+        let p = chip_params();
+        let hw = HwConfig::afm_train(0.0).with_tiles(3, 3);
+        let mut c = ChipDeployment::provision(&p, &NoiseModel::Pcm, 17, &hw).unwrap();
+        let set = hwa::fit_deployment_adapters(&c, &p, drift::SECS_PER_MONTH, false, 2, 8);
+        assert_eq!(set.rank(), 2);
+        c.set_adapters(Some(set.clone()));
+        assert_eq!(c.adapters(), Some(&set));
+        c.age_to(drift::SECS_PER_MONTH).unwrap();
+        let hybrid = c.fingerprint();
+        // manual composition: analog drift, then the exact digital add
+        let tiling = c.tiling();
+        let mut want = drift::apply_tiled(
+            c.programmed(),
+            &DriftModel::default(),
+            drift::SECS_PER_MONTH,
+            17,
+            &tiling,
+        );
+        let analog_only = want.fingerprint();
+        set.apply(&mut want);
+        assert_eq!(hybrid, want.fingerprint(), "adapters add after the analog passes");
+        assert_ne!(hybrid, analog_only);
+        // the sidecar stays exact while the analog tensors drift:
+        // aging away and back re-derives byte-identically from the
+        // stored digital factors
+        c.age_to(drift::SECS_PER_YEAR).unwrap();
+        c.age_to(drift::SECS_PER_MONTH).unwrap();
+        assert_eq!(c.fingerprint(), hybrid);
+        assert_eq!(c.adapters(), Some(&set), "adapters never drift");
+        // removing the sidecar restores the pure analog path
+        c.set_adapters(None);
+        c.refresh().unwrap();
+        assert_eq!(c.fingerprint(), analog_only);
     }
 }

@@ -14,6 +14,10 @@
 //!   `gdc_calibrate()` folds in per-tile Global Drift Compensation)
 //!   and a floorplan: its crossbar tiling plus die capacity
 //!   (`provision_floorplanned` rejects models that don't fit).
+//!   Execution is hybrid analog+digital: exact host-side
+//!   `DigitalSidecar`s (RTN readout mirror, low-rank adapter
+//!   corrections from `hwa::fit_adapters`) compose with the drifting
+//!   analog tensors at every literal derivation and never degrade.
 //! * `server` — `InferenceServer`: a request queue with continuous
 //!   batching over the slot-based decode loop (a freed slot is refilled
 //!   from the queue immediately instead of idling until the whole chunk
@@ -32,7 +36,7 @@ pub mod server;
 pub mod workload;
 
 pub use crate::coordinator::tiles::{Floorplan, TileMap, Tiling};
-pub use deploy::{ChipDeployment, HwScalars};
+pub use deploy::{ChipDeployment, DigitalSidecar, HwScalars};
 pub use server::{
     request_id, static_chunking_steps, Completion, Decoder, DriftSchedule, FleetBatch,
     InferenceServer, ServeReport, ServeRequest, ServerStats,

@@ -23,7 +23,7 @@ use std::collections::VecDeque;
 
 use anyhow::{anyhow, Result};
 
-use super::deploy::ChipDeployment;
+use super::deploy::{ChipDeployment, DigitalSidecar};
 use crate::coordinator::generate::{
     advance_slot, pack_slot, pick_token, prompt_window, GenEngine, SamplePolicy,
 };
@@ -317,6 +317,21 @@ impl<'d, D: Decoder> InferenceServer<'d, D> {
         &self.chips
     }
 
+    /// Install a digital sidecar on one chip of the fleet and re-derive
+    /// that chip's literals at its current age, leaving its fleet-mates
+    /// untouched — heterogeneous fleets where chips differ in RTN
+    /// mirrors or adapter sets. Subsequent drift ticks keep the sidecar
+    /// exact while the chip's analog tensors age.
+    pub fn set_chip_sidecar(&mut self, chip: usize, sidecar: DigitalSidecar) -> Result<()> {
+        let n = self.chips.len();
+        let c = self
+            .chips
+            .get_mut(chip)
+            .ok_or_else(|| anyhow!("chip {chip} out of range (fleet of {n})"))?;
+        c.set_sidecar(sidecar);
+        c.refresh()
+    }
+
     /// Fleet floorplan totals: (crossbar tiles used, tiles available)
     /// summed over every chip. Capacity 0 on any chip means that die is
     /// unbounded and contributes 0 to the second component — a fleet
@@ -552,5 +567,49 @@ mod tests {
         assert_eq!(static_chunking_steps(&[5, 3], 8), 5);
         assert_eq!(static_chunking_steps(&[], 8), 0);
         assert_eq!(static_chunking_steps(&[0], 8), 1); // >=1 token semantics
+    }
+
+    #[test]
+    fn chip_sidecars_configure_heterogeneous_fleets() {
+        use crate::config::HwConfig;
+        use crate::coordinator::noise::NoiseModel;
+        use crate::runtime::manifest::ModelDims;
+        use crate::runtime::Params;
+        use crate::serve::mock::MockDecoder;
+        use std::collections::BTreeMap;
+        let mut shapes = BTreeMap::new();
+        shapes.insert("emb".into(), vec![10, 6]);
+        shapes.insert("wq".into(), vec![2, 6, 6]);
+        let dims = ModelDims {
+            d_model: 6,
+            n_layers: 2,
+            n_heads: 1,
+            d_ff: 12,
+            seq_len: 8,
+            vocab: 10,
+            n_cls: 0,
+            n_params: 0,
+            param_keys: vec!["emb".into(), "wq".into()],
+            param_shapes: shapes,
+        };
+        let p = Params::init(&dims, 1);
+        let hw = HwConfig::afm_train(0.0);
+        let chips =
+            ChipDeployment::provision_fleet(&p, &NoiseModel::Pcm, &[7, 8], &hw, 0).unwrap();
+        let baseline: Vec<u64> = chips.iter().map(|c| c.fingerprint()).collect();
+        let mut dec = MockDecoder::new(2, 8, 10);
+        let mut server = InferenceServer::new(&mut dec, chips, 3).unwrap();
+        // one chip gains an RTN sidecar; its fleet-mate stays untouched
+        server.set_chip_sidecar(1, DigitalSidecar::RtnMirror { bits: 4 }).unwrap();
+        assert_eq!(server.chips()[0].fingerprint(), baseline[0]);
+        assert_ne!(server.chips()[1].fingerprint(), baseline[1]);
+        assert_eq!(server.chips()[1].rtn_mirror(), 4);
+        assert!(server.chips()[0].sidecars().is_empty());
+        // out-of-range chips are a real error, not a panic
+        let err = server
+            .set_chip_sidecar(9, DigitalSidecar::RtnMirror { bits: 2 })
+            .expect_err("fleet has 2 chips")
+            .to_string();
+        assert!(err.contains("out of range"), "{err}");
     }
 }

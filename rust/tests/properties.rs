@@ -558,6 +558,8 @@ fn prop_config_hw_label_roundtrips_bits() {
             qat_bits: if g.bool() { 4 } else { 0 },
             tile_rows: if g.bool() { g.usize_in(1, 512) } else { 0 },
             tile_cols: if g.bool() { g.usize_in(1, 512) } else { 0 },
+            adapter_rank: g.usize_in(0, 8),
+            adapter_iters: 8,
         };
         let s = HwScalars::from(&hw);
         // levels encode 2^(b-1)-1, with the degenerate widths guarded:

@@ -82,6 +82,32 @@ if [[ $fast -eq 0 ]]; then
   fi
 fi
 
+# Adapter sidecar smoke: a tiny drift sweep with rank-2 digital adapter
+# sidecars, run twice into fresh run dirs — the reports must be
+# byte-identical, proving the adapter fit (subspace iteration, stream
+# 0xada7) and the hybrid analog+digital literal derivation are fully
+# deterministic. Same artifact gate as the train smoke.
+if [[ $fast -eq 0 ]]; then
+  if [[ -f artifacts/manifest.json ]]; then
+    echo "== afm drift smoke (rank-2 adapter sidecars, determinism)"
+    smoke_runs="$(mktemp -d)"
+    adapter_drift() {
+      cargo run --release --bin afm -- drift --who afm \
+        --adapter-rank 2 --ages 1mo --seeds 1 --quiet \
+        --set pretrain.steps=2 --set train.steps=4 --set train.accum=1 \
+        --set datagen.tokens=2048 --set eval.samples_per_task=8 \
+        --set "paths.runs=\"$smoke_runs\""
+    }
+    adapter_drift
+    cp "$smoke_runs"/*/reports/drift.md "$smoke_runs/first_drift.md"
+    adapter_drift
+    diff "$smoke_runs"/*/reports/drift.md "$smoke_runs/first_drift.md"
+    rm -rf "$smoke_runs"
+  else
+    echo "== afm drift smoke skipped (no artifacts/manifest.json — run 'make artifacts')"
+  fi
+fi
+
 # the golden gate only protects future commits once the blessed file is
 # tracked — a fresh checkout would otherwise re-bless and pass trivially
 if ! git ls-files --error-unmatch rust/tests/golden/conformance.json >/dev/null 2>&1; then
