@@ -141,6 +141,62 @@ fn main() -> anyhow::Result<()> {
         "parallel output diverged: {thread_fps:?}"
     );
 
+    // ---- SIMD lane scaling: the tiled programming write with lane
+    // batching forced on vs off, across the same pool widths. Lane
+    // order never feeds the RNG, so every (threads, mode) cell must be
+    // byte-identical — asserted on the bench path too.
+    let mut simd_ms: Vec<f64> = Vec::new();
+    let mut scalar_mode_ms: Vec<f64> = Vec::new();
+    let mut lane_fps: Vec<u64> = Vec::new();
+    for tn in [1usize, 2, 4, 8] {
+        afm::util::parallel::with_threads(tn, || {
+            for lanes in [true, false] {
+                let mode = if lanes { "simd" } else { "scalar" };
+                let r = bs::bench(
+                    &format!("noise::apply_tiled PCM ({mode}, {tn} thr)"),
+                    1,
+                    8,
+                    Some((n_params, "params/s")),
+                    || {
+                        afm::util::simd::with_simd(lanes, || {
+                            noise::apply_tiled(&zoo.teacher, &NoiseModel::Pcm, 1, &scale_tiling)
+                        })
+                    },
+                );
+                if lanes {
+                    simd_ms.push(r.mean_ms);
+                } else {
+                    scalar_mode_ms.push(r.mean_ms);
+                }
+                results.push(r);
+                let q = afm::util::simd::with_simd(lanes, || {
+                    noise::apply_tiled(&zoo.teacher, &NoiseModel::Pcm, 1, &scale_tiling)
+                });
+                lane_fps.push(q.fingerprint());
+            }
+        });
+    }
+    assert!(
+        lane_fps.windows(2).all(|w| w[0] == w[1]),
+        "lane batching changed bytes: {lane_fps:?}"
+    );
+    let lane_speedup = if simd_ms[0] > 0.0 { scalar_mode_ms[0] / simd_ms[0] } else { 0.0 };
+    let _ = afm::util::append_jsonl(
+        &bs::reports_dir().join("bench.jsonl"),
+        &Json::obj(vec![
+            ("bench", Json::str("simd_scaling")),
+            ("op", Json::str("noise_apply_tiled_pcm_64x64")),
+            ("threads", Json::arr_f64(&[1.0, 2.0, 4.0, 8.0])),
+            ("simd_ms", Json::arr_f64(&simd_ms)),
+            ("scalar_ms", Json::arr_f64(&scalar_mode_ms)),
+            ("speedup_1thr", Json::num(lane_speedup)),
+        ]),
+    );
+    println!(
+        "simd scaling (noise 64x64 tiles, 1 thr): scalar {:.1} ms -> lanes {:.1} ms (x{lane_speedup:.2})",
+        scalar_mode_ms[0], simd_ms[0]
+    );
+
     // ---- device-physics pass pipeline: a drift tick as ONE fused
     // traversal + one literal refresh (ChipDeployment::set_age) vs the
     // legacy sequential engine composition (one full traversal and one
@@ -257,6 +313,123 @@ fn main() -> anyhow::Result<()> {
          recal {recal_seq_ms:.1} -> {recal_fused_ms:.1} ms (x{:.2})",
         speedup_of(age_seq_ms, age_fused_ms),
         speedup_of(recal_seq_ms, recal_fused_ms)
+    );
+
+    // ---- dirty-tile incremental refresh: a sidecar swap at a fixed
+    // age re-derives only the dirty tensor's tiles and patches only
+    // its literal; the reference arm flips the drift law so every
+    // refresh is a full rebuild. The scoped output is asserted
+    // byte-identical to a from-scratch chip.
+    let dr_map = afm::coordinator::tiles::TileMap::of(&zoo.teacher, pp_tiling);
+    let dr_total = dr_map.total_tiles();
+    // dirty the tensor whose tile share is nearest 10% of the die
+    let dr_entry = dr_map
+        .entries
+        .iter()
+        .min_by(|a, b| {
+            let fa = (a.tiles() as f64 / dr_total as f64 - 0.1).abs();
+            let fb = (b.tiles() as f64 / dr_total as f64 - 0.1).abs();
+            fa.partial_cmp(&fb).unwrap()
+        })
+        .expect("teacher has analog tensors");
+    let dr_key = dr_entry.key.clone();
+    let dr_tiles = dr_entry.tiles() as u64;
+    let dirty_fraction = dr_tiles as f64 / dr_total as f64;
+    let rank1_set = |scale: f32| {
+        let (stack, k, n) = zoo.teacher.get(&dr_key).as_matrix_stack();
+        let mut layers = std::collections::BTreeMap::new();
+        layers.insert(
+            dr_key.clone(),
+            afm::coordinator::hwa::LayerAdapter {
+                shape: (stack, k, n),
+                rank: 1,
+                u: vec![scale; stack * k],
+                v: vec![scale; stack * n],
+            },
+        );
+        afm::coordinator::hwa::AdapterSet { layers }
+    };
+    let mut full_chip = ChipDeployment::provision(&zoo.teacher, &NoiseModel::Pcm, 7, &pp_hw)?;
+    full_chip.set_rtn_mirror(4);
+    full_chip.age_and_recalibrate(month)?;
+    let mut dirty_chip = ChipDeployment::provision(&zoo.teacher, &NoiseModel::Pcm, 7, &pp_hw)?;
+    dirty_chip.set_rtn_mirror(4);
+    dirty_chip.age_and_recalibrate(month)?;
+    // accounting check before timing: the swap charges only dr_tiles
+    let tiles_before = dirty_chip.tiles_rederived();
+    dirty_chip.set_adapters(Some(rank1_set(0.001)));
+    dirty_chip.refresh()?;
+    assert_eq!(
+        dirty_chip.tiles_rederived() - tiles_before,
+        dr_tiles,
+        "sidecar swap must re-derive only {dr_key}'s tiles"
+    );
+    let mut dr_flip = false;
+    let r_dirty = bs::bench(
+        &format!(
+            "refresh scoped (adapter swap on {dr_key}, {:.0}% of tiles)",
+            dirty_fraction * 100.0
+        ),
+        1,
+        6,
+        Some((n_params, "params/s")),
+        || {
+            dr_flip = !dr_flip;
+            dirty_chip.set_adapters(Some(rank1_set(if dr_flip { 0.002 } else { 0.001 })));
+            dirty_chip.refresh().unwrap()
+        },
+    );
+    let mut dm_flip = false;
+    let r_full = bs::bench(
+        "refresh full (drift-law flip, all tiles)",
+        1,
+        6,
+        Some((n_params, "params/s")),
+        || {
+            dm_flip = !dm_flip;
+            // 0.055/0.065 straddle the 0.06 default so neither flip is
+            // a change-detection no-op
+            full_chip.set_drift_model(DriftModel {
+                nu_mean: if dm_flip { 0.055 } else { 0.065 },
+                ..DriftModel::default()
+            });
+            full_chip.refresh().unwrap()
+        },
+    );
+    // scoped == full byte identity, pinned on the bench path: a fresh
+    // chip taking the full route to the same configuration
+    dirty_chip.set_adapters(Some(rank1_set(0.001)));
+    dirty_chip.refresh()?;
+    let mut dr_ref = ChipDeployment::provision(&zoo.teacher, &NoiseModel::Pcm, 7, &pp_hw)?;
+    dr_ref.set_rtn_mirror(4);
+    dr_ref.set_adapters(Some(rank1_set(0.001)));
+    dr_ref.age_and_recalibrate(month)?;
+    assert_eq!(
+        dirty_chip.fingerprint(),
+        dr_ref.fingerprint(),
+        "scoped refresh diverged from a full rebuild"
+    );
+    let (dirty_ms, full_ms) = (r_dirty.mean_ms, r_full.mean_ms);
+    results.push(r_dirty);
+    results.push(r_full);
+    let dr_speedup = speedup_of(full_ms, dirty_ms);
+    let _ = afm::util::append_jsonl(
+        &bs::reports_dir().join("bench.jsonl"),
+        &Json::obj(vec![
+            ("bench", Json::str("dirty_refresh")),
+            ("op", Json::str("adapter_swap_vs_full_rebuild_64x64")),
+            ("dirty_key", Json::str(dr_key.clone())),
+            ("dirty_fraction", Json::num(dirty_fraction)),
+            ("dirty_tiles", Json::num(dr_tiles as f64)),
+            ("total_tiles", Json::num(dr_total as f64)),
+            ("dirty_ms", Json::num(dirty_ms)),
+            ("full_ms", Json::num(full_ms)),
+            ("speedup", Json::num(dr_speedup)),
+        ]),
+    );
+    println!(
+        "dirty refresh ({dr_key}, {:.0}% of tiles): full {full_ms:.1} ms -> scoped {dirty_ms:.1} ms (x{dr_speedup:.2})",
+        dirty_fraction * 100.0
     );
 
     // ---- serving throughput (continuous batching over a 2-chip fleet)

@@ -48,7 +48,7 @@ use super::tiles::{
 use crate::runtime::params::Params;
 use crate::util::prng::Pcg64;
 use crate::util::tensor::Tensor;
-use crate::util::{fnv1a, parallel};
+use crate::util::{fnv1a, parallel, simd};
 
 /// One minute in seconds.
 pub const SECS_PER_MINUTE: f64 = 60.0;
@@ -161,6 +161,44 @@ impl DriftPass {
         // g *= (t/t0)^(-ν); exact zeros stay zero (multiplicative)
         *g *= (-(nu as f64) * self.log_ratio).exp() as f32;
     }
+
+    /// Decay a contiguous run of devices, in data order. Lane path:
+    /// the ν draws are pre-filled in exact stream order
+    /// (`fill_normal` consumes the same Box–Muller sequence as the
+    /// per-device `normal_f32` calls of the scalar loop), the ν
+    /// clip/scale arithmetic runs in lane batches, and the f64 `exp`
+    /// stays one scalar libm call per element — a vectorized
+    /// transcendental would change bits; the ν select and multiply
+    /// cannot.
+    fn decay_run(&self, gs: &mut [f32], dev_rng: &mut Pcg64) {
+        if !simd::enabled() {
+            for g in gs.iter_mut() {
+                self.decay(g, dev_rng);
+            }
+            return;
+        }
+        const L: usize = simd::LANES;
+        let (mean, std) = (self.model.nu_mean, self.model.nu_std);
+        // sequential chunks bound the draw buffer on large tensors
+        // while preserving the stream order exactly
+        for chunk in gs.chunks_mut(4096) {
+            simd::with_scratch(chunk.len(), |nus| {
+                dev_rng.fill_normal(nus);
+                let split = chunk.len() - chunk.len() % L;
+                for batch in nus[..split].chunks_exact_mut(L) {
+                    for l in 0..L {
+                        batch[l] = (mean + std * batch[l]).max(0.0);
+                    }
+                }
+                for d in nus[split..].iter_mut() {
+                    *d = (mean + std * *d).max(0.0);
+                }
+                for (g, &nu) in chunk.iter_mut().zip(nus.iter()) {
+                    *g *= (-(nu as f64) * self.log_ratio).exp() as f32;
+                }
+            });
+        }
+    }
 }
 
 impl DevicePass for DriftPass {
@@ -176,9 +214,7 @@ impl DevicePass for DriftPass {
         // drift is per device, so the channel axis goes unused; the
         // legacy stream scans the stacked tensor flat, in data order
         let mut dev_rng = self.rng.fold_in(fnv1a(cx.key.as_bytes()));
-        for g in cur.data.iter_mut() {
-            self.decay(g, &mut dev_rng);
-        }
+        self.decay_run(&mut cur.data, &mut dev_rng);
     }
 
     fn run_tile(
@@ -190,7 +226,10 @@ impl DevicePass for DriftPass {
         _reference: Option<&TileSlice>,
     ) {
         let mut dev_rng = self.rng.fold_in(tiles::tile_key(cx.key, s, tile.tr, tile.tc));
-        cur.map_devices(|g| self.decay(g, &mut dev_rng));
+        // row segments are contiguous and visit devices in the same
+        // row-major order `map_devices` does, so the ν stream is
+        // unchanged while the decay runs on whole slices
+        cur.map_rows(|row| self.decay_run(row, &mut dev_rng));
     }
 }
 
@@ -340,10 +379,7 @@ impl DevicePass for GdcApplyPass<'_> {
     fn run_tensor(&self, cx: &PassCtx, cur: &mut Tensor, _reference: Option<&Tensor>) {
         let Some(ts) = self.scales.get(cx.key) else { return };
         if ts.scales.len() == 1 {
-            let s = ts.scales[0];
-            for v in cur.data.iter_mut() {
-                *v *= s;
-            }
+            simd::scale_slice(&mut cur.data, ts.scales[0]);
         } else {
             // per-tile scales on a tensor the plan's tiling does not
             // split (a caller mixing partitionings): honor the grid
@@ -351,7 +387,7 @@ impl DevicePass for GdcApplyPass<'_> {
             let (gr, gc) = (ts.grid.n_tile_rows(), ts.grid.n_tile_cols());
             tiles::for_each_tile(cur, &ts.grid, |s, tile, view| {
                 let scale = ts.scales[s * gr * gc + tile.tr * gc + tile.tc];
-                view.map_devices(|v| *v *= scale);
+                view.map_rows(|row| simd::scale_slice(row, scale));
             });
         }
     }
@@ -381,7 +417,7 @@ impl DevicePass for GdcApplyPass<'_> {
             let (gr, gc) = (ts.grid.n_tile_rows(), ts.grid.n_tile_cols());
             ts.scales[s * gr * gc + tile.tr * gc + tile.tc]
         };
-        cur.map_devices(|v| *v *= scale);
+        cur.map_rows(|row| simd::scale_slice(row, scale));
     }
 }
 
@@ -541,9 +577,7 @@ impl DevicePass for GdcCalibratePass {
             |sa, i, j| r.data[sa * k * n + i * n + j],
             |sa, i, j| cur.data[sa * k * n + i * n + j],
         );
-        for v in cur.data.iter_mut() {
-            *v *= scale;
-        }
+        simd::scale_slice(&mut cur.data, scale);
         let entry = TileScales { grid: cx.grid, stack: 1, scales: vec![scale] };
         self.out.lock().unwrap_or_else(|e| e.into_inner()).insert(cx.key.to_string(), entry);
     }
@@ -574,7 +608,7 @@ impl DevicePass for GdcCalibratePass {
             |_, i, j| r.at(i - tile.row_start, j - tile.col_start),
             |_, i, j| cur.at(i - tile.row_start, j - tile.col_start),
         );
-        cur.map_devices(|v| *v *= scale);
+        cur.map_rows(|row| simd::scale_slice(row, scale));
         let (gr, gc) = (cx.grid.n_tile_rows(), cx.grid.n_tile_cols());
         let mut st = self.cur.lock().unwrap_or_else(|e| e.into_inner());
         st.scales[s * gr * gc + tile.tr * gc + tile.tc] = scale;
@@ -745,6 +779,28 @@ mod tests {
         // oversized tiles collapse to the legacy per-tensor stream
         let huge = apply_tiled(&p, &DriftModel::default(), SECS_PER_MONTH, 7, &Tiling::new(64, 64));
         assert_eq!(huge, legacy);
+    }
+
+    #[test]
+    fn lane_batched_drift_and_gdc_match_the_scalar_reference_byte_for_byte() {
+        let p = Params::init(&dims(), 5);
+        for tiling in [Tiling::unbounded(), Tiling::new(3, 5)] {
+            let lanes = simd::with_simd(true, || {
+                let aged = apply_tiled(&p, &DriftModel::default(), SECS_PER_MONTH, 7, &tiling);
+                let scales = gdc_calibrate(&p, &aged, GDC_CALIB_VECS, 7, &tiling);
+                let mut corrected = aged.clone();
+                apply_scales(&mut corrected, &scales, &tiling);
+                (aged, scales, corrected)
+            });
+            let scalar = simd::with_simd(false, || {
+                let aged = apply_tiled(&p, &DriftModel::default(), SECS_PER_MONTH, 7, &tiling);
+                let scales = gdc_calibrate(&p, &aged, GDC_CALIB_VECS, 7, &tiling);
+                let mut corrected = aged.clone();
+                apply_scales(&mut corrected, &scales, &tiling);
+                (aged, scales, corrected)
+            });
+            assert_eq!(lanes, scalar, "{tiling:?}");
+        }
     }
 
     #[test]

@@ -351,7 +351,18 @@ impl AdapterSet {
     /// Add every layer's correction to the matching tensors of
     /// `params` in place; tensors without an adapter pass through.
     pub fn apply(&self, params: &mut Params) {
+        self.apply_to(params, |_| true);
+    }
+
+    /// Like [`AdapterSet::apply`], restricted to tensors whose key
+    /// passes `touch` — the scoped dirty-refresh path re-applies
+    /// corrections only on the tensors it actually re-derived (the
+    /// rest already carry theirs from the last derivation).
+    pub fn apply_to(&self, params: &mut Params, touch: impl Fn(&str) -> bool) {
         for (key, adapter) in &self.layers {
+            if !touch(key) {
+                continue;
+            }
             if let Some(t) = params.map.get_mut(key) {
                 adapter.add_to(t);
             }

@@ -27,9 +27,9 @@ use super::tiles::{
     self, DevicePass, PassCtx, PassPlan, TileRef, TileSlice, TileView, Tiling,
 };
 use crate::runtime::params::Params;
-use crate::util::fnv1a;
 use crate::util::prng::Pcg64;
 use crate::util::tensor::Tensor;
+use crate::util::{fnv1a, simd};
 
 /// Which noise to apply at evaluation time.
 #[derive(Clone, Debug, PartialEq)]
@@ -148,10 +148,37 @@ impl DevicePass for NoisePass<'_> {
 }
 
 fn perturb_channel(chan: &mut [f32], model: &NoiseModel, rng: &mut Pcg64) {
-    let cmax = chan.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let cmax = simd::max_abs(chan);
     if cmax == 0.0 {
         return;
     }
+    // Lane path: the scalar loop below consumes exactly one normal per
+    // *nonzero* element (§3.2 zeros draw nothing), which makes the
+    // stream data-dependent. On an all-nonzero channel — the common
+    // case for trained weights — draws align 1:1 with elements, so we
+    // can pre-fill them in exact stream order and batch the remaining
+    // pure element-local arithmetic; channels carrying exact zeros
+    // keep the scalar reference loop.
+    if simd::enabled() && chan.iter().all(|&v| v != 0.0) {
+        simd::with_scratch(chan.len(), |draws| {
+            rng.fill_normal(draws);
+            match model {
+                // σ = 0: `v + 0.0·d` is exact for nonzero v (draws are
+                // still consumed, matching the scalar loop)
+                NoiseModel::None => perturb_gaussian_lanes(chan, 0.0, draws),
+                NoiseModel::Gaussian { gamma } => {
+                    perturb_gaussian_lanes(chan, gamma * cmax, draws)
+                }
+                NoiseModel::Affine { gamma, beta } => {
+                    perturb_affine_lanes(chan, gamma * cmax, *beta, draws)
+                }
+                NoiseModel::Pcm => perturb_pcm_lanes(chan, cmax, draws),
+            }
+        });
+        return;
+    }
+    // scalar reference path (AFM_NO_SIMD=1, and always for channels
+    // with exact zeros)
     for v in chan.iter_mut() {
         if *v == 0.0 {
             continue; // exact zeros carry no noise (§3.2) — every model
@@ -163,6 +190,50 @@ fn perturb_channel(chan: &mut [f32], model: &NoiseModel, rng: &mut Pcg64) {
             NoiseModel::Pcm => pcm_sigma_frac(*v / cmax) * cmax,
         };
         *v += sigma * rng.normal_f32();
+    }
+}
+
+const L: usize = simd::LANES;
+
+/// `v += σ · d` with a constant σ, in explicit lane batches — the
+/// same expression per element as the scalar loop, so byte-identical.
+fn perturb_gaussian_lanes(chan: &mut [f32], sigma: f32, draws: &[f32]) {
+    let split = chan.len() - chan.len() % L;
+    for (vs, ds) in chan[..split].chunks_exact_mut(L).zip(draws[..split].chunks_exact(L)) {
+        for l in 0..L {
+            vs[l] += sigma * ds[l];
+        }
+    }
+    for (v, d) in chan[split..].iter_mut().zip(&draws[split..]) {
+        *v += sigma * d;
+    }
+}
+
+/// `v += (γ·cmax + β·|v|) · d` in lane batches (eq. 5's affine σ).
+fn perturb_affine_lanes(chan: &mut [f32], gcmax: f32, beta: f32, draws: &[f32]) {
+    let split = chan.len() - chan.len() % L;
+    for (vs, ds) in chan[..split].chunks_exact_mut(L).zip(draws[..split].chunks_exact(L)) {
+        for l in 0..L {
+            vs[l] += (gcmax + beta * vs[l].abs()) * ds[l];
+        }
+    }
+    for (v, d) in chan[split..].iter_mut().zip(&draws[split..]) {
+        *v += (gcmax + beta * v.abs()) * d;
+    }
+}
+
+/// `v += σ_pcm(v/cmax)·cmax · d` in lane batches. Calls the same
+/// `pcm_sigma_frac` the scalar loop uses (its zero guard included, so
+/// even a quotient that underflows to 0 stays bit-identical).
+fn perturb_pcm_lanes(chan: &mut [f32], cmax: f32, draws: &[f32]) {
+    let split = chan.len() - chan.len() % L;
+    for (vs, ds) in chan[..split].chunks_exact_mut(L).zip(draws[..split].chunks_exact(L)) {
+        for l in 0..L {
+            vs[l] += pcm_sigma_frac(vs[l] / cmax) * cmax * ds[l];
+        }
+    }
+    for (v, d) in chan[split..].iter_mut().zip(&draws[split..]) {
+        *v += pcm_sigma_frac(*v / cmax) * cmax * d;
     }
 }
 
@@ -278,6 +349,36 @@ mod tests {
             let q = apply(&p, nm, 7);
             assert!(q.get("wq").data.iter().all(|&v| v == 0.0), "{}", nm.label());
         }
+    }
+
+    #[test]
+    fn lane_batched_noise_matches_the_scalar_reference_byte_for_byte() {
+        // the tentpole invariant, locally: every model × a ragged
+        // tiling × a channel length that is not a lane multiple
+        let models = [
+            NoiseModel::Gaussian { gamma: 0.05 },
+            NoiseModel::Affine { gamma: 0.05, beta: 0.02 },
+            NoiseModel::Pcm,
+        ];
+        let p = Params::init(&dims(), 1);
+        for nm in &models {
+            for tiling in [Tiling::unbounded(), Tiling::new(3, 3)] {
+                let lanes = simd::with_simd(true, || apply_tiled(&p, nm, 13, &tiling));
+                let scalar = simd::with_simd(false, || apply_tiled(&p, nm, 13, &tiling));
+                assert_eq!(lanes, scalar, "{} {tiling:?}", nm.label());
+            }
+        }
+        // zeros force the scalar loop inside the lane path too: the
+        // data-dependent draw stream must survive either mode
+        let mut z = p.clone();
+        for (i, v) in z.get_mut("wq").data.iter_mut().enumerate() {
+            if i % 5 == 0 {
+                *v = 0.0;
+            }
+        }
+        let lanes = simd::with_simd(true, || apply(&z, &NoiseModel::Pcm, 13));
+        let scalar = simd::with_simd(false, || apply(&z, &NoiseModel::Pcm, 13));
+        assert_eq!(lanes, scalar);
     }
 
     #[test]

@@ -11,6 +11,7 @@ use super::tiles::{
     self, ChannelAxis, DevicePass, PassCtx, PassPlan, TileRef, TileSlice, TileView, Tiling,
 };
 use crate::runtime::{lit_scalar_f32, Params, Runtime};
+use crate::util::simd;
 use crate::util::tensor::Tensor;
 
 /// Signed symmetric quantization levels for a bit width: 2^(bits-1)-1,
@@ -58,20 +59,20 @@ fn run_quant(rt: &Runtime, artifact: &str, params: &Params, bits: u32) -> Result
     Params::from_literals(&params.keys, &outs, 0)
 }
 
-/// Host-side per-channel RTN (testing / tooling mirror of the L1 kernel).
+/// Host-side per-channel RTN (testing / tooling mirror of the L1
+/// kernel). The range reduction and the snap loop run as explicit f32
+/// lane batches (`util::simd`) — both are byte-identical to the
+/// scalar reference, which `AFM_NO_SIMD=1` selects.
 pub fn rtn_channel(chan: &mut [f32], bits: u32) {
     let lv = levels(bits);
     if lv <= 0.0 {
         return; // 0 bits = quantization off, never an infinite scale
     }
-    let cmax = chan.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let cmax = simd::max_abs(chan);
     if cmax == 0.0 {
         return;
     }
-    let scale = cmax / lv;
-    for v in chan.iter_mut() {
-        *v = (*v / scale).round().clamp(-lv, lv) * scale;
-    }
+    simd::quantize_slice(chan, cmax / lv, lv);
 }
 
 /// Host-side per-tile RTN of one tensor: each crossbar tile of
@@ -187,6 +188,21 @@ mod tests {
                 let k = v / step;
                 assert!((k - k.round()).abs() < 1e-3);
                 assert!(k.abs() <= 7.001);
+            }
+        });
+    }
+
+    #[test]
+    fn lane_batched_rtn_matches_the_scalar_reference_byte_for_byte() {
+        check("rtn-lanes-vs-scalar", 100, |g| {
+            let n = g.usize_in(1, 67); // covers sub-lane and ragged tails
+            let chan = g.vec_normal(n);
+            for bits in [1u32, 4, 8] {
+                let mut lanes = chan.clone();
+                let mut scalar = chan.clone();
+                simd::with_simd(true, || rtn_channel(&mut lanes, bits));
+                simd::with_simd(false, || rtn_channel(&mut scalar, bits));
+                assert_eq!(lanes, scalar, "bits={bits}");
             }
         });
     }

@@ -685,14 +685,55 @@ impl<'p> PassPlan<'p> {
         self.execute(None, params);
     }
 
+    /// Run the stack over only the analog tensors `touch` selects —
+    /// the incremental (dirty-tensor) refresh path behind
+    /// `ChipDeployment`'s per-tensor dirtiness tracking. `out` must
+    /// already hold a previous derivation with `input`'s layout
+    /// (asserted): touched tensors are re-derived from `input` exactly
+    /// as [`run`](PassPlan::run) would, untouched tensors — digital
+    /// ones included — keep their bytes. Because every pass keys its
+    /// RNG per tensor/tile (never across tensors), the result is
+    /// byte-identical to a full `run` whenever the untouched tensors
+    /// were last derived under the same pass configuration — the
+    /// invariant the differential fuzz suite and the dirty-refresh
+    /// conformance goldens pin.
+    pub fn run_scoped(
+        &self,
+        input: &Params,
+        out: &mut Params,
+        touch: &(dyn Fn(&str) -> bool + Sync),
+    ) {
+        let layout_matches = out.keys == input.keys
+            && input.map.iter().all(|(k, t)| out.map.get(k).is_some_and(|o| o.shape == t.shape));
+        assert!(
+            layout_matches,
+            "run_scoped [{}] needs a previously derived buffer (layout mismatch)",
+            self.label()
+        );
+        self.execute_scoped(Some(input), out, Some(touch));
+    }
+
     fn execute(&self, input: Option<&Params>, out: &mut Params) {
+        self.execute_scoped(input, out, None);
+    }
+
+    fn execute_scoped(
+        &self,
+        input: Option<&Params>,
+        out: &mut Params,
+        touch: Option<&(dyn Fn(&str) -> bool + Sync)>,
+    ) {
         if self.passes.is_empty() && input.is_none() {
             return;
         }
         let tiling = self.tiling;
         let passes: &[&dyn DevicePass] = &self.passes;
+        let mut work = analog_work(out);
+        if let Some(touch) = touch {
+            work.retain(|(key, _, _)| touch(key));
+        }
         crate::util::parallel::for_each_split(
-            analog_work(out),
+            work,
             |(_, _, t)| {
                 let (_, k, n) = t.as_matrix_stack();
                 !tiling.grid_for(k, n).is_single()
@@ -1057,6 +1098,32 @@ mod tests {
         let mut q = p.clone();
         plan.run_in_place(&mut q);
         assert_eq!(q, p);
+    }
+
+    #[test]
+    fn run_scoped_rederives_only_touched_tensors_byte_identically() {
+        let p = pass_params();
+        let add = AddDraw { rng: crate::util::prng::Pcg64::with_stream(9, 0xfeed) };
+        for tiling in [Tiling::unbounded(), Tiling::new(3, 5)] {
+            let plan = PassPlan::new(tiling).then(&add);
+            let mut full = p.clone();
+            plan.run(&p, &mut full);
+            // corrupt one tensor, then scoped-refresh just that key:
+            // byte-identical to the full derivation
+            let mut out = full.clone();
+            for v in out.get_mut("wq").data.iter_mut() {
+                *v = f32::NAN;
+            }
+            plan.run_scoped(&p, &mut out, &|k| k == "wq");
+            assert_eq!(out, full, "{tiling:?}");
+            // untouched tensors keep their bytes (that is the point:
+            // the caller vouches they are already derived)
+            let mut stale = full.clone();
+            stale.get_mut("emb").data[0] = 42.0;
+            plan.run_scoped(&p, &mut stale, &|k| k == "wq");
+            assert_eq!(stale.get("emb").data[0], 42.0, "{tiling:?}");
+            assert_eq!(stale.get("wq"), full.get("wq"), "{tiling:?}");
+        }
     }
 
     #[test]

@@ -107,6 +107,42 @@ impl Params {
             .collect()
     }
 
+    /// The literal for the single tensor named `key` — the per-tensor
+    /// upload a scoped dirty refresh patches into an existing literal
+    /// vector instead of rebuilding all of them.
+    pub fn to_literal(&self, key: &str) -> Result<xla::Literal> {
+        let t = self.map.get(key).ok_or_else(|| anyhow!("no tensor named {key}"))?;
+        super::literal::lit_tensor(t)
+    }
+
+    /// Incremental [`Params::fingerprint`]: `chain[i]` holds the FNV
+    /// fold state *entering* `keys[i]` (`chain[0]` is the offset
+    /// basis, `chain[keys.len()]` the finished digest), so a caller
+    /// that only mutated tensors at key index >= `from` resumes the
+    /// fold there instead of re-hashing the whole parameter set. A
+    /// `chain` of the wrong length is rebuilt from scratch (`from` is
+    /// forced to 0). Always returns the same digest as
+    /// `fingerprint()`.
+    pub fn fingerprint_chain(&self, from: usize, chain: &mut Vec<u64>) -> u64 {
+        use crate::util::{fnv1a, fnv1a_fold, FNV_OFFSET};
+        let n = self.keys.len();
+        let mut from = from.min(n);
+        if chain.len() != n + 1 {
+            chain.clear();
+            chain.resize(n + 1, FNV_OFFSET);
+            from = 0;
+        }
+        for i in from..n {
+            let key = &self.keys[i];
+            let mut h = fnv1a_fold(chain[i], fnv1a(key.as_bytes()));
+            for v in &self.map[key].data {
+                h = fnv1a_fold(h, v.to_bits() as u64);
+            }
+            chain[i + 1] = h;
+        }
+        chain[n]
+    }
+
     /// Rebuild from a slice of output literals (artifact outputs carry
     /// params in key order starting at `offset`).
     pub fn from_literals(
@@ -207,6 +243,30 @@ mod tests {
     fn init_is_deterministic() {
         assert_eq!(Params::init(&dims(), 5), Params::init(&dims(), 5));
         assert_ne!(Params::init(&dims(), 5), Params::init(&dims(), 6));
+    }
+
+    #[test]
+    fn fingerprint_chain_matches_the_monolithic_fold_and_resumes_mid_key() {
+        let mut p = Params::init(&dims(), 9);
+        let mut chain = Vec::new();
+        assert_eq!(p.fingerprint_chain(0, &mut chain), p.fingerprint());
+        assert_eq!(chain.len(), p.keys.len() + 1);
+        // mutate the *last* key ("betas" is keys[2]) and resume there:
+        // the prefix states stay valid, the digest matches a full fold
+        p.get_mut("betas").data[0] = 42.0;
+        assert_eq!(p.fingerprint_chain(2, &mut chain), p.fingerprint());
+        // a stale/short chain forces a full rebuild instead of trusting
+        // bogus prefix states
+        let mut bogus = vec![0u64; 2];
+        assert_eq!(p.fingerprint_chain(2, &mut bogus), p.fingerprint());
+        assert_eq!(bogus.len(), p.keys.len() + 1);
+    }
+
+    #[test]
+    fn to_literal_errors_on_unknown_keys() {
+        let p = Params::init(&dims(), 9);
+        assert!(p.to_literal("emb").is_ok());
+        assert!(p.to_literal("nope").is_err());
     }
 
     #[test]

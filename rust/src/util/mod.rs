@@ -6,6 +6,7 @@ pub mod json;
 pub mod parallel;
 pub mod prng;
 pub mod quickcheck;
+pub mod simd;
 pub mod stats;
 pub mod tensor;
 

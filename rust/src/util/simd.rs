@@ -1,0 +1,261 @@
+//! Explicit f32 lane batches for the device-physics hot loops.
+//!
+//! `std::simd` is nightly-only, so the vector substrate is the stable
+//! idiom the auto-vectorizer reliably lowers to SIMD: fixed-width
+//! [`LANES`]-sized chunks via `chunks_exact`, with a scalar tail.
+//! The byte-identity contract (docs/ARCHITECTURE.md, "Parallel
+//! runtime & determinism contract") extends to lanes: a kernel may
+//! only batch arithmetic that is *element-local* (each output is the
+//! scalar expression of its own input, so chunking cannot change a
+//! bit) or reductions that are exactly associative on f32 (`max` over
+//! magnitudes is a select, never a rounding op). RNG draws are never
+//! vectorized: callers pre-fill normals in stream order
+//! (`Pcg64::fill_normal`, via [`with_scratch`]) and hand the batch
+//! kernels a draw slice, so lane shape can never reorder a stream —
+//! which is what keeps lane order out of the bytes entirely.
+//!
+//! `AFM_NO_SIMD=1` (or a [`force`]/[`with_simd`] override) routes
+//! every helper through its scalar reference loop — the escape hatch
+//! CI uses to keep the reference path exercised — and the
+//! differential fuzz suite (`rust/tests/differential.rs`) pins
+//! lane == scalar byte-for-byte across the config space.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Lane width of the explicit f32 batches: one AVX2 register (two SSE
+/// / NEON registers), and a multiple of every narrower unit — wide
+/// enough to keep the auto-vectorizer busy, small enough that ragged
+/// tile tails stay cheap.
+pub const LANES: usize = 8;
+
+const MODE_UNSET: u8 = 0;
+const MODE_ON: u8 = 1;
+const MODE_OFF: u8 = 2;
+
+/// process-wide kernel-selection override; `MODE_UNSET` defers to the
+/// `AFM_NO_SIMD` environment variable
+static OVERRIDE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+
+/// serializes [`with_simd`] scopes so concurrent togglers (the
+/// differential tests compare both paths in-process) cannot
+/// interleave overrides
+static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+fn env_enabled() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| std::env::var("AFM_NO_SIMD").map(|v| v.trim() != "1").unwrap_or(true))
+}
+
+/// Whether the lane-batched kernels are active: the [`force`]
+/// override if set, else on unless `AFM_NO_SIMD=1`. Purely a
+/// code-path selector — both answers produce identical bytes, which
+/// the differential suite enforces.
+pub fn enabled() -> bool {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        MODE_ON => true,
+        MODE_OFF => false,
+        _ => env_enabled(),
+    }
+}
+
+/// Install a process-wide kernel-selection override: `Some(false)` =
+/// scalar reference loops, `Some(true)` = lane batches, `None` =
+/// defer to `AFM_NO_SIMD`. Prefer [`with_simd`] in tests — it scopes
+/// and serializes the override.
+pub fn force(mode: Option<bool>) {
+    let m = match mode {
+        Some(true) => MODE_ON,
+        Some(false) => MODE_OFF,
+        None => MODE_UNSET,
+    };
+    OVERRIDE.store(m, Ordering::Relaxed);
+}
+
+/// Run `f` with the kernel selection forced to `on`, restoring the
+/// previous override afterwards — even on panic. Scopes are
+/// serialized process-wide so concurrent lane/scalar comparisons
+/// cannot interleave. Do not nest: a `with_simd` call inside `f`
+/// self-deadlocks. Safe to use inside `parallel::with_threads` (the
+/// two knobs hold different locks; keep threads outermost).
+pub fn with_simd<R>(on: bool, f: impl FnOnce() -> R) -> R {
+    let _g = MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    struct Restore(u8);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            OVERRIDE.store(self.0, Ordering::Relaxed);
+        }
+    }
+    let _restore = Restore(OVERRIDE.swap(
+        if on { MODE_ON } else { MODE_OFF },
+        Ordering::Relaxed,
+    ));
+    f()
+}
+
+thread_local! {
+    /// recycled per-thread draw buffer for the pre-fill-then-batch
+    /// kernels (taken/restored, so accidental nesting allocates a
+    /// fresh buffer instead of aliasing or panicking)
+    static SCRATCH: Cell<Vec<f32>> = const { Cell::new(Vec::new()) };
+}
+
+/// Hand `f` a recycled thread-local buffer of exactly `len` f32s.
+/// Contents are unspecified on entry — callers fill it first (the
+/// noise/drift kernels run `Pcg64::fill_normal` over it to draw their
+/// streams in scalar order before any lane arithmetic touches them).
+pub fn with_scratch<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    SCRATCH.with(|cell| {
+        let mut buf = cell.take();
+        if buf.len() < len {
+            buf.resize(len, 0.0);
+        }
+        let r = f(&mut buf[..len]);
+        cell.set(buf);
+        r
+    })
+}
+
+/// max |x| over a slice — the channel-range reduction the noise and
+/// RTN kernels start with. `f32::max` over absolute values is a pure
+/// select between operands (no rounding, and `abs` never yields
+/// `-0.0`), hence exactly associative and commutative here, so the
+/// lane-split accumulator is byte-identical to the scalar fold.
+pub fn max_abs(xs: &[f32]) -> f32 {
+    if !enabled() || xs.len() < LANES {
+        return xs.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    }
+    let split = xs.len() - xs.len() % LANES;
+    let mut acc = [0.0f32; LANES];
+    for chunk in xs[..split].chunks_exact(LANES) {
+        for l in 0..LANES {
+            acc[l] = acc[l].max(chunk[l].abs());
+        }
+    }
+    let mut m = acc.iter().fold(0.0f32, |m, &v| m.max(v));
+    for &v in &xs[split..] {
+        m = m.max(v.abs());
+    }
+    m
+}
+
+/// `x *= s` over a slice — the GDC per-tile output rescale.
+/// Element-local, so lane batching is trivially byte-identical.
+pub fn scale_slice(xs: &mut [f32], s: f32) {
+    if !enabled() {
+        for v in xs.iter_mut() {
+            *v *= s;
+        }
+        return;
+    }
+    let split = xs.len() - xs.len() % LANES;
+    for chunk in xs[..split].chunks_exact_mut(LANES) {
+        for l in 0..LANES {
+            chunk[l] *= s;
+        }
+    }
+    for v in xs[split..].iter_mut() {
+        *v *= s;
+    }
+}
+
+/// RTN snap `x = round(x / scale).clamp(-lv, lv) * scale` per element
+/// — the quantizer's inner loop. Element-local (round and clamp are
+/// per-lane ops), so lane batching is byte-identical to the scalar
+/// reference.
+pub fn quantize_slice(xs: &mut [f32], scale: f32, lv: f32) {
+    if !enabled() {
+        for v in xs.iter_mut() {
+            *v = (*v / scale).round().clamp(-lv, lv) * scale;
+        }
+        return;
+    }
+    let split = xs.len() - xs.len() % LANES;
+    for chunk in xs[..split].chunks_exact_mut(LANES) {
+        for l in 0..LANES {
+            chunk[l] = (chunk[l] / scale).round().clamp(-lv, lv) * scale;
+        }
+    }
+    for v in xs[split..].iter_mut() {
+        *v = (*v / scale).round().clamp(-lv, lv) * scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::check;
+
+    #[test]
+    fn max_abs_matches_scalar_fold_at_every_length() {
+        check("simd-max-abs", 100, |g| {
+            let n = g.usize_in(0, 67); // covers empty, sub-lane, ragged tails
+            let xs = g.vec_normal(n);
+            let want = xs.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let lanes = with_simd(true, || max_abs(&xs));
+            let scalar = with_simd(false, || max_abs(&xs));
+            assert_eq!(lanes.to_bits(), want.to_bits());
+            assert_eq!(scalar.to_bits(), want.to_bits());
+        });
+    }
+
+    #[test]
+    fn quantize_slice_is_byte_identical_across_modes() {
+        check("simd-quantize", 100, |g| {
+            let n = g.usize_in(1, 67);
+            let xs = g.vec_normal(n);
+            let cmax = xs.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            if cmax == 0.0 {
+                return;
+            }
+            let (scale, lv) = (cmax / 7.0, 7.0);
+            let mut a = xs.clone();
+            let mut b = xs.clone();
+            with_simd(true, || quantize_slice(&mut a, scale, lv));
+            with_simd(false, || quantize_slice(&mut b, scale, lv));
+            assert_eq!(a, b);
+        });
+    }
+
+    #[test]
+    fn scale_slice_is_byte_identical_across_modes() {
+        check("simd-scale", 100, |g| {
+            let n = g.usize_in(0, 67);
+            let xs = g.vec_normal(n);
+            let s = 1.0 + g.usize_in(0, 100) as f32 * 0.01;
+            let mut a = xs.clone();
+            let mut b = xs.clone();
+            with_simd(true, || scale_slice(&mut a, s));
+            with_simd(false, || scale_slice(&mut b, s));
+            assert_eq!(a, b);
+        });
+    }
+
+    #[test]
+    fn with_simd_pins_and_restores_the_override() {
+        with_simd(false, || {
+            assert!(!enabled());
+            force(Some(true)); // a raw force inside the scope is visible...
+            assert!(enabled());
+        });
+        // ...but the scope restores its entry state on exit (the
+        // default defers to the environment, which tests leave unset)
+        with_simd(true, || assert!(enabled()));
+    }
+
+    #[test]
+    fn with_scratch_recycles_and_sizes_exactly() {
+        with_scratch(16, |buf| {
+            assert_eq!(buf.len(), 16);
+            buf.fill(1.0);
+        });
+        with_scratch(4, |buf| assert_eq!(buf.len(), 4));
+        // nesting takes the buffer, so the inner scope gets its own
+        with_scratch(8, |outer| {
+            outer.fill(2.0);
+            with_scratch(8, |inner| inner.fill(3.0));
+            assert!(outer.iter().all(|&v| v == 2.0));
+        });
+    }
+}

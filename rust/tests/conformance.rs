@@ -142,6 +142,44 @@ fn serve_fp(tiling: Tiling) -> u64 {
     fp_report(&srv.run(conformance_workload()).unwrap())
 }
 
+/// The dirty-refresh schedule: one chip walked through ages,
+/// recalibrations, and sidecar swaps, with the fingerprint pinned
+/// after every step. Steps 4 and 5 change sidecars at an unchanged
+/// age, so they exercise `ChipDeployment`'s incremental refresh
+/// paths — the golden pins that a scoped re-derivation lands on the
+/// exact bytes a full rebuild would produce.
+fn refresh_fps(tiling: Tiling) -> Vec<(&'static str, u64)> {
+    let p = golden_params();
+    let hw = HwConfig::afm_train(0.0).with_tiles(tiling.rows, tiling.cols);
+    let mut c = ChipDeployment::provision(&p, &NoiseModel::Pcm, SEED, &hw).unwrap();
+    let mut steps = Vec::new();
+    c.age_to(drift::SECS_PER_HOUR).unwrap();
+    steps.push(("step1-age1h", c.fingerprint()));
+    c.gdc_calibrate().unwrap();
+    steps.push(("step2-gdc", c.fingerprint()));
+    c.age_to(drift::SECS_PER_MONTH).unwrap();
+    steps.push(("step3-age1mo", c.fingerprint()));
+    // global physics change at the same age: full re-derivation
+    c.set_rtn_mirror(4);
+    c.refresh().unwrap();
+    steps.push(("step4-rtn4", c.fingerprint()));
+    // per-tensor sidecar swap at the same age: scoped re-derivation
+    let set = afm::coordinator::hwa::fit_deployment_adapters(
+        &c,
+        &p,
+        drift::SECS_PER_MONTH,
+        true,
+        2,
+        8,
+    );
+    c.set_adapters(Some(set));
+    c.refresh().unwrap();
+    steps.push(("step5-adapters", c.fingerprint()));
+    c.age_to(drift::SECS_PER_YEAR).unwrap();
+    steps.push(("step6-age1y", c.fingerprint()));
+    steps
+}
+
 /// The full golden matrix: config name → output fingerprint.
 fn compute_goldens() -> Vec<(String, u64)> {
     let p = golden_params();
@@ -173,6 +211,13 @@ fn compute_goldens() -> Vec<(String, u64)> {
     // end-to-end serving (provision → drift schedule → scheduler)
     for tiling in tilings() {
         out.push((format!("serve/t{}", tiling.label()), serve_fp(tiling)));
+    }
+    // dirty-refresh schedule: per-step chip fingerprints, including
+    // the scoped (incremental) sidecar-swap derivations
+    for tiling in tilings() {
+        for (step, fp) in refresh_fps(tiling) {
+            out.push((format!("refresh/{step}/t{}", tiling.label()), fp));
+        }
     }
     out
 }
@@ -367,6 +412,25 @@ fn serve_reports_are_identical_field_by_field_not_just_by_fingerprint() {
         assert_eq!(par.stats.completed, serial.stats.completed);
         assert_eq!(par.stats.total_tokens, serial.stats.total_tokens);
         assert_eq!(par.stats.lm_steps, serial.stats.lm_steps);
+    }
+}
+
+#[test]
+fn dirty_refresh_schedule_is_byte_identical_across_thread_counts_and_lane_modes() {
+    // scoped (incremental) refreshes must land on the same bytes as
+    // the serial scalar reference at any pool width and in both lane
+    // modes — the contract that makes the refresh goldens meaningful.
+    // Lock order: thread knob outermost, SIMD mode inner (both are
+    // process-global and mutex-guarded).
+    use afm::util::simd::with_simd;
+    for tiling in [Tiling::unbounded(), Tiling::new(100, 100)] {
+        let serial = with_threads(1, || with_simd(false, || refresh_fps(tiling)));
+        for t in [1usize, 4] {
+            for lanes in [false, true] {
+                let got = with_threads(t, || with_simd(lanes, || refresh_fps(tiling)));
+                assert_eq!(got, serial, "refresh t{} threads={t} simd={lanes}", tiling.label());
+            }
+        }
     }
 }
 

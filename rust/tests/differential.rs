@@ -1,0 +1,225 @@
+//! Differential fuzz harness: seeded random deployment configurations
+//! checked for byte-identity across the three execution strategies the
+//! crate promises are interchangeable —
+//!
+//! 1. **scalar vs SIMD** — explicit f32 lane batches (`util::simd`)
+//!    must reproduce the scalar reference bit-for-bit,
+//! 2. **dirty-refresh vs full rebuild** — `ChipDeployment`'s scoped
+//!    per-tensor re-derivation must land on the bytes a from-scratch
+//!    derivation produces,
+//! 3. **serial vs pooled** — both at 1 thread and at pool width 4.
+//!
+//! Each CI invocation replays `AFM_FUZZ_N` configurations (default 64)
+//! derived from `AFM_FUZZ_SEED` (default 0xD1FF); `scripts/check.sh`
+//! pins the seed so CI is reproducible. Every assertion message
+//! carries the full config plus a replay recipe
+//! (`AFM_FUZZ_SEED=<base> AFM_FUZZ_ONLY=<i>`) so a failing draw can be
+//! re-run in isolation.
+
+use afm::config::HwConfig;
+use afm::coordinator::drift;
+use afm::coordinator::hwa::{AdapterSet, LayerAdapter};
+use afm::coordinator::noise::NoiseModel;
+use afm::coordinator::tiles::Tiling;
+use afm::runtime::manifest::ModelDims;
+use afm::runtime::Params;
+use afm::serve::ChipDeployment;
+use afm::util::parallel::with_threads;
+use afm::util::prng::Pcg64;
+use afm::util::simd::with_simd;
+use std::collections::BTreeMap;
+
+/// Default fuzz base seed (`AFM_FUZZ_SEED` overrides).
+const BASE_SEED: u64 = 0xD1FF;
+
+/// One fuzzed deployment configuration: every axis the device-physics
+/// pipeline branches on.
+#[derive(Clone, Debug)]
+struct FuzzConfig {
+    noise: NoiseModel,
+    tiling: Tiling,
+    age: f64,
+    gdc: bool,
+    rtn_bits: u32,
+    /// single-tensor digital adapter: (key, rank), or None
+    adapter: Option<(&'static str, usize)>,
+    threads: usize,
+    hw_seed: u64,
+}
+
+/// Fuzz model: small but ragged under every fuzzed tiling (wq stacks
+/// two 37×29 matrices, emb is 41×29 with vocab-row channels), plus a
+/// digital tensor that must never be touched.
+fn fuzz_params() -> Params {
+    let mut shapes = BTreeMap::new();
+    shapes.insert("wq".to_string(), vec![2, 37, 29]);
+    shapes.insert("emb".to_string(), vec![41, 29]);
+    shapes.insert("ln_f".to_string(), vec![29]);
+    let dims = ModelDims {
+        d_model: 29,
+        n_layers: 2,
+        n_heads: 1,
+        d_ff: 58,
+        seq_len: 16,
+        vocab: 41,
+        n_cls: 0,
+        n_params: 0,
+        param_keys: vec!["wq".into(), "emb".into(), "ln_f".into()],
+        param_shapes: shapes,
+    };
+    Params::init(&dims, 11)
+}
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.trim().parse().ok()).unwrap_or(default)
+}
+
+/// Deterministically derive configuration `i` from `base`.
+fn gen_config(base: u64, i: usize) -> FuzzConfig {
+    let mut g = Pcg64::with_stream(base, fuzz_stream()).fold_in(i as u64);
+    let noise = match g.below(4) {
+        0 => NoiseModel::None,
+        1 => NoiseModel::Gaussian { gamma: 0.05 },
+        2 => NoiseModel::Affine { gamma: 0.05, beta: 0.02 },
+        _ => NoiseModel::Pcm,
+    };
+    let tiling = match g.below(4) {
+        0 => Tiling::unbounded(),
+        1 => Tiling::new(16, 16), // ragged on 37×29 / 41×29
+        2 => Tiling::new(10, 10),
+        _ => Tiling::new(13, 7),
+    };
+    let age = *g.choose(&[0.0, drift::SECS_PER_HOUR, drift::SECS_PER_MONTH, drift::SECS_PER_YEAR]);
+    let gdc = g.below(2) == 1;
+    let rtn_bits = *g.choose(&[0u32, 2, 4, 8]);
+    let adapter = match g.below(3) {
+        0 => None,
+        r => Some((*g.choose(&["wq", "emb"]), r)),
+    };
+    let threads = if g.below(2) == 0 { 1 } else { 4 };
+    let hw_seed = g.next_u64();
+    FuzzConfig { noise, tiling, age, gdc, rtn_bits, adapter, threads, hw_seed }
+}
+
+/// A fixed stream tag for the config generator (spells "f022" + fuzz).
+fn fuzz_stream() -> u64 {
+    0xf022_d1ff
+}
+
+/// A deterministic rank-r correction for one tensor: per-tensor dirt
+/// whose scoped refresh must cover strictly fewer tiles than a full
+/// rebuild (the other analog tensor stays untouched).
+fn random_adapters(p: &Params, key: &str, rank: usize, g: &mut Pcg64) -> AdapterSet {
+    let (stack, k, n) = p.get(key).as_matrix_stack();
+    let mut u = vec![0.0f32; stack * k * rank];
+    let mut v = vec![0.0f32; stack * n * rank];
+    g.fill_normal(&mut u);
+    g.fill_normal(&mut v);
+    for x in u.iter_mut().chain(v.iter_mut()) {
+        *x *= 0.05;
+    }
+    let mut layers = BTreeMap::new();
+    layers.insert(key.to_string(), LayerAdapter { shape: (stack, k, n), rank, u, v });
+    AdapterSet { layers }
+}
+
+/// Derive one chip through `cfg`'s full deployment schedule: sidecars
+/// installed *before* the aging tick, so every tensor derives in one
+/// from-scratch pass — the reference arm the scoped refresh is diffed
+/// against.
+fn deploy_full(p: &Params, cfg: &FuzzConfig, set: Option<&AdapterSet>) -> ChipDeployment {
+    let hw = HwConfig::afm_train(0.0).with_tiles(cfg.tiling.rows, cfg.tiling.cols);
+    let mut c = ChipDeployment::provision(p, &cfg.noise, cfg.hw_seed, &hw).unwrap();
+    if cfg.rtn_bits > 0 {
+        c.set_rtn_mirror(cfg.rtn_bits);
+    }
+    if let Some(s) = set {
+        c.set_adapters(Some(s.clone()));
+    }
+    if cfg.gdc {
+        c.age_and_recalibrate(cfg.age).unwrap();
+    } else {
+        c.age_to(cfg.age).unwrap();
+    }
+    c
+}
+
+#[test]
+fn fuzzed_configs_are_scalar_simd_and_dirty_refresh_identical() {
+    let base = env_u64("AFM_FUZZ_SEED", BASE_SEED);
+    let n = env_u64("AFM_FUZZ_N", 64) as usize;
+    let only = std::env::var("AFM_FUZZ_ONLY").ok().and_then(|v| v.trim().parse::<usize>().ok());
+    let p = fuzz_params();
+    for i in 0..n {
+        if only.is_some_and(|o| o != i) {
+            continue;
+        }
+        let cfg = gen_config(base, i);
+        let replay =
+            format!("config #{i} {cfg:?} (replay: AFM_FUZZ_SEED={base} AFM_FUZZ_ONLY={i})");
+        let mut adapter_rng = Pcg64::with_stream(base, fuzz_stream()).fold_in(i as u64 ^ 0xada7);
+        let set =
+            cfg.adapter.map(|(key, rank)| random_adapters(&p, key, rank, &mut adapter_rng));
+        let set2 =
+            cfg.adapter.map(|(key, rank)| random_adapters(&p, key, rank, &mut adapter_rng));
+
+        // serial vs pooled: the reference arm at both pool widths
+        let full_serial = with_threads(1, || deploy_full(&p, &cfg, set.as_ref()).fingerprint());
+        let full_pooled = with_threads(4, || deploy_full(&p, &cfg, set.as_ref()).fingerprint());
+        assert_eq!(full_pooled, full_serial, "threads=1 vs threads=4 diverged: {replay}");
+
+        with_threads(cfg.threads, || {
+            // scalar vs SIMD: lane batching must never change bytes
+            let lanes = with_simd(true, || deploy_full(&p, &cfg, set.as_ref()).fingerprint());
+            let scalar = with_simd(false, || deploy_full(&p, &cfg, set.as_ref()).fingerprint());
+            assert_eq!(lanes, scalar, "SIMD vs scalar diverged: {replay}");
+            assert_eq!(lanes, full_serial, "lane-mode arm vs reference diverged: {replay}");
+
+            // dirty refresh vs full rebuild: install the adapter *after*
+            // the aging tick so only its tensor re-derives
+            let mut dirty = deploy_full(&p, &cfg, None);
+            let analog_fp = dirty.fingerprint();
+            let before = dirty.tiles_rederived();
+            dirty.set_adapters(set.clone());
+            dirty.refresh().unwrap();
+            assert_eq!(dirty.fingerprint(), full_serial, "dirty refresh diverged: {replay}");
+            if cfg.adapter.is_some() && (cfg.age > 0.0 || cfg.gdc || cfg.rtn_bits > 0) {
+                // a real first derivation happened, so the sidecar swap
+                // must take the scoped path: strictly fewer tiles than
+                // the whole model
+                let delta = dirty.tiles_rederived() - before;
+                let total = dirty.tiles_used() as u64;
+                assert!(
+                    delta > 0 && delta < total,
+                    "expected a scoped refresh ({delta} of {total} tiles): {replay}"
+                );
+            }
+            // swapping the factors stays scoped and still matches a
+            // fresh full rebuild
+            if let Some(s2) = &set2 {
+                dirty.set_adapters(Some(s2.clone()));
+                dirty.refresh().unwrap();
+                let want = deploy_full(&p, &cfg, Some(s2)).fingerprint();
+                assert_eq!(dirty.fingerprint(), want, "adapter swap diverged: {replay}");
+            }
+            // removal restores the adapter-free bytes
+            dirty.set_adapters(None);
+            dirty.refresh().unwrap();
+            assert_eq!(dirty.fingerprint(), analog_fp, "adapter removal diverged: {replay}");
+        });
+    }
+}
+
+#[test]
+fn config_generation_is_deterministic_and_diverse() {
+    for i in 0..8 {
+        assert_eq!(
+            format!("{:?}", gen_config(7, i)),
+            format!("{:?}", gen_config(7, i)),
+            "generator must be a pure function of (base, index)"
+        );
+    }
+    let distinct: std::collections::BTreeSet<String> =
+        (0..64).map(|i| format!("{:?}", gen_config(BASE_SEED, i))).collect();
+    assert!(distinct.len() > 48, "generator collapsed: {} distinct / 64", distinct.len());
+}

@@ -63,6 +63,20 @@ AFM_THREADS=1 cargo test -q
 echo "== cargo test -q (default worker pool — must match the serial goldens)"
 cargo test -q
 
+# Lane-mode gate: the whole suite once more with the SIMD lane batches
+# disabled. Every golden and every unit byte-identity check must pass on
+# the scalar reference path too, proving the lane layer is a pure
+# performance overlay (docs/ARCHITECTURE.md, "SIMD lane batching").
+echo "== cargo test -q (AFM_NO_SIMD=1 — scalar reference path)"
+AFM_NO_SIMD=1 cargo test -q
+
+# Differential fuzz gate: replay the pinned fuzz corpus (seed 0xD1FF =
+# 53759, 64 configs) through the scalar/SIMD, dirty/full, and
+# serial/pooled identity checks. The seed is pinned here so CI is
+# reproducible; bump AFM_FUZZ_N locally for a deeper soak.
+echo "== cargo test -q --test differential (AFM_FUZZ_SEED=53759, pinned corpus)"
+AFM_FUZZ_SEED=53759 AFM_FUZZ_N=64 cargo test -q --test differential
+
 # HWA training smoke: a tiny-steps `afm train --kind afm` end to end
 # with every hardware-aware knob on (ramp, drop-connect, remap) — the
 # cheapest proof that the per-step schedule, the remapped checkpoint,
