@@ -1,0 +1,198 @@
+//! §Serve soak: multi-tenant fleet serving under drift-aware routing.
+//!
+//! Host-only (a `MockDecoder` over a tiny random parameter set), so it
+//! runs without compiled artifacts: the point is the *scheduler* — a
+//! heterogeneous 4-chip fleet plus one hot spare, three tenants with
+//! independent arrival streams, a bounded admission queue, and stale
+//! chips recalibrating out of the serving path while the fleet ages.
+//!
+//! The soak runs twice and the two reports are folded to fingerprints
+//! that must match — the serving determinism contract, pinned on the
+//! bench path. One `serve_soak` row (per-tenant p50/p95/p99 latency,
+//! queue depth, tokens/s) is appended to the BENCH json trajectory
+//! (`runs/reports/bench.jsonl`) so SLO drift is tracked across PRs.
+
+use std::collections::BTreeMap;
+
+use afm::bench_support as bs;
+use afm::config::HwConfig;
+use afm::coordinator::noise::NoiseModel;
+use afm::data::tokenizer::Tokenizer;
+use afm::runtime::manifest::ModelDims;
+use afm::runtime::Params;
+use afm::serve::{
+    default_tenants, mock::MockDecoder, multi_tenant_workload, ChipDeployment, ChipSpec,
+    DriftSchedule, InferenceServer, RoutePolicy, ServePolicy, ServeReport, ServeRequest,
+};
+use afm::util::json::Json;
+use afm::util::{fnv1a_fold, FNV_OFFSET};
+
+const HOUR: f64 = 3600.0;
+
+fn tiny_dims(k: usize, n: usize) -> ModelDims {
+    let mut shapes = BTreeMap::new();
+    shapes.insert("wq".into(), vec![k, n]);
+    shapes.insert("emb".into(), vec![n, k]);
+    shapes.insert("ln_f".into(), vec![k]);
+    ModelDims {
+        d_model: k,
+        n_layers: 1,
+        n_heads: 1,
+        d_ff: n,
+        seq_len: 8,
+        vocab: n,
+        n_cls: 0,
+        n_params: 0,
+        param_keys: vec!["wq".into(), "emb".into(), "ln_f".into()],
+        param_shapes: shapes,
+    }
+}
+
+/// One full soak: provision the fleet fresh, serve the whole workload,
+/// return the report. Everything inside is a pure function of the
+/// seeds, so two calls must agree byte-for-byte.
+fn soak(params: &Params, reqs: &[ServeRequest]) -> anyhow::Result<ServeReport> {
+    // heterogeneous fleet: independent conductance draws, field ages
+    // staggered by half a day — drift-aware routing has real spread to
+    // steer around from the first tick
+    let specs: Vec<ChipSpec> = (0..5)
+        .map(|i| ChipSpec {
+            age_secs: i as f64 * 12.0 * HOUR,
+            ..ChipSpec::new(NoiseModel::Pcm, 100 + i as u64, HwConfig::afm_train(0.0))
+        })
+        .collect();
+    let mut chips = ChipDeployment::provision_heterogeneous(params, &specs)?;
+    let spare = chips.pop().expect("five specs provisioned");
+    let mut decoder = MockDecoder::new(2, 16, Tokenizer::vocab());
+    let schedule =
+        DriftSchedule { secs_per_tick: HOUR, age_every_ticks: 1, recalibrate_every_ticks: None };
+    let mut srv = InferenceServer::with_drift(&mut decoder, chips, 1, schedule)?;
+    srv.add_spare(spare);
+    srv.set_policy(ServePolicy {
+        queue_cap: 64,
+        routing: RoutePolicy::DriftAware,
+        stale_after_secs: 12.0 * HOUR,
+        calib_ticks: 2,
+        spare_activate_depth: 4,
+        spare_idle_ticks: 8,
+    })?;
+    srv.run(reqs.to_vec())
+}
+
+/// Fold a report's simulated-clock accounting (never wall-clock
+/// fields) to one fingerprint.
+fn fingerprint(report: &ServeReport) -> u64 {
+    let mut h = FNV_OFFSET;
+    for c in &report.completions {
+        h = fnv1a_fold(h, c.id);
+        h = fnv1a_fold(h, c.arrival as u64);
+        h = fnv1a_fold(h, c.chip as u64);
+        h = fnv1a_fold(h, c.submit_tick);
+        h = fnv1a_fold(h, c.finish_tick);
+        h = fnv1a_fold(h, c.wait_ticks);
+        h = fnv1a_fold(h, c.decode_steps);
+        h = fnv1a_fold(h, c.chip_age_secs.to_bits());
+        for &t in &c.tokens {
+            h = fnv1a_fold(h, t as u64);
+        }
+    }
+    for r in &report.rejections {
+        h = fnv1a_fold(h, r.id);
+        h = fnv1a_fold(h, r.tick);
+    }
+    h = fnv1a_fold(h, report.stats.completed as u64);
+    h = fnv1a_fold(h, report.stats.rejected as u64);
+    h = fnv1a_fold(h, report.stats.total_tokens);
+    fnv1a_fold(h, report.stats.lm_steps)
+}
+
+fn main() -> anyhow::Result<()> {
+    bs::banner("serve_soak", "§Serving (multi-tenant fleet soak, SLO trajectory)");
+    afm::util::set_quiet(true);
+    let params = Params::init(&tiny_dims(6, 8), 1);
+    let tenants = default_tenants(3);
+    let reqs = multi_tenant_workload(&tenants, 24, 11);
+    let submitted = reqs.len();
+
+    let report = soak(&params, &reqs)?;
+    let again = soak(&params, &reqs)?;
+    assert_eq!(
+        fingerprint(&report),
+        fingerprint(&again),
+        "same-seed soaks diverged — the serving determinism contract is broken"
+    );
+    let s = &report.stats;
+    assert_eq!(
+        s.completed + s.rejected,
+        submitted,
+        "every submitted request must retire or be rejected"
+    );
+
+    println!(
+        "soak: {} reqs over {} tenants -> {} completed, {} rejected, {:.1} tok/s, \
+         peak queue {}, {} idle ticks",
+        submitted,
+        report.tenants.len(),
+        s.completed,
+        s.rejected,
+        s.tok_per_sec,
+        s.max_queue_depth,
+        s.idle_ticks
+    );
+    println!(
+        "fleet health: {} spare wakes, {} background recals, {} refreshes \
+         ({} tiles re-derived)",
+        s.spare_activations, s.background_recals, s.fleet_refreshes, s.fleet_tiles_rederived
+    );
+    println!("tenant        done  rej  tokens   tok/s   p50ms   p95ms   p99ms  peakq");
+    for (name, t) in &report.tenants {
+        println!(
+            "{name:<12} {:>5} {:>4} {:>7} {:>7.1} {:>7.2} {:>7.2} {:>7.2} {:>6}",
+            t.completed, t.rejected, t.tokens, t.tok_per_sec, t.p50_ms, t.p95_ms, t.p99_ms,
+            t.peak_queue_depth
+        );
+    }
+
+    // BENCH json trajectory: one soak row per run, with per-tenant SLOs
+    let tenant_rows: Vec<(&str, Json)> = report
+        .tenants
+        .iter()
+        .map(|(name, t)| {
+            (
+                name.as_str(),
+                Json::obj(vec![
+                    ("completed", Json::num(t.completed as f64)),
+                    ("rejected", Json::num(t.rejected as f64)),
+                    ("tokens", Json::num(t.tokens as f64)),
+                    ("tok_per_sec", Json::num(t.tok_per_sec)),
+                    ("p50_ms", Json::num(t.p50_ms)),
+                    ("p95_ms", Json::num(t.p95_ms)),
+                    ("p99_ms", Json::num(t.p99_ms)),
+                    ("mean_queue_ms", Json::num(t.mean_queue_ms)),
+                    ("peak_queue_depth", Json::num(t.peak_queue_depth as f64)),
+                ]),
+            )
+        })
+        .collect();
+    let _ = std::fs::create_dir_all(bs::reports_dir());
+    let _ = afm::util::append_jsonl(
+        &bs::reports_dir().join("bench.jsonl"),
+        &Json::obj(vec![
+            ("bench", Json::str("serve_soak")),
+            ("requests", Json::num(submitted as f64)),
+            ("chips", Json::num(4.0)),
+            ("spares", Json::num(1.0)),
+            ("route", Json::str("drift-aware")),
+            ("completed", Json::num(s.completed as f64)),
+            ("rejected", Json::num(s.rejected as f64)),
+            ("tok_per_sec", Json::num(s.tok_per_sec)),
+            ("max_queue_depth", Json::num(s.max_queue_depth as f64)),
+            ("spare_activations", Json::num(s.spare_activations as f64)),
+            ("background_recals", Json::num(s.background_recals as f64)),
+            ("lm_steps", Json::num(s.lm_steps as f64)),
+            ("tenants", Json::obj(tenant_rows)),
+        ]),
+    );
+    println!("\nserve_soak row appended to {}", bs::reports_dir().join("bench.jsonl").display());
+    Ok(())
+}

@@ -77,6 +77,43 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "prompts", takes_value: true, help: "serve: prompt file (else mixed workload)" },
         FlagSpec { name: "requests", takes_value: true, help: "serve: mixed-workload size" },
         FlagSpec { name: "max-new", takes_value: true, help: "serve: default generation budget" },
+        FlagSpec {
+            name: "tenants",
+            takes_value: true,
+            help: "serve: arrival-timed multi-tenant workload with N tenants (0 = single batch)",
+        },
+        FlagSpec {
+            name: "arrive-gap",
+            takes_value: true,
+            help: "serve: mean inter-arrival gap in fleet ticks for --tenants traffic",
+        },
+        FlagSpec {
+            name: "queue-cap",
+            takes_value: true,
+            help: "serve: admission queue bound; overflow is rejected (0 = unbounded)",
+        },
+        FlagSpec { name: "route", takes_value: true, help: "serve: chip routing: rr | drift" },
+        FlagSpec {
+            name: "spares",
+            takes_value: true,
+            help: "serve: hot-spare chips provisioned on the bench (woken by backlog)",
+        },
+        FlagSpec {
+            name: "spare-depth",
+            takes_value: true,
+            help: "serve: unplaceable backlog depth that wakes one spare per tick",
+        },
+        FlagSpec {
+            name: "stale-after",
+            takes_value: true,
+            help: "serve: drain + recalibrate chips out of path past this age since \
+                   their last GDC (secs or 1h/1d/1mo; 0 = never)",
+        },
+        FlagSpec {
+            name: "calib-ticks",
+            takes_value: true,
+            help: "serve: ticks a recalibrating chip stays out of the serving path",
+        },
         FlagSpec { name: "ages", takes_value: true, help: "drift: comma list (1s,1h,1d,1mo,1y)" },
         FlagSpec {
             name: "rtn-bits",
@@ -421,14 +458,17 @@ fn run(argv: &[String]) -> Result<()> {
             let afm_p = pipe.ensure_afm(&teacher, shard)?;
             let nm = parse_noise(&args.get_or("noise", "pcm"))?;
             let n_chips = args.usize_or("chips", 2).max(1);
+            let n_spares = args.usize_or("spares", 0);
             let base_seed = args.u64_or("chip-seed", cfg.seed + 2026);
             let max_new = args.usize_or("max-new", 32);
             let mut hw = HwConfig::afm_train(0.0);
             hw_overrides(&mut hw, &cfg, &args);
             let capacity = args.usize_or("tile-capacity", 0);
-            // the fleet programs concurrently on the worker pool
-            // (byte-identical to one-by-one provisioning)
-            let chip_seeds: Vec<u64> = (0..n_chips as u64).map(|i| base_seed + i).collect();
+            // the fleet (serving chips + bench spares) programs
+            // concurrently on the worker pool (byte-identical to
+            // one-by-one provisioning)
+            let chip_seeds: Vec<u64> =
+                (0..(n_chips + n_spares) as u64).map(|i| base_seed + i).collect();
             let mut chips = ChipDeployment::provision_fleet(&afm_p, &nm, &chip_seeds, &hw, capacity)?;
             if hw.adapter_rank > 0 {
                 // digital sidecars: rank-r corrections fitted per chip
@@ -447,16 +487,30 @@ fn run(argv: &[String]) -> Result<()> {
                     chip.refresh()?;
                 }
                 info!(
-                    "installed rank-{} adapter sidecars on {n_chips} chip(s)",
-                    hw.adapter_rank
+                    "installed rank-{} adapter sidecars on {} chip(s)",
+                    hw.adapter_rank,
+                    n_chips + n_spares
                 );
             }
+            let n_tenants = args.usize_or("tenants", 0);
             let requests = match args.get("prompts") {
                 Some(path) => serve::prompt_file_workload(path, max_new)?,
+                None if n_tenants > 0 => {
+                    let mut specs = serve::default_tenants(n_tenants);
+                    let gap = args.f64_or("arrive-gap", 0.0);
+                    if gap > 0.0 {
+                        for s in specs.iter_mut() {
+                            s.mean_gap_ticks = gap;
+                        }
+                    }
+                    let per = args.usize_or("requests", 24).div_ceil(n_tenants).max(1);
+                    serve::multi_tenant_workload(&specs, per, cfg.seed)
+                }
                 None => serve::mixed_workload(args.usize_or("requests", 24), cfg.seed),
             };
             info!(
-                "serving {} requests on {n_chips} chip(s) [{} {}] — {} tiles/chip{}",
+                "serving {} requests on {n_chips} chip(s) + {n_spares} spare(s) [{} {}] — \
+                 {} tiles/chip{}",
                 requests.len(),
                 hw.label(),
                 nm.label(),
@@ -465,7 +519,26 @@ fn run(argv: &[String]) -> Result<()> {
             );
             let mut engine = GenEngine::new(&rt, &cfg.model, false)?;
             rt.warm(&format!("{}_lm_sample", cfg.model))?; // keep compile out of latency
+            let spare_chips = chips.split_off(n_chips);
             let mut server = InferenceServer::new(&mut engine, chips, cfg.seed)?;
+            for spare in spare_chips {
+                server.add_spare(spare);
+            }
+            // scheduler policy: admission bound, routing, background
+            // recalibration, spare wake threshold
+            let stale_after_secs = match args.get("stale-after") {
+                Some(v) => parse_age(v).map_err(|e| anyhow!(e))?,
+                None => 0.0,
+            };
+            let policy = serve::ServePolicy {
+                queue_cap: args.usize_or("queue-cap", 0),
+                routing: serve::RoutePolicy::parse(&args.get_or("route", "rr"))?,
+                stale_after_secs,
+                calib_ticks: args.u64_or("calib-ticks", 1),
+                spare_activate_depth: args.usize_or("spare-depth", 1),
+                ..Default::default()
+            };
+            server.set_policy(policy)?;
             // `--drift` takes an age per tick: bare seconds or a human
             // unit ("1h", "1d", "1mo")
             let secs_per_tick = match args.get("drift") {
@@ -480,13 +553,16 @@ fn run(argv: &[String]) -> Result<()> {
                     recalibrate_every_ticks: if recal > 0 { Some(recal) } else { None },
                 };
                 info!("drift schedule: {schedule:?}");
-                server.set_drift_schedule(Some(schedule));
+                server.set_drift_schedule(Some(schedule))?;
             }
             let report = server.run(requests)?;
 
+            // the report table carries only simulated-clock columns, so
+            // two same-seed runs emit byte-identical serve.md files
+            // (wall latencies go to stdout below)
             let mut table = Table::new(
                 &format!("serve: {n_chips} chip(s), {} requests", report.stats.completed),
-                &["req", "chip", "age", "wait", "steps", "ms", "completion"],
+                &["req", "tenant", "chip", "age", "submit", "finish", "wait", "steps", "text"],
             );
             for c in &report.completions {
                 let mut text = c.text.trim().to_string();
@@ -496,25 +572,56 @@ fn run(argv: &[String]) -> Result<()> {
                 }
                 table.row(vec![
                     format!("{:016x}", c.id),
+                    c.tenant.clone(),
                     c.chip.to_string(),
                     fmt_age(c.chip_age_secs),
+                    c.submit_tick.to_string(),
+                    c.finish_tick.to_string(),
                     c.wait_ticks.to_string(),
                     c.decode_steps.to_string(),
-                    format!("{:.1}", c.latency_ms),
                     text,
                 ]);
             }
             table.emit(&pipe.run_dir().join("reports"), "serve");
+            if report.tenants.len() > 1 {
+                let mut tt = Table::new(
+                    "per-tenant SLO",
+                    &[
+                        "tenant", "done", "rej", "p50 ms", "p95 ms", "p99 ms", "queue ms",
+                        "tok/s", "peak q",
+                    ],
+                );
+                for (name, ts) in &report.tenants {
+                    tt.row(vec![
+                        name.clone(),
+                        ts.completed.to_string(),
+                        ts.rejected.to_string(),
+                        format!("{:.1}", ts.p50_ms),
+                        format!("{:.1}", ts.p95_ms),
+                        format!("{:.1}", ts.p99_ms),
+                        format!("{:.1}", ts.mean_queue_ms),
+                        format!("{:.1}", ts.tok_per_sec),
+                        ts.peak_queue_depth.to_string(),
+                    ]);
+                }
+                println!("{}", tt.to_markdown());
+            }
             let s = &report.stats;
             let (p50, p95) = report.p50_p95_ms();
             println!(
                 "latency p50 {p50:.1} ms  p95 {p95:.1} ms | {:.1} tok/s  {:.2} req/s | \
-                 {} tokens, {} lm_sample steps in {:.2}s",
+                 {} tokens, {} lm_sample steps in {:.2}s | {} rejected, peak queue {}, \
+                 {} idle ticks, {} spare wakes, {} background recals",
                 s.tok_per_sec,
                 s.req_per_sec,
                 s.total_tokens,
                 s.lm_steps,
-                s.wall_secs
+                s.wall_secs,
+                s.rejected,
+                s.max_queue_depth,
+                s.idle_ticks,
+                s.spare_activations,
+                s.background_recals
             );
         }
         "pipeline" => {

@@ -213,6 +213,31 @@ pub struct ChipDeployment {
     fp_chain: Vec<u64>,
 }
 
+/// Per-chip provisioning recipe for a heterogeneous fleet: everything
+/// that may differ between two dies serving the same checkpoint.
+#[derive(Clone, Debug)]
+pub struct ChipSpec {
+    /// analog noise model programmed into this die
+    pub noise: NoiseModel,
+    /// hardware-instance seed (the independent conductance draw)
+    pub seed: u64,
+    /// hardware operating point — carries the die's crossbar tiling
+    pub hw: HwConfig,
+    /// crossbar tile capacity of the die (0 = unbounded)
+    pub capacity_tiles: usize,
+    /// pre-age at provisioning in simulated seconds (0 = fresh from
+    /// the programmer) — fleets mix freshly programmed and field-aged
+    /// chips
+    pub age_secs: f64,
+}
+
+impl ChipSpec {
+    /// A fresh unbounded die with the given noise/seed/operating point.
+    pub fn new(noise: NoiseModel, seed: u64, hw: HwConfig) -> ChipSpec {
+        ChipSpec { noise, seed, hw, capacity_tiles: 0, age_secs: 0.0 }
+    }
+}
+
 impl ChipDeployment {
     /// Program `params` onto a simulated chip: apply `noise` once under
     /// `seed` (the hardware instance — one independent noise draw per
@@ -304,6 +329,37 @@ impl ChipDeployment {
             .zip(seeds)
             .map(|(prog, &seed)| {
                 Self::from_programmed(prog, noise, seed, hw, &tile_map, capacity_tiles)
+            })
+            .collect()
+    }
+
+    /// Provision a *heterogeneous* fleet: one chip per [`ChipSpec`],
+    /// each with its own noise model, hardware operating point (and
+    /// therefore tiling), die capacity, programming seed, and starting
+    /// age. This is the serving-fleet generalization of
+    /// `provision_fleet` (which stamps N copies of one recipe): real
+    /// fleets mix chip generations, so their floorplan checks and
+    /// noise instances cannot be shared. Chips provision serially in
+    /// spec order — each spec is an independent pure derivation, so
+    /// the result is byte-identical regardless.
+    pub fn provision_heterogeneous(
+        params: &Params,
+        specs: &[ChipSpec],
+    ) -> Result<Vec<ChipDeployment>> {
+        specs
+            .iter()
+            .map(|s| {
+                let mut chip = Self::provision_floorplanned(
+                    params,
+                    &s.noise,
+                    s.seed,
+                    &s.hw,
+                    s.capacity_tiles,
+                )?;
+                if s.age_secs > 0.0 {
+                    chip.age_to(s.age_secs)?;
+                }
+                Ok(chip)
             })
             .collect()
     }

@@ -18,15 +18,21 @@
 //!   `DigitalSidecar`s (RTN readout mirror, low-rank adapter
 //!   corrections from `hwa::fit_adapters`) compose with the drifting
 //!   analog tensors at every literal derivation and never degrade.
-//! * `server` — `InferenceServer`: a request queue with continuous
-//!   batching over the slot-based decode loop (a freed slot is refilled
-//!   from the queue immediately instead of idling until the whole chunk
-//!   drains), round-robin scheduled across N simulated chip instances,
-//!   with per-request latency/token/chip-age accounting. An optional
-//!   `DriftSchedule` ages the fleet at tick marks (with an optional GDC
-//!   recalibration cadence) so chips degrade mid-workload.
-//! * `workload` — the built-in mixed serving workload and a prompt-file
-//!   loader for the `afm serve` CLI subcommand.
+//! * `server` — `InferenceServer`: a tick-driven scheduler with
+//!   continuous batching over the slot-based decode loop (a freed slot
+//!   is refilled from the queue immediately instead of idling until
+//!   the whole chunk drains). Requests arrive on their own ticks into
+//!   a bounded admission queue with per-tenant fairness and priority
+//!   (`ServePolicy`); routing is round-robin or drift-aware
+//!   (`RoutePolicy`), with stale chips recalibrating out of the
+//!   serving path and hot spares waking under backlog. Per-request
+//!   latency/queue-wait/token/chip-age accounting rolls up into
+//!   per-tenant SLO stats (`TenantStats`). An optional `DriftSchedule`
+//!   ages the fleet at tick marks (with an optional GDC recalibration
+//!   cadence) so chips degrade mid-workload.
+//! * `workload` — the built-in mixed serving workload, the
+//!   arrival-timed multi-tenant generator (`multi_tenant_workload`),
+//!   and a prompt-file loader for the `afm serve` CLI subcommand.
 //! * `mock` — a deterministic host-side `Decoder` so scheduler
 //!   invariants are testable without PJRT or compiled artifacts.
 
@@ -36,9 +42,13 @@ pub mod server;
 pub mod workload;
 
 pub use crate::coordinator::tiles::{Floorplan, TileMap, Tiling};
-pub use deploy::{ChipDeployment, DigitalSidecar, HwScalars};
+pub use deploy::{ChipDeployment, ChipSpec, DigitalSidecar, HwScalars};
 pub use server::{
-    request_id, static_chunking_steps, Completion, Decoder, DriftSchedule, FleetBatch,
-    InferenceServer, ServeReport, ServeRequest, ServerStats,
+    request_id, static_chunking_steps, ChipStatus, Completion, Decoder, DriftSchedule,
+    FleetBatch, InferenceServer, Rejection, RoutePolicy, ServePolicy, ServeReport, ServeRequest,
+    ServerStats, TenantStats, DEFAULT_TENANT,
 };
-pub use workload::{mixed_workload, prompt_file_workload, sustained_workload};
+pub use workload::{
+    default_tenants, mixed_workload, multi_tenant_workload, prompt_file_workload,
+    sustained_workload, TenantSpec,
+};

@@ -1,14 +1,40 @@
-//! Continuous-batching inference server over a fleet of simulated
-//! chips.
+//! Production-shaped continuous-batching inference server over a
+//! fleet of simulated chips.
 //!
 //! The generation engine's static chunking stalls every finished slot
-//! behind the longest request in its chunk. The server keeps a FIFO
-//! request queue instead: each fleet tick it (1) refills every free
-//! slot round-robin across the N chip instances, (2) runs one packed
-//! decode step per chip with at least one active slot, (3) retires
-//! finished slots, which frees them for the *next* tick's refill. A
-//! mixed-length workload therefore costs roughly `max(len)` steps plus
-//! a short tail, not `chunks * max(len)`.
+//! behind the longest request in its chunk. The server instead runs a
+//! tick-driven scheduler around a bounded admission queue. Each fleet
+//! tick it:
+//!
+//! 1. **intake** — admits requests whose [`ServeRequest::arrival_tick`]
+//!    has been reached (0 = queued before the run starts). A bounded
+//!    queue ([`ServePolicy::queue_cap`]) rejects overflow instead of
+//!    growing without bound; rejections are reported, not dropped.
+//! 2. **fleet health** — with background recalibration enabled
+//!    ([`ServePolicy::stale_after_secs`] > 0), chips whose GDC
+//!    compensation has gone stale stop taking new work (`Draining`),
+//!    run `gdc_calibrate` *out of the serving path* (`Calibrating`,
+//!    one fused age-and-recalibrate plan), and rejoin (`Serving`).
+//!    Parked hot spares (`Spare`, see
+//!    [`InferenceServer::add_spare`]) wake when backlog builds and are
+//!    evicted back to the bench after a configurable idle period.
+//! 3. **refill** — free slots are granted to queued requests: highest
+//!    priority first, then the tenant with the fewest grants so far
+//!    this run (start-time fairness), then FIFO by submission order.
+//!    Chips are picked round-robin ([`RoutePolicy::RoundRobin`], the
+//!    default) or by freshest calibration
+//!    ([`RoutePolicy::DriftAware`], which steers load toward recently
+//!    recalibrated chips).
+//! 4. **decode** — one packed decode step per chip with work, then one
+//!    sampled token per active slot. Sampling stays serial in fleet
+//!    order, so the rng stream — and therefore every completion — is
+//!    byte-identical at any thread count.
+//!
+//! Under the default policy (every request at tick 0, a single tenant
+//! at equal priority, unbounded queue, round-robin routing, no spares)
+//! the schedule — chip placement, wait ticks, decode steps, sampled
+//! tokens — is byte-identical to the original single-loop server; the
+//! golden conformance suite pins this.
 //!
 //! The decode step itself is abstracted behind `Decoder` so the
 //! scheduler is testable host-side (`serve::mock::MockDecoder`) and so
@@ -19,7 +45,8 @@
 //! aggregates the fleet's crossbar budget, the accounting a future
 //! multi-chip sharder allocates against.
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, VecDeque};
 
 use anyhow::{anyhow, Result};
 
@@ -32,6 +59,9 @@ use crate::util::prng::Pcg64;
 use crate::util::stats;
 use crate::util::tensor::Tensor;
 use crate::util::{fnv1a, Timer};
+
+/// Tenant name a request carries when none is set explicitly.
+pub const DEFAULT_TENANT: &str = "default";
 
 /// One chip's packed decode input for a fleet tick: the unit of
 /// per-chip parallelism in [`Decoder::decode_fleet`].
@@ -114,7 +144,9 @@ impl Decoder for GenEngine<'_> {
     }
 }
 
-/// One serving request: text in, budgeted completion out.
+/// One serving request: text in, budgeted completion out, plus the
+/// intake metadata the scheduler routes on (arrival tick, tenant,
+/// priority).
 #[derive(Clone, Debug)]
 pub struct ServeRequest {
     /// prompt text (tokenized + BOS-prefixed at slot admission)
@@ -125,17 +157,42 @@ pub struct ServeRequest {
     pub stop_at_eos: bool,
     /// sampling policy (greedy / softmax / datagen strategies)
     pub policy: SamplePolicy,
+    /// fleet tick (relative to the start of the `run` call) at which
+    /// the request reaches the server; 0 = already queued at start
+    pub arrival_tick: u64,
+    /// tenant this request bills to (fairness + per-tenant SLO rollup)
+    pub tenant: String,
+    /// admission priority: a higher value wins a free slot first
+    pub priority: u8,
 }
 
 impl ServeRequest {
-    /// A greedy request that stops at EOS — the benchmark default.
+    /// A greedy request that stops at EOS — the benchmark default:
+    /// arrives at tick 0 for the [`DEFAULT_TENANT`] at priority 0.
     pub fn greedy(prompt: &str, max_new: usize) -> ServeRequest {
         ServeRequest {
             prompt: prompt.to_string(),
             max_new,
             stop_at_eos: true,
             policy: SamplePolicy::greedy(),
+            arrival_tick: 0,
+            tenant: DEFAULT_TENANT.to_string(),
+            priority: 0,
         }
+    }
+
+    /// Bill this request to `tenant` at `priority` (higher wins slots
+    /// first).
+    pub fn for_tenant(mut self, tenant: &str, priority: u8) -> ServeRequest {
+        self.tenant = tenant.to_string();
+        self.priority = priority;
+        self
+    }
+
+    /// Deliver this request `tick` fleet ticks after `run` starts.
+    pub fn with_arrival(mut self, tick: u64) -> ServeRequest {
+        self.arrival_tick = tick;
+        self
     }
 }
 
@@ -148,21 +205,47 @@ pub struct Completion {
     pub arrival: usize,
     /// fleet index of the chip that served it
     pub chip: usize,
+    /// tenant the request billed to
+    pub tenant: String,
+    /// admission priority the request carried
+    pub priority: u8,
     /// the request's prompt, echoed back
     pub prompt: String,
     /// generated token ids (prompt excluded)
     pub tokens: Vec<u32>,
     /// generated tokens decoded to text
     pub text: String,
+    /// fleet tick the request was admitted to the queue (its
+    /// `arrival_tick`, unless intake was reached later)
+    pub submit_tick: u64,
+    /// fleet tick the request retired
+    pub finish_tick: u64,
     /// fleet ticks spent queued before a slot freed up
     pub wait_ticks: u64,
     /// decode steps its chip ran while this request held a slot
     pub decode_steps: u64,
-    /// wall-clock submit -> completion
+    /// wall-clock admission -> slot grant (the queue-wait share of
+    /// `latency_ms`)
+    pub queue_ms: f64,
+    /// wall-clock admission -> retirement: this request's own service
+    /// latency, not the run timestamp it retired at
     pub latency_ms: f64,
     /// simulated conductance age of the serving chip at retirement
     /// (secs since programming; 0 when no drift schedule is active)
     pub chip_age_secs: f64,
+}
+
+/// A request refused at admission because the bounded queue was full.
+#[derive(Clone, Debug)]
+pub struct Rejection {
+    /// FNV-1a request id (same scheme as [`Completion::id`])
+    pub id: u64,
+    /// submission order in the workload
+    pub arrival: usize,
+    /// tenant the request would have billed to
+    pub tenant: String,
+    /// fleet tick the rejection happened on
+    pub tick: u64,
 }
 
 /// Aggregate serving metrics for one workload run.
@@ -170,10 +253,27 @@ pub struct Completion {
 pub struct ServerStats {
     /// requests retired
     pub completed: usize,
+    /// requests refused at admission (bounded queue full)
+    pub rejected: usize,
     /// tokens generated across all completions
     pub total_tokens: u64,
     /// decode (lm_sample) executions across the whole fleet
     pub lm_steps: u64,
+    /// deepest post-refill backlog observed on any tick
+    pub max_queue_depth: usize,
+    /// ticks where no chip decoded (waiting on future arrivals)
+    pub idle_ticks: u64,
+    /// hot spares woken by backlog over the run
+    pub spare_activations: u64,
+    /// out-of-path GDC recalibrations run by the fleet-health pass
+    pub background_recals: u64,
+    /// literal re-derivations across the fleet during the run (drift
+    /// ticks + background recalibrations + sidecar refreshes)
+    pub fleet_refreshes: u64,
+    /// crossbar tiles re-derived across the fleet during the run (the
+    /// dirty-refresh accounting: scoped refreshes charge only touched
+    /// tensors' tiles)
+    pub fleet_tiles_rederived: u64,
     /// wall-clock duration of the run
     pub wall_secs: f64,
     /// generated tokens per wall-clock second
@@ -182,11 +282,42 @@ pub struct ServerStats {
     pub req_per_sec: f64,
 }
 
-/// Per-request completions (in arrival order) plus aggregate stats.
+/// Per-tenant SLO rollup for one run: latency percentiles over the
+/// tenant's own completions, its queue pressure, and its throughput
+/// share.
+#[derive(Clone, Debug, Default)]
+pub struct TenantStats {
+    /// requests retired for this tenant
+    pub completed: usize,
+    /// requests of this tenant refused at admission
+    pub rejected: usize,
+    /// tokens generated for this tenant
+    pub tokens: u64,
+    /// tenant tokens per wall-clock second of the run
+    pub tok_per_sec: f64,
+    /// median per-request latency (ms)
+    pub p50_ms: f64,
+    /// 95th-percentile per-request latency (ms)
+    pub p95_ms: f64,
+    /// 99th-percentile per-request latency (ms)
+    pub p99_ms: f64,
+    /// mean wall-clock queue wait (admission -> slot grant, ms)
+    pub mean_queue_ms: f64,
+    /// deepest post-refill backlog of this tenant's requests
+    pub peak_queue_depth: usize,
+}
+
+/// Per-request completions (in arrival order), admission rejections,
+/// per-tenant SLO rollups, and aggregate stats.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
     /// one entry per retired request, sorted by arrival
     pub completions: Vec<Completion>,
+    /// requests refused at admission (bounded queue full), in
+    /// submission order
+    pub rejections: Vec<Rejection>,
+    /// per-tenant SLO rollups, keyed by tenant name
+    pub tenants: BTreeMap<String, TenantStats>,
     /// run-level aggregates
     pub stats: ServerStats,
 }
@@ -223,18 +354,25 @@ impl ServeReport {
 
 /// Conductance clock for a serving run: how fast simulated chips age
 /// while the fleet serves, and how often the (cheap) aging re-derive
-/// and the (costlier) GDC field recalibration run. All cadences are in
-/// fleet ticks, so a fixed (seed, schedule) pair is byte-deterministic
-/// — no wall-clock leaks into the simulated clock.
+/// and the (costlier) GDC field recalibration run.
+///
+/// Tick grammar: every cadence is a whole number of fleet ticks and
+/// must be >= 1 — "every tick" is `1`, not `0`. A zero cadence is
+/// rejected at [`InferenceServer::set_drift_schedule`] (it used to be
+/// silently reinterpreted as 1); disable recalibration with `None`,
+/// not `Some(0)`. All cadences are simulated-tick based, so a fixed
+/// (seed, schedule) pair is byte-deterministic — no wall-clock leaks
+/// into the simulated clock.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DriftSchedule {
     /// simulated seconds of chip age per fleet tick
     pub secs_per_tick: f64,
-    /// re-derive drifted conductances every K ticks (aging granularity)
+    /// re-derive drifted conductances every K >= 1 ticks (aging
+    /// granularity; 1 = every tick)
     pub age_every_ticks: u64,
-    /// re-run GDC calibration every N ticks — an independent grid from
-    /// the aging marks; a recalibration tick also brings the chip to
-    /// the current simulated age. None = never recalibrate (chips
+    /// re-run GDC calibration every N >= 1 ticks — an independent grid
+    /// from the aging marks; a recalibration tick also brings the chip
+    /// to the current simulated age. None = never recalibrate (chips
     /// serve on increasingly stale — or no — compensation)
     pub recalibrate_every_ticks: Option<u64>,
 }
@@ -245,6 +383,177 @@ impl DriftSchedule {
     pub fn uncompensated(secs_per_tick: f64, age_every_ticks: u64) -> DriftSchedule {
         DriftSchedule { secs_per_tick, age_every_ticks, recalibrate_every_ticks: None }
     }
+
+    /// Check the tick grammar (see the type docs): finite non-negative
+    /// `secs_per_tick`, cadences >= 1 tick. Degenerate cadences are an
+    /// error with the intended spelling in the message, not a silent
+    /// reinterpretation.
+    pub fn validate(&self) -> Result<()> {
+        if !self.secs_per_tick.is_finite() || self.secs_per_tick < 0.0 {
+            return Err(anyhow!(
+                "drift schedule: secs_per_tick must be finite and >= 0, got {}",
+                self.secs_per_tick
+            ));
+        }
+        if self.age_every_ticks == 0 {
+            return Err(anyhow!(
+                "drift schedule: age_every_ticks = 0 is not a cadence — cadences are in \
+                 whole fleet ticks; use 1 to age every tick"
+            ));
+        }
+        if self.recalibrate_every_ticks == Some(0) {
+            return Err(anyhow!(
+                "drift schedule: recalibrate_every_ticks = Some(0) is not a cadence — use \
+                 Some(1) to recalibrate every tick, or None to disable GDC recalibration"
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Chip selection rule for slot refills.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Strict rotation across serving chips — the byte-compatible
+    /// default.
+    #[default]
+    RoundRobin,
+    /// Steer load toward the chip with the freshest GDC calibration
+    /// (smallest age since its last recalibration); ties fall back to
+    /// round-robin order. Pair with [`ServePolicy::stale_after_secs`]
+    /// so stale chips actually leave the path to recalibrate.
+    DriftAware,
+}
+
+impl RoutePolicy {
+    /// Parse a CLI routing name: `rr` / `round-robin`, or `drift`.
+    pub fn parse(s: &str) -> Result<RoutePolicy> {
+        match s {
+            "rr" | "round-robin" => Ok(RoutePolicy::RoundRobin),
+            "drift" | "drift-aware" => Ok(RoutePolicy::DriftAware),
+            other => Err(anyhow!("unknown route policy '{other}' (rr | drift)")),
+        }
+    }
+}
+
+/// Scheduler knobs for a serving run. The default is byte-compatible
+/// with the original single-loop server: unbounded queue, round-robin
+/// routing, no background recalibration, no spares in play.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServePolicy {
+    /// admission queue bound; requests arriving onto a full queue are
+    /// rejected (0 = unbounded)
+    pub queue_cap: usize,
+    /// chip selection rule for refills
+    pub routing: RoutePolicy,
+    /// simulated seconds since a chip's last GDC calibration before it
+    /// is drained and recalibrated out of the serving path (0 = never;
+    /// requires a drift schedule for staleness to grow during a run)
+    pub stale_after_secs: f64,
+    /// fleet ticks a recalibrating chip stays out of the serving path
+    /// (>= 1; models the calibration latency)
+    pub calib_ticks: u64,
+    /// backlog depth (queued requests no free serving slot can take)
+    /// that wakes one parked hot spare per tick (0 = never wake)
+    pub spare_activate_depth: usize,
+    /// consecutive ticks an activated spare must sit idle (no slots,
+    /// empty queue) before it is parked again (>= 1)
+    pub spare_idle_ticks: u64,
+}
+
+impl Default for ServePolicy {
+    fn default() -> ServePolicy {
+        ServePolicy {
+            queue_cap: 0,
+            routing: RoutePolicy::RoundRobin,
+            stale_after_secs: 0.0,
+            calib_ticks: 1,
+            spare_activate_depth: 1,
+            spare_idle_ticks: 8,
+        }
+    }
+}
+
+impl ServePolicy {
+    /// Check the knob ranges; degenerate cadences are an error, same
+    /// contract as [`DriftSchedule::validate`].
+    pub fn validate(&self) -> Result<()> {
+        if !self.stale_after_secs.is_finite() || self.stale_after_secs < 0.0 {
+            return Err(anyhow!(
+                "serve policy: stale_after_secs must be finite and >= 0, got {}",
+                self.stale_after_secs
+            ));
+        }
+        if self.calib_ticks == 0 {
+            return Err(anyhow!(
+                "serve policy: calib_ticks = 0 is not a duration — a recalibrating chip \
+                 is out of the path for whole ticks; use 1 for the minimum"
+            ));
+        }
+        if self.spare_idle_ticks == 0 {
+            return Err(anyhow!(
+                "serve policy: spare_idle_ticks = 0 would evict a spare the tick it wakes; \
+                 use 1 for the minimum idle period"
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Scheduling status of one chip in the fleet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChipStatus {
+    /// in the serving rotation, taking refills
+    Serving,
+    /// stale: finishing its active slots, taking no new work
+    Draining,
+    /// out of the serving path running GDC recalibration
+    Calibrating,
+    /// parked hot spare, takes no load until backlog wakes it
+    Spare,
+}
+
+/// Per-chip scheduler bookkeeping alongside `chips[c]`.
+struct ChipRuntime {
+    status: ChipStatus,
+    /// provisioned as a hot spare (eligible for idle eviction)
+    is_spare: bool,
+    /// chip age at its last GDC calibration — staleness reference
+    last_calib_age: f64,
+    /// tick a `Calibrating` chip rejoins the rotation
+    calib_done_at: u64,
+    /// consecutive idle ticks (spare eviction counter)
+    idle_ticks: u64,
+}
+
+impl ChipRuntime {
+    fn new(is_spare: bool) -> ChipRuntime {
+        ChipRuntime {
+            status: if is_spare { ChipStatus::Spare } else { ChipStatus::Serving },
+            is_spare,
+            last_calib_age: 0.0,
+            calib_done_at: 0,
+            idle_ticks: 0,
+        }
+    }
+}
+
+/// A request sitting in the admission queue.
+struct Queued {
+    arrival: usize,
+    id: u64,
+    req: ServeRequest,
+    submit_tick: u64,
+    submit_ms: f64,
+}
+
+/// Per-run admission state threaded through the refill path.
+struct SchedState {
+    queue: VecDeque<Queued>,
+    /// slots granted per tenant this run — the fairness counter
+    granted: BTreeMap<String, u64>,
+    /// round-robin chip cursor
+    rr: usize,
 }
 
 /// An occupied slot: the request plus its sliding token window and
@@ -257,13 +566,46 @@ struct Slot {
     out: Vec<u32>,
     wait_ticks: u64,
     chip_step_start: u64,
+    submit_tick: u64,
+    submit_ms: f64,
+    queue_ms: f64,
 }
 
 impl Slot {
-    fn new(arrival: usize, id: u64, req: ServeRequest, t: usize, wait: u64, step0: u64) -> Slot {
-        let window = prompt_window(&Tokenizer::encode_bos(&req.prompt), t);
-        Slot { arrival, id, req, window, out: Vec::new(), wait_ticks: wait, chip_step_start: step0 }
+    fn new(q: Queued, t: usize, tick: u64, step0: u64, now_ms: f64) -> Slot {
+        let window = prompt_window(&Tokenizer::encode_bos(&q.req.prompt), t);
+        Slot {
+            arrival: q.arrival,
+            id: q.id,
+            req: q.req,
+            window,
+            out: Vec::new(),
+            wait_ticks: tick - q.submit_tick,
+            chip_step_start: step0,
+            submit_tick: q.submit_tick,
+            submit_ms: q.submit_ms,
+            queue_ms: now_ms - q.submit_ms,
+        }
     }
+}
+
+/// Grant key: highest priority first, then the tenant with the fewest
+/// grants this run (start-time fairness), then FIFO by submission
+/// order. A single tenant at uniform priority degenerates to exact
+/// FIFO — the byte-compatible default.
+fn queued_key(q: &Queued, granted: &BTreeMap<String, u64>) -> (Reverse<u8>, u64, usize) {
+    (Reverse(q.req.priority), granted.get(&q.req.tenant).copied().unwrap_or(0), q.arrival)
+}
+
+/// Index of the queued request that wins the next free slot.
+fn pick_queued(st: &SchedState) -> usize {
+    let mut best = 0usize;
+    for i in 1..st.queue.len() {
+        if queued_key(&st.queue[i], &st.granted) < queued_key(&st.queue[best], &st.granted) {
+            best = i;
+        }
+    }
+    best
 }
 
 /// Continuous-batching scheduler over a fleet of provisioned chips
@@ -272,6 +614,8 @@ impl Slot {
 pub struct InferenceServer<'d, D: Decoder> {
     decoder: &'d mut D,
     chips: Vec<ChipDeployment>,
+    states: Vec<ChipRuntime>,
+    policy: ServePolicy,
     rng: Pcg64,
     drift: Option<DriftSchedule>,
     /// fleet ticks carried across `run` calls, so a long-running server
@@ -281,14 +625,19 @@ pub struct InferenceServer<'d, D: Decoder> {
 
 impl<'d, D: Decoder> InferenceServer<'d, D> {
     /// A server over `chips` (at least one) sharing `decoder`; `seed`
-    /// drives the sampling RNG.
+    /// drives the sampling RNG. The chips may be heterogeneous — each
+    /// carries its own tiling, noise instance, age, and sidecars (see
+    /// `ChipDeployment::provision_heterogeneous`).
     pub fn new(decoder: &'d mut D, chips: Vec<ChipDeployment>, seed: u64) -> Result<Self> {
         if chips.is_empty() {
             return Err(anyhow!("inference server needs at least one chip"));
         }
+        let states = chips.iter().map(|_| ChipRuntime::new(false)).collect();
         Ok(InferenceServer {
             decoder,
             chips,
+            states,
+            policy: ServePolicy::default(),
             rng: Pcg64::with_stream(seed, 0x5e7e),
             drift: None,
             clock_ticks: 0,
@@ -303,18 +652,59 @@ impl<'d, D: Decoder> InferenceServer<'d, D> {
         schedule: DriftSchedule,
     ) -> Result<Self> {
         let mut s = Self::new(decoder, chips, seed)?;
-        s.set_drift_schedule(Some(schedule));
+        s.set_drift_schedule(Some(schedule))?;
         Ok(s)
     }
 
     /// Install (or clear) the conductance clock for subsequent runs.
-    pub fn set_drift_schedule(&mut self, schedule: Option<DriftSchedule>) {
+    /// Degenerate schedules (zero cadences, non-finite seconds) are
+    /// rejected here — see [`DriftSchedule::validate`].
+    pub fn set_drift_schedule(&mut self, schedule: Option<DriftSchedule>) -> Result<()> {
+        if let Some(s) = &schedule {
+            s.validate()?;
+        }
         self.drift = schedule;
+        Ok(())
     }
 
-    /// The provisioned fleet, in chip-index order.
+    /// Install the scheduler policy for subsequent runs; rejects
+    /// degenerate knob values (see [`ServePolicy::validate`]).
+    pub fn set_policy(&mut self, policy: ServePolicy) -> Result<()> {
+        policy.validate()?;
+        self.policy = policy;
+        Ok(())
+    }
+
+    /// The active scheduler policy.
+    pub fn policy(&self) -> &ServePolicy {
+        &self.policy
+    }
+
+    /// The provisioned fleet, in chip-index order (hot spares
+    /// included, after the chips they back up).
     pub fn chips(&self) -> &[ChipDeployment] {
         &self.chips
+    }
+
+    /// Scheduling status of one chip; None when out of range.
+    pub fn chip_status(&self, chip: usize) -> Option<ChipStatus> {
+        self.states.get(chip).map(|s| s.status)
+    }
+
+    /// Hot spares currently parked (provisioned but taking no load).
+    pub fn parked_spares(&self) -> usize {
+        self.states.iter().filter(|s| s.status == ChipStatus::Spare).count()
+    }
+
+    /// Provision `chip` as a parked hot spare: it joins the fleet
+    /// index space — and ages with the conductance clock — but takes
+    /// no load until backlog wakes it
+    /// ([`ServePolicy::spare_activate_depth`]); once woken it serves
+    /// until evicted back to the bench after
+    /// [`ServePolicy::spare_idle_ticks`] idle ticks.
+    pub fn add_spare(&mut self, chip: ChipDeployment) {
+        self.chips.push(chip);
+        self.states.push(ChipRuntime::new(true));
     }
 
     /// Install a digital sidecar on one chip of the fleet and re-derive
@@ -333,10 +723,11 @@ impl<'d, D: Decoder> InferenceServer<'d, D> {
     }
 
     /// Fleet floorplan totals: (crossbar tiles used, tiles available)
-    /// summed over every chip. Capacity 0 on any chip means that die is
-    /// unbounded and contributes 0 to the second component — a fleet
-    /// of floorplanned chips reports its real headroom, the pre-tile
-    /// "infinite chip" fleet reports (used, 0).
+    /// summed over every chip, parked spares included. Capacity 0 on
+    /// any chip means that die is unbounded and contributes 0 to the
+    /// second component — a fleet of floorplanned chips reports its
+    /// real headroom, the pre-tile "infinite chip" fleet reports
+    /// (used, 0).
     pub fn fleet_tiles(&self) -> (usize, usize) {
         self.chips
             .iter()
@@ -347,7 +738,9 @@ impl<'d, D: Decoder> InferenceServer<'d, D> {
     /// recalibration marks are independent grids: a recalibration tick
     /// ages the chip to the current simulated time as a side effect (a
     /// field recalibration reads the conductances as they are *now*),
-    /// in one drift derivation + one literal upload per chip.
+    /// in one drift derivation + one literal upload per chip. Every
+    /// chip ages, spares and draining chips included — conductances
+    /// drift whether or not the die is taking load.
     fn tick_drift(&mut self, tick: u64) -> Result<()> {
         let Some(sch) = self.drift else {
             return Ok(());
@@ -355,15 +748,16 @@ impl<'d, D: Decoder> InferenceServer<'d, D> {
         if tick == 0 {
             return Ok(());
         }
-        let do_age = tick % sch.age_every_ticks.max(1) == 0;
-        let do_recal = matches!(sch.recalibrate_every_ticks, Some(n) if tick % n.max(1) == 0);
+        let do_age = tick % sch.age_every_ticks == 0;
+        let do_recal = matches!(sch.recalibrate_every_ticks, Some(n) if tick % n == 0);
         if !do_age && !do_recal {
             return Ok(());
         }
         let age = tick as f64 * sch.secs_per_tick;
-        for chip in &mut self.chips {
+        for (chip, state) in self.chips.iter_mut().zip(self.states.iter_mut()) {
             if do_recal {
                 chip.age_and_recalibrate(age)?;
+                state.last_calib_age = chip.age_secs();
             } else {
                 chip.age_to(age)?;
             }
@@ -371,27 +765,141 @@ impl<'d, D: Decoder> InferenceServer<'d, D> {
         Ok(())
     }
 
+    /// Drift-aware fleet health pass (no-op unless
+    /// [`ServePolicy::stale_after_secs`] > 0): finish calibrations
+    /// whose out-of-path window elapsed, drain chips whose compensation
+    /// went stale, and recalibrate drained chips — out of the serving
+    /// rotation — with one fused age-and-recalibrate plan. Returns the
+    /// number of background recalibrations performed this tick.
+    fn fleet_health(&mut self, slots: &[Vec<Option<Slot>>], tick: u64) -> Result<u64> {
+        if self.policy.stale_after_secs <= 0.0 {
+            return Ok(0);
+        }
+        for c in 0..self.chips.len() {
+            match self.states[c].status {
+                ChipStatus::Calibrating if tick >= self.states[c].calib_done_at => {
+                    self.states[c].status = ChipStatus::Serving;
+                }
+                ChipStatus::Serving => {
+                    let stale =
+                        (self.chips[c].age_secs() - self.states[c].last_calib_age).max(0.0);
+                    if stale > self.policy.stale_after_secs {
+                        self.states[c].status = ChipStatus::Draining;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let mut recals = 0u64;
+        for c in 0..self.chips.len() {
+            if self.states[c].status != ChipStatus::Draining
+                || slots[c].iter().any(Option::is_some)
+            {
+                continue;
+            }
+            // drained: recalibrate at the current simulated time, off
+            // the serving path, and rejoin after calib_ticks
+            let age = match self.drift {
+                Some(sch) => ((self.clock_ticks + tick) as f64 * sch.secs_per_tick)
+                    .max(self.chips[c].age_secs()),
+                None => self.chips[c].age_secs(),
+            };
+            self.chips[c].age_and_recalibrate(age)?;
+            self.states[c].last_calib_age = self.chips[c].age_secs();
+            self.states[c].status = ChipStatus::Calibrating;
+            self.states[c].calib_done_at = tick + self.policy.calib_ticks;
+            recals += 1;
+        }
+        Ok(recals)
+    }
+
+    /// The chip that takes the next grant, or None when no serving
+    /// chip has a free slot. Round-robin scans from the cursor;
+    /// drift-aware picks the freshest calibration with round-robin
+    /// scan order as the tie-break.
+    fn pick_chip(&self, slots: &[Vec<Option<Slot>>], rr: usize) -> Option<usize> {
+        let n = self.chips.len();
+        let eligible = |c: usize| {
+            self.states[c].status == ChipStatus::Serving && slots[c].iter().any(Option::is_none)
+        };
+        match self.policy.routing {
+            RoutePolicy::RoundRobin => (0..n).map(|k| (rr + k) % n).find(|&c| eligible(c)),
+            RoutePolicy::DriftAware => {
+                let mut best: Option<((u64, usize), usize)> = None;
+                for k in 0..n {
+                    let c = (rr + k) % n;
+                    if !eligible(c) {
+                        continue;
+                    }
+                    let stale =
+                        (self.chips[c].age_secs() - self.states[c].last_calib_age).max(0.0);
+                    // non-negative floats order by their bit patterns,
+                    // so the key is totally ordered and deterministic
+                    let key = (stale.to_bits(), k);
+                    match best {
+                        Some((b, _)) if b <= key => {}
+                        _ => best = Some((key, c)),
+                    }
+                }
+                best.map(|(_, c)| c)
+            }
+        }
+    }
+
+    /// Grant free slots to queued requests until the queue or the
+    /// fleet's free slots run out.
+    fn refill(
+        &self,
+        st: &mut SchedState,
+        slots: &mut [Vec<Option<Slot>>],
+        chip_steps: &[u64],
+        t: usize,
+        tick: u64,
+        timer: &Timer,
+    ) {
+        while !st.queue.is_empty() {
+            let Some(c) = self.pick_chip(slots, st.rr) else {
+                return; // fleet saturated; wait for a retire
+            };
+            let s = slots[c].iter().position(Option::is_none).expect("picked chip has room");
+            let qi = pick_queued(st);
+            let q = st.queue.remove(qi).expect("index in range");
+            *st.granted.entry(q.req.tenant.clone()).or_insert(0) += 1;
+            slots[c][s] = Some(Slot::new(q, t, tick, chip_steps[c], timer.ms()));
+            st.rr = (c + 1) % self.chips.len();
+        }
+    }
+
     /// Service the whole workload; returns completions in arrival
-    /// order plus aggregate stats.
+    /// order, rejections, per-tenant SLO rollups, and aggregate stats.
     pub fn run(&mut self, requests: Vec<ServeRequest>) -> Result<ServeReport> {
         let timer = Timer::start();
         let steps0 = self.decoder.steps();
+        let refreshes0: u64 = self.chips.iter().map(ChipDeployment::refreshes).sum();
+        let rederived0: u64 = self.chips.iter().map(ChipDeployment::tiles_rederived).sum();
         let (b, t) = (self.decoder.slots(), self.decoder.seq_len());
         let n_chips = self.chips.len();
         let n_requests = requests.len();
 
-        let mut queue: VecDeque<(usize, u64, ServeRequest)> = requests
-            .into_iter()
-            .enumerate()
-            .map(|(arrival, req)| (arrival, request_id(&req.prompt, arrival), req))
-            .collect();
+        // intake order: by arrival tick, stable so same-tick requests
+        // keep their submission order
+        let mut arrivals: Vec<(usize, ServeRequest)> = requests.into_iter().enumerate().collect();
+        arrivals.sort_by_key(|(_, r)| r.arrival_tick);
+        let mut pending: VecDeque<(usize, ServeRequest)> = arrivals.into();
+
+        let mut st = SchedState { queue: VecDeque::new(), granted: BTreeMap::new(), rr: 0 };
         let mut slots: Vec<Vec<Option<Slot>>> =
             (0..n_chips).map(|_| (0..b).map(|_| None).collect()).collect();
         let mut chip_steps = vec![0u64; n_chips];
         let mut completions: Vec<Completion> = Vec::with_capacity(n_requests);
+        let mut rejections: Vec<Rejection> = Vec::new();
+        let mut tenant_peak: BTreeMap<String, usize> = BTreeMap::new();
         let mut total_tokens = 0u64;
+        let mut max_queue_depth = 0usize;
+        let mut idle_ticks = 0u64;
+        let mut spare_activations = 0u64;
+        let mut background_recals = 0u64;
         let mut tick = 0u64;
-        let mut rr = 0usize; // round-robin chip cursor for refills
 
         // per-chip decode buffers, allocated once and recycled every
         // tick (parallel decode needs one buffer per chip, but the hot
@@ -402,33 +910,94 @@ impl<'d, D: Decoder> InferenceServer<'d, D> {
         let mut batches: Vec<FleetBatch> = Vec::with_capacity(n_chips);
 
         loop {
-            // ---- refill: pop the queue into free slots, round-robin
-            // across the fleet so every chip instance shares the load
-            while !queue.is_empty() {
-                let mut placed = false;
-                for k in 0..n_chips {
-                    let c = (rr + k) % n_chips;
-                    if let Some(s) = slots[c].iter().position(Option::is_none) {
-                        let (arrival, id, req) = queue.pop_front().unwrap();
-                        slots[c][s] = Some(Slot::new(arrival, id, req, t, tick, chip_steps[c]));
-                        rr = (c + 1) % n_chips;
-                        placed = true;
-                        break;
+            // ---- intake: admit requests whose arrival tick is due;
+            // a full bounded queue rejects instead of growing
+            while pending.front().is_some_and(|(_, r)| r.arrival_tick <= tick) {
+                let (arrival, req) = pending.pop_front().unwrap();
+                let id = request_id(&req.prompt, arrival);
+                if self.policy.queue_cap > 0 && st.queue.len() >= self.policy.queue_cap {
+                    rejections.push(Rejection { id, arrival, tenant: req.tenant, tick });
+                    continue;
+                }
+                st.queue.push_back(Queued {
+                    arrival,
+                    id,
+                    req,
+                    submit_tick: tick,
+                    submit_ms: timer.ms(),
+                });
+            }
+
+            // ---- fleet health: stale chips drain and recalibrate out
+            // of the serving path (no-op under the default policy)
+            background_recals += self.fleet_health(&slots, tick)?;
+
+            // ---- hot spares: wake one per tick when the backlog
+            // exceeds what the serving chips' free slots can absorb
+            if self.policy.spare_activate_depth > 0 && !st.queue.is_empty() {
+                let free: usize = (0..n_chips)
+                    .filter(|&c| self.states[c].status == ChipStatus::Serving)
+                    .map(|c| slots[c].iter().filter(|s| s.is_none()).count())
+                    .sum();
+                if st.queue.len() > free
+                    && st.queue.len() - free >= self.policy.spare_activate_depth
+                {
+                    if let Some(c) =
+                        (0..n_chips).find(|&c| self.states[c].status == ChipStatus::Spare)
+                    {
+                        self.states[c].status = ChipStatus::Serving;
+                        self.states[c].idle_ticks = 0;
+                        spare_activations += 1;
                     }
                 }
-                if !placed {
-                    break; // fleet saturated; wait for a retire
+            }
+
+            // ---- refill free slots from the queue
+            self.refill(&mut st, &mut slots, &chip_steps, t, tick, &timer);
+
+            // ---- spare eviction: an idle activated spare returns to
+            // the bench once the backlog has stayed clear long enough
+            for c in 0..n_chips {
+                let state = &mut self.states[c];
+                if !state.is_spare || state.status != ChipStatus::Serving {
+                    continue;
+                }
+                let idle = st.queue.is_empty() && slots[c].iter().all(Option::is_none);
+                state.idle_ticks = if idle { state.idle_ticks + 1 } else { 0 };
+                if state.idle_ticks >= self.policy.spare_idle_ticks {
+                    state.status = ChipStatus::Spare;
+                    state.idle_ticks = 0;
+                }
+            }
+
+            // ---- queue gauges (post-refill: the true backlog)
+            max_queue_depth = max_queue_depth.max(st.queue.len());
+            if !st.queue.is_empty() {
+                let mut depth: BTreeMap<&str, usize> = BTreeMap::new();
+                for q in &st.queue {
+                    *depth.entry(&q.req.tenant).or_insert(0) += 1;
+                }
+                for (tenant, d) in depth {
+                    let peak = tenant_peak.entry(tenant.to_string()).or_insert(0);
+                    *peak = (*peak).max(d);
                 }
             }
 
             let any_active = slots.iter().flatten().any(Option::is_some);
-            if !any_active {
-                break; // queue drained and every slot retired
+            if !any_active && st.queue.is_empty() && pending.is_empty() {
+                break; // drained: no active slots, nothing queued or due
             }
 
             // ---- conductance clock: age the fleet at schedule marks
             // (global ticks, so aging continues across `run` calls)
             self.tick_drift(self.clock_ticks + tick)?;
+
+            if !any_active {
+                // nothing to decode: idle until the next arrival is due
+                idle_ticks += 1;
+                tick += 1;
+                continue;
+            }
 
             // ---- pack one batch per chip with work (fleet order),
             // reusing the recycled buffers
@@ -498,12 +1067,17 @@ impl<'d, D: Decoder> InferenceServer<'d, D> {
                             id: sl.id,
                             arrival: sl.arrival,
                             chip: c,
+                            tenant: sl.req.tenant.clone(),
+                            priority: sl.req.priority,
                             text: Tokenizer::decode(&sl.out),
                             prompt: sl.req.prompt,
                             tokens: sl.out,
+                            submit_tick: sl.submit_tick,
+                            finish_tick: tick,
                             wait_ticks: sl.wait_ticks,
                             decode_steps: chip_steps[c] - sl.chip_step_start,
-                            latency_ms: timer.ms(),
+                            queue_ms: sl.queue_ms,
+                            latency_ms: timer.ms() - sl.submit_ms,
                             chip_age_secs: self.chips[c].age_secs(),
                         });
                     }
@@ -520,14 +1094,62 @@ impl<'d, D: Decoder> InferenceServer<'d, D> {
         debug_assert_eq!(lm_steps, chip_steps.iter().sum::<u64>());
         let stats = ServerStats {
             completed: completions.len(),
+            rejected: rejections.len(),
             total_tokens,
             lm_steps,
+            max_queue_depth,
+            idle_ticks,
+            spare_activations,
+            background_recals,
+            fleet_refreshes: self.chips.iter().map(ChipDeployment::refreshes).sum::<u64>()
+                - refreshes0,
+            fleet_tiles_rederived: self
+                .chips
+                .iter()
+                .map(ChipDeployment::tiles_rederived)
+                .sum::<u64>()
+                - rederived0,
             wall_secs,
             tok_per_sec: total_tokens as f64 / wall_secs.max(1e-9),
             req_per_sec: completions.len() as f64 / wall_secs.max(1e-9),
         };
-        Ok(ServeReport { completions, stats })
+        let tenants = tenant_rollup(&completions, &rejections, &tenant_peak, wall_secs);
+        Ok(ServeReport { completions, rejections, tenants, stats })
     }
+}
+
+/// Fold completions + rejections into the per-tenant SLO map.
+fn tenant_rollup(
+    completions: &[Completion],
+    rejections: &[Rejection],
+    peaks: &BTreeMap<String, usize>,
+    wall_secs: f64,
+) -> BTreeMap<String, TenantStats> {
+    let mut out: BTreeMap<String, TenantStats> = BTreeMap::new();
+    let mut lats: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+    let mut queues: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+    for c in completions {
+        let t = out.entry(c.tenant.clone()).or_default();
+        t.completed += 1;
+        t.tokens += c.tokens.len() as u64;
+        lats.entry(&c.tenant).or_default().push(c.latency_ms);
+        queues.entry(&c.tenant).or_default().push(c.queue_ms);
+    }
+    for r in rejections {
+        out.entry(r.tenant.clone()).or_default().rejected += 1;
+    }
+    for (name, t) in out.iter_mut() {
+        if let Some(l) = lats.get(name.as_str()) {
+            let ps = stats::percentiles(l, &[50.0, 95.0, 99.0]);
+            (t.p50_ms, t.p95_ms, t.p99_ms) = (ps[0], ps[1], ps[2]);
+        }
+        if let Some(q) = queues.get(name.as_str()) {
+            t.mean_queue_ms = stats::mean(q);
+        }
+        t.peak_queue_depth = peaks.get(name).copied().unwrap_or(0);
+        t.tok_per_sec = t.tokens as f64 / wall_secs.max(1e-9);
+    }
+    out
 }
 
 /// Stable request ID: FNV-1a over the prompt bytes and arrival index.
@@ -567,6 +1189,92 @@ mod tests {
         assert_eq!(static_chunking_steps(&[5, 3], 8), 5);
         assert_eq!(static_chunking_steps(&[], 8), 0);
         assert_eq!(static_chunking_steps(&[0], 8), 1); // >=1 token semantics
+    }
+
+    #[test]
+    fn request_builders_set_tenant_priority_and_arrival() {
+        let r = ServeRequest::greedy("Q: hi", 8);
+        assert_eq!(r.tenant, DEFAULT_TENANT);
+        assert_eq!((r.priority, r.arrival_tick), (0, 0));
+        let r = r.for_tenant("acme", 3).with_arrival(17);
+        assert_eq!(r.tenant, "acme");
+        assert_eq!((r.priority, r.arrival_tick), (3, 17));
+        assert_eq!(r.prompt, "Q: hi"); // builders only touch intake metadata
+        assert_eq!(r.max_new, 8);
+    }
+
+    #[test]
+    fn drift_schedule_validation_rejects_degenerate_cadences() {
+        let ok = DriftSchedule {
+            secs_per_tick: 10.0,
+            age_every_ticks: 1,
+            recalibrate_every_ticks: Some(1),
+        };
+        ok.validate().unwrap();
+        let e = DriftSchedule { age_every_ticks: 0, ..ok }.validate().unwrap_err().to_string();
+        assert!(e.contains("age_every_ticks"), "{e}");
+        assert!(e.contains("use 1"), "actionable: {e}");
+        let e = DriftSchedule { recalibrate_every_ticks: Some(0), ..ok }
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("recalibrate_every_ticks"), "{e}");
+        assert!(e.contains("None"), "actionable: {e}");
+        let e = DriftSchedule { secs_per_tick: f64::NAN, ..ok }
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("secs_per_tick"), "{e}");
+        // uncompensated() can still spell a degenerate cadence, but it
+        // cannot be installed
+        assert!(DriftSchedule::uncompensated(1.0, 0).validate().is_err());
+    }
+
+    #[test]
+    fn serve_policy_validation_rejects_degenerate_knobs() {
+        ServePolicy::default().validate().unwrap();
+        let e = ServePolicy { calib_ticks: 0, ..Default::default() }
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("calib_ticks"), "{e}");
+        let e = ServePolicy { spare_idle_ticks: 0, ..Default::default() }
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("spare_idle_ticks"), "{e}");
+        let e = ServePolicy { stale_after_secs: -1.0, ..Default::default() }
+            .validate()
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("stale_after_secs"), "{e}");
+    }
+
+    #[test]
+    fn route_policy_parses_cli_names() {
+        assert_eq!(RoutePolicy::parse("rr").unwrap(), RoutePolicy::RoundRobin);
+        assert_eq!(RoutePolicy::parse("round-robin").unwrap(), RoutePolicy::RoundRobin);
+        assert_eq!(RoutePolicy::parse("drift").unwrap(), RoutePolicy::DriftAware);
+        assert!(RoutePolicy::parse("fastest").is_err());
+    }
+
+    #[test]
+    fn grant_key_is_priority_then_fairness_then_fifo() {
+        let q = |tenant: &str, priority: u8, arrival: usize| Queued {
+            arrival,
+            id: 0,
+            req: ServeRequest::greedy("p", 1).for_tenant(tenant, priority),
+            submit_tick: 0,
+            submit_ms: 0.0,
+        };
+        let mut granted = BTreeMap::new();
+        granted.insert("a".to_string(), 3u64);
+        // higher priority beats everything
+        assert!(queued_key(&q("a", 2, 9), &granted) < queued_key(&q("b", 0, 0), &granted));
+        // equal priority: fewer grants wins
+        assert!(queued_key(&q("b", 0, 9), &granted) < queued_key(&q("a", 0, 0), &granted));
+        // equal priority and grants: FIFO by submission order
+        assert!(queued_key(&q("a", 0, 1), &granted) < queued_key(&q("a", 0, 2), &granted));
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Serving workloads: the built-in mixed request stream and a
+//! Serving workloads: the built-in mixed request stream, an
+//! arrival-timed multi-tenant generator for soak runs, and a
 //! prompt-file loader for `afm serve`.
 
 use anyhow::{Context, Result};
@@ -44,6 +45,68 @@ pub fn mixed_workload(n: usize, seed: u64) -> Vec<ServeRequest> {
 pub fn sustained_workload(waves: usize, per_wave: usize, seed: u64) -> Vec<ServeRequest> {
     let mut rng = Pcg64::with_stream(seed, 0x3418);
     (0..waves).flat_map(|_| mixed_workload(per_wave, rng.next_u64())).collect()
+}
+
+/// One tenant's traffic profile in a multi-tenant workload.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    /// tenant name, carried on every generated request
+    pub name: String,
+    /// admission priority for all of this tenant's requests
+    pub priority: u8,
+    /// mean inter-arrival gap in fleet ticks (0 = everything at tick 0)
+    pub mean_gap_ticks: f64,
+}
+
+impl TenantSpec {
+    /// A tenant profile with the given name, priority, and mean
+    /// inter-arrival gap (in fleet ticks).
+    pub fn new(name: &str, priority: u8, mean_gap_ticks: f64) -> TenantSpec {
+        TenantSpec { name: name.to_string(), priority, mean_gap_ticks: mean_gap_ticks.max(0.0) }
+    }
+}
+
+/// A deterministic default tenant mix for CLI/soak runs: `tenant0..n`,
+/// priorities cycling 0/1/2, inter-arrival gaps widening with the
+/// index so the streams interleave instead of marching in lockstep.
+pub fn default_tenants(n: usize) -> Vec<TenantSpec> {
+    (0..n.max(1))
+        .map(|i| TenantSpec::new(&format!("tenant{i}"), (i % 3) as u8, 1.0 + i as f64))
+        .collect()
+}
+
+/// Deterministic arrival-timed multi-tenant workload: `per_tenant`
+/// greedy requests per tenant, each tenant drawing its own
+/// exponential-ish inter-arrival gaps from an independent seeded
+/// stream (stream `0x7e4a ^ tenant_index`, so adding a tenant never
+/// perturbs another's trace). The merged stream is sorted by arrival
+/// tick with ties broken by tenant order — byte-stable across runs.
+pub fn multi_tenant_workload(
+    tenants: &[TenantSpec],
+    per_tenant: usize,
+    seed: u64,
+) -> Vec<ServeRequest> {
+    let mut all: Vec<ServeRequest> = Vec::with_capacity(tenants.len() * per_tenant);
+    for (ti, spec) in tenants.iter().enumerate() {
+        let mut rng = Pcg64::with_stream(seed, 0x7e4a ^ ti as u64);
+        let mut at = 0.0f64;
+        for i in 0..per_tenant {
+            let (prompt, max_new) = TEMPLATES[rng.below(TEMPLATES.len())];
+            if spec.mean_gap_ticks > 0.0 {
+                // inverse-CDF exponential gap; uniform() is in [0, 1)
+                at += -spec.mean_gap_ticks * (1.0 - rng.uniform()).ln();
+            }
+            all.push(
+                ServeRequest::greedy(&format!("[{} #{i}] {prompt}", spec.name), max_new)
+                    .for_tenant(&spec.name, spec.priority)
+                    .with_arrival(at as u64),
+            );
+        }
+    }
+    // stable sort: same-tick requests keep tenant order, and each
+    // tenant's own requests stay in submission order
+    all.sort_by_key(|r| r.arrival_tick);
+    all
 }
 
 /// Load one request per non-empty line; `prompt` or `prompt<TAB>max_new`.
@@ -98,6 +161,48 @@ mod tests {
             x.iter().zip(y).any(|(a, b)| a.prompt != b.prompt)
         };
         assert!(differs(&a[..8], &a[8..16]) || differs(&a[..8], &a[16..24]));
+    }
+
+    #[test]
+    fn multi_tenant_workload_is_deterministic_and_arrival_sorted() {
+        let specs = default_tenants(3);
+        let a = multi_tenant_workload(&specs, 8, 11);
+        let b = multi_tenant_workload(&specs, 8, 11);
+        assert_eq!(a.len(), 24);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.arrival_tick, y.arrival_tick);
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.priority, y.priority);
+        }
+        // arrivals are non-decreasing and actually spread over time
+        assert!(a.windows(2).all(|w| w[0].arrival_tick <= w[1].arrival_tick));
+        assert!(a.last().unwrap().arrival_tick > 0, "gaps must spread arrivals");
+        // every tenant is present with its spec'd priority
+        for spec in &specs {
+            let mine: Vec<_> = a.iter().filter(|r| r.tenant == spec.name).collect();
+            assert_eq!(mine.len(), 8);
+            assert!(mine.iter().all(|r| r.priority == spec.priority));
+        }
+        // different seed, different arrival trace
+        let c = multi_tenant_workload(&specs, 8, 12);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.arrival_tick != y.arrival_tick
+            || x.prompt != y.prompt));
+    }
+
+    #[test]
+    fn multi_tenant_streams_are_independent_per_tenant() {
+        // adding a tenant must not perturb an existing tenant's trace
+        let two = multi_tenant_workload(&default_tenants(2), 6, 5);
+        let three = multi_tenant_workload(&default_tenants(3), 6, 5);
+        let trace = |reqs: &[ServeRequest], name: &str| -> Vec<(String, u64)> {
+            reqs.iter()
+                .filter(|r| r.tenant == name)
+                .map(|r| (r.prompt.clone(), r.arrival_tick))
+                .collect()
+        };
+        assert_eq!(trace(&two, "tenant0"), trace(&three, "tenant0"));
+        assert_eq!(trace(&two, "tenant1"), trace(&three, "tenant1"));
     }
 
     #[test]

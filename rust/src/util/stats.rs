@@ -38,13 +38,16 @@ pub fn percentile(v: &[f64], p: f64) -> f64 {
 
 /// Linearly-interpolated percentiles over one sorted copy of `v` —
 /// one sort regardless of how many cut points are requested. Empty
-/// input yields 0 for every percentile.
+/// input yields 0 for every percentile. Sorting uses `total_cmp`, so
+/// NaN samples land at the deterministic extremes of the sorted order
+/// (-NaN first, +NaN last) instead of an input-order-dependent
+/// position that silently skews every cut.
 pub fn percentiles(v: &[f64], ps: &[f64]) -> Vec<f64> {
     if v.is_empty() {
         return vec![0.0; ps.len()];
     }
     let mut s = v.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    s.sort_by(|a, b| a.total_cmp(b));
     ps.iter()
         .map(|&p| {
             let rank = (p.clamp(0.0, 100.0) / 100.0) * (s.len() - 1) as f64;
@@ -241,5 +244,25 @@ mod tests {
             assert_eq!(ps[i], percentile(&v, p));
         }
         assert_eq!(percentiles(&[], &[50.0, 95.0]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn percentiles_are_input_order_independent_under_nan() {
+        // regression: partial_cmp(..).unwrap_or(Equal) left a NaN
+        // sample wherever the sort happened to visit it, so the same
+        // multiset gave different percentiles per input order
+        let orders: [&[f64]; 3] =
+            [&[f64::NAN, 1.0, 3.0], &[1.0, f64::NAN, 3.0], &[1.0, 3.0, f64::NAN]];
+        let cuts: Vec<Vec<f64>> =
+            orders.iter().map(|v| percentiles(v, &[0.0, 50.0, 100.0])).collect();
+        for c in &cuts[1..] {
+            let same = c.iter().zip(&cuts[0]).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "NaN position must not depend on input order: {cuts:?}");
+        }
+        // +NaN sorts last: the finite cuts are unpolluted, only the
+        // top cut reflects the bad sample
+        assert_eq!(cuts[0][0], 1.0);
+        assert_eq!(cuts[0][1], 3.0);
+        assert!(cuts[0][2].is_nan());
     }
 }

@@ -16,8 +16,9 @@ use afm::data::World;
 use afm::runtime::manifest::ModelDims;
 use afm::runtime::Params;
 use afm::serve::{
-    mock::MockDecoder, static_chunking_steps, sustained_workload, ChipDeployment, DriftSchedule,
-    HwScalars, InferenceServer, ServeRequest,
+    mock::MockDecoder, multi_tenant_workload, static_chunking_steps, sustained_workload,
+    ChipDeployment, ChipStatus, Decoder, DriftSchedule, HwScalars, InferenceServer, RoutePolicy,
+    ServePolicy, ServeRequest, TenantSpec,
 };
 use afm::util::json::Json;
 use afm::util::prng::Pcg64;
@@ -719,15 +720,11 @@ fn prop_drift_schedule_serving_is_deterministic_and_reports_age() {
             assert_eq!(x.chip_age_secs, y.chip_age_secs);
         }
         // ages are reported on the schedule's grid and never regress
-        // in retirement order (the conductance clock only moves forward)
+        // in retirement order (the conductance clock only moves
+        // forward); finish_tick is the simulated retirement instant,
+        // so the order is exact and wall-clock-free
         let mut by_retire: Vec<&afm::serve::Completion> = a.completions.iter().collect();
-        // tie-break equal wall timestamps by age so coarse timers can't
-        // order two same-instant retirements backwards
-        by_retire.sort_by(|x, y| {
-            (x.latency_ms, x.chip_age_secs)
-                .partial_cmp(&(y.latency_ms, y.chip_age_secs))
-                .unwrap()
-        });
+        by_retire.sort_by_key(|x| x.finish_tick);
         let mut last = 0.0f64;
         for c in by_retire {
             assert!(c.chip_age_secs >= last);
@@ -747,7 +744,7 @@ fn drift_schedule_changes_outputs_and_gdc_recalibration_counters_it() {
     let run = |schedule: Option<DriftSchedule>| {
         let mut d = MockDecoder::new(2, 16, Tokenizer::vocab());
         let mut srv = InferenceServer::new(&mut d, vec![provision(33)], 1).unwrap();
-        srv.set_drift_schedule(schedule);
+        srv.set_drift_schedule(schedule).unwrap();
         srv.run(reqs.clone()).unwrap()
     };
     let fresh = run(None);
@@ -782,6 +779,324 @@ fn round_robin_spreads_requests_across_the_fleet() {
     let served: std::collections::BTreeSet<usize> =
         report.completions.iter().map(|c| c.chip).collect();
     assert_eq!(served.len(), 3, "every chip instance must take load: {served:?}");
+}
+
+#[test]
+fn latency_is_per_request_not_run_timestamp() {
+    // regression: latency_ms used to be the run timer at retirement, so
+    // a short request admitted late reported the whole run's elapsed
+    // time. With per-request submit stamps, a one-token request that
+    // retires *after* a long request must still report a *smaller*
+    // latency than it.
+    struct SlowDecoder {
+        inner: MockDecoder,
+        delay: std::time::Duration,
+    }
+    impl Decoder for SlowDecoder {
+        fn slots(&self) -> usize {
+            self.inner.slots()
+        }
+        fn seq_len(&self) -> usize {
+            self.inner.seq_len()
+        }
+        fn vocab(&self) -> usize {
+            self.inner.vocab()
+        }
+        fn decode_step(
+            &mut self,
+            chip: &ChipDeployment,
+            tokens: &[i32],
+            lens: &[i32],
+            rng: &mut Pcg64,
+        ) -> anyhow::Result<Tensor> {
+            std::thread::sleep(self.delay);
+            self.inner.decode_step(chip, tokens, lens, rng)
+        }
+        fn steps(&self) -> u64 {
+            self.inner.steps()
+        }
+    }
+    let mut long = ServeRequest::greedy("Q: tell me everything about the quil. A: ", 40);
+    long.stop_at_eos = false;
+    let mut short = ServeRequest::greedy("Q: 1+1? A: ", 1).with_arrival(60);
+    short.stop_at_eos = false;
+    let mut d = SlowDecoder {
+        inner: MockDecoder::new(1, 16, Tokenizer::vocab()),
+        delay: std::time::Duration::from_millis(3),
+    };
+    let report = InferenceServer::new(&mut d, vec![provision(7)], 1)
+        .unwrap()
+        .run(vec![long, short])
+        .unwrap();
+    let (a, b) = (&report.completions[0], &report.completions[1]);
+    // the long request holds the only slot for ticks 0..=39; the short
+    // one arrives at tick 60 after 20 idle ticks and retires last
+    assert_eq!(a.finish_tick, 39);
+    assert_eq!(b.submit_tick, 60);
+    assert_eq!(b.finish_tick, 60);
+    assert_eq!(b.wait_ticks, 0);
+    assert_eq!(report.stats.idle_ticks, 20);
+    // 40 throttled decode ticks vs 1: the late retiree must be cheaper
+    assert!(
+        b.latency_ms < a.latency_ms,
+        "late short request reported run-timestamp latency: short {} vs long {}",
+        b.latency_ms,
+        a.latency_ms
+    );
+    for c in &report.completions {
+        assert!(c.queue_ms <= c.latency_ms, "queue wait is a share of latency");
+    }
+}
+
+#[test]
+fn prop_arrival_timed_intake_is_deterministic_and_accounts_waits() {
+    check("serve-arrivals", 15, |g| {
+        let reqs: Vec<ServeRequest> = (0..g.usize_in(3, 10))
+            .map(|i| {
+                let mut r = ServeRequest::greedy(&format!("Q: a{i}?"), g.usize_in(1, 6))
+                    .with_arrival(g.usize_in(0, 20) as u64);
+                r.stop_at_eos = false;
+                r
+            })
+            .collect();
+        let run = || {
+            let mut d = MockDecoder::new(2, 16, Tokenizer::vocab());
+            InferenceServer::new(&mut d, vec![provision(5)], 1)
+                .unwrap()
+                .run(reqs.clone())
+                .unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.completions.len(), reqs.len());
+        for (x, y) in a.completions.iter().zip(&b.completions) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.submit_tick, y.submit_tick);
+            assert_eq!(x.finish_tick, y.finish_tick);
+            assert_eq!(x.wait_ticks, y.wait_ticks);
+        }
+        for (c, r) in a.completions.iter().zip(&reqs) {
+            // the unbounded queue admits every request on its due tick
+            assert_eq!(c.submit_tick, r.arrival_tick, "admission off the arrival tick");
+            assert!(c.finish_tick >= c.submit_tick + c.wait_ticks);
+        }
+    });
+}
+
+#[test]
+fn priority_and_tenant_fairness_order_grants() {
+    // one chip, one slot, one-token budgets: grants serialize, so the
+    // finish_tick order *is* the grant order
+    let mk = |tenant: &str, pr: u8, i: usize| {
+        let mut r = ServeRequest::greedy(&format!("Q: {tenant} {i}?"), 1).for_tenant(tenant, pr);
+        r.stop_at_eos = false;
+        r
+    };
+    let run = |bolt_priority: u8| {
+        // adversarial submission order: all of acme's backlog first
+        let mut reqs = Vec::new();
+        for i in 0..3 {
+            reqs.push(mk("acme", 0, i));
+        }
+        for i in 0..3 {
+            reqs.push(mk("bolt", bolt_priority, i));
+        }
+        let mut d = MockDecoder::new(1, 16, Tokenizer::vocab());
+        let report =
+            InferenceServer::new(&mut d, vec![provision(4)], 1).unwrap().run(reqs).unwrap();
+        let mut order: Vec<(u64, String)> =
+            report.completions.iter().map(|c| (c.finish_tick, c.tenant.clone())).collect();
+        order.sort();
+        order.into_iter().map(|(_, t)| t).collect::<Vec<String>>()
+    };
+    // equal priority: the fair scheduler alternates tenants even though
+    // acme queued its whole backlog first
+    assert_eq!(run(0), ["acme", "bolt", "acme", "bolt", "acme", "bolt"]);
+    // higher priority preempts the earlier-queued tenant entirely
+    assert_eq!(run(2), ["bolt", "bolt", "bolt", "acme", "acme", "acme"]);
+}
+
+#[test]
+fn tenant_slo_rollups_cover_every_tenant() {
+    let specs = vec![TenantSpec::new("acme", 0, 0.5), TenantSpec::new("bolt", 1, 2.0)];
+    let reqs = multi_tenant_workload(&specs, 6, 13);
+    let mut d = MockDecoder::new(2, 16, Tokenizer::vocab());
+    let report =
+        InferenceServer::new(&mut d, vec![provision(8)], 1).unwrap().run(reqs).unwrap();
+    assert_eq!(report.stats.completed, 12);
+    assert_eq!(report.tenants.len(), 2, "one SLO rollup per tenant: {:?}", report.tenants);
+    for (name, ts) in &report.tenants {
+        let mine: Vec<_> = report.completions.iter().filter(|c| &c.tenant == name).collect();
+        assert_eq!(ts.completed, 6);
+        assert_eq!(ts.completed, mine.len());
+        assert_eq!(ts.tokens, mine.iter().map(|c| c.tokens.len() as u64).sum::<u64>());
+        assert_eq!(ts.rejected, 0);
+        // percentile cuts come from one sorted latency vector
+        assert!(ts.p50_ms <= ts.p95_ms && ts.p95_ms <= ts.p99_ms);
+        assert!(ts.p50_ms >= 0.0 && ts.mean_queue_ms >= 0.0);
+        assert!(ts.tok_per_sec >= 0.0);
+    }
+}
+
+#[test]
+fn bounded_queue_rejects_overflow_deterministically() {
+    let reqs: Vec<ServeRequest> = (0..6)
+        .map(|i| {
+            let mut r = ServeRequest::greedy(&format!("Q: {i}?"), 2);
+            r.stop_at_eos = false;
+            r
+        })
+        .collect();
+    let run = || {
+        let mut d = MockDecoder::new(1, 16, Tokenizer::vocab());
+        let mut srv = InferenceServer::new(&mut d, vec![provision(6)], 1).unwrap();
+        srv.set_policy(ServePolicy { queue_cap: 2, ..Default::default() }).unwrap();
+        srv.run(reqs.clone()).unwrap()
+    };
+    let report = run();
+    // tick 0: two admissions fill the cap, one grant frees a slot only
+    // after intake — the other four requests bounce
+    assert_eq!(report.stats.rejected, 4);
+    assert_eq!(report.rejections.len(), 4);
+    assert_eq!(report.stats.completed, 2);
+    let bounced: Vec<usize> = report.rejections.iter().map(|r| r.arrival).collect();
+    assert_eq!(bounced, [2, 3, 4, 5]);
+    assert!(report.rejections.iter().all(|r| r.tick == 0));
+    // post-refill backlog never exceeds the cap
+    assert!(report.stats.max_queue_depth <= 2);
+    // rejection accounting is byte-stable
+    let again = run();
+    let ids = |r: &afm::serve::ServeReport| -> Vec<u64> {
+        r.rejections.iter().map(|x| x.id).collect()
+    };
+    assert_eq!(ids(&report), ids(&again));
+}
+
+#[test]
+fn clock_carryover_spans_runs_and_stays_deterministic() {
+    // satellite: successive run() calls on one server share the fleet's
+    // conductance clock — the second workload serves on older chips,
+    // ages never regress across the boundary, and the pair of runs is
+    // byte-identical when repeated
+    let schedule = DriftSchedule {
+        secs_per_tick: 1000.0,
+        age_every_ticks: 1,
+        recalibrate_every_ticks: None,
+    };
+    let w1 = sustained_workload(2, 6, 9);
+    let w2: Vec<ServeRequest> = (0..6)
+        .map(|i| {
+            let mut r = ServeRequest::greedy(&format!("Q: later {i}?"), 3)
+                .with_arrival(3 * i as u64);
+            r.stop_at_eos = false;
+            r
+        })
+        .collect();
+    let run_pair = || {
+        let mut d = MockDecoder::new(2, 16, Tokenizer::vocab());
+        let mut srv =
+            InferenceServer::with_drift(&mut d, vec![provision(21)], 1, schedule).unwrap();
+        let a = srv.run(w1.clone()).unwrap();
+        let b = srv.run(w2.clone()).unwrap();
+        (a, b)
+    };
+    let (a1, b1) = run_pair();
+    let (a2, b2) = run_pair();
+    for (x, y) in a1.completions.iter().zip(&a2.completions) {
+        assert_eq!(x.tokens, y.tokens);
+        assert_eq!(x.chip_age_secs, y.chip_age_secs);
+    }
+    for (x, y) in b1.completions.iter().zip(&b2.completions) {
+        assert_eq!(x.tokens, y.tokens, "carried clock broke determinism");
+        assert_eq!(x.chip_age_secs, y.chip_age_secs);
+    }
+    // the clock only moves forward across the run boundary
+    let max_a = a1.completions.iter().map(|c| c.chip_age_secs).fold(0.0, f64::max);
+    let min_b = b1.completions.iter().map(|c| c.chip_age_secs).fold(f64::INFINITY, f64::min);
+    assert!(max_a > 0.0, "first run must age the chip");
+    assert!(min_b > max_a, "second run must serve on an older chip");
+    // wait accounting stays coherent under the carried clock: ticks are
+    // run-local, so submit/finish/wait still line up
+    for (c, r) in b1.completions.iter().zip(&w2) {
+        assert_eq!(c.submit_tick, r.arrival_tick);
+        assert!(c.finish_tick >= c.submit_tick + c.wait_ticks);
+    }
+}
+
+#[test]
+fn drift_aware_routing_recalibrates_stale_chips_off_path() {
+    let reqs = sustained_workload(6, 8, 3);
+    let schedule = DriftSchedule {
+        secs_per_tick: 3600.0,
+        age_every_ticks: 1,
+        recalibrate_every_ticks: None,
+    };
+    let run = || {
+        let mut d = MockDecoder::new(2, 16, Tokenizer::vocab());
+        let mut srv =
+            InferenceServer::with_drift(&mut d, vec![provision(1), provision(2)], 1, schedule)
+                .unwrap();
+        srv.set_policy(ServePolicy {
+            routing: RoutePolicy::DriftAware,
+            stale_after_secs: 6.0 * 3600.0,
+            calib_ticks: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let report = srv.run(reqs.clone()).unwrap();
+        let calibrated = srv.chips().iter().all(|c| c.gdc_calibrated());
+        (report, calibrated)
+    };
+    let (a, calibrated) = run();
+    let (b, _) = run();
+    // every request still retires, and chips crossed the staleness
+    // threshold often enough to recalibrate out of the serving path
+    assert_eq!(a.stats.completed, reqs.len());
+    assert!(a.stats.background_recals > 0, "stale chips never recalibrated");
+    assert!(calibrated, "background recals must leave chips GDC-compensated");
+    assert!(a.stats.fleet_refreshes > 0);
+    // drift-aware routing is part of the deterministic schedule
+    for (x, y) in a.completions.iter().zip(&b.completions) {
+        assert_eq!(x.tokens, y.tokens);
+        assert_eq!(x.chip, y.chip);
+        assert_eq!(x.finish_tick, y.finish_tick);
+    }
+}
+
+#[test]
+fn hot_spares_wake_under_backlog_and_park_when_idle() {
+    // a burst of one-token requests swamps the single serving chip, so
+    // the spare wakes; the backlog drains, the spare sits idle past its
+    // eviction window and parks again before a late trickle arrives
+    let mut reqs: Vec<ServeRequest> = (0..8)
+        .map(|i| {
+            let mut r = ServeRequest::greedy(&format!("Q: burst {i}?"), 1);
+            r.stop_at_eos = false;
+            r
+        })
+        .collect();
+    let mut tail = ServeRequest::greedy("Q: tail?", 1).with_arrival(30);
+    tail.stop_at_eos = false;
+    reqs.push(tail);
+    let mut d = MockDecoder::new(1, 16, Tokenizer::vocab());
+    let mut srv = InferenceServer::new(&mut d, vec![provision(1)], 1).unwrap();
+    srv.add_spare(provision(2));
+    assert_eq!(srv.parked_spares(), 1);
+    let policy = ServePolicy { spare_activate_depth: 2, spare_idle_ticks: 4, ..Default::default() };
+    srv.set_policy(policy).unwrap();
+    let report = srv.run(reqs).unwrap();
+    assert_eq!(report.stats.completed, 9);
+    assert_eq!(report.stats.spare_activations, 1);
+    assert!(
+        report.completions.iter().any(|c| c.chip == 1),
+        "a woken spare must take load"
+    );
+    // the burst drains by tick 3; four idle ticks later the spare is
+    // parked, so the tick-30 trickle lands on the primary chip
+    let tail_c = report.completions.last().unwrap();
+    assert_eq!(tail_c.chip, 0, "a parked spare must not take the trickle");
+    assert_eq!(srv.parked_spares(), 1, "spare must park again after its idle window");
+    assert_eq!(srv.chip_status(1), Some(ChipStatus::Spare));
 }
 
 // ---------------------------------------------------------------- hwa

@@ -122,6 +122,34 @@ if [[ $fast -eq 0 ]]; then
   fi
 fi
 
+# Serving soak smoke: a two-tenant arrival-timed workload on a two-chip
+# fleet with drift-aware routing, a bounded queue, and background
+# recalibration, run twice into fresh run dirs — the serve.md reports
+# carry only simulated-clock columns (ticks, ages, token text), so a
+# byte-level diff proves the whole scheduler (intake, fairness, routing,
+# fleet health) is deterministic. Same artifact gate as the train smoke.
+if [[ $fast -eq 0 ]]; then
+  if [[ -f artifacts/manifest.json ]]; then
+    echo "== afm serve smoke (two tenants, drift-aware routing, determinism)"
+    smoke_runs="$(mktemp -d)"
+    serve_soak() {
+      cargo run --release --bin afm -- serve \
+        --chips 2 --tenants 2 --requests 16 --max-new 8 \
+        --route drift --drift 1h --age-every 4 --stale-after 6h \
+        --queue-cap 32 \
+        --set pretrain.steps=2 --set train.steps=4 --set train.accum=1 \
+        --set datagen.tokens=2048 --set "paths.runs=\"$smoke_runs\""
+    }
+    serve_soak
+    cp "$smoke_runs"/*/reports/serve.md "$smoke_runs/first_serve.md"
+    serve_soak
+    diff "$smoke_runs"/*/reports/serve.md "$smoke_runs/first_serve.md"
+    rm -rf "$smoke_runs"
+  else
+    echo "== afm serve smoke skipped (no artifacts/manifest.json — run 'make artifacts')"
+  fi
+fi
+
 # the golden gate only protects future commits once the blessed file is
 # tracked — a fresh checkout would otherwise re-bless and pass trivially
 if ! git ls-files --error-unmatch rust/tests/golden/conformance.json >/dev/null 2>&1; then
