@@ -133,6 +133,7 @@ fn main() -> anyhow::Result<()> {
             ("gdc_adapter_gain_1y", Json::num(both_1y - gdc_1y)),
             ("ages_adapter_beats_gdc", Json::num(ages_adapter_beats_gdc as f64)),
             ("best_gain_vs_gdc", Json::num(best_gain_vs_gdc)),
+            ("threads", Json::num(afm::util::parallel::threads() as f64)),
         ]),
     );
     Ok(())

@@ -109,6 +109,7 @@ fn main() -> anyhow::Result<()> {
             ("acc_1y_gdc", Json::num(year_gdc)),
             ("acc_1y_gdc_std", Json::num(stats::std(&cells[ages.len() - 1][1]))),
             ("gdc_recovered_frac", Json::num(recovered)),
+            ("threads", Json::num(afm::util::parallel::threads() as f64)),
         ]),
     );
     Ok(())

@@ -160,6 +160,7 @@ fn main() -> anyhow::Result<()> {
             ("acc_1y_hwa_gdc_std", Json::num(stats::std(&year[3]))),
             ("hwa_gain_1y_no_gdc", Json::num(hwa_raw - base_raw)),
             ("hwa_gain_1y_gdc", Json::num(hwa_gdc - base_gdc)),
+            ("threads", Json::num(afm::util::parallel::threads() as f64)),
         ]),
     );
     Ok(())

@@ -82,6 +82,7 @@ fn main() -> anyhow::Result<()> {
     );
     row_fields.insert("bench".into(), Json::str("tile_size"));
     row_fields.insert("seeds".into(), Json::num(seeds as f64));
+    row_fields.insert("threads".into(), Json::num(afm::util::parallel::threads() as f64));
     row_fields.insert(
         "sizes".into(),
         Json::str(runs.iter().map(|(l, _)| l.as_str()).collect::<Vec<_>>().join(",")),

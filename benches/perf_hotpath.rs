@@ -15,7 +15,7 @@ use afm::coordinator::noise::{self, NoiseModel};
 use afm::coordinator::pipeline::Pipeline;
 use afm::data::tasks::build_task;
 use afm::runtime::lit_tokens;
-use afm::serve::{mixed_workload, ChipDeployment, InferenceServer};
+use afm::serve::{mixed_workload, ChipDeployment, DerivationCache, DeriveSpec, InferenceServer};
 use afm::util::json::Json;
 use afm::util::prng::Pcg64;
 
@@ -306,6 +306,7 @@ fn main() -> anyhow::Result<()> {
             ("recal_seq_ms", Json::num(recal_seq_ms)),
             ("recal_speedup", Json::num(speedup_of(recal_seq_ms, recal_fused_ms))),
             ("refreshes_per_tick", Json::num(refreshes_per_tick)),
+            ("threads", Json::num(afm::util::parallel::threads() as f64)),
         ]),
     );
     println!(
@@ -425,11 +426,117 @@ fn main() -> anyhow::Result<()> {
             ("dirty_ms", Json::num(dirty_ms)),
             ("full_ms", Json::num(full_ms)),
             ("speedup", Json::num(dr_speedup)),
+            ("threads", Json::num(afm::util::parallel::threads() as f64)),
         ]),
     );
     println!(
         "dirty refresh ({dr_key}, {:.0}% of tiles): full {full_ms:.1} ms -> scoped {dirty_ms:.1} ms (x{dr_speedup:.2})",
         dirty_fraction * 100.0
+    );
+
+    // ---- shared-work sweep engine: cold vs warm grid walk through
+    // the content-addressed derivation cache. One hardware seed, so
+    // every point shares the programmed stage and each age pair shares
+    // its drifted stage — cold (capacity 0) re-derives every chain in
+    // full, warm replays the grid against resident stages. Cached
+    // results are asserted fingerprint-identical to cold at 1 and 4
+    // threads (the hard invariant `rust/tests/sweep_cache.rs` pins).
+    let sw_base = std::sync::Arc::new(zoo.teacher.clone());
+    let sw_tiling = afm::coordinator::tiles::Tiling::new(64, 64);
+    let mut sw_items: Vec<(DeriveSpec, afm::coordinator::tiles::Tiling)> = Vec::new();
+    for age in [month, 12.0 * month] {
+        for gdc in [false, true] {
+            for rtn_bits in [0u32, 4] {
+                sw_items.push((
+                    DeriveSpec {
+                        noise: NoiseModel::Pcm,
+                        seed: 7,
+                        drift: DriftModel::default(),
+                        age_secs: age,
+                        gdc,
+                        rtn_bits,
+                        adapter_rank: 0,
+                        adapter_iters: 1,
+                    },
+                    sw_tiling,
+                ));
+            }
+        }
+    }
+    let sw_base_fp = sw_base.fingerprint();
+    let sw_total: usize =
+        sw_items.iter().map(|(s, t)| s.sort_key(sw_base_fp, t).len()).sum();
+    let cold_fps: Vec<u64> = afm::util::parallel::with_threads(1, || {
+        DerivationCache::new(0)
+            .derive_batch(&sw_base, &sw_items)
+            .iter()
+            .map(|a| a.fingerprint())
+            .collect()
+    });
+    // shared-prefix accounting on one bounded pass over the grid
+    let mut sw_probe = DerivationCache::new(64);
+    sw_probe.derive_batch(&sw_base, &sw_items);
+    let (sw_derived, sw_avoided) = (sw_probe.cache_misses(), sw_probe.derivations_avoided());
+    assert!(sw_avoided > 0, "a one-seed grid must share stage prefixes");
+    assert_eq!(sw_derived + sw_avoided, sw_total as u64, "accounting must cover every stage");
+    let mut sw_cold_ms: Vec<f64> = Vec::new();
+    let mut sw_warm_ms: Vec<f64> = Vec::new();
+    for tn in [1usize, 4] {
+        afm::util::parallel::with_threads(tn, || {
+            let warm_fps: Vec<u64> = {
+                let mut cache = DerivationCache::new(64);
+                cache.derive_batch(&sw_base, &sw_items); // fill
+                cache
+                    .derive_batch(&sw_base, &sw_items)
+                    .iter()
+                    .map(|a| a.fingerprint())
+                    .collect()
+            };
+            assert_eq!(warm_fps, cold_fps, "cached grid diverged from cold at {tn} threads");
+            let r_cold = bs::bench(
+                &format!("sweep grid cold (8 pts, cap 0, {tn} thr)"),
+                1,
+                4,
+                Some((sw_items.len() as f64, "pts/s")),
+                || DerivationCache::new(0).derive_batch(&sw_base, &sw_items),
+            );
+            let mut warm_cache = DerivationCache::new(64);
+            warm_cache.derive_batch(&sw_base, &sw_items);
+            let r_warm = bs::bench(
+                &format!("sweep grid warm (8 pts, cached, {tn} thr)"),
+                1,
+                4,
+                Some((sw_items.len() as f64, "pts/s")),
+                || warm_cache.derive_batch(&sw_base, &sw_items),
+            );
+            sw_cold_ms.push(r_cold.mean_ms);
+            sw_warm_ms.push(r_warm.mean_ms);
+            results.push(r_cold);
+            results.push(r_warm);
+        });
+    }
+    let sw_speedup = speedup_of(sw_cold_ms[0], sw_warm_ms[0]);
+    let _ = afm::util::append_jsonl(
+        &bs::reports_dir().join("bench.jsonl"),
+        &Json::obj(vec![
+            ("bench", Json::str("sweep_cache")),
+            ("op", Json::str("derive_batch shared-prefix grid, 64x64 tiles")),
+            ("points", Json::num(sw_items.len() as f64)),
+            ("threads", Json::arr_f64(&[1.0, 4.0])),
+            ("cold_ms", Json::arr_f64(&sw_cold_ms)),
+            ("warm_ms", Json::arr_f64(&sw_warm_ms)),
+            ("derivations_total", Json::num(sw_total as f64)),
+            ("derivations_done", Json::num(sw_derived as f64)),
+            ("derivations_avoided", Json::num(sw_avoided as f64)),
+            ("warm_speedup_1thr", Json::num(sw_speedup)),
+        ]),
+    );
+    println!(
+        "sweep cache ({} pts): cold {:.1} ms -> warm {:.1} ms (x{sw_speedup:.2}), \
+         {sw_derived} of {sw_total} stages derived ({sw_avoided} avoided)",
+        sw_items.len(),
+        sw_cold_ms[0],
+        sw_warm_ms[0]
     );
 
     // ---- serving throughput (continuous batching over a 2-chip fleet)
@@ -478,6 +585,7 @@ fn main() -> anyhow::Result<()> {
             ("p50_ms", Json::num(p50)),
             ("p95_ms", Json::num(p95)),
             ("lm_steps", Json::num(s.lm_steps as f64)),
+            ("threads", Json::num(afm::util::parallel::threads() as f64)),
         ]),
     );
     // parallel-runtime scaling row: threads vs noise-programming

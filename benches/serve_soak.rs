@@ -191,6 +191,7 @@ fn main() -> anyhow::Result<()> {
             ("background_recals", Json::num(s.background_recals as f64)),
             ("lm_steps", Json::num(s.lm_steps as f64)),
             ("tenants", Json::obj(tenant_rows)),
+            ("threads", Json::num(afm::util::parallel::threads() as f64)),
         ]),
     );
     println!("\nserve_soak row appended to {}", bs::reports_dir().join("bench.jsonl").display());

@@ -299,6 +299,15 @@ impl Config {
 
     /// Apply `section.key=value` overrides (CLI --set).
     pub fn load_with_overrides(path: Option<&str>, overrides: &[String]) -> Result<Config, String> {
+        Ok(Config::from_doc(&Config::load_doc_with_overrides(path, overrides)?))
+    }
+
+    /// The parsed TOML document behind [`Config::load_with_overrides`]
+    /// without discarding it: consumers of free-form tables the typed
+    /// `Config` doesn't model — the `[sweep]` grid
+    /// (`coordinator::sweep::SweepGrid::from_doc`) — read the same doc
+    /// the config loaded from, `--set` overrides included.
+    pub fn load_doc_with_overrides(path: Option<&str>, overrides: &[String]) -> Result<Doc, String> {
         let mut text = match path {
             Some(p) => std::fs::read_to_string(p).map_err(|e| format!("{p}: {e}"))?,
             None => String::new(),
@@ -311,7 +320,7 @@ impl Config {
             // re-open the right table by writing the full key inline
             text.push_str(&format!("\n[{}]\n{} = {}\n", table_of(k), leaf_of(k), v));
         }
-        Ok(Config::from_doc(&Doc::parse(&text)?))
+        Doc::parse(&text)
     }
 
     /// Run-metadata summary for reports and metric streams.

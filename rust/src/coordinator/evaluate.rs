@@ -10,12 +10,14 @@
 //! `GenEngine`.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use super::drift::DriftModel;
 use super::generate::{GenEngine, GenRequest, SamplePolicy};
 use super::noise::NoiseModel;
+use super::sweep::SweepPoint;
 use crate::config::HwConfig;
 use crate::data::tasks::{
     extract_first_word, extract_hash_answer, is_refusal, InstrCheck, Sample, Scoring, Task,
@@ -23,7 +25,7 @@ use crate::data::tasks::{
 use crate::data::tokenizer::Tokenizer;
 use crate::data::world::World;
 use crate::runtime::{lit_scalar_i32, lit_tokens, Params, Runtime};
-use crate::serve::{ChipDeployment, HwScalars};
+use crate::serve::{ChipDeployment, DerivationCache, DeriveSpec, HwScalars};
 use crate::util::prng::Pcg64;
 
 /// A model plus the hardware configuration it is evaluated under.
@@ -84,6 +86,35 @@ impl DriftSpec {
         self.adapter_rank = rank;
         self
     }
+}
+
+/// One scored point of a config-space sweep ([`Evaluator::sweep`]):
+/// the coordinate, its benchmark report, and the Pareto objectives
+/// (accuracy vs die area vs refresh cost).
+#[derive(Clone, Debug)]
+pub struct SweepRecord {
+    /// human-readable coordinate (`SweepPoint::label`)
+    pub label: String,
+    /// crossbar tile geometry (rows, cols); (0, 0) = whole-matrix
+    pub tile: (usize, usize),
+    /// die capacity in tiles (0 = unbounded)
+    pub capacity: usize,
+    /// the derivation recipe scored at this point
+    pub spec: DeriveSpec,
+    /// cross-task mean accuracy (the paper's Avg. column)
+    pub avg_acc: f64,
+    /// crossbar tiles the model occupies at this geometry
+    pub tiles_used: usize,
+    /// non-identity derivation stages in this point's chain
+    pub stages: usize,
+    /// refresh cost: stages × tiles_used, the per-tile derivation work
+    /// to reach this state cold (what the cache amortizes)
+    pub refresh_tiles: u64,
+    /// fingerprint of the served parameter state — cache-provisioned
+    /// sweeps must reproduce the cold derivation's value exactly
+    pub fingerprint: u64,
+    /// full per-task metrics at this point
+    pub report: EvalReport,
 }
 
 /// Repeated-seed benchmark harness for one model name's artifacts.
@@ -224,12 +255,97 @@ impl<'a> Evaluator<'a> {
         Ok(())
     }
 
+    /// Score every point of a config-space sweep, provisioning chips
+    /// through the content-addressed `DerivationCache` so points
+    /// sharing a stage prefix (same programmed / drifted / calibrated
+    /// ancestors) derive those tensors once. Points execute in
+    /// shared-prefix order (stage-key chains sorted lexicographically)
+    /// and in pool-width chunks — O(threads) chips resident, like
+    /// `evaluate_with_drift` — but records return in *input* order.
+    /// The engine behind `afm sweep`.
+    pub fn sweep(
+        &self,
+        m: &ModelUnderTest,
+        points: &[SweepPoint],
+        tasks: &[Task],
+        cache: &mut DerivationCache,
+    ) -> Result<Vec<SweepRecord>> {
+        // one shared base checkpoint behind an Arc — the cache hands
+        // every identity chain back as this same allocation, so a
+        // sweep never deep-clones `Params` per point
+        let base = Arc::new(m.params.clone());
+        let base_fp = base.fingerprint();
+        let mut order: Vec<(Vec<u64>, usize)> = points
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.spec.sort_key(base_fp, &p.tiling()), i))
+            .collect();
+        order.sort();
+        let mut records: Vec<Option<SweepRecord>> = points.iter().map(|_| None).collect();
+        let width = crate::util::parallel::threads().max(1);
+        let mut done = 0usize;
+        for chunk in order.chunks(width) {
+            let items: Vec<(DeriveSpec, HwConfig, usize)> = chunk
+                .iter()
+                .map(|&(_, i)| {
+                    let p = &points[i];
+                    (p.spec.clone(), p.hw(&m.hw), p.capacity)
+                })
+                .collect();
+            let chips = cache.provision_batch(&base, &items)?;
+            for (&(ref key, i), chip) in chunk.iter().zip(&chips) {
+                let p = &points[i];
+                let mut report: EvalReport = BTreeMap::new();
+                for task in tasks {
+                    // task RNG keyed by the hardware seed, matching the
+                    // per-seed stream of `evaluate_with_drift`
+                    let metrics = self.score_task(chip, m.rot, task, p.spec.seed)?;
+                    let entry = report.entry(task.name.to_string()).or_default();
+                    for (k, v) in metrics {
+                        entry.entry(k).or_default().push(v);
+                    }
+                }
+                let acc = avg_acc(&report);
+                let tiles_used = chip.tiles_used();
+                done += 1;
+                crate::info!(
+                    "sweep {done}/{}: {} avg {acc:.2} ({} tiles; cache {} hits / {} misses)",
+                    points.len(),
+                    p.label(),
+                    tiles_used,
+                    cache.cache_hits(),
+                    cache.cache_misses(),
+                );
+                records[i] = Some(SweepRecord {
+                    label: p.label(),
+                    tile: p.tile,
+                    capacity: p.capacity,
+                    spec: p.spec.clone(),
+                    avg_acc: acc,
+                    tiles_used,
+                    stages: key.len(),
+                    refresh_tiles: (key.len() * tiles_used) as u64,
+                    fingerprint: chip.fingerprint(),
+                    report,
+                });
+            }
+        }
+        Ok(records.into_iter().map(|r| r.expect("every point scored")).collect())
+    }
+
     /// Sweep the crossbar-tile-size axis: re-evaluate `m` under each
     /// (tile_rows, tile_cols) partitioning (0 = whole-matrix tiles)
     /// with everything else — noise model, seeds, tasks — fixed.
     /// Returns one (tiling label, report) pair per size in input
     /// order; the engine behind `afm eval --tile-sweep` and
     /// `benches/fig_tile_size.rs`.
+    ///
+    /// Absorbed into [`Evaluator::sweep`]: this is now a thin wrapper
+    /// expanding a tile × seed point list, so the checkpoint is cloned
+    /// once behind an `Arc` instead of once per tile size. Per-seed
+    /// chains share no stages (each hardware seed programs its own
+    /// conductances), so the cache runs disabled here — the win is the
+    /// borrow, not hits. Prefer `sweep` + `SweepGrid` for new axes.
     pub fn tile_size_sweep(
         &self,
         m: &ModelUnderTest,
@@ -239,20 +355,38 @@ impl<'a> Evaluator<'a> {
         base_seed: u64,
         tile_sizes: &[(usize, usize)],
     ) -> Result<Vec<(String, EvalReport)>> {
-        tile_sizes
+        // same stochasticity clamp as `evaluate`: a noiseless chip is
+        // deterministic, one seed suffices
+        let seeds = if nm.is_none() { 1 } else { seeds.max(1) };
+        let mut points = Vec::with_capacity(tile_sizes.len() * seeds);
+        for &tile in tile_sizes {
+            for s in 0..seeds as u64 {
+                points.push(SweepPoint {
+                    tile,
+                    capacity: 0,
+                    spec: DeriveSpec::new(nm.clone(), base_seed + s),
+                });
+            }
+        }
+        let mut cache = DerivationCache::new(0);
+        let records = self.sweep(m, &points, tasks, &mut cache)?;
+        Ok(tile_sizes
             .iter()
-            .map(|&(r, c)| {
-                let hw = m.hw.clone().with_tiles(r, c);
-                let label = hw.tiling().label();
-                let mm = ModelUnderTest {
-                    label: format!("{} tiles {label}", m.label),
-                    params: m.params.clone(),
-                    hw,
-                    rot: m.rot,
-                };
-                Ok((label, self.evaluate(&mm, nm, tasks, seeds, base_seed)?))
+            .zip(records.chunks(seeds))
+            .map(|(&(r, c), recs)| {
+                let label = m.hw.clone().with_tiles(r, c).tiling().label();
+                let mut report: EvalReport = BTreeMap::new();
+                for rec in recs {
+                    for (task, metrics) in &rec.report {
+                        let entry = report.entry(task.clone()).or_default();
+                        for (k, v) in metrics {
+                            entry.entry(k.clone()).or_default().extend(v.iter().copied());
+                        }
+                    }
+                }
+                (label, report)
             })
-            .collect()
+            .collect())
     }
 
     fn score_task(

@@ -18,6 +18,9 @@
 //!   (noise, drift, quant, GDC) runs on
 //! * `quant` — PTQ paths (RTN, SpinQuant-lite) through AOT artifacts
 //! * `evaluate` — repeated-seed benchmark harness with mean±std
+//! * `sweep` — declarative TOML config grids (`[sweep]` axes) expanded
+//!   to deterministic point lists and executed through the serve
+//!   layer's content-addressed derivation cache
 //! * `tts` — test-time compute scaling with the synthetic PRM
 //! * `encoder` — the analog-RoBERTa appendix-A experiment
 //! * `pipeline` — model-zoo orchestration (checkpoints under runs/)
@@ -33,6 +36,7 @@ pub mod noise;
 pub mod pipeline;
 pub mod quant;
 pub mod report;
+pub mod sweep;
 pub mod tiles;
 pub mod trainer;
 pub mod tts;

@@ -1,0 +1,557 @@
+//! Declarative config-space sweep engine (ROADMAP item 4).
+//!
+//! The paper's methodology repeats every noisy configuration over N
+//! hardware seeds (§3.2), and systematic sweeps over analog configs —
+//! tile geometry × noise × drift age × compensation — expose the
+//! robustness/efficiency Pareto fronts one-off figures miss
+//! (AnalogNAS-Bench, arXiv:2506.18495). A [`SweepGrid`] declares those
+//! axes in TOML under a `[sweep]` table, expands to a deterministic
+//! cartesian point list, and executes through the content-addressed
+//! [`DerivationCache`](crate::serve::DerivationCache) so the walk
+//! costs one derivation per *distinct* stage, not per point:
+//! adjacent points share their programmed/drifted/calibrated tensors
+//! structurally.
+//!
+//! Namespacing: the grid lives under `sweep.*`. The older `hw.sweep`
+//! key is the *legacy per-gamma eval list* (an array of noise gammas
+//! consumed by ad-hoc eval scripts) and is **not** a sweep grid;
+//! [`SweepGrid::from_doc`] rejects docs configuring both, with an
+//! actionable message.
+
+use anyhow::{anyhow, Result};
+
+use crate::cli::parse_tile;
+use crate::config::toml::{Doc, Value};
+use crate::config::HwConfig;
+use crate::coordinator::drift::{self, DriftModel};
+use crate::coordinator::noise::NoiseModel;
+use crate::coordinator::tiles::Tiling;
+use crate::serve::DeriveSpec;
+
+/// The axis keys a `[sweep]` table may declare (every other `sweep.*`
+/// key is an error — sweeps are declarative, typos must not silently
+/// collapse an axis).
+const SWEEP_KEYS: &[&str] = &[
+    "tiles",
+    "capacity",
+    "noise",
+    "seeds",
+    "ages",
+    "gdc",
+    "rtn_bits",
+    "adapter_rank",
+    "cache_cap",
+];
+
+/// A declarative sweep grid: one `Vec` per axis, expanded to the
+/// cartesian product by [`SweepGrid::expand`]. Absent axes default to
+/// a single neutral element, so a grid declares only what it varies.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepGrid {
+    /// crossbar tile geometries (rows, cols); (0, 0) = whole-matrix
+    pub tiles: Vec<(usize, usize)>,
+    /// die capacities in crossbar tiles (0 = unbounded floorplan)
+    pub capacities: Vec<usize>,
+    /// programming-noise models
+    pub noises: Vec<NoiseModel>,
+    /// absolute hardware-instance seeds
+    pub seeds: Vec<u64>,
+    /// drift ages in simulated seconds
+    pub ages: Vec<f64>,
+    /// global drift compensation on/off
+    pub gdc: Vec<bool>,
+    /// host-side RTN mirror bit widths (0 = off)
+    pub rtn_bits: Vec<u32>,
+    /// digital adapter ranks (0 = pure analog)
+    pub adapter_ranks: Vec<usize>,
+    /// derivation-cache bound in resident stages (0 disables caching)
+    pub cache_cap: usize,
+}
+
+impl SweepGrid {
+    /// A 1-point grid (all axes neutral: whole-matrix tiles, unbounded
+    /// die, PCM noise, one seed, age 0, no GDC/RTN/adapters).
+    pub fn single(seed: u64) -> SweepGrid {
+        SweepGrid {
+            tiles: vec![(0, 0)],
+            capacities: vec![0],
+            noises: vec![NoiseModel::Pcm],
+            seeds: vec![seed],
+            ages: vec![0.0],
+            gdc: vec![false],
+            rtn_bits: vec![0],
+            adapter_ranks: vec![0],
+            cache_cap: 256,
+        }
+    }
+
+    /// Parse the `sweep.*` keys of `doc` into a grid. `base_seed`
+    /// anchors a scalar `seeds = N` axis (hardware seeds `base_seed..
+    /// base_seed+N`); an explicit array lists absolute seeds. Errors
+    /// on unknown `sweep.*` keys, empty axes, a doc with no `[sweep]`
+    /// table, and on the legacy `hw.sweep` collision.
+    pub fn from_doc(doc: &Doc, base_seed: u64) -> Result<SweepGrid> {
+        let has_grid = doc.entries.keys().any(|k| k.starts_with("sweep."));
+        if doc.get("hw.sweep").is_some() {
+            if has_grid {
+                return Err(anyhow!(
+                    "ambiguous sweep configuration: both the legacy 'hw.sweep' array and a \
+                     '[sweep]' grid are present. 'hw.sweep' is the per-gamma eval list, not a \
+                     sweep axis — delete it, or move it into the grid as \
+                     sweep.noise = [\"gauss:<g>\", ...]"
+                ));
+            }
+            return Err(anyhow!(
+                "'hw.sweep' is the legacy per-gamma eval list, not a sweep grid: declare axes \
+                 under a '[sweep]' table instead, e.g. noise = [\"gauss:0.02\", \"gauss:0.05\"]"
+            ));
+        }
+        if !has_grid {
+            return Err(anyhow!(
+                "no '[sweep]' grid configured: declare at least one axis under a '[sweep]' \
+                 table ({})",
+                SWEEP_KEYS.join(", ")
+            ));
+        }
+        for key in doc.entries.keys().filter(|k| k.starts_with("sweep.")) {
+            let leaf = &key["sweep.".len()..];
+            if !SWEEP_KEYS.contains(&leaf) {
+                return Err(anyhow!(
+                    "unknown sweep axis '{key}': known keys are {}",
+                    SWEEP_KEYS.join(", ")
+                ));
+            }
+        }
+        let d = SweepGrid::single(base_seed);
+        let tiles = match axis(doc, "sweep.tiles")? {
+            None => d.tiles,
+            Some(vals) => {
+                let mut tiles = Vec::new();
+                for v in vals {
+                    let s = v
+                        .as_str()
+                        .ok_or_else(|| anyhow!("sweep.tiles wants strings like \"32x32\" or \"full\""))?;
+                    tiles.push(parse_tile(s).map_err(|e| anyhow!("sweep.tiles: {e}"))?);
+                }
+                tiles
+            }
+        };
+        let capacities = match axis(doc, "sweep.capacity")? {
+            None => d.capacities,
+            Some(vals) => vals
+                .iter()
+                .map(|v| {
+                    v.as_i64()
+                        .filter(|&i| i >= 0)
+                        .map(|i| i as usize)
+                        .ok_or_else(|| anyhow!("sweep.capacity wants non-negative tile counts"))
+                })
+                .collect::<Result<_>>()?,
+        };
+        let noises = match axis(doc, "sweep.noise")? {
+            None => d.noises,
+            Some(vals) => {
+                let mut noises = Vec::new();
+                for v in vals {
+                    let s = v.as_str().ok_or_else(|| {
+                        anyhow!("sweep.noise wants strings: \"none\", \"pcm\", or \"gauss:<g>\"")
+                    })?;
+                    noises.push(parse_noise(s)?);
+                }
+                noises
+            }
+        };
+        let seeds = match doc.get("sweep.seeds") {
+            None => d.seeds,
+            Some(Value::Int(n)) if *n > 0 => (0..*n as u64).map(|i| base_seed + i).collect(),
+            Some(Value::Arr(vals)) if !vals.is_empty() => vals
+                .iter()
+                .map(|v| {
+                    v.as_i64()
+                        .filter(|&i| i >= 0)
+                        .map(|i| i as u64)
+                        .ok_or_else(|| anyhow!("sweep.seeds wants non-negative integers"))
+                })
+                .collect::<Result<_>>()?,
+            Some(_) => {
+                return Err(anyhow!(
+                    "sweep.seeds wants a positive count (seeds derive from the config seed) or \
+                     an array of absolute hardware seeds"
+                ))
+            }
+        };
+        let ages = match axis(doc, "sweep.ages")? {
+            None => d.ages,
+            Some(vals) => {
+                let mut ages = Vec::new();
+                for v in vals {
+                    let age = match v {
+                        Value::Str(s) => {
+                            drift::parse_age(s).map_err(|e| anyhow!("sweep.ages: {e}"))?
+                        }
+                        _ => v.as_f64().filter(|a| *a >= 0.0).ok_or_else(|| {
+                            anyhow!("sweep.ages wants ages like \"1h\", \"1mo\" or seconds")
+                        })?,
+                    };
+                    ages.push(age);
+                }
+                ages
+            }
+        };
+        let gdc = match axis(doc, "sweep.gdc")? {
+            None => d.gdc,
+            Some(vals) => vals
+                .iter()
+                .map(|v| v.as_bool().ok_or_else(|| anyhow!("sweep.gdc wants booleans")))
+                .collect::<Result<_>>()?,
+        };
+        let rtn_bits = match axis(doc, "sweep.rtn_bits")? {
+            None => d.rtn_bits,
+            Some(vals) => vals
+                .iter()
+                .map(|v| {
+                    v.as_i64()
+                        .filter(|&i| (0..=16).contains(&i))
+                        .map(|i| i as u32)
+                        .ok_or_else(|| anyhow!("sweep.rtn_bits wants bit widths in 0..=16"))
+                })
+                .collect::<Result<_>>()?,
+        };
+        let adapter_ranks = match axis(doc, "sweep.adapter_rank")? {
+            None => d.adapter_ranks,
+            Some(vals) => vals
+                .iter()
+                .map(|v| {
+                    v.as_i64()
+                        .filter(|&i| i >= 0)
+                        .map(|i| i as usize)
+                        .ok_or_else(|| anyhow!("sweep.adapter_rank wants non-negative ranks"))
+                })
+                .collect::<Result<_>>()?,
+        };
+        let cache_cap = match doc.get("sweep.cache_cap") {
+            None => d.cache_cap,
+            Some(v) => v
+                .as_i64()
+                .filter(|&i| i >= 0)
+                .map(|i| i as usize)
+                .ok_or_else(|| anyhow!("sweep.cache_cap wants a non-negative stage count"))?,
+        };
+        let grid = SweepGrid {
+            tiles,
+            capacities,
+            noises,
+            seeds,
+            ages,
+            gdc,
+            rtn_bits,
+            adapter_ranks,
+            cache_cap,
+        };
+        for (name, len) in [
+            ("tiles", grid.tiles.len()),
+            ("capacity", grid.capacities.len()),
+            ("noise", grid.noises.len()),
+            ("seeds", grid.seeds.len()),
+            ("ages", grid.ages.len()),
+            ("gdc", grid.gdc.len()),
+            ("rtn_bits", grid.rtn_bits.len()),
+            ("adapter_rank", grid.adapter_ranks.len()),
+        ] {
+            if len == 0 {
+                return Err(anyhow!("sweep.{name} is an empty axis"));
+            }
+        }
+        Ok(grid)
+    }
+
+    /// Points in the grid (product of axis lengths).
+    pub fn len(&self) -> usize {
+        self.tiles.len()
+            * self.capacities.len()
+            * self.noises.len()
+            * self.seeds.len()
+            * self.ages.len()
+            * self.gdc.len()
+            * self.rtn_bits.len()
+            * self.adapter_ranks.len()
+    }
+
+    /// Whether the grid expands to no points (never true for a parsed
+    /// grid — empty axes are rejected).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand to the deterministic cartesian point list, axes nesting
+    /// in declaration order (tiles → capacity → noise → seed → age →
+    /// gdc → rtn → rank). `adapter_iters` seeds every point's
+    /// adapter-fit iteration count (the fit axis itself is the rank).
+    pub fn expand(&self, adapter_iters: usize) -> Vec<SweepPoint> {
+        let mut points = Vec::with_capacity(self.len());
+        for &tile in &self.tiles {
+            for &capacity in &self.capacities {
+                for noise in &self.noises {
+                    for &seed in &self.seeds {
+                        for &age_secs in &self.ages {
+                            for &gdc in &self.gdc {
+                                for &rtn_bits in &self.rtn_bits {
+                                    for &adapter_rank in &self.adapter_ranks {
+                                        let spec = DeriveSpec {
+                                            noise: noise.clone(),
+                                            seed,
+                                            drift: DriftModel::default(),
+                                            age_secs,
+                                            gdc,
+                                            rtn_bits,
+                                            adapter_rank,
+                                            adapter_iters: adapter_iters.max(1),
+                                        };
+                                        points.push(SweepPoint { tile, capacity, spec });
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        points
+    }
+}
+
+/// One grid point: a tile geometry, a die capacity, and the full
+/// derivation recipe ([`DeriveSpec`]) at that coordinate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepPoint {
+    /// crossbar tile geometry (rows, cols); (0, 0) = whole-matrix
+    pub tile: (usize, usize),
+    /// die capacity in crossbar tiles (0 = unbounded)
+    pub capacity: usize,
+    /// the analog+digital derivation recipe at this point
+    pub spec: DeriveSpec,
+}
+
+impl SweepPoint {
+    /// The crossbar partitioning of this point.
+    pub fn tiling(&self) -> Tiling {
+        Tiling::new(self.tile.0, self.tile.1)
+    }
+
+    /// The point's hardware operating point: `template` re-tiled to
+    /// this point's geometry (runtime DAC/ADC scalars come from the
+    /// template; the analog/digital recipe lives in `spec`).
+    pub fn hw(&self, template: &HwConfig) -> HwConfig {
+        template.clone().with_tiles(self.tile.0, self.tile.1)
+    }
+
+    /// Compact human-readable coordinate, e.g.
+    /// `"T32x32 cap64 pcm s5 1mo +gdc rtn4 r2"`.
+    pub fn label(&self) -> String {
+        let mut s = format!("T{}", self.tiling().label());
+        if self.capacity > 0 {
+            s.push_str(&format!(" cap{}", self.capacity));
+        }
+        s.push_str(&format!(" {} s{}", noise_tag(&self.spec.noise), self.spec.seed));
+        s.push_str(&format!(" {}", drift::fmt_age(self.spec.age_secs)));
+        if self.spec.gdc {
+            s.push_str(" +gdc");
+        }
+        if self.spec.rtn_bits > 0 {
+            s.push_str(&format!(" rtn{}", self.spec.rtn_bits));
+        }
+        if self.spec.adapter_rank > 0 {
+            s.push_str(&format!(" r{}", self.spec.adapter_rank));
+        }
+        s
+    }
+}
+
+/// Order points so shared-prefix stages run adjacent: lexicographic
+/// over each point's stage-key chain ([`DeriveSpec::sort_key`]), so
+/// points sharing programmed/drifted/calibrated ancestors execute
+/// back-to-back while those stages are still resident in a bounded
+/// cache. Stable: equal chains keep expansion order.
+pub fn sort_for_sharing(points: Vec<SweepPoint>, base_fp: u64) -> Vec<SweepPoint> {
+    let mut keyed: Vec<(Vec<u64>, SweepPoint)> = points
+        .into_iter()
+        .map(|p| (p.spec.sort_key(base_fp, &p.tiling()), p))
+        .collect();
+    keyed.sort_by(|a, b| a.0.cmp(&b.0));
+    keyed.into_iter().map(|(_, p)| p).collect()
+}
+
+/// Pareto-front flags for sweep summaries: `rows[i]` is
+/// `(acc, tiles_used, refresh_tiles)` with accuracy maximized and the
+/// two costs minimized. A row is on the front iff no other row is at
+/// least as good on every objective and strictly better on one.
+pub fn pareto_flags(rows: &[(f64, f64, f64)]) -> Vec<bool> {
+    let dominates = |a: &(f64, f64, f64), b: &(f64, f64, f64)| {
+        a.0 >= b.0
+            && a.1 <= b.1
+            && a.2 <= b.2
+            && (a.0 > b.0 || a.1 < b.1 || a.2 < b.2)
+    };
+    rows.iter()
+        .map(|b| !rows.iter().any(|a| dominates(a, b)))
+        .collect()
+}
+
+/// Fetch an axis as an array: `Ok(None)` when the key is absent,
+/// `Ok(Some(items))` for an array, an error for a scalar (axes are
+/// lists — a bare scalar is almost always a typo'd grid).
+fn axis<'a>(doc: &'a Doc, key: &str) -> Result<Option<&'a Vec<Value>>> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(Value::Arr(items)) => Ok(Some(items)),
+        Some(_) => Err(anyhow!("{key} wants an array (axes are lists, e.g. {key} = [...])")),
+    }
+}
+
+/// Parse a noise-model tag: `"none"`, `"pcm"` / `"hw"`, or
+/// `"gauss:<gamma>"` (mirrors the `afm` CLI's `--noise` flag).
+pub fn parse_noise(s: &str) -> Result<NoiseModel> {
+    let s = s.trim();
+    if s.eq_ignore_ascii_case("none") || s.is_empty() {
+        return Ok(NoiseModel::None);
+    }
+    if s.eq_ignore_ascii_case("pcm") || s.eq_ignore_ascii_case("hw") {
+        return Ok(NoiseModel::Pcm);
+    }
+    if let Some(g) = s.strip_prefix("gauss:") {
+        let gamma: f32 =
+            g.parse().map_err(|_| anyhow!("bad gaussian gamma '{g}' in noise '{s}'"))?;
+        return Ok(NoiseModel::Gaussian { gamma });
+    }
+    Err(anyhow!("unknown noise model '{s}' (want none | pcm | gauss:<gamma>)"))
+}
+
+/// Short axis tag for point labels ("clean", "pcm", "g0.05").
+fn noise_tag(nm: &NoiseModel) -> String {
+    match nm {
+        NoiseModel::None => "clean".into(),
+        NoiseModel::Pcm => "pcm".into(),
+        NoiseModel::Gaussian { gamma } => format!("g{gamma}"),
+        NoiseModel::Affine { gamma, beta } => format!("aff{gamma}b{beta}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(text: &str) -> Doc {
+        Doc::parse(text).unwrap()
+    }
+
+    #[test]
+    fn grid_parses_axes_and_expands_the_cartesian_product() {
+        let g = SweepGrid::from_doc(
+            &doc(r#"
+[sweep]
+tiles = ["full", "8x8"]
+noise = ["pcm", "gauss:0.05"]
+seeds = 2
+ages = ["0", "1mo"]
+gdc = [false, true]
+cache_cap = 32
+"#),
+            100,
+        )
+        .unwrap();
+        assert_eq!(g.tiles, vec![(0, 0), (8, 8)]);
+        assert_eq!(g.noises, vec![NoiseModel::Pcm, NoiseModel::Gaussian { gamma: 0.05 }]);
+        assert_eq!(g.seeds, vec![100, 101]);
+        assert_eq!(g.ages[0], 0.0);
+        assert!((g.ages[1] - drift::SECS_PER_MONTH).abs() < 1e-6);
+        assert_eq!(g.gdc, vec![false, true]);
+        assert_eq!(g.cache_cap, 32);
+        // absent axes default to one neutral element
+        assert_eq!((g.capacities.as_slice(), g.rtn_bits.as_slice()), (&[0usize][..], &[0u32][..]));
+        assert_eq!(g.len(), 2 * 2 * 2 * 2 * 2);
+        let points = g.expand(8);
+        assert_eq!(points.len(), g.len());
+        // deterministic: same grid, same order
+        assert_eq!(points, g.expand(8));
+        // nesting order: the innermost declared axis (gdc) varies first
+        assert!(!points[0].spec.gdc && points[1].spec.gdc);
+        assert_eq!(points[0].spec.seed, points[3].spec.seed);
+    }
+
+    #[test]
+    fn unknown_axes_and_empty_axes_are_rejected() {
+        let err = SweepGrid::from_doc(&doc("[sweep]\ntils = [\"full\"]\n"), 0).unwrap_err();
+        assert!(err.to_string().contains("unknown sweep axis 'sweep.tils'"), "{err}");
+        let err = SweepGrid::from_doc(&doc("[sweep]\nages = []\n"), 0).unwrap_err();
+        assert!(err.to_string().contains("sweep.ages is an empty axis"), "{err}");
+        let err = SweepGrid::from_doc(&doc("steps = 3\n"), 0).unwrap_err();
+        assert!(err.to_string().contains("no '[sweep]' grid"), "{err}");
+    }
+
+    #[test]
+    fn legacy_hw_sweep_key_errors_actionably() {
+        // legacy key alone: not a grid
+        let err = SweepGrid::from_doc(&doc("[hw]\nsweep = [0.0, 0.05]\n"), 0).unwrap_err();
+        assert!(err.to_string().contains("legacy per-gamma eval list"), "{err}");
+        assert!(err.to_string().contains("[sweep]"), "{err}");
+        // both: ambiguous
+        let err = SweepGrid::from_doc(
+            &doc("[hw]\nsweep = [0.0]\n[sweep]\nseeds = 2\n"),
+            0,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("ambiguous sweep configuration"), "{err}");
+    }
+
+    #[test]
+    fn sorting_groups_shared_stage_prefixes_adjacently() {
+        let g = SweepGrid::from_doc(
+            &doc("[sweep]\nseeds = [5, 3]\nages = [\"1mo\", \"1h\"]\n"),
+            0,
+        )
+        .unwrap();
+        let sorted = sort_for_sharing(g.expand(1), 0xfeed);
+        assert_eq!(sorted.len(), 4);
+        // both ages of one seed are adjacent: their chains share the
+        // programmed-stage key prefix
+        assert_eq!(sorted[0].spec.seed, sorted[1].spec.seed);
+        assert_eq!(sorted[2].spec.seed, sorted[3].spec.seed);
+        assert_ne!(sorted[0].spec.seed, sorted[2].spec.seed);
+        assert_ne!(sorted[0].spec.age_secs, sorted[1].spec.age_secs);
+    }
+
+    #[test]
+    fn pareto_front_keeps_non_dominated_rows() {
+        let flags = pareto_flags(&[
+            (0.9, 16.0, 16.0), // best acc, high cost: on front
+            (0.8, 8.0, 8.0),   // trades acc for cost: on front
+            (0.8, 16.0, 16.0), // dominated by both
+            (0.9, 16.0, 16.0), // duplicate of the best: still on front
+        ]);
+        assert_eq!(flags, vec![true, true, false, true]);
+    }
+
+    #[test]
+    fn point_labels_read_like_coordinates() {
+        let mut g = SweepGrid::single(7);
+        g.tiles = vec![(32, 32)];
+        g.capacities = vec![64];
+        g.gdc = vec![true];
+        g.rtn_bits = vec![4];
+        g.adapter_ranks = vec![2];
+        g.ages = vec![drift::SECS_PER_MONTH];
+        let p = &g.expand(8)[0];
+        assert_eq!(p.label(), "T32x32 cap64 pcm s7 1mo +gdc rtn4 r2");
+        assert_eq!(p.tiling(), Tiling::new(32, 32));
+        assert_eq!(p.hw(&HwConfig::afm_train(0.0)).tile_rows, 32);
+    }
+
+    #[test]
+    fn noise_tags_round_trip() {
+        assert_eq!(parse_noise("none").unwrap(), NoiseModel::None);
+        assert_eq!(parse_noise("pcm").unwrap(), NoiseModel::Pcm);
+        assert_eq!(parse_noise("hw").unwrap(), NoiseModel::Pcm);
+        assert_eq!(parse_noise("gauss:0.05").unwrap(), NoiseModel::Gaussian { gamma: 0.05 });
+        assert!(parse_noise("what").is_err());
+    }
+}

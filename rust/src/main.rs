@@ -10,6 +10,8 @@
 //!   tts       — test-time compute scaling
 //!   serve     — continuous-batching inference over a simulated fleet
 //!               (optionally with a conductance-drift schedule)
+//!   sweep     — declarative config-grid sweep ([sweep] TOML axes)
+//!               through the shared-work derivation cache
 //!   pipeline  — all of the above, end to end
 //!
 //! Every command takes `--config <toml>` plus `--set key=value`
@@ -23,6 +25,7 @@ use afm::coordinator::drift::{fmt_age, parse_age};
 use afm::coordinator::evaluate::{
     avg_acc, avg_acc_per_seed, fmt_metric, DriftSpec, Evaluator, ModelUnderTest,
 };
+use afm::coordinator::sweep::{pareto_flags, SweepGrid};
 use afm::coordinator::generate::GenEngine;
 use afm::coordinator::noise::NoiseModel;
 use afm::coordinator::hwa;
@@ -32,7 +35,8 @@ use afm::coordinator::{quant, tts};
 use afm::data::tasks::{build_task, TABLE1_TASKS};
 use afm::info;
 use afm::runtime::{Params, Runtime};
-use afm::serve::{self, ChipDeployment, DriftSchedule, InferenceServer};
+use afm::serve::{self, ChipDeployment, DerivationCache, DriftSchedule, InferenceServer};
+use afm::util::json::Json;
 use afm::util::stats;
 
 const COMMANDS: &[(&str, &str)] = &[
@@ -45,6 +49,7 @@ const COMMANDS: &[(&str, &str)] = &[
     ("drift", "accuracy vs deployment age (conductance drift, ± GDC)"),
     ("tts", "test-time compute scaling on the MATH analog"),
     ("serve", "continuous-batching inference server over N simulated chips"),
+    ("sweep", "config-grid sweep ([sweep] axes) through the derivation cache"),
     ("help", "this message"),
 ];
 
@@ -144,6 +149,11 @@ fn flag_specs() -> Vec<FlagSpec> {
             name: "tile-sweep",
             takes_value: true,
             help: "eval: tile-size list, e.g. full,32x32,16x16,8x8",
+        },
+        FlagSpec {
+            name: "grid",
+            takes_value: true,
+            help: "sweep: TOML file with the [sweep] axes (default: the --config doc)",
         },
         FlagSpec {
             name: "drift",
@@ -622,6 +632,107 @@ fn run(argv: &[String]) -> Result<()> {
                 s.idle_ticks,
                 s.spare_activations,
                 s.background_recals
+            );
+        }
+        "sweep" => {
+            let teacher = pipe.ensure_teacher()?;
+            let (params, mut hw, label) =
+                resolve_who(&args.get_or("who", "teacher"), &pipe, &cfg, &teacher)?;
+            hw_overrides(&mut hw, &cfg, &args);
+            // the grid doc: a dedicated --grid file, else the main
+            // config (so presets can carry a [sweep] table)
+            let doc = match args.get("grid") {
+                Some(path) => {
+                    let text = std::fs::read_to_string(path)
+                        .map_err(|e| anyhow!("reading --grid {path}: {e}"))?;
+                    afm::config::toml::Doc::parse(&text)
+                        .map_err(|e| anyhow!("parsing --grid {path}: {e}"))?
+                }
+                None => Config::load_doc_with_overrides(args.get("config"), &args.set)
+                    .map_err(|e| anyhow!(e))?,
+            };
+            let grid = SweepGrid::from_doc(&doc, cfg.seed + 900)?;
+            let points = grid.expand(hw.adapter_iters.max(1));
+            let ev = Evaluator::new(&rt, &cfg.model);
+            let tasks: Vec<_> = TABLE1_TASKS
+                .iter()
+                .map(|n| build_task(n, &pipe.world, cfg.eval.samples_per_task, cfg.seed + 500))
+                .collect();
+            let m = ModelUnderTest { label: label.clone(), params, hw, rot: false };
+            info!(
+                "sweep: {} grid points over {label}, derivation cache cap {}",
+                points.len(),
+                grid.cache_cap
+            );
+            let mut cache = DerivationCache::new(grid.cache_cap);
+            let records = ev.sweep(&m, &points, &tasks, &mut cache)?;
+
+            // Pareto objectives: maximize accuracy, minimize die area
+            // and cold refresh work
+            let objectives: Vec<(f64, f64, f64)> = records
+                .iter()
+                .map(|r| (r.avg_acc, r.tiles_used as f64, r.refresh_tiles as f64))
+                .collect();
+            let front = pareto_flags(&objectives);
+            let reports_dir = pipe.run_dir().join("reports");
+            // the cross-PR trajectory file the benches append to
+            // (runs/reports/bench.jsonl on the default config), not
+            // the per-model report dir the human tables land in
+            let bench_dir = std::path::PathBuf::from(&cfg.runs_dir).join("reports");
+            let _ = std::fs::create_dir_all(&bench_dir);
+            let mut table = Table::new(
+                &format!("sweep: {label} — {} points (acc vs tiles vs refresh)", records.len()),
+                &["point", "Avg.", "tiles", "refresh", "fingerprint", "pareto"],
+            );
+            for (r, on_front) in records.iter().zip(&front) {
+                table.row(vec![
+                    r.label.clone(),
+                    format!("{:.2}", r.avg_acc),
+                    r.tiles_used.to_string(),
+                    r.refresh_tiles.to_string(),
+                    format!("{:016x}", r.fingerprint),
+                    if *on_front { "*".into() } else { String::new() },
+                ]);
+                // one tidy machine-readable record per point, next to
+                // the bench rows (thread-stamped like they are)
+                let _ = afm::util::append_jsonl(
+                    &bench_dir.join("bench.jsonl"),
+                    &Json::obj(vec![
+                        ("bench", Json::str("sweep")),
+                        ("who", Json::str(&label)),
+                        ("point", Json::str(&r.label)),
+                        ("avg_acc", Json::num(r.avg_acc)),
+                        ("tiles_used", Json::num(r.tiles_used as f64)),
+                        ("stages", Json::num(r.stages as f64)),
+                        ("refresh_tiles", Json::num(r.refresh_tiles as f64)),
+                        ("fingerprint", Json::str(&format!("{:016x}", r.fingerprint))),
+                        ("pareto", Json::num(if *on_front { 1.0 } else { 0.0 })),
+                        ("threads", Json::num(afm::util::parallel::threads() as f64)),
+                    ]),
+                );
+            }
+            table.emit(&reports_dir, "sweep");
+            // deterministic cache accounting (simulated work counts,
+            // no wall clock): CI runs the sweep twice, diffs both
+            // reports, and greps cache_hits here
+            let mut ct = Table::new("sweep: derivation cache", &["counter", "value"]);
+            ct.row(vec!["cache_hits".into(), cache.cache_hits().to_string()]);
+            ct.row(vec!["cache_misses".into(), cache.cache_misses().to_string()]);
+            ct.row(vec![
+                "derivations_avoided".into(),
+                cache.derivations_avoided().to_string(),
+            ]);
+            ct.row(vec!["resident_stages".into(), cache.resident().to_string()]);
+            ct.row(vec!["cache_cap".into(), cache.cap().to_string()]);
+            ct.emit(&reports_dir, "sweep_cache");
+            println!(
+                "sweep: {} points on the Pareto front of {} | cache: {} hits, {} misses, \
+                 {} derivations avoided",
+                front.iter().filter(|&&f| f).count(),
+                records.len(),
+                cache.cache_hits(),
+                cache.cache_misses(),
+                cache.derivations_avoided()
             );
         }
         "pipeline" => {

@@ -18,7 +18,8 @@
 //! sidecars stay exact, which is what makes digital recovery
 //! (`hwa::fit_deployment_adapters`) hold up under a year of drift.
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
@@ -169,8 +170,16 @@ pub struct ChipDeployment {
     param_lits: Vec<xla::Literal>,
     hw_lits: Vec<xla::Literal>,
     /// programmed (post-noise, pre-drift) parameters — the reference
-    /// state both aging and GDC calibration re-derive from
-    programmed: Params,
+    /// state both aging and GDC calibration re-derive from. Held
+    /// behind an `Arc` so cache-provisioned snapshots share stage
+    /// tensors structurally instead of cloning them per grid point.
+    programmed: Arc<Params>,
+    /// a cache-provisioned snapshot: `programmed` aliases the *final
+    /// derived* tensors (not a pre-drift reference), so in-place
+    /// re-derivation is forbidden — snapshots come from
+    /// [`DerivationCache::provision_snapshot`] and a new spec means a
+    /// new snapshot
+    snapshot: bool,
     /// hardware-instance seed; also drives the per-device ν draws
     seed: u64,
     drift: DriftModel,
@@ -390,7 +399,8 @@ impl ChipDeployment {
             fingerprint,
             param_lits,
             hw_lits,
-            programmed,
+            programmed: Arc::new(programmed),
+            snapshot: false,
             seed,
             drift: DriftModel::default(),
             age_secs: 0.0,
@@ -682,6 +692,12 @@ impl ChipDeployment {
     /// parameter-buffer write pass and one `to_literals` per call; no
     /// intermediate `Params` clones.
     fn set_age(&mut self, t_secs: f64, recalibrate: bool) -> Result<()> {
+        assert!(
+            !self.snapshot,
+            "cache-provisioned snapshots are immutable ('programmed' aliases the \
+             derived tensors, not a pre-drift reference): derive the new state \
+             through the DerivationCache instead of aging in place"
+        );
         // scoped fast path: same age, no recalibration, only named
         // tensors changed inputs, and the scratch still reflects the
         // last committed derivation — patch those tensors in place
@@ -858,6 +874,535 @@ impl ChipDeployment {
     /// decoder and diagnostics).
     pub fn fingerprint(&self) -> u64 {
         self.fingerprint
+    }
+
+    /// Whether this chip is an immutable cache-provisioned snapshot
+    /// ([`DerivationCache::provision_snapshot`]): it serves exactly one
+    /// derived state and panics on in-place re-derivation.
+    pub fn is_snapshot(&self) -> bool {
+        self.snapshot
+    }
+
+    /// Assemble an immutable serving snapshot around tensors already
+    /// derived by the [`DerivationCache`]: one floorplan check, one
+    /// literal upload, `programmed` *aliasing* the shared derived Arc
+    /// (no clone). The chip reports the spec's drift law and age for
+    /// diagnostics but refuses in-place aging — every sweep point is
+    /// its own snapshot.
+    fn snapshot_from(
+        derived: Arc<Params>,
+        spec: &DeriveSpec,
+        hw: &HwConfig,
+        capacity_tiles: usize,
+    ) -> Result<ChipDeployment> {
+        let tiling = hw.tiling();
+        let tile_map = TileMap::of(&derived, tiling);
+        Floorplan::new(tiling, capacity_tiles).fits(&tile_map).map_err(|e| anyhow!(e))?;
+        let param_lits = derived.to_literals()?;
+        let fingerprint = derived.fingerprint();
+        let scalars = HwScalars::from(hw);
+        let hw_lits = scalars.to_literals();
+        let label = if spec.noise.is_none() {
+            format!("{} seed {}", hw.label(), spec.seed)
+        } else {
+            format!("{} {} seed {}", hw.label(), spec.noise.label(), spec.seed)
+        };
+        Ok(ChipDeployment {
+            label,
+            hw: scalars,
+            fingerprint,
+            param_lits,
+            hw_lits,
+            tiles_used: tile_map.total_tiles(),
+            tile_counts: tile_map
+                .entries
+                .iter()
+                .map(|e| (e.key.clone(), e.tiles() as u64))
+                .collect(),
+            programmed: derived,
+            snapshot: true,
+            seed: spec.seed,
+            drift: spec.drift,
+            age_secs: spec.age_secs,
+            gdc_scales: None,
+            tiling,
+            tile_capacity: capacity_tiles,
+            scratch: None,
+            sidecars: Vec::new(),
+            dirty: Dirty::clean(),
+            scratch_valid: false,
+            refreshes: 0,
+            tiles_rederived: 0,
+            fp_chain: Vec::new(),
+        })
+    }
+}
+
+/// The full analog+digital recipe from a base checkpoint to a served
+/// parameter state — one point of a config sweep, and the unit the
+/// [`DerivationCache`] content-addresses. The derivation decomposes
+/// into the stage chain
+/// **programmed → drifted → calibrated → quantized → adapted**
+/// (each stage a pure function of its inputs, each byte-identical to
+/// the fused `ChipDeployment` pass plan by construction — the
+/// conformance suite pins both sides), so two specs sharing a prefix
+/// of the chain share those stages' tensors.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeriveSpec {
+    /// analog programming-noise model (the *programmed* stage)
+    pub noise: NoiseModel,
+    /// hardware-instance seed — keys the noise, per-device drift ν,
+    /// GDC calibration, and adapter-fit streams
+    pub seed: u64,
+    /// drift law the *drifted* stage ages under
+    pub drift: DriftModel,
+    /// deployment age in simulated seconds (*drifted* stage; ages at
+    /// or below the drift law's t0 are identity)
+    pub age_secs: f64,
+    /// fold a fresh GDC field calibration in (*calibrated* stage)
+    pub gdc: bool,
+    /// host-side RTN readout mirror bit width, 0 = off (*quantized*
+    /// stage)
+    pub rtn_bits: u32,
+    /// digital low-rank adapter rank fit against the base checkpoint,
+    /// 0 = off (*adapted* stage)
+    pub adapter_rank: usize,
+    /// power-iteration rounds for the adapter fit
+    pub adapter_iters: usize,
+}
+
+impl DeriveSpec {
+    /// A fresh un-drifted pure-analog spec (age 0, no GDC, no RTN, no
+    /// adapters) — the axes are public fields, set what the point
+    /// varies.
+    pub fn new(noise: NoiseModel, seed: u64) -> DeriveSpec {
+        DeriveSpec {
+            noise,
+            seed,
+            drift: DriftModel::default(),
+            age_secs: 0.0,
+            gdc: false,
+            rtn_bits: 0,
+            adapter_rank: 0,
+            adapter_iters: 1,
+        }
+    }
+
+    /// The stage-key sequence of this spec's non-identity chain under
+    /// `tiling`, shallowest first — lexicographic order over these
+    /// sequences groups shared prefixes adjacently, which is how the
+    /// sweep engine sorts its grid so cached stages are still resident
+    /// when their siblings need them.
+    pub fn sort_key(&self, base_fp: u64, tiling: &Tiling) -> Vec<u64> {
+        self.chain(base_fp, tiling).1.iter().map(|n| n.key).collect()
+    }
+
+    /// The content-addressed stage chain: `(base_key, nodes)` where
+    /// every node's key folds its parent's key plus exactly the
+    /// physics ingredients that stage consumes (FNV-1a over the base
+    /// fingerprint, tile geometry, seed, and per-stage scalars).
+    /// Identity stages (no noise, age ≤ t0, no GDC, 0 RTN bits, rank
+    /// 0) are dropped — mirroring `PassPlan::then` — so their key
+    /// *aliases* the parent's and an identical content match is free.
+    fn chain(&self, base_fp: u64, tiling: &Tiling) -> (u64, Vec<StageNode>) {
+        use crate::util::{fnv1a, fnv1a_fold as fold};
+        let base_key = fold(
+            fold(fold(fnv1a(b"afm.derive"), base_fp), tiling.rows as u64),
+            tiling.cols as u64,
+        );
+        let mut nodes: Vec<StageNode> = Vec::new();
+        let mut key = base_key;
+        if !self.noise.is_none() {
+            key = fold(fold(key, fnv1a(b"programmed")), self.seed);
+            key = match &self.noise {
+                NoiseModel::None => unreachable!("identity noise was dropped above"),
+                NoiseModel::Gaussian { gamma } => fold(fold(key, 1), gamma.to_bits() as u64),
+                NoiseModel::Affine { gamma, beta } => fold(
+                    fold(fold(key, 2), gamma.to_bits() as u64),
+                    beta.to_bits() as u64,
+                ),
+                NoiseModel::Pcm => fold(key, 3),
+            };
+            nodes.push(StageNode { stage: Stage::Programmed, key, reference: None });
+        }
+        // index of the node carrying the programmed reference (None =
+        // the base checkpoint itself): GDC calibrates against it
+        let idx_programmed = nodes.len().checked_sub(1);
+        if !(self.drift.is_none() || self.age_secs <= self.drift.t0_secs) {
+            key = fold(fold(key, fnv1a(b"drifted")), self.seed);
+            key = fold(key, self.drift.t0_secs.to_bits());
+            key = fold(key, self.drift.nu_mean.to_bits());
+            key = fold(key, self.drift.nu_std.to_bits());
+            key = fold(key, self.age_secs.to_bits());
+            nodes.push(StageNode { stage: Stage::Drifted, key, reference: None });
+        }
+        if self.gdc {
+            key = fold(fold(key, fnv1a(b"calibrated")), self.seed);
+            key = fold(key, drift::GDC_CALIB_VECS as u64);
+            nodes.push(StageNode { stage: Stage::Calibrated, key, reference: idx_programmed });
+        }
+        // index of the deepest pre-RTN analog node: adapters fit
+        // against it (hwa::fit_deployment_adapters sees no RTN)
+        let idx_analog = nodes.len().checked_sub(1);
+        if quant::levels(self.rtn_bits) > 0.0 {
+            key = fold(fold(key, fnv1a(b"quantized")), self.rtn_bits as u64);
+            nodes.push(StageNode { stage: Stage::Quantized, key, reference: None });
+        }
+        if self.adapter_rank > 0 {
+            key = fold(fold(key, fnv1a(b"adapted")), self.seed);
+            key = fold(key, self.adapter_rank as u64);
+            key = fold(key, self.adapter_iters as u64);
+            nodes.push(StageNode { stage: Stage::Adapted, key, reference: idx_analog });
+        }
+        (base_key, nodes)
+    }
+}
+
+/// One content-addressed derivation stage of a [`DeriveSpec`] chain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Stage {
+    /// programming noise applied to the base checkpoint
+    Programmed,
+    /// conductance drift applied to the programmed tensors
+    Drifted,
+    /// per-tile GDC output scales folded in (consumes the programmed
+    /// reference as well as the drifted tensors)
+    Calibrated,
+    /// host-side RTN readout quantization
+    Quantized,
+    /// digital low-rank adapter corrections added on top (fit against
+    /// the base checkpoint on the pre-RTN analog state)
+    Adapted,
+}
+
+/// A chain node: the stage, its content key, and the chain index of
+/// its extra input (`None` = the base checkpoint) — the linear parent
+/// is implicitly the preceding node.
+#[derive(Clone, Copy, Debug)]
+struct StageNode {
+    stage: Stage,
+    key: u64,
+    reference: Option<usize>,
+}
+
+/// One scheduled stage derivation of a batch: inputs are named by
+/// stage key into the batch-local value map (parents always land in
+/// an earlier round, so lookups never dangle).
+struct StageJob {
+    key: u64,
+    stage: Stage,
+    item: usize,
+    parent: u64,
+    reference: u64,
+    round: usize,
+}
+
+/// The content-addressed derivation cache: stage key →
+/// `Arc<Params>`, bounded to `cap` resident stages with deterministic
+/// FIFO (insertion-order) eviction. The perf core of the sweep
+/// engine: a grid walk costs one derivation per *distinct* stage, not
+/// per point, and `cached == cold` holds byte-for-byte at any thread
+/// count because
+///
+/// * every stage is a pure function of its inputs with RNG streams
+///   keyed by (seed, stream tag, tensor/tile key) — never visit order;
+/// * stage decomposition reuses the exact standalone engines
+///   (`noise::apply_tiled`, `drift::apply_tiled`,
+///   `drift::gdc_calibrate` + `apply_scales`, `quant::rtn_params_tiled`,
+///   `hwa::fit_adapters`) the fused-plan conformance tests pin against
+///   `ChipDeployment`'s own derivation;
+/// * all cache probes, counter updates, and insertions happen in one
+///   serial planning pass (`derive_batch` fans only the pure stage
+///   computations out over the worker pool);
+/// * eviction is correctness-neutral: resident stages are `Arc`s, so
+///   an in-flight batch keeps what it resolved alive.
+///
+/// `cap == 0` disables caching entirely (every probe misses, nothing
+/// is retained) — the cache on/off axis the differential fuzz drives.
+pub struct DerivationCache {
+    /// stage key → derived parameter set (shared, immutable)
+    stages: BTreeMap<u64, Arc<Params>>,
+    /// insertion order, oldest first — the FIFO eviction queue
+    order: VecDeque<u64>,
+    /// max resident stages (0 = caching disabled)
+    cap: usize,
+    hits: u64,
+    misses: u64,
+    avoided: u64,
+}
+
+impl DerivationCache {
+    /// A cache bounded to `cap` resident stages (0 disables caching).
+    pub fn new(cap: usize) -> DerivationCache {
+        DerivationCache {
+            stages: BTreeMap::new(),
+            order: VecDeque::new(),
+            cap,
+            hits: 0,
+            misses: 0,
+            avoided: 0,
+        }
+    }
+
+    /// Successful stage probes since construction. Each derivation
+    /// probes a needed stage at most once (deepest first, stopping at
+    /// the first resident ancestor), so hits count *reused* stages,
+    /// not repeated lookups.
+    pub fn cache_hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Failed stage probes since construction — exactly the number of
+    /// stage derivations performed (a probe that misses is derived).
+    pub fn cache_misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Stage derivations avoided since construction: for every
+    /// derivation, its chain length minus the stages actually derived
+    /// — the work the cache saved versus a cold walk.
+    pub fn derivations_avoided(&self) -> u64 {
+        self.avoided
+    }
+
+    /// Stages currently resident (always ≤ the construction cap).
+    pub fn resident(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// The resident-stage bound this cache was constructed with.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Insert a derived stage, evicting oldest-first past the cap.
+    fn insert(&mut self, key: u64, value: Arc<Params>) {
+        if self.cap == 0 || self.stages.contains_key(&key) {
+            return;
+        }
+        while self.order.len() >= self.cap {
+            let oldest = self.order.pop_front().expect("order tracks stages");
+            self.stages.remove(&oldest);
+        }
+        self.stages.insert(key, value);
+        self.order.push_back(key);
+    }
+
+    /// Derive one spec's final parameter state through the cache.
+    pub fn derive(&mut self, base: &Arc<Params>, spec: &DeriveSpec, tiling: &Tiling) -> Arc<Params> {
+        self.derive_batch(base, &[(spec.clone(), *tiling)])
+            .pop()
+            .expect("one result per item")
+    }
+
+    /// Derive a batch of specs, sharing stages within the batch and
+    /// with the resident cache. Two phases keep the hard invariant
+    /// (cached == cold, byte-for-byte, at any thread count):
+    ///
+    /// 1. **Serial planning** — for each item in order, walk its chain
+    ///    deepest-first, stopping at the first stage resident in the
+    ///    cache or already scheduled by an earlier item; counters and
+    ///    cache state advance here, deterministically.
+    /// 2. **Parallel rounds** — scheduled stage derivations run over
+    ///    the worker pool one dependency round at a time; each is a
+    ///    pure function of already-resolved `Arc` inputs, and results
+    ///    are committed to the cache in schedule order.
+    pub fn derive_batch(
+        &mut self,
+        base: &Arc<Params>,
+        items: &[(DeriveSpec, Tiling)],
+    ) -> Vec<Arc<Params>> {
+        let base_fp = base.fingerprint();
+        // batch-local value map: base content, resolved cache hits,
+        // then every derived stage — jobs name inputs by stage key
+        let mut values: BTreeMap<u64, Arc<Params>> = BTreeMap::new();
+        // stage key -> round it becomes available (0 = already resident)
+        let mut scheduled: BTreeMap<u64, usize> = BTreeMap::new();
+        let mut jobs: Vec<StageJob> = Vec::new();
+        let mut finals: Vec<u64> = Vec::with_capacity(items.len());
+        for (item_idx, (spec, tiling)) in items.iter().enumerate() {
+            let (base_key, chain) = spec.chain(base_fp, tiling);
+            values.entry(base_key).or_insert_with(|| base.clone());
+            if chain.is_empty() {
+                finals.push(base_key);
+                continue;
+            }
+            let n = chain.len();
+            // needed[i]: this item must resolve node i; avail[i]: the
+            // round its content is ready (None = derive it ourselves)
+            let mut needed = vec![false; n];
+            let mut avail: Vec<Option<usize>> = vec![None; n];
+            let mut derive = vec![false; n];
+            needed[n - 1] = true;
+            for i in (0..n).rev() {
+                if !needed[i] {
+                    continue;
+                }
+                let key = chain[i].key;
+                let hit = if self.cap == 0 {
+                    None
+                } else if let Some(&round) = scheduled.get(&key) {
+                    Some(round)
+                } else if let Some(arc) = self.stages.get(&key) {
+                    values.insert(key, arc.clone());
+                    scheduled.insert(key, 0);
+                    Some(0)
+                } else {
+                    None
+                };
+                match hit {
+                    Some(round) => {
+                        self.hits += 1;
+                        avail[i] = Some(round);
+                    }
+                    None => {
+                        self.misses += 1;
+                        derive[i] = true;
+                        if i > 0 {
+                            needed[i - 1] = true;
+                        }
+                        if let Some(j) = chain[i].reference {
+                            needed[j] = true;
+                        }
+                    }
+                }
+            }
+            // rounds ascend the chain: a node lands one round after
+            // the latest of its inputs (resident inputs are round 0)
+            let mut round = vec![0usize; n];
+            let mut derived_here = 0usize;
+            for i in 0..n {
+                if let Some(r) = avail[i] {
+                    round[i] = r;
+                    continue;
+                }
+                if !derive[i] {
+                    continue;
+                }
+                let mut r = if i > 0 { round[i - 1] } else { 0 };
+                if let Some(j) = chain[i].reference {
+                    r = r.max(round[j]);
+                }
+                round[i] = r + 1;
+                derived_here += 1;
+                jobs.push(StageJob {
+                    key: chain[i].key,
+                    stage: chain[i].stage,
+                    item: item_idx,
+                    parent: if i > 0 { chain[i - 1].key } else { base_key },
+                    reference: chain[i].reference.map(|j| chain[j].key).unwrap_or(base_key),
+                    round: round[i],
+                });
+                if self.cap > 0 {
+                    scheduled.insert(chain[i].key, round[i]);
+                }
+            }
+            self.avoided += (n - derived_here) as u64;
+            finals.push(chain[n - 1].key);
+        }
+        // parallel phase: each round's jobs are independent pure
+        // functions of earlier-round Arcs — fan out, commit in
+        // schedule order (insertion order stays thread-independent)
+        let max_round = jobs.iter().map(|j| j.round).max().unwrap_or(0);
+        for r in 1..=max_round {
+            let wave: Vec<&StageJob> = jobs.iter().filter(|j| j.round == r).collect();
+            let inputs: Vec<(Arc<Params>, Arc<Params>)> = wave
+                .iter()
+                .map(|j| (values[&j.parent].clone(), values[&j.reference].clone()))
+                .collect();
+            let outputs: Vec<Params> = crate::util::parallel::map_indexed(wave.len(), |k| {
+                let (spec, tiling) = &items[wave[k].item];
+                Self::derive_stage(wave[k].stage, base, &inputs[k].0, &inputs[k].1, spec, tiling)
+            });
+            for (job, out) in wave.into_iter().zip(outputs) {
+                let arc = Arc::new(out);
+                values.insert(job.key, arc.clone());
+                self.insert(job.key, arc);
+            }
+        }
+        finals.iter().map(|key| values[key].clone()).collect()
+    }
+
+    /// One stage derivation — exactly the standalone engine
+    /// composition the fused-plan conformance tests pin byte-for-byte
+    /// against `ChipDeployment::set_age`.
+    fn derive_stage(
+        stage: Stage,
+        base: &Params,
+        parent: &Params,
+        reference: &Params,
+        spec: &DeriveSpec,
+        tiling: &Tiling,
+    ) -> Params {
+        match stage {
+            Stage::Programmed => noise::apply_tiled(parent, &spec.noise, spec.seed, tiling),
+            Stage::Drifted => {
+                drift::apply_tiled(parent, &spec.drift, spec.age_secs, spec.seed, tiling)
+            }
+            Stage::Calibrated => {
+                // reference = the programmed tensors GDC calibrates
+                // against (mirrors GdcCalibratePass inside the plan)
+                let scales =
+                    drift::gdc_calibrate(reference, parent, drift::GDC_CALIB_VECS, spec.seed, tiling);
+                let mut out = parent.clone();
+                drift::apply_scales(&mut out, &scales, tiling);
+                out
+            }
+            Stage::Quantized => {
+                let mut out = parent.clone();
+                quant::rtn_params_tiled(&mut out, spec.rtn_bits, tiling);
+                out
+            }
+            Stage::Adapted => {
+                // fit against the base checkpoint on the pre-RTN
+                // analog state (reference), apply on top of the parent
+                // — hwa::fit_deployment_adapters composed by stages
+                let set = crate::coordinator::hwa::fit_adapters(
+                    base,
+                    reference,
+                    spec.adapter_rank,
+                    spec.adapter_iters,
+                    spec.seed,
+                );
+                let mut out = parent.clone();
+                set.apply(&mut out);
+                out
+            }
+        }
+    }
+
+    /// Derive `spec` and wrap the result as an immutable serving
+    /// snapshot: floorplan-checked under `hw`'s tiling against
+    /// `capacity_tiles`, literals uploaded once, tensors shared with
+    /// the cache (no clone). Snapshots report the spec's drift law and
+    /// age but refuse in-place re-derivation.
+    pub fn provision_snapshot(
+        &mut self,
+        base: &Arc<Params>,
+        spec: &DeriveSpec,
+        hw: &HwConfig,
+        capacity_tiles: usize,
+    ) -> Result<ChipDeployment> {
+        let derived = self.derive(base, spec, &hw.tiling());
+        ChipDeployment::snapshot_from(derived, spec, hw, capacity_tiles)
+    }
+
+    /// [`DerivationCache::provision_snapshot`] over a batch: stage
+    /// derivations shared and parallel (`derive_batch`), literal
+    /// uploads serial in item order.
+    pub fn provision_batch(
+        &mut self,
+        base: &Arc<Params>,
+        items: &[(DeriveSpec, HwConfig, usize)],
+    ) -> Result<Vec<ChipDeployment>> {
+        let tilings: Vec<(DeriveSpec, Tiling)> =
+            items.iter().map(|(spec, hw, _)| (spec.clone(), hw.tiling())).collect();
+        let derived = self.derive_batch(base, &tilings);
+        derived
+            .into_iter()
+            .zip(items)
+            .map(|(arc, (spec, hw, cap))| ChipDeployment::snapshot_from(arc, spec, hw, *cap))
+            .collect()
     }
 }
 
@@ -1293,5 +1838,74 @@ mod tests {
         c.set_adapters(None);
         c.refresh().unwrap();
         assert_eq!(c.fingerprint(), analog_only);
+    }
+
+    #[test]
+    fn cache_snapshots_match_the_fused_in_place_derivation() {
+        use crate::coordinator::hwa;
+        let p = chip_params();
+        let base = Arc::new(p.clone());
+        let hw = HwConfig::afm_train(0.0).with_tiles(3, 3);
+        let mut cache = DerivationCache::new(64);
+        // the full five-stage chain: noise + drift + GDC + RTN +
+        // adapters, fused in place on a legacy chip
+        let mut legacy = ChipDeployment::provision(&p, &NoiseModel::Pcm, 29, &hw).unwrap();
+        legacy.set_rtn_mirror(4);
+        let set = hwa::fit_deployment_adapters(&legacy, &p, drift::SECS_PER_MONTH, true, 2, 8);
+        legacy.set_adapters(Some(set));
+        legacy.age_and_recalibrate(drift::SECS_PER_MONTH).unwrap();
+        let spec = DeriveSpec {
+            age_secs: drift::SECS_PER_MONTH,
+            gdc: true,
+            rtn_bits: 4,
+            adapter_rank: 2,
+            adapter_iters: 8,
+            ..DeriveSpec::new(NoiseModel::Pcm, 29)
+        };
+        let snap = cache.provision_snapshot(&base, &spec, &hw, 0).unwrap();
+        assert_eq!(snap.fingerprint(), legacy.fingerprint());
+        assert!(snap.is_snapshot());
+        assert_eq!(snap.tiles_used(), legacy.tiles_used());
+        // a second identical snapshot derives nothing new
+        let misses = cache.cache_misses();
+        let again = cache.provision_snapshot(&base, &spec, &hw, 0).unwrap();
+        assert_eq!(again.fingerprint(), legacy.fingerprint());
+        assert_eq!(cache.cache_misses(), misses);
+        assert!(cache.cache_hits() > 0);
+        assert!(cache.derivations_avoided() > 0);
+    }
+
+    #[test]
+    fn identity_stages_alias_the_base_and_derive_nothing() {
+        let base = Arc::new(chip_params());
+        let hw = HwConfig::afm_train(0.0);
+        let mut cache = DerivationCache::new(8);
+        // age 0, no noise, no GDC, no RTN, no adapters: empty chain
+        let spec = DeriveSpec::new(NoiseModel::None, 7);
+        let out = cache.derive(&base, &spec, &hw.tiling());
+        assert!(Arc::ptr_eq(&out, &base), "an all-identity chain is the base itself");
+        assert_eq!(cache.cache_hits(), 0);
+        assert_eq!(cache.cache_misses(), 0);
+        assert_eq!(cache.derivations_avoided(), 0);
+        // a noiseless programmed stage aliases the base: drift is the
+        // only stage the aged spec derives
+        let aged = DeriveSpec { age_secs: drift::SECS_PER_MONTH, ..spec };
+        let chip = cache.provision_snapshot(&base, &aged, &hw, 0).unwrap();
+        assert_eq!(cache.cache_misses(), 1, "drift is the only non-identity stage");
+        let mut want = ChipDeployment::provision(&base, &NoiseModel::None, 7, &hw).unwrap();
+        want.age_to(drift::SECS_PER_MONTH).unwrap();
+        assert_eq!(chip.fingerprint(), want.fingerprint());
+    }
+
+    #[test]
+    #[should_panic(expected = "snapshots are immutable")]
+    fn snapshots_refuse_in_place_rederivation() {
+        let base = Arc::new(chip_params());
+        let hw = HwConfig::afm_train(0.0);
+        let mut cache = DerivationCache::new(8);
+        let spec =
+            DeriveSpec { age_secs: drift::SECS_PER_MONTH, ..DeriveSpec::new(NoiseModel::Pcm, 3) };
+        let mut snap = cache.provision_snapshot(&base, &spec, &hw, 0).unwrap();
+        snap.age_to(drift::SECS_PER_YEAR).unwrap();
     }
 }

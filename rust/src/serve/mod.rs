@@ -18,6 +18,11 @@
 //!   `DigitalSidecar`s (RTN readout mirror, low-rank adapter
 //!   corrections from `hwa::fit_adapters`) compose with the drifting
 //!   analog tensors at every literal derivation and never degrade.
+//!   For config-space sweeps, `DerivationCache` content-addresses the
+//!   stage chain (programmed → drifted → calibrated → quantized →
+//!   adapted) so grid points sharing a prefix share tensors — cached
+//!   derivations stay byte-identical to cold ones at any thread count
+//!   — and `DeriveSpec` snapshots provision without re-deriving.
 //! * `server` — `InferenceServer`: a tick-driven scheduler with
 //!   continuous batching over the slot-based decode loop (a freed slot
 //!   is refilled from the queue immediately instead of idling until
@@ -42,7 +47,9 @@ pub mod server;
 pub mod workload;
 
 pub use crate::coordinator::tiles::{Floorplan, TileMap, Tiling};
-pub use deploy::{ChipDeployment, ChipSpec, DigitalSidecar, HwScalars};
+pub use deploy::{
+    ChipDeployment, ChipSpec, DerivationCache, DeriveSpec, DigitalSidecar, HwScalars,
+};
 pub use server::{
     request_id, static_chunking_steps, ChipStatus, Completion, Decoder, DriftSchedule,
     FleetBatch, InferenceServer, Rejection, RoutePolicy, ServePolicy, ServeReport, ServeRequest,

@@ -7,7 +7,12 @@
 //! 2. **dirty-refresh vs full rebuild** — `ChipDeployment`'s scoped
 //!    per-tensor re-derivation must land on the bytes a from-scratch
 //!    derivation produces,
-//! 3. **serial vs pooled** — both at 1 thread and at pool width 4.
+//! 3. **serial vs pooled** — both at 1 thread and at pool width 4,
+//! 4. **cached vs cold** — the content-addressed `DerivationCache`
+//!    (staged programmed → drifted → calibrated → quantized chain,
+//!    warm hits included) must reproduce the fused in-place
+//!    derivation, and so must the same cache with caching disabled
+//!    (capacity 0).
 //!
 //! Each CI invocation replays `AFM_FUZZ_N` configurations (default 64)
 //! derived from `AFM_FUZZ_SEED` (default 0xD1FF); `scripts/check.sh`
@@ -23,11 +28,12 @@ use afm::coordinator::noise::NoiseModel;
 use afm::coordinator::tiles::Tiling;
 use afm::runtime::manifest::ModelDims;
 use afm::runtime::Params;
-use afm::serve::ChipDeployment;
+use afm::serve::{ChipDeployment, DerivationCache, DeriveSpec};
 use afm::util::parallel::with_threads;
 use afm::util::prng::Pcg64;
 use afm::util::simd::with_simd;
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Default fuzz base seed (`AFM_FUZZ_SEED` overrides).
 const BASE_SEED: u64 = 0xD1FF;
@@ -180,6 +186,29 @@ fn fuzzed_configs_are_scalar_simd_and_dirty_refresh_identical() {
             let mut dirty = deploy_full(&p, &cfg, None);
             let analog_fp = dirty.fingerprint();
             let before = dirty.tiles_rederived();
+
+            // cached vs cold: the staged content-addressed derivation
+            // (same analog recipe, no adapters) must land on the fused
+            // arm's bytes — on a first derivation, on a warm hit, and
+            // with the cache disabled outright
+            let spec = DeriveSpec {
+                noise: cfg.noise.clone(),
+                seed: cfg.hw_seed,
+                drift: drift::DriftModel::default(),
+                age_secs: cfg.age,
+                gdc: cfg.gdc,
+                rtn_bits: cfg.rtn_bits,
+                adapter_rank: 0,
+                adapter_iters: 1,
+            };
+            let base = Arc::new(p.clone());
+            let mut warm_cache = DerivationCache::new(64);
+            let warm = warm_cache.derive(&base, &spec, &cfg.tiling).fingerprint();
+            let rewarm = warm_cache.derive(&base, &spec, &cfg.tiling).fingerprint();
+            let cold = DerivationCache::new(0).derive(&base, &spec, &cfg.tiling).fingerprint();
+            assert_eq!(warm, analog_fp, "cached derivation vs fused arm diverged: {replay}");
+            assert_eq!(rewarm, analog_fp, "warm cache hit diverged: {replay}");
+            assert_eq!(cold, analog_fp, "cache-disabled derivation diverged: {replay}");
             dirty.set_adapters(set.clone());
             dirty.refresh().unwrap();
             assert_eq!(dirty.fingerprint(), full_serial, "dirty refresh diverged: {replay}");

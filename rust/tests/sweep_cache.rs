@@ -1,0 +1,189 @@
+//! Conformance suite for the content-addressed derivation cache
+//! behind `afm sweep` (serve::DerivationCache).
+//!
+//! The cache's hard invariant: a cached derivation is byte-for-byte
+//! identical to a cold one at any thread count — hits hand back the
+//! same tensors a from-scratch stage chain would produce, eviction
+//! only ever costs re-derivation time, and disabling the cache
+//! (capacity 0) changes nothing but the work done. These tests pin
+//! that invariant across the config matrix, plus the eviction bound
+//! and the exact hit/miss/avoided accounting on a known grid.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use afm::coordinator::drift::{self, DriftModel};
+use afm::coordinator::noise::NoiseModel;
+use afm::coordinator::tiles::Tiling;
+use afm::runtime::manifest::ModelDims;
+use afm::runtime::Params;
+use afm::serve::{DerivationCache, DeriveSpec};
+use afm::util::parallel::with_threads;
+
+/// Small but ragged under the fuzzed tilings (mirrors the
+/// differential harness' model): wq stacks two 37×29 matrices, emb is
+/// 41×29, ln_f is a digital vector the analog passes must not touch.
+fn model() -> Params {
+    let mut shapes = BTreeMap::new();
+    shapes.insert("wq".to_string(), vec![2, 37, 29]);
+    shapes.insert("emb".to_string(), vec![41, 29]);
+    shapes.insert("ln_f".to_string(), vec![29]);
+    let dims = ModelDims {
+        d_model: 29,
+        n_layers: 2,
+        n_heads: 1,
+        d_ff: 58,
+        seq_len: 16,
+        vocab: 41,
+        n_cls: 0,
+        n_params: 0,
+        param_keys: vec!["wq".into(), "emb".into(), "ln_f".into()],
+        param_shapes: shapes,
+    };
+    Params::init(&dims, 11)
+}
+
+fn spec(
+    noise: NoiseModel,
+    seed: u64,
+    age_secs: f64,
+    gdc: bool,
+    rtn_bits: u32,
+    adapter_rank: usize,
+) -> DeriveSpec {
+    DeriveSpec {
+        noise,
+        seed,
+        drift: DriftModel::default(),
+        age_secs,
+        gdc,
+        rtn_bits,
+        adapter_rank,
+        adapter_iters: 2,
+    }
+}
+
+/// The conformance matrix: every stage-predicate branch (noise kind,
+/// aged vs fresh, ±GDC, ±RTN, ±adapters) at both a whole-matrix and a
+/// ragged tiling.
+fn matrix() -> Vec<(DeriveSpec, Tiling)> {
+    let mut items = Vec::new();
+    for tiling in [Tiling::unbounded(), Tiling::new(13, 7)] {
+        for noise in [NoiseModel::Pcm, NoiseModel::Gaussian { gamma: 0.05 }] {
+            for age in [0.0, drift::SECS_PER_MONTH] {
+                for gdc in [false, true] {
+                    for (rtn_bits, rank) in [(0u32, 0usize), (4, 2)] {
+                        items.push((spec(noise.clone(), 17, age, gdc, rtn_bits, rank), tiling));
+                    }
+                }
+            }
+        }
+    }
+    items
+}
+
+#[test]
+fn cached_equals_cold_byte_for_byte_across_the_matrix_and_thread_counts() {
+    let p = Arc::new(model());
+    for (s, tiling) in matrix() {
+        let tag = format!("noise {:?} age {} gdc {} rtn {} rank {} tiling {:?}",
+            s.noise, s.age_secs, s.gdc, s.rtn_bits, s.adapter_rank, tiling);
+        let cold =
+            with_threads(1, || DerivationCache::new(0).derive(&p, &s, &tiling).fingerprint());
+        for threads in [1usize, 4] {
+            let (first, warm) = with_threads(threads, || {
+                let mut cache = DerivationCache::new(64);
+                let first = cache.derive(&p, &s, &tiling).fingerprint();
+                let warm = cache.derive(&p, &s, &tiling).fingerprint();
+                (first, warm)
+            });
+            assert_eq!(first, cold, "cold fill diverged at {threads} threads: {tag}");
+            assert_eq!(warm, cold, "warm hit diverged at {threads} threads: {tag}");
+        }
+    }
+}
+
+#[test]
+fn batched_derivation_matches_item_by_item_cold_derivation() {
+    let p = Arc::new(model());
+    let items = matrix();
+    let cold: Vec<u64> = items
+        .iter()
+        .map(|(s, t)| DerivationCache::new(0).derive(&p, s, t).fingerprint())
+        .collect();
+    for threads in [1usize, 4] {
+        let batched: Vec<u64> = with_threads(threads, || {
+            DerivationCache::new(64)
+                .derive_batch(&p, &items)
+                .iter()
+                .map(|a| a.fingerprint())
+                .collect()
+        });
+        assert_eq!(batched, cold, "batched derivation diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn eviction_keeps_resident_stages_bounded() {
+    let p = Arc::new(model());
+    let tiling = Tiling::unbounded();
+    let mut cache = DerivationCache::new(3);
+    assert_eq!(cache.cap(), 3);
+    // six disjoint 3-stage chains (distinct seeds program distinct
+    // conductances) — each fill must stay within the cap
+    for seed in 0..6u64 {
+        cache.derive(&p, &spec(NoiseModel::Pcm, seed, drift::SECS_PER_MONTH, true, 0, 0), &tiling);
+        assert!(cache.resident() <= 3, "resident {} exceeds cap 3", cache.resident());
+    }
+    assert_eq!(cache.cache_hits(), 0, "disjoint chains share no stages");
+    assert_eq!(cache.cache_misses(), 18, "every stage of every chain derives");
+    assert_eq!(cache.derivations_avoided(), 0);
+    // FIFO keeps exactly the newest chain resident: re-deriving the
+    // last spec resolves at its deepest stage without new work
+    let last = spec(NoiseModel::Pcm, 5, drift::SECS_PER_MONTH, true, 0, 0);
+    cache.derive(&p, &last, &tiling);
+    assert_eq!(cache.cache_misses(), 18, "warm re-derive must derive nothing");
+    assert_eq!(cache.cache_hits(), 1, "one probe of the deepest stage resolves the chain");
+    assert_eq!(cache.derivations_avoided(), 3);
+}
+
+#[test]
+fn accounting_matches_shared_prefix_counts_on_a_2x2x2_grid() {
+    let p = Arc::new(model());
+    let tiling = Tiling::new(13, 7);
+    let mut cache = DerivationCache::new(256);
+    // 2 seeds × 2 ages × ±GDC, no-GDC point first so each seed's
+    // programmed + drifted stages land in the cache before the GDC
+    // chain probes them
+    for seed in [3u64, 4] {
+        for age in [drift::SECS_PER_HOUR, drift::SECS_PER_MONTH] {
+            for gdc in [false, true] {
+                cache.derive(&p, &spec(NoiseModel::Pcm, seed, age, gdc, 0, 0), &tiling);
+            }
+        }
+    }
+    // per seed the four chains are P→D(1h), P→D(1h)→C(1h), P→D(1mo),
+    // P→D(1mo)→C(1mo): 10 stage visits over 5 distinct stages. The
+    // C chains hit D and the programmed reference P (2 hits each),
+    // the second no-GDC chain hits P once: 5 hits / 5 misses /
+    // 5 avoided per seed.
+    assert_eq!(cache.cache_misses(), 10, "5 distinct stages per seed");
+    assert_eq!(cache.cache_hits(), 10, "shared-prefix probes per seed: 2+2+1");
+    assert_eq!(cache.derivations_avoided(), 10, "20 chain stages minus 10 derived");
+    assert_eq!(cache.resident(), 10, "all distinct stages stay under the cap");
+}
+
+#[test]
+fn capacity_zero_disables_caching_entirely() {
+    let p = Arc::new(model());
+    let tiling = Tiling::unbounded();
+    let mut cache = DerivationCache::new(0);
+    let s = spec(NoiseModel::Pcm, 9, drift::SECS_PER_HOUR, false, 0, 0);
+    let a = cache.derive(&p, &s, &tiling).fingerprint();
+    let b = cache.derive(&p, &s, &tiling).fingerprint();
+    assert_eq!(a, b, "disabled cache still derives deterministically");
+    assert_eq!(cache.resident(), 0, "nothing may be retained at cap 0");
+    assert_eq!(cache.cache_hits(), 0);
+    assert_eq!(cache.cache_misses(), 4, "both 2-stage chains derive in full");
+    assert_eq!(cache.derivations_avoided(), 0);
+}

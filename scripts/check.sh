@@ -150,6 +150,44 @@ if [[ $fast -eq 0 ]]; then
   fi
 fi
 
+# Sweep determinism gate: a tiny two-axis [sweep] grid (2 ages × ±GDC
+# on one hardware seed) through the content-addressed derivation
+# cache, run twice into fresh run dirs. sweep.md (the Pareto table,
+# with per-point state fingerprints) and sweep_cache.md (the
+# hit/miss/avoided counters) must be byte-identical across runs, and
+# the grid shares stage prefixes so the cache must report hits — the
+# shared-work path provably engaged, deterministically. Same artifact
+# gate as the train smoke.
+if [[ $fast -eq 0 ]]; then
+  if [[ -f artifacts/manifest.json ]]; then
+    echo "== afm sweep smoke (2-axis grid, derivation cache, determinism)"
+    smoke_runs="$(mktemp -d)"
+    sweep_grid() {
+      cargo run --release --bin afm -- sweep --who teacher --quiet \
+        --set pretrain.steps=2 --set train.steps=4 --set train.accum=1 \
+        --set datagen.tokens=2048 --set eval.samples_per_task=8 \
+        --set 'sweep.ages=["1h", "1mo"]' --set 'sweep.gdc=[false, true]' \
+        --set "paths.runs=\"$smoke_runs\""
+    }
+    sweep_grid
+    cp "$smoke_runs"/*/reports/sweep.md "$smoke_runs/first_sweep.md"
+    cp "$smoke_runs"/*/reports/sweep_cache.md "$smoke_runs/first_sweep_cache.md"
+    sweep_grid
+    diff "$smoke_runs"/*/reports/sweep.md "$smoke_runs/first_sweep.md"
+    diff "$smoke_runs"/*/reports/sweep_cache.md "$smoke_runs/first_sweep_cache.md"
+    # shared-prefix grid ⇒ the cache must have served hits (the
+    # counter table pins the exact, deterministic number)
+    grep -E 'cache_hits +\| +[1-9]' "$smoke_runs/first_sweep_cache.md" >/dev/null || {
+      echo "sweep smoke: expected cache_hits > 0 in sweep_cache.md" >&2
+      cat "$smoke_runs/first_sweep_cache.md" >&2
+      exit 1
+    }
+    rm -rf "$smoke_runs"
+  else
+    echo "== afm sweep smoke skipped (no artifacts/manifest.json — run 'make artifacts')"
+  fi
+fi
+
 # the golden gate only protects future commits once the blessed file is
 # tracked — a fresh checkout would otherwise re-bless and pass trivially
 if ! git ls-files --error-unmatch rust/tests/golden/conformance.json >/dev/null 2>&1; then
